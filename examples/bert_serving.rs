@@ -1,0 +1,89 @@
+//! Serving-style driver: push a batch of BERT-Base encoder "requests"
+//! through the coordinator (each request = the GeMM stream of one
+//! encoder layer at a given sequence length) and report latency and
+//! throughput percentiles — the platform acting as an edge inference
+//! service.
+//!
+//! Run with:  cargo run --release --example bert_serving [--requests N]
+
+use std::time::Instant;
+
+use opengemm::compiler::GemmShape;
+use opengemm::config::{Mechanisms, PlatformConfig};
+use opengemm::coordinator::{Coordinator, JobRequest};
+use opengemm::util::cli::Args;
+use opengemm::util::rng::Pcg32;
+use opengemm::util::stats::BoxStats;
+
+/// The GeMMs of one BERT-Base encoder layer at sequence length `s`.
+fn encoder_layer_gemms(s: usize) -> Vec<(GemmShape, u64)> {
+    let (d, h, dh, ffn) = (768usize, 12u64, 64usize, 3072usize);
+    vec![
+        (GemmShape::new(s, d, 3 * d), 1),   // qkv projection
+        (GemmShape::new(s, dh, s), h),      // attention scores (per head)
+        (GemmShape::new(s, s, dh), h),      // attention context (per head)
+        (GemmShape::new(s, d, d), 1),       // output projection
+        (GemmShape::new(s, d, ffn), 1),     // ffn up
+        (GemmShape::new(s, ffn, d), 1),     // ffn down
+    ]
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let n_requests = args.usize_or("requests", 32)?;
+    let cfg = PlatformConfig::case_study();
+    let coord = Coordinator::new(cfg.clone());
+    let mut rng = Pcg32::seeded(args.u64_or("seed", 1)?);
+
+    // requests with mixed sequence lengths, like a real serving queue
+    let seq_choices = [64usize, 128, 256, 384, 512];
+    let requests: Vec<usize> =
+        (0..n_requests).map(|_| *rng.choose(&seq_choices)).collect();
+
+    println!("serving {n_requests} encoder-layer requests (seq in {seq_choices:?}) ...");
+    let t0 = Instant::now();
+
+    // fan each request's GeMMs out over the worker pool
+    let mut latencies_ms = Vec::with_capacity(n_requests);
+    let mut total_macs = 0u64;
+    for &seq in &requests {
+        let gemms = encoder_layer_gemms(seq);
+        let repeats: Vec<u32> = gemms.iter().map(|&(_, c)| (c as u32).clamp(1, 12)).collect();
+        let jobs: Vec<JobRequest> = gemms
+            .iter()
+            .zip(&repeats)
+            .map(|(&(shape, _), &r)| JobRequest::timing(shape, Mechanisms::ALL, r))
+            .collect();
+        let results = coord.run_batch(jobs);
+        // request latency = sum of per-GeMM platform cycles (sequential
+        // on one device), at the platform clock
+        let mut cycles = 0f64;
+        for (((shape, count), outcome), reps) in gemms.iter().zip(results).zip(&repeats) {
+            let r = outcome.expect("job ok");
+            cycles += r.metrics.total_cycles as f64 / *reps as f64 * *count as f64;
+            total_macs += shape.macs() * count;
+        }
+        latencies_ms.push(cycles / (cfg.freq_mhz as f64 * 1e3));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let stats = BoxStats::compute(&latencies_ms);
+    println!("\nper-request device latency (ms @ {} MHz):", cfg.freq_mhz);
+    println!(
+        "  p0 {:.2}  p25 {:.2}  p50 {:.2}  p75 {:.2}  p100 {:.2}",
+        stats.min, stats.q1, stats.median, stats.q3, stats.max
+    );
+    let device_time_s: f64 = latencies_ms.iter().sum::<f64>() / 1e3;
+    println!(
+        "device throughput: {:.1} req/s sequential, {:.1} GMAC/s effective ({:.1}% of peak)",
+        n_requests as f64 / device_time_s,
+        total_macs as f64 / device_time_s / 1e9,
+        100.0 * (total_macs as f64 / device_time_s)
+            / (cfg.peak_gops() / 2.0 * 1e9)
+    );
+    println!(
+        "simulation wall-clock: {wall:.1}s ({:.1} M simulated cycles/s across workers)",
+        coord.stats().simulated_cycles as f64 / wall / 1e6
+    );
+    Ok(())
+}

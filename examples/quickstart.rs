@@ -1,0 +1,73 @@
+//! Quickstart: compile one GeMM for the OpenGeMM platform, run it on
+//! the cycle-accurate simulator, verify the numerics against the
+//! AOT-compiled JAX/Pallas golden model (if artifacts are built), and
+//! print the utilization report.
+//!
+//! Run with:  cargo run --release --example quickstart
+
+use opengemm::compiler::{compile_gemm, GemmShape, Layout};
+use opengemm::config::PlatformConfig;
+use opengemm::runtime::Runtime;
+use opengemm::sim::{Platform, SimOptions};
+use opengemm::util::rng::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    // 1. a platform instance: the paper's 8x8x8 case study
+    let cfg = PlatformConfig::case_study();
+    println!(
+        "platform: {}x{}x{} GeMM core, {} KiB SPM, {} MHz, {:.1} GOPS peak",
+        cfg.core.mu,
+        cfg.core.nu,
+        cfg.core.ku,
+        cfg.mem.capacity_bytes() / 1024,
+        cfg.freq_mhz,
+        cfg.peak_gops()
+    );
+
+    // 2. compile a 64x64x64 int8 GeMM: tiling, SMA layout, and the
+    //    RV32I host program that configures the accelerator
+    let shape = GemmShape::new(64, 64, 64);
+    let job = compile_gemm(&cfg, shape, Layout::TiledInterleaved, 10, true)?;
+    println!(
+        "compiled: {} accelerator call(s), {} host instructions",
+        job.calls.len(),
+        job.program.len()
+    );
+
+    // 3. random int8 operands
+    let mut rng = Pcg32::seeded(42);
+    let mut a = vec![0i8; shape.m * shape.k];
+    let mut b = vec![0i8; shape.k * shape.n];
+    rng.fill_i8(&mut a);
+    rng.fill_i8(&mut b);
+
+    // 4. run on the cycle-accurate platform (functional mode)
+    let opts = SimOptions { functional: true, ..Default::default() };
+    let mut platform = Platform::new(cfg.clone(), opts);
+    let result = platform.run_job(&job, Some(&a), Some(&b))?;
+    let c_sim = result.c.clone().expect("functional result");
+    println!(
+        "simulated: {} cycles total, {} compute, SU {:.3} TU {:.3} OU {:.3}",
+        result.metrics.total_cycles,
+        result.metrics.compute_cycles,
+        result.report.spatial,
+        result.report.temporal,
+        result.report.overall,
+    );
+    let gops = result
+        .report
+        .achieved_gops(shape.ops() * 10, cfg.freq_mhz);
+    println!("throughput: {gops:.1} GOPS of {:.1} peak", cfg.peak_gops());
+
+    // 5. verify against the JAX/Pallas AOT artifact through PJRT
+    let dir = Runtime::default_dir();
+    if dir.join("manifest.json").exists() {
+        let mut rt = Runtime::load(dir)?;
+        let golden = rt.execute_gemm("gemm_64x64x64", &a, &b)?;
+        assert_eq!(c_sim, golden, "simulator != JAX/Pallas golden model");
+        println!("verified: bit-exact vs AOT Pallas kernel through PJRT ✓");
+    } else {
+        println!("note: run `make artifacts` to enable the golden-model check");
+    }
+    Ok(())
+}

@@ -1,0 +1,94 @@
+"""AOT compiler: lower every L2 graph to an HLO-text artifact.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+
+Emits one ``<name>.hlo.txt`` per registry entry plus ``manifest.json``
+describing argument/result shapes and dtypes for the Rust loader.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import artifact_registry
+
+_DTYPE_NAMES = {
+    "int8": "s8",
+    "int32": "s32",
+    "float32": "f32",
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name: str, factory, args) -> tuple[str, dict]:
+    fn, specs = factory(*args)
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    out_specs = jax.eval_shape(fn, *specs)
+    meta = {
+        "file": f"{name}.hlo.txt",
+        "args": [
+            {"shape": list(s.shape), "dtype": _DTYPE_NAMES[str(s.dtype)]}
+            for s in specs
+        ],
+        "results": [
+            {"shape": list(s.shape), "dtype": _DTYPE_NAMES[str(s.dtype)]}
+            for s in out_specs
+        ],
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+    return text, meta
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--only", default=None, help="comma-separated artifact names"
+    )
+    ns = parser.parse_args()
+    os.makedirs(ns.out_dir, exist_ok=True)
+
+    registry = artifact_registry()
+    if ns.only:
+        wanted = set(ns.only.split(","))
+        unknown = wanted - set(registry)
+        if unknown:
+            raise SystemExit(f"unknown artifacts: {sorted(unknown)}")
+        registry = {k: v for k, v in registry.items() if k in wanted}
+
+    manifest = {}
+    for name, (factory, args) in sorted(registry.items()):
+        text, meta = lower_entry(name, factory, args)
+        path = os.path.join(ns.out_dir, meta["file"])
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = meta
+        print(f"  aot: {name:<28s} {len(text):>9d} chars")
+
+    with open(os.path.join(ns.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {len(manifest)} artifacts to {ns.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,241 @@
+"""L1: output-stationary tiled INT8 GeMM as a Pallas kernel.
+
+This is the paper's compute hot-spot (the 3D MAC array of Fig. 3)
+re-expressed for the TPU machine model (DESIGN.md "Hardware-Adaptation"):
+
+- the grid ``(M/bm, N/bn, K/bk)`` is the paper's three *temporal* loops
+  ``(m1, n1, k1)`` with ``k1`` innermost -- the output-stationary order;
+- the BlockSpecs are the data streamers: the ``index_map`` walks
+  HBM->VMEM the way the strided AGUs walk SPM->core;
+- each grid step performs one ``(bm,bk) x (bk,bn)`` tile-MAC with int32
+  accumulation, the paper's per-cycle DotProd-mesh operation scaled to
+  MXU tile size;
+- the revisited output block is the DotProd accumulation register file:
+  it is zeroed when ``k1 == 0`` and accumulated into otherwise, exactly
+  the hardware loop controller's "accumulator reset" behaviour.
+
+The kernel MUST be run with ``interpret=True`` on this setup: real TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. (8, 8, 8) mirrors the paper's case-study GeMM array;
+# larger tiles (e.g. 128) are the natural MXU-sized choice on real TPUs.
+DEFAULT_BM = 8
+DEFAULT_BK = 8
+DEFAULT_BN = 8
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref):
+    """One grid step: output-stationary tile-MAC.
+
+    o_ref is revisited across the innermost (k) grid dimension; Pallas
+    guarantees the block stays resident, so this is the accumulator
+    register file of the DotProd units.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():  # accumulator reset at the start of the k1 loop
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(jnp.int32)
+    b = b_ref[...].astype(jnp.int32)
+    o_ref[...] += jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+def _check_tile(dim: int, tile: int, name: str) -> None:
+    if tile <= 0:
+        raise ValueError(f"tile {name}={tile} must be positive")
+    if dim % tile != 0:
+        raise ValueError(
+            f"dimension {name}={dim} not divisible by tile {tile}; "
+            "use gemm_int8 (padding wrapper) instead"
+        )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bk", "bn", "interpret")
+)
+def gemm_int8_tiled(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+    interpret: bool = True,
+) -> jax.Array:
+    """INT8 GeMM via the Pallas kernel; shapes must divide the tiles.
+
+    a: (M, K) int8, b: (K, N) int8 -> (M, N) int32.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {a.shape} x {b.shape}")
+    _check_tile(m, bm, "M")
+    _check_tile(k, bk, "K")
+    _check_tile(n, bn, "N")
+
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=grid,
+        in_specs=[
+            # A block depends on (m1, k1): the A-streamer's 2D strided walk.
+            pl.BlockSpec((bm, bk), lambda mi, ni, ki: (mi, ki)),
+            # B block depends on (k1, n1): the B-streamer's walk.
+            pl.BlockSpec((bk, bn), lambda mi, ni, ki: (ki, ni)),
+        ],
+        # C block depends on (m1, n1) only -> output-stationary residency.
+        out_specs=pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(a, b)
+
+
+def pad_to_multiple(x: jax.Array, mult_rows: int, mult_cols: int) -> jax.Array:
+    """Zero-pad a 2D array up to multiples of (mult_rows, mult_cols).
+
+    Zero padding is exact for integer GeMM: padded lanes contribute 0 to
+    every accumulator. This is precisely the paper's *spatial
+    under-utilization*: the padded MAC lanes burn cycles on zeros.
+    """
+    r, c = x.shape
+    pr = (-r) % mult_rows
+    pc = (-c) % mult_cols
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+def gemm_int8(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+    interpret: bool = True,
+) -> jax.Array:
+    """INT8 GeMM for arbitrary (M, K, N): pads to tile multiples, crops back."""
+    m, _ = a.shape
+    _, n = b.shape
+    ap = pad_to_multiple(a, bm, bk)
+    bp = pad_to_multiple(b, bk, bn)
+    out = gemm_int8_tiled(ap, bp, bm=bm, bk=bk, bn=bn, interpret=interpret)
+    return out[:m, :n]
+
+
+def _linear_kernel(a_ref, w_ref, bias_ref, shift_ref, o_ref, acc_ref):
+    """Fused quantized-linear grid step: GeMM + bias + requantize.
+
+    The int32 accumulator lives in a second, revisited output block
+    (acc_ref) that the caller discards -- the portable Pallas idiom for a
+    VMEM accumulator that works under interpret=True. On the last k step
+    the bias is added and the value is requantized into the int8 output
+    block, fusing the paper's post-processing (the SNAX requantizer
+    sitting after the GeMM core) into the same kernel.
+    """
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    acc_ref[...] += jax.lax.dot_general(
+        a, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+    @pl.when(k == nk - 1)
+    def _requant():
+        acc = acc_ref[...] + bias_ref[...].astype(jnp.int32)[None, :]
+        shift = shift_ref[0]
+        half = jnp.where(shift > 0, jnp.int32(1) << (shift - 1), 0)
+        rounded = jnp.where(shift > 0, (acc + half) >> shift, acc)
+        o_ref[...] = jnp.clip(rounded, -128, 127).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def linear_int8_tiled(
+    a: jax.Array,
+    w: jax.Array,
+    bias: jax.Array,
+    shift: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused quantized linear: requant(A @ W + bias) via one Pallas kernel.
+
+    a: (M, K) int8, w: (K, N) int8, bias: (N,) int32, shift: (1,) int32
+    -> (M, N) int8.
+    """
+    m, k = a.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {a.shape} x {w.shape}")
+    _check_tile(m, bm, "M")
+    _check_tile(k, bk, "K")
+    _check_tile(n, bn, "N")
+
+    grid = (m // bm, n // bn, k // bk)
+    out, _acc = pl.pallas_call(
+        _linear_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((bk, bn), lambda mi, ni, ki: (ki, ni)),
+            pl.BlockSpec((bn,), lambda mi, ni, ki: (ni,)),
+            pl.BlockSpec((1,), lambda mi, ni, ki: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
+            pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((m, n), jnp.int8),
+            jax.ShapeDtypeStruct((m, n), jnp.int32),
+        ),
+        interpret=interpret,
+    )(a, w, bias, shift)
+    return out
+
+
+def linear_int8(
+    a: jax.Array,
+    w: jax.Array,
+    bias: jax.Array,
+    shift: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused quantized linear for arbitrary shapes (zero-pads, crops back)."""
+    m, _ = a.shape
+    _, n = w.shape
+    ap = pad_to_multiple(a, bm, bk)
+    wp = pad_to_multiple(w, bk, bn)
+    pad_n = (-n) % bn
+    bias_p = jnp.pad(bias, (0, pad_n)) if pad_n else bias
+    out = linear_int8_tiled(
+        ap, wp, bias_p, shift, bm=bm, bk=bk, bn=bn, interpret=interpret
+    )
+    return out[:m, :n]

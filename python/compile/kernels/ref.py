@@ -1,0 +1,124 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the golden numerics for the whole stack:
+
+- the Pallas kernel (L1) is pytest-checked against these functions;
+- the AOT artifacts lowered from the L2 model are executed from Rust via
+  PJRT and cross-checked against the Rust simulator's functional datapath,
+  which therefore transitively agrees with these oracles.
+
+Everything here is exact integer arithmetic (INT8 x INT8 -> INT32), the
+datapath of the paper's DotProd units (P_A = P_B = 8, P_C = 32).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_int8_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Reference INT8 GeMM: C[M,N] = A[M,K] @ B[K,N], int32 accumulation.
+
+    Matches the accelerator's output-stationary datapath exactly: products
+    and partial sums are accumulated in 32-bit integers with wraparound
+    semantics (the hardware has no saturation on the accumulate path).
+    """
+    if a.dtype != jnp.int8 or b.dtype != jnp.int8:
+        raise TypeError(f"expected int8 operands, got {a.dtype} x {b.dtype}")
+    return jax.lax.dot_general(
+        a,
+        b,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def requantize_ref(acc: jax.Array, shift: int, zero_point: int = 0) -> jax.Array:
+    """Reference requantization: int32 accumulator -> int8 activation.
+
+    Power-of-two scaling (add-half then arithmetic right shift, i.e.
+    round-half-up in two's complement -- the cheap hardware rounding the
+    SNAX/Gemmini-style integer requantizers use), then saturating cast.
+    """
+    if shift < 0 or shift > 31:
+        raise ValueError(f"shift out of range: {shift}")
+    if shift > 0:
+        rounded = (acc + (1 << (shift - 1))) >> shift
+    else:
+        rounded = acc
+    rounded = rounded + jnp.int32(zero_point)
+    return jnp.clip(rounded, -128, 127).astype(jnp.int8)
+
+
+def linear_ref(a: jax.Array, w: jax.Array, bias: jax.Array, shift: int) -> jax.Array:
+    """Reference quantized linear layer: requant(A @ W + bias)."""
+    acc = gemm_int8_ref(a, w) + bias.astype(jnp.int32)
+    return requantize_ref(acc, shift)
+
+
+def im2col_ref(x: jax.Array, kh: int, kw: int, stride: int = 1) -> jax.Array:
+    """im2col for NHWC input (VALID padding).
+
+    Returns a matrix of shape (N*OH*OW, KH*KW*C): each row is the receptive
+    field of one output pixel, exactly the paper's A-matrix construction
+    for convolution-as-GeMM (Sec. 2.3: A is (Ox*Oy, Fx*Fy*C)).
+    """
+    n, h, w, c = x.shape
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    patches = jax.lax.conv_general_dilated_patches(
+        x.astype(jnp.float32),
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    # conv_general_dilated_patches returns features in (C, KH, KW) order on
+    # the last axis; reorder to (KH, KW, C) to match the weight layout
+    # w.reshape(KH*KW*C, K).
+    patches = patches.reshape(n, oh, ow, c, kh, kw)
+    patches = patches.transpose(0, 1, 2, 4, 5, 3)
+    return patches.reshape(n * oh * ow, kh * kw * c).astype(x.dtype)
+
+
+def conv2d_im2col_ref(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """Reference conv2d computed as im2col + INT8 GeMM.
+
+    x: (N, H, W, C) int8, w: (KH, KW, C, K) int8 -> (N, OH, OW, K) int32.
+    """
+    n, h, wd, c = x.shape
+    kh, kw, c2, k = w.shape
+    assert c == c2, (c, c2)
+    oh = (h - kh) // stride + 1
+    ow = (wd - kw) // stride + 1
+    a = im2col_ref(x, kh, kw, stride)  # (N*OH*OW, KH*KW*C)
+    b = w.reshape(kh * kw * c, k)  # (KH*KW*C, K)
+    out = gemm_int8_ref(a, b)
+    return out.reshape(n, oh, ow, k)
+
+
+def mha_scores_ref(q: jax.Array, k: jax.Array, shift: int) -> jax.Array:
+    """Reference attention-score block: requant(Q @ K^T).
+
+    q: (S, D) int8, k: (S, D) int8 -> (S, S) int8. The softmax itself runs
+    on the host in the paper's platform (the accelerator only does GeMM),
+    so the artifact boundary is the requantized score matrix.
+    """
+    acc = gemm_int8_ref(q, k.T)
+    return requantize_ref(acc, shift)
+
+
+def mlp_block_ref(
+    x: jax.Array,
+    w1: jax.Array,
+    b1: jax.Array,
+    w2: jax.Array,
+    b2: jax.Array,
+    shift1: int,
+    shift2: int,
+) -> jax.Array:
+    """Reference transformer MLP block: linear -> ReLU -> linear (all int8)."""
+    h = linear_ref(x, w1, b1, shift1)
+    h = jnp.maximum(h, jnp.int8(0))
+    return linear_ref(h, w2, b2, shift2)

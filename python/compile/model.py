@@ -1,0 +1,149 @@
+"""L2: JAX compute graphs that call the L1 Pallas kernels.
+
+Each ``make_*`` factory returns ``(fn, example_specs)`` where ``fn`` is the
+jit-lowerable computation and ``example_specs`` the argument
+ShapeDtypeStructs. ``aot.py`` lowers these once to HLO text artifacts; the
+Rust runtime loads and executes them via PJRT. All functions return tuples
+(the Rust side unwraps with ``to_tuple1``/``to_tuple``).
+
+These graphs are the *functional golden model* of the accelerator
+platform: the Rust cycle-accurate simulator's datapath must agree
+bit-exactly with them (see rust/tests/functional_equivalence.rs).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gemm_pallas import gemm_int8, linear_int8
+from .kernels.ref import im2col_ref
+
+Spec = jax.ShapeDtypeStruct
+Factory = Tuple[Callable, List[Spec]]
+
+
+def _tile_for(m: int, k: int, n: int) -> Tuple[int, int, int]:
+    """Pick Pallas tile sizes for a GeMM shape.
+
+    Mirrors the paper's design-time (Mu, Ku, Nu) choice: small GeMMs use
+    the case-study 8x8x8 array tile; large GeMMs use 32x32x32 tiles so the
+    lowered HLO loop nest stays compact (the analogue of picking a larger
+    generated array for bigger workloads).
+    """
+    def pick(d: int) -> int:
+        for t in (32, 16, 8):
+            if d % t == 0:
+                return t
+        return 8
+
+    return pick(m), pick(k), pick(n)
+
+
+def make_gemm(m: int, k: int, n: int) -> Factory:
+    """C = A @ B, int8 -> int32, through the Pallas kernel."""
+    bm, bk, bn = _tile_for(m, k, n)
+
+    def fn(a, b):
+        return (gemm_int8(a, b, bm=bm, bk=bk, bn=bn),)
+
+    return fn, [Spec((m, k), jnp.int8), Spec((k, n), jnp.int8)]
+
+
+def make_linear(m: int, k: int, n: int) -> Factory:
+    """Quantized linear: requant(A @ W + bias) via the fused kernel."""
+    bm, bk, bn = _tile_for(m, k, n)
+
+    def fn(a, w, bias, shift):
+        return (linear_int8(a, w, bias, shift, bm=bm, bk=bk, bn=bn),)
+
+    return fn, [
+        Spec((m, k), jnp.int8),
+        Spec((k, n), jnp.int8),
+        Spec((n,), jnp.int32),
+        Spec((1,), jnp.int32),
+    ]
+
+
+def make_conv_im2col(
+    n: int, h: int, w: int, c: int, kh: int, kw: int, k: int, stride: int = 1
+) -> Factory:
+    """Convolution executed the platform's way: im2col then INT8 GeMM.
+
+    The im2col unfold is part of the lowered graph (the paper runs it as a
+    data-layout transformation on the host / DMA side); the GeMM itself is
+    the Pallas kernel.
+    """
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    gm, gk = n * oh * ow, kh * kw * c
+    bm, bk, bn = _tile_for(gm, gk, k)
+
+    def fn(x, wts):
+        a = im2col_ref(x, kh, kw, stride)
+        b = wts.reshape(kh * kw * c, k)
+        out = gemm_int8(a, b, bm=bm, bk=bk, bn=bn)
+        return (out.reshape(n, oh, ow, k),)
+
+    return fn, [Spec((n, h, w, c), jnp.int8), Spec((kh, kw, c, k), jnp.int8)]
+
+
+def make_mha_scores(s: int, d: int, shift: int = 6) -> Factory:
+    """Attention scores: requant(Q @ K^T) >> shift, int8 in/out."""
+    bm, bk, bn = _tile_for(s, d, s)
+
+    def fn(q, kmat):
+        acc = gemm_int8(q, kmat.T, bm=bm, bk=bk, bn=bn)
+        half = jnp.int32(1 << (shift - 1)) if shift > 0 else jnp.int32(0)
+        rounded = (acc + half) >> shift if shift > 0 else acc
+        return (jnp.clip(rounded, -128, 127).astype(jnp.int8),)
+
+    return fn, [Spec((s, d), jnp.int8), Spec((s, d), jnp.int8)]
+
+
+def make_mlp_block(
+    s: int, d: int, hdim: int, shift1: int = 7, shift2: int = 7
+) -> Factory:
+    """Transformer MLP block: linear -> ReLU -> linear, all int8."""
+
+    def fn(x, w1, b1, w2, b2):
+        shift_1 = jnp.asarray([shift1], dtype=jnp.int32)
+        shift_2 = jnp.asarray([shift2], dtype=jnp.int32)
+        h = linear_int8(x, w1, b1, shift_1)
+        h = jnp.maximum(h, jnp.int8(0))
+        out = linear_int8(h, w2, b2, shift_2)
+        return (out,)
+
+    return fn, [
+        Spec((s, d), jnp.int8),
+        Spec((d, hdim), jnp.int8),
+        Spec((hdim,), jnp.int32),
+        Spec((hdim, d), jnp.int8),
+        Spec((d,), jnp.int32),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Artifact manifest: every AOT module the Rust platform loads at start-up.
+# Keep in sync with rust/src/runtime/artifacts.rs (ARTIFACT_NAMES).
+# ---------------------------------------------------------------------------
+
+def artifact_registry() -> dict:
+    """name -> (factory fn, factory args) for every AOT artifact."""
+    reg = {}
+    # Square GeMMs spanning the Fig. 7 sweep range.
+    for dim in (8, 16, 32, 64, 128, 256):
+        reg[f"gemm_{dim}x{dim}x{dim}"] = (make_gemm, (dim, dim, dim))
+    # Irregular shapes (spatial-underutilization path: padding exercised).
+    reg["gemm_13x22x17"] = (make_gemm, (13, 22, 17))
+    reg["gemm_100x60x40"] = (make_gemm, (100, 60, 40))
+    # Fused quantized linear.
+    reg["linear_64x64x64"] = (make_linear, (64, 64, 64))
+    # Conv-as-GeMM (a ResNet-ish 3x3 layer slice).
+    reg["conv_1x16x16x16_3x3x16"] = (make_conv_im2col, (1, 16, 16, 16, 3, 3, 16))
+    # Transformer blocks (BERT-ish head slice).
+    reg["mha_scores_s64_d64"] = (make_mha_scores, (64, 64))
+    reg["mlp_s32_d64_h128"] = (make_mlp_block, (32, 64, 128))
+    return reg

@@ -1,0 +1,252 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, tiles, and value distributions; assertions are
+exact integer equality (the datapath is exact int8 x int8 -> int32).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.gemm_pallas import (
+    gemm_int8,
+    gemm_int8_tiled,
+    linear_int8,
+    linear_int8_tiled,
+    pad_to_multiple,
+)
+from compile.kernels.ref import (
+    conv2d_im2col_ref,
+    gemm_int8_ref,
+    im2col_ref,
+    linear_ref,
+    mha_scores_ref,
+    mlp_block_ref,
+    requantize_ref,
+)
+
+RNG = np.random.default_rng(1234)
+
+
+def rand_i8(*shape):
+    return jnp.asarray(RNG.integers(-128, 128, shape, dtype=np.int8))
+
+
+def rand_i32(*shape, lo=-(1 << 20), hi=1 << 20):
+    return jnp.asarray(RNG.integers(lo, hi, shape, dtype=np.int32))
+
+
+# ---------------------------------------------------------------------------
+# Tiled kernel, divisible shapes
+# ---------------------------------------------------------------------------
+
+class TestGemmTiled:
+    @pytest.mark.parametrize("m,k,n", [(8, 8, 8), (16, 8, 24), (32, 64, 8)])
+    def test_matches_ref(self, m, k, n):
+        a, b = rand_i8(m, k), rand_i8(k, n)
+        out = gemm_int8_tiled(a, b)
+        np.testing.assert_array_equal(out, gemm_int8_ref(a, b))
+
+    def test_output_dtype_is_i32(self):
+        out = gemm_int8_tiled(rand_i8(8, 8), rand_i8(8, 8))
+        assert out.dtype == jnp.int32
+
+    def test_extreme_values_accumulate_exactly(self):
+        # worst case: -128 * -128 * K summed; must not lose bits
+        a = jnp.full((8, 64), -128, dtype=jnp.int8)
+        b = jnp.full((64, 8), -128, dtype=jnp.int8)
+        out = gemm_int8_tiled(a, b, bm=8, bk=8, bn=8)
+        assert int(out[0, 0]) == (-128) * (-128) * 64
+
+    def test_identity(self):
+        eye = jnp.eye(16, dtype=jnp.int8)
+        a = rand_i8(16, 16)
+        np.testing.assert_array_equal(gemm_int8_tiled(a, eye, bm=8, bk=8, bn=8), a.astype(jnp.int32))
+
+    def test_zero_inputs(self):
+        z = jnp.zeros((8, 8), dtype=jnp.int8)
+        np.testing.assert_array_equal(gemm_int8_tiled(z, z), jnp.zeros((8, 8), jnp.int32))
+
+    @pytest.mark.parametrize("bm,bk,bn", [(8, 8, 8), (16, 16, 16), (8, 16, 32)])
+    def test_tile_shapes_agree(self, bm, bk, bn):
+        a, b = rand_i8(32, 32), rand_i8(32, 32)
+        out = gemm_int8_tiled(a, b, bm=bm, bk=bk, bn=bn)
+        np.testing.assert_array_equal(out, gemm_int8_ref(a, b))
+
+    def test_rejects_indivisible(self):
+        with pytest.raises(ValueError, match="not divisible"):
+            gemm_int8_tiled(rand_i8(9, 8), rand_i8(8, 8))
+
+    def test_rejects_contraction_mismatch(self):
+        with pytest.raises(ValueError, match="contraction"):
+            gemm_int8_tiled(rand_i8(8, 16), rand_i8(8, 8))
+
+    def test_rejects_non_int8(self):
+        with pytest.raises(TypeError):
+            gemm_int8_ref(
+                jnp.zeros((8, 8), jnp.int32), jnp.zeros((8, 8), jnp.int8)
+            )
+
+
+# ---------------------------------------------------------------------------
+# Padding wrapper, arbitrary shapes (hypothesis)
+# ---------------------------------------------------------------------------
+
+dims = st.integers(min_value=1, max_value=48)
+
+
+class TestGemmArbitrary:
+    @settings(max_examples=40, deadline=None)
+    @given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        a = jnp.asarray(rng.integers(-128, 128, (m, k), dtype=np.int8))
+        b = jnp.asarray(rng.integers(-128, 128, (k, n), dtype=np.int8))
+        np.testing.assert_array_equal(gemm_int8(a, b), gemm_int8_ref(a, b))
+
+    @settings(max_examples=20, deadline=None)
+    @given(m=dims, k=dims)
+    def test_pad_roundtrip(self, m, k):
+        a = rand_i8(m, k)
+        p = pad_to_multiple(a, 8, 8)
+        assert p.shape[0] % 8 == 0 and p.shape[1] % 8 == 0
+        np.testing.assert_array_equal(p[:m, :k], a)
+        # padding is zeros
+        assert int(jnp.abs(p).sum()) == int(jnp.abs(a).sum())
+
+    def test_single_element(self):
+        a, b = rand_i8(1, 1), rand_i8(1, 1)
+        out = gemm_int8(a, b)
+        assert int(out[0, 0]) == int(a[0, 0]) * int(b[0, 0])
+
+
+# ---------------------------------------------------------------------------
+# Fused quantized linear
+# ---------------------------------------------------------------------------
+
+class TestLinear:
+    @pytest.mark.parametrize("shift", [0, 1, 7, 15])
+    def test_matches_ref(self, shift):
+        a, w = rand_i8(16, 24), rand_i8(24, 8)
+        bias = rand_i32(8)
+        out = linear_int8_tiled(
+            a, w, bias, jnp.asarray([shift], jnp.int32), bm=8, bk=8, bn=8
+        )
+        np.testing.assert_array_equal(out, linear_ref(a, w, bias, shift))
+
+    @settings(max_examples=25, deadline=None)
+    @given(m=dims, k=dims, n=dims, shift=st.integers(0, 20), seed=st.integers(0, 2**31 - 1))
+    def test_arbitrary_shapes(self, m, k, n, shift, seed):
+        rng = np.random.default_rng(seed)
+        a = jnp.asarray(rng.integers(-128, 128, (m, k), dtype=np.int8))
+        w = jnp.asarray(rng.integers(-128, 128, (k, n), dtype=np.int8))
+        bias = jnp.asarray(rng.integers(-1000, 1000, (n,), dtype=np.int32))
+        out = linear_int8(a, w, bias, jnp.asarray([shift], jnp.int32))
+        np.testing.assert_array_equal(out, linear_ref(a, w, bias, shift))
+
+    def test_output_dtype_is_i8(self):
+        out = linear_int8(
+            rand_i8(8, 8), rand_i8(8, 8), rand_i32(8), jnp.asarray([7], jnp.int32)
+        )
+        assert out.dtype == jnp.int8
+
+    def test_saturation(self):
+        # large accumulations with shift 0 must clip to [-128, 127]
+        a = jnp.full((8, 8), 127, jnp.int8)
+        w = jnp.full((8, 8), 127, jnp.int8)
+        out = linear_int8(a, w, jnp.zeros((8,), jnp.int32), jnp.asarray([0], jnp.int32))
+        assert int(out.max()) == 127 and int(out.min()) == 127
+
+
+# ---------------------------------------------------------------------------
+# Requantizer oracle properties
+# ---------------------------------------------------------------------------
+
+class TestRequantize:
+    def test_shift_zero_is_clip(self):
+        acc = jnp.asarray([-300, -128, 0, 127, 300], jnp.int32)
+        out = requantize_ref(acc, 0)
+        np.testing.assert_array_equal(out, jnp.asarray([-128, -128, 0, 127, 127], jnp.int8))
+
+    def test_round_half_up(self):
+        # (3 + 2) >> 2 = 1 ; (-3 + 2) >> 2 = (-1) >> 2 = -1 (arithmetic shift)
+        acc = jnp.asarray([3, -3], jnp.int32)
+        out = requantize_ref(acc, 2)
+        np.testing.assert_array_equal(out, jnp.asarray([1, -1], jnp.int8))
+
+    def test_rejects_bad_shift(self):
+        with pytest.raises(ValueError):
+            requantize_ref(jnp.zeros((1,), jnp.int32), 40)
+
+    @settings(max_examples=30, deadline=None)
+    @given(shift=st.integers(1, 24), seed=st.integers(0, 2**31 - 1))
+    def test_monotone(self, shift, seed):
+        rng = np.random.default_rng(seed)
+        acc = np.sort(rng.integers(-(1 << 28), 1 << 28, 64).astype(np.int32))
+        out = np.asarray(requantize_ref(jnp.asarray(acc), shift))
+        assert (np.diff(out.astype(np.int32)) >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# im2col / conv oracle
+# ---------------------------------------------------------------------------
+
+class TestIm2col:
+    def test_conv_matches_direct(self):
+        x = rand_i8(1, 8, 8, 4)
+        w = rand_i8(3, 3, 4, 8)
+        out = conv2d_im2col_ref(x, w)
+        # direct int conv via float64 lax.conv (exact for these magnitudes)
+        ref = np.zeros((1, 6, 6, 8), dtype=np.int64)
+        xn, wn = np.asarray(x, np.int64), np.asarray(w, np.int64)
+        for oy in range(6):
+            for ox in range(6):
+                patch = xn[0, oy : oy + 3, ox : ox + 3, :]
+                ref[0, oy, ox, :] = np.tensordot(patch, wn, axes=([0, 1, 2], [0, 1, 2]))
+        np.testing.assert_array_equal(np.asarray(out, np.int64), ref)
+
+    def test_im2col_shape(self):
+        x = rand_i8(2, 10, 12, 3)
+        a = im2col_ref(x, 3, 3, stride=1)
+        assert a.shape == (2 * 8 * 10, 3 * 3 * 3)
+        assert a.dtype == jnp.int8
+
+    @pytest.mark.parametrize("stride", [1, 2])
+    def test_strided(self, stride):
+        x = rand_i8(1, 9, 9, 2)
+        w = rand_i8(3, 3, 2, 4)
+        out = conv2d_im2col_ref(x, w, stride=stride)
+        o = (9 - 3) // stride + 1
+        assert out.shape == (1, o, o, 4)
+
+
+# ---------------------------------------------------------------------------
+# Transformer blocks
+# ---------------------------------------------------------------------------
+
+class TestBlocks:
+    def test_mha_scores_range(self):
+        q, k = rand_i8(32, 64), rand_i8(32, 64)
+        out = mha_scores_ref(q, k, shift=6)
+        assert out.dtype == jnp.int8
+        assert out.shape == (32, 32)
+
+    def test_mlp_block_shapes(self):
+        x = rand_i8(16, 32)
+        w1, w2 = rand_i8(32, 64), rand_i8(64, 32)
+        b1, b2 = rand_i32(64), rand_i32(32)
+        out = mlp_block_ref(x, w1, b1, w2, b2, 7, 7)
+        assert out.shape == (16, 32)
+        assert out.dtype == jnp.int8
+
+    def test_mlp_relu_applied(self):
+        # with huge negative bias on layer 1, hidden is all zeros ->
+        # output equals requant(bias2)
+        x = rand_i8(8, 8)
+        w1, w2 = rand_i8(8, 8), rand_i8(8, 8)
+        b1 = jnp.full((8,), -(1 << 24), jnp.int32)
+        b2 = rand_i32(8, lo=-100, hi=100)
+        out = mlp_block_ref(x, w1, b1, w2, b2, 0, 0)
+        expect = requantize_ref(b2.astype(jnp.int32), 0)
+        np.testing.assert_array_equal(out, jnp.broadcast_to(expect, (8, 8)))

@@ -1,0 +1,146 @@
+"""L2 correctness: model graphs vs oracles, and AOT lowering sanity."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import lower_entry, to_hlo_text
+from compile.model import (
+    artifact_registry,
+    make_conv_im2col,
+    make_gemm,
+    make_linear,
+    make_mha_scores,
+    make_mlp_block,
+)
+from compile.kernels.ref import (
+    conv2d_im2col_ref,
+    gemm_int8_ref,
+    linear_ref,
+    mha_scores_ref,
+    mlp_block_ref,
+)
+
+RNG = np.random.default_rng(7)
+
+
+def rand_for(spec):
+    if spec.dtype == jnp.int8:
+        return jnp.asarray(RNG.integers(-128, 128, spec.shape, dtype=np.int8))
+    if spec.dtype == jnp.int32:
+        return jnp.asarray(RNG.integers(-512, 512, spec.shape, dtype=np.int32))
+    raise NotImplementedError(spec.dtype)
+
+
+class TestFactories:
+    @pytest.mark.parametrize("m,k,n", [(8, 8, 8), (13, 22, 17), (32, 64, 16)])
+    def test_gemm_factory(self, m, k, n):
+        fn, specs = make_gemm(m, k, n)
+        a, b = (rand_for(s) for s in specs)
+        (out,) = fn(a, b)
+        np.testing.assert_array_equal(out, gemm_int8_ref(a, b))
+
+    def test_linear_factory(self):
+        fn, specs = make_linear(16, 32, 8)
+        a, w, bias, _ = (rand_for(s) for s in specs)
+        shift = jnp.asarray([7], jnp.int32)
+        (out,) = fn(a, w, bias, shift)
+        np.testing.assert_array_equal(out, linear_ref(a, w, bias, 7))
+
+    def test_conv_factory(self):
+        fn, specs = make_conv_im2col(1, 8, 8, 4, 3, 3, 8)
+        x, w = (rand_for(s) for s in specs)
+        (out,) = fn(x, w)
+        np.testing.assert_array_equal(out, conv2d_im2col_ref(x, w))
+
+    def test_mha_factory(self):
+        fn, specs = make_mha_scores(32, 64, shift=6)
+        q, k = (rand_for(s) for s in specs)
+        (out,) = fn(q, k)
+        np.testing.assert_array_equal(out, mha_scores_ref(q, k, 6))
+
+    def test_mlp_factory(self):
+        fn, specs = make_mlp_block(16, 32, 64, shift1=7, shift2=7)
+        args = [rand_for(s) for s in specs]
+        (out,) = fn(*args)
+        np.testing.assert_array_equal(out, mlp_block_ref(*args, 7, 7))
+
+
+class TestAot:
+    def test_registry_nonempty_and_unique_files(self):
+        reg = artifact_registry()
+        assert len(reg) >= 10
+        files = [f"{k}.hlo.txt" for k in reg]
+        assert len(set(files)) == len(files)
+
+    def test_lower_gemm_has_dot_and_loop(self):
+        text, meta = lower_entry("gemm_32x32x32", make_gemm, (32, 32, 32))
+        assert "dot(" in text or "dot " in text
+        # pallas grid lowers to an HLO while loop, not an unrolled body
+        assert "while" in text
+        assert meta["args"][0]["dtype"] == "s8"
+        assert meta["results"][0]["dtype"] == "s32"
+
+    def test_lowered_text_is_parseable_header(self):
+        text, _ = lower_entry("gemm_8x8x8", make_gemm, (8, 8, 8))
+        assert text.startswith("HloModule")
+
+    def test_manifest_shapes_roundtrip(self):
+        _, meta = lower_entry("gemm_13x22x17", make_gemm, (13, 22, 17))
+        assert meta["args"][0]["shape"] == [13, 22]
+        assert meta["args"][1]["shape"] == [22, 17]
+        assert meta["results"][0]["shape"] == [13, 17]
+
+    def test_lowering_is_deterministic(self):
+        t1, m1 = lower_entry("gemm_8x8x8", make_gemm, (8, 8, 8))
+        t2, m2 = lower_entry("gemm_8x8x8", make_gemm, (8, 8, 8))
+        assert m1["sha256"] == m2["sha256"]
+
+    @pytest.mark.skipif(
+        not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+        reason="artifacts not built (run `make artifacts`)",
+    )
+    def test_built_manifest_matches_registry(self):
+        path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+        with open(path) as f:
+            manifest = json.load(f)
+        assert set(manifest) == set(artifact_registry())
+        for name, meta in manifest.items():
+            art = os.path.join(os.path.dirname(path), meta["file"])
+            assert os.path.exists(art), f"missing artifact {art}"
+
+
+class TestExecutedArtifacts:
+    """Compile the lowered HLO back through XLA and check numerics.
+
+    This closes the loop python-side: what Rust will execute (the HLO
+    text) is functionally identical to the oracle.
+    """
+
+    def _run_hlo(self, text, args):
+        from jax._src.lib import xla_client as xc
+
+        backend = jax.devices("cpu")[0].client
+        # Text -> computation via the HLO parser used by the Rust loader.
+        comp = xc._xla.hlo_module_from_text(text)
+        exe = backend.compile(
+            xc._xla.XlaComputation(comp.as_serialized_hlo_module_proto())
+        )
+        bufs = [backend.buffer_from_pyval(np.asarray(a)) for a in args]
+        out = exe.execute(bufs)
+        return [np.asarray(o) for o in out]
+
+    def test_gemm_hlo_numerics(self):
+        text, _ = lower_entry("gemm_13x22x17", make_gemm, (13, 22, 17))
+        a = RNG.integers(-128, 128, (13, 22), dtype=np.int8)
+        b = RNG.integers(-128, 128, (22, 17), dtype=np.int8)
+        try:
+            outs = self._run_hlo(text, [a, b])
+        except Exception as e:  # pragma: no cover - API drift guard
+            pytest.skip(f"in-process HLO exec unavailable: {e}")
+        ref = np.asarray(gemm_int8_ref(jnp.asarray(a), jnp.asarray(b)))
+        np.testing.assert_array_equal(outs[0], ref)

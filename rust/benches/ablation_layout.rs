@@ -1,0 +1,69 @@
+//! Extension ablation: data-layout comparison (DESIGN.md design-choice
+//! ablation). The Fig. 5 SMA step compares the paper's contiguous
+//! baseline against the interleaved layout; this bench adds the naive
+//! row-major layout (worst case: intra-tile bank serialization grows
+//! with K) and reports the utilization distribution plus the SPM
+//! conflict statistics for each.
+//!
+//! Run with:  cargo bench --bench ablation_layout
+
+use std::time::Instant;
+
+use opengemm::compiler::Layout;
+use opengemm::config::{Mechanisms, PlatformConfig};
+use opengemm::coordinator::{Coordinator, JobRequest};
+use opengemm::util::stats::BoxStats;
+use opengemm::util::table::Table;
+use opengemm::workloads::random_suite;
+
+fn main() {
+    let cfg = PlatformConfig::case_study();
+    let coord = Coordinator::new(cfg.clone());
+    let shapes = random_suite(99, 200);
+    let t0 = Instant::now();
+
+    let mut table = Table::new(&[
+        "layout", "median OU", "q1", "q3", "mean conflict cyc / job",
+    ]);
+    let mut medians = Vec::new();
+    for layout in [Layout::RowMajor, Layout::TiledContiguous, Layout::TiledInterleaved] {
+        let reqs: Vec<JobRequest> = shapes
+            .iter()
+            .map(|&shape| JobRequest {
+                shape,
+                layout,
+                mechanisms: Mechanisms::ALL,
+                repeats: 10,
+                operands: None,
+            })
+            .collect();
+        let results = coord.run_batch(reqs);
+        let mut samples = Vec::new();
+        let mut conflicts = 0u64;
+        let mut n = 0u64;
+        for r in results {
+            let r = r.expect("job");
+            samples.push(r.report.overall);
+            conflicts += r.metrics.spm.conflict_cycles;
+            n += 1;
+        }
+        let stats = BoxStats::compute(&samples);
+        medians.push(stats.median);
+        table.row(vec![
+            format!("{layout:?}"),
+            format!("{:.4}", stats.median),
+            format!("{:.4}", stats.q1),
+            format!("{:.4}", stats.q3),
+            format!("{:.0}", conflicts as f64 / n as f64),
+        ]);
+    }
+    println!("## Layout ablation (200 workloads x 10 repeats, all mechanisms)\n");
+    println!("{}", table.markdown());
+    println!(
+        "\nrow-major -> contiguous -> interleaved median OU: {:.3} -> {:.3} -> {:.3}\n\
+         (the interleaved layout is the paper's Fig. 4(c)(3) optimization)",
+        medians[0], medians[1], medians[2]
+    );
+    assert!(medians[0] < medians[1] && medians[1] < medians[2], "layout ladder must be monotone");
+    println!("bench ablation_layout: {:.1}s wall", t0.elapsed().as_secs_f64());
+}

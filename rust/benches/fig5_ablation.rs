@@ -1,0 +1,38 @@
+//! Bench: regenerate Fig. 5 — the full 500-workload x 10-repeat x
+//! 6-variant utilization ablation. Prints the box-plot statistics and
+//! the median-improvement ratios next to the paper's quoted values.
+//!
+//! Run with:  cargo bench --bench fig5_ablation
+//! Env: FIG5_WORKLOADS=500 FIG5_SEED=2024 to override.
+
+use std::time::Instant;
+
+use opengemm::config::PlatformConfig;
+use opengemm::experiments::{fig5_ablation, Fig5Options};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let cfg = PlatformConfig::case_study();
+    let opts = Fig5Options {
+        seed: env_usize("FIG5_SEED", 2024) as u64,
+        workloads: env_usize("FIG5_WORKLOADS", 500),
+        repeats: 10,
+        workers: env_usize("FIG5_WORKERS", 0),
+    };
+    eprintln!(
+        "fig5: {} workloads x {} repeats x 6 variants",
+        opts.workloads, opts.repeats
+    );
+    let t0 = Instant::now();
+    let res = fig5_ablation(&cfg, opts);
+    let wall = t0.elapsed();
+    println!("{}", res.render());
+    println!(
+        "bench fig5_ablation: {:.2}s wall for {} simulations",
+        wall.as_secs_f64(),
+        opts.workloads * 6
+    );
+}

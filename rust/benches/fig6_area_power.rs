@@ -1,0 +1,17 @@
+//! Bench: regenerate Fig. 6 — area & power breakdown, peak performance
+//! and system efficiency at the (32,32,32) power workload.
+//!
+//! Run with:  cargo bench --bench fig6_area_power
+
+use std::time::Instant;
+
+use opengemm::config::PlatformConfig;
+use opengemm::experiments::fig6_area_power;
+
+fn main() {
+    let cfg = PlatformConfig::case_study();
+    let t0 = Instant::now();
+    let res = fig6_area_power(&cfg);
+    println!("{}", res.render());
+    println!("bench fig6_area_power: {:.3}s wall", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,17 @@
+//! Bench: regenerate Fig. 7 — area-normalized throughput of OpenGeMM
+//! vs Gemmini (OS and WS modes) across square GeMM sizes 8..128.
+//!
+//! Run with:  cargo bench --bench fig7_gemmini
+
+use std::time::Instant;
+
+use opengemm::config::PlatformConfig;
+use opengemm::experiments::{fig7_gemmini, Fig7Options};
+
+fn main() {
+    let cfg = PlatformConfig::case_study();
+    let t0 = Instant::now();
+    let res = fig7_gemmini(&cfg, Fig7Options::default());
+    println!("{}", res.render());
+    println!("bench fig7_gemmini: {:.2}s wall", t0.elapsed().as_secs_f64());
+}

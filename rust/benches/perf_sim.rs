@@ -1,0 +1,109 @@
+//! Microbenchmarks of the simulator hot path (the L3 perf target in
+//! EXPERIMENTS.md §Perf): simulated cycles per wall-clock second for
+//! representative workloads, plus component microbenches (AGU walk,
+//! bank arbitration, tile MAC, RV32I dispatch).
+//!
+//! Run with:  cargo bench --bench perf_sim
+
+use opengemm::compiler::{compile_gemm, GemmShape, Layout};
+use opengemm::config::{GemmCoreParams, Mechanisms, PlatformConfig};
+use opengemm::gemm_core::{tile_mac, Accumulators};
+use opengemm::host::{encode as enc, reg, Asm, Cpu};
+use opengemm::csr::CsrManager;
+use opengemm::sim::{Platform, SimOptions};
+use opengemm::spm::Spm;
+use opengemm::streamer::AguConfig;
+use opengemm::util::bench::{black_box, Bencher};
+use opengemm::util::rng::Pcg32;
+
+fn bench_end_to_end(b: &mut Bencher) {
+    let cfg = PlatformConfig::case_study();
+    for (label, shape, mech, layout) in [
+        ("sim/64^3 all-mech", GemmShape::new(64, 64, 64), Mechanisms::ALL, Layout::TiledInterleaved),
+        ("sim/128^3 all-mech", GemmShape::new(128, 128, 128), Mechanisms::ALL, Layout::TiledInterleaved),
+        ("sim/128^3 baseline", GemmShape::new(128, 128, 128), Mechanisms::BASELINE, Layout::TiledContiguous),
+    ] {
+        let job = compile_gemm(&cfg, shape, layout, 2, mech.config_preloading).unwrap();
+        let opts = SimOptions { mechanisms: mech, ..Default::default() };
+        let mut platform = Platform::new(cfg.clone(), opts);
+        let mut cycles = 0u64;
+        let r = b.bench(label, || {
+            let res = platform.run_job(&job, None, None).unwrap();
+            cycles = res.metrics.total_cycles;
+        });
+        println!(
+            "      -> {:.1} M simulated cycles/s ({} cycles/job)",
+            r.throughput(cycles as f64) / 1e6,
+            cycles
+        );
+    }
+}
+
+fn bench_components(b: &mut Bencher) {
+    // tile MAC (functional datapath)
+    let core = GemmCoreParams::CASE_STUDY;
+    let mut acc = Accumulators::new(&core);
+    let mut rng = Pcg32::seeded(3);
+    let mut a = vec![0i8; 64];
+    let mut bb = vec![0i8; 64];
+    rng.fill_i8(&mut a);
+    rng.fill_i8(&mut bb);
+    b.bench("core/tile_mac 8x8x8", || {
+        tile_mac(&mut acc, &core, black_box(&a), black_box(&bb));
+    });
+
+    // AGU address generation
+    let agu = AguConfig {
+        base: 0,
+        stride_m: 1024,
+        stride_n: 0,
+        stride_k: 128,
+        spatial0_count: 1,
+        spatial0_stride: 0,
+        spatial1_count: 8,
+        spatial1_stride: 8,
+    };
+    let mut addrs = Vec::with_capacity(8);
+    let mut pos = 0u64;
+    b.bench("streamer/agu 8-port walk", || {
+        pos = (pos + 1) & 0xffff;
+        agu.tile_word_addrs(pos % 64, 0, pos / 64, 8, &mut addrs);
+        black_box(&addrs);
+    });
+
+    // SPM bank arbitration
+    let mut spm = Spm::new(PlatformConfig::case_study().mem);
+    let words: Vec<u64> = (0..8u64).map(|i| i * 8).collect();
+    b.bench("spm/read_cost 8 ports", || {
+        black_box(spm.read_cost(black_box(&words)));
+    });
+
+    // RV32I dispatch rate
+    let mut asm = Asm::new();
+    asm.li(reg::T0, 0);
+    asm.li(reg::T1, 1_000_000);
+    asm.label("loop");
+    asm.emit(enc::addi(reg::T0, reg::T0, 1));
+    asm.emit(enc::xor(reg::T2, reg::T0, reg::T1));
+    asm.emit(enc::and(reg::T3, reg::T2, reg::T0));
+    asm.bne_to(reg::T0, reg::T1, "loop");
+    asm.emit(enc::ebreak());
+    let program = asm.assemble();
+    let mut csr = CsrManager::new(false);
+    let r = b.bench("host/rv32i 1M-iter loop", || {
+        let mut cpu = Cpu::new(program.clone(), 256);
+        cpu.run(&mut csr, u64::MAX).unwrap();
+        black_box(cpu.cycles);
+    });
+    println!(
+        "      -> {:.1} M host instructions/s",
+        r.throughput(4_000_000.0) / 1e6
+    );
+}
+
+fn main() {
+    println!("== simulator hot-path microbenchmarks ==");
+    let mut b = Bencher::default();
+    bench_end_to_end(&mut b);
+    bench_components(&mut b);
+}

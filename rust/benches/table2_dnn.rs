@@ -1,0 +1,23 @@
+//! Bench: regenerate Table 2 — utilization and cycle counts of the
+//! four DNN workloads (plus the host-depthwise MobileNetV2 variant).
+//!
+//! Run with:  cargo bench --bench table2_dnn
+//! Env: TABLE2_BERT_SEQ=512 to override the BERT sequence length.
+
+use std::time::Instant;
+
+use opengemm::config::PlatformConfig;
+use opengemm::experiments::{table2_dnn, Table2Options};
+
+fn main() {
+    let cfg = PlatformConfig::case_study();
+    let bert_seq = std::env::var("TABLE2_BERT_SEQ")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(512);
+    let t0 = Instant::now();
+    let res = table2_dnn(&cfg, Table2Options { bert_seq, workers: 0, max_repeats: 10 });
+    let wall = t0.elapsed();
+    println!("{}", res.render());
+    println!("bench table2_dnn: {:.2}s wall", wall.as_secs_f64());
+}

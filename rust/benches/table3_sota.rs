@@ -1,0 +1,17 @@
+//! Bench: regenerate Table 3 — the state-of-the-art comparison, with
+//! the OpenGeMM row produced by the area/power model.
+//!
+//! Run with:  cargo bench --bench table3_sota
+
+use std::time::Instant;
+
+use opengemm::config::PlatformConfig;
+use opengemm::experiments::table3_sota;
+
+fn main() {
+    let cfg = PlatformConfig::case_study();
+    let t0 = Instant::now();
+    let res = table3_sota(&cfg);
+    println!("{}", res.render());
+    println!("bench table3_sota: {:.3}s wall", t0.elapsed().as_secs_f64());
+}

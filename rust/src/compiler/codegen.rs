@@ -1,0 +1,164 @@
+//! RV32I configuration-program generator.
+//!
+//! The compiler emits a *real* RISC-V machine-code program that the host
+//! ISS executes to program the accelerator: `li` the CSR values (the
+//! toolchain constant-folds strides, exactly what `-O2` does to the SNAX
+//! C runtime), `csrrw` them into the CSRManager, pulse CTRL, and
+//! poll/wait according to the synchronization discipline:
+//!
+//! - **without CPL**: the host must poll STATUS until the accelerator is
+//!   idle before touching the CSRs for the next call — configuration
+//!   time is fully exposed (Fig. 4(a)(1));
+//! - **with CPL**: the host waits only for a free pre-load slot (the
+//!   PENDING bit), then configures the *next* call while the current one
+//!   computes (Fig. 4(b)(1)).
+
+use crate::csr::{CSR_CTRL, CSR_STATUS, STATUS_BUSY, STATUS_PENDING};
+use crate::host::encode::{self as enc, reg, Asm};
+
+/// One accelerator call = an ordered CSR programming image.
+pub type CsrImage = Vec<(u32, u32)>;
+
+/// Generate the host program for `repeats` repetitions of a sequence of
+/// accelerator calls.
+pub fn gen_config_program(calls: &[CsrImage], repeats: u32, cpl: bool) -> Vec<u32> {
+    assert!(!calls.is_empty() && repeats >= 1);
+    let mut asm = Asm::new();
+
+    // s0 = remaining repeats
+    asm.li(reg::S0, repeats as i32);
+    asm.label("repeat");
+
+    for (ci, csrs) in calls.iter().enumerate() {
+        let wait = format!("wait_{ci}");
+        asm.label(&wait);
+        // csrrs t1, STATUS, x0 ; andi ; bne -> wait
+        asm.emit(enc::csrrs(reg::T1, CSR_STATUS, reg::ZERO));
+        if cpl {
+            // wait only for a free pre-load slot
+            asm.emit(enc::andi(reg::T1, reg::T1, STATUS_PENDING as i32));
+        } else {
+            // wait for full idle before reconfiguring
+            asm.emit(enc::andi(reg::T1, reg::T1, STATUS_BUSY as i32));
+        }
+        asm.bne_to(reg::T1, reg::ZERO, &wait);
+
+        // program the 16 run-time CSRs
+        for &(addr, value) in csrs {
+            asm.li(reg::T0, value as i32);
+            asm.emit(enc::csrrw(reg::ZERO, addr, reg::T0));
+        }
+        // start pulse (immediate form: one instruction)
+        asm.emit(enc::csrrwi(reg::ZERO, CSR_CTRL, 1));
+    }
+
+    asm.emit(enc::addi(reg::S0, reg::S0, -1));
+    // long-range loop back-edge: conditional branches only reach +-4 KiB
+    // and multi-call programs can exceed that, so use beq-over-jal
+    // (jal reaches +-1 MiB)
+    asm.beq_to(reg::S0, reg::ZERO, "done");
+    asm.jal_to(reg::ZERO, "repeat");
+    asm.label("done");
+
+    // final drain: wait for the accelerator to go idle
+    asm.label("drain");
+    asm.emit(enc::csrrs(reg::T1, CSR_STATUS, reg::ZERO));
+    asm.emit(enc::andi(reg::T1, reg::T1, (STATUS_BUSY | STATUS_PENDING) as i32));
+    asm.bne_to(reg::T1, reg::ZERO, "drain");
+    asm.emit(enc::ebreak());
+
+    asm.assemble()
+}
+
+/// Static cost estimate of one call's configuration stretch in host
+/// instructions (used by tests and the analytical model; the simulator
+/// measures the true cycle count).
+pub fn config_instruction_estimate(csrs: &CsrImage) -> u64 {
+    let li_cost: u64 = csrs
+        .iter()
+        .map(|&(_, v)| {
+            let v = v as i32;
+            if (-2048..=2047).contains(&v) {
+                1
+            } else {
+                2
+            }
+        })
+        .sum();
+    // li's + csrrw's + start pulse
+    li_cost + csrs.len() as u64 + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::csr::{CsrManager, CSR_A_BASE, CSR_BOUNDS};
+    use crate::host::Cpu;
+
+    fn image() -> CsrImage {
+        vec![(CSR_BOUNDS, 0x00400803), (CSR_A_BASE, 0x1234)]
+    }
+
+    /// Drive the generated program against a real CsrManager, manually
+    /// completing accelerator runs when busy.
+    fn run_program(program: Vec<u32>, cpl: bool, expect_starts: u32) {
+        let mut csr = CsrManager::new(cpl);
+        let mut cpu = Cpu::new(program, 4096);
+        let mut starts = 0u32;
+        let mut busy_cycles_left = 0u32;
+        for _ in 0..200_000 {
+            if cpu.halted() {
+                break;
+            }
+            match cpu.step(&mut csr) {
+                crate::host::StepResult::Ran { .. } => {}
+                crate::host::StepResult::Halted => break,
+                crate::host::StepResult::Fault(f) => panic!("fault: {f}"),
+            }
+            // model an accelerator that takes 50 host-steps per run
+            if let Some(_cfg) = csr.take_start() {
+                starts += 1;
+                busy_cycles_left = 50;
+            }
+            if csr.is_busy() && busy_cycles_left > 0 {
+                busy_cycles_left -= 1;
+                if busy_cycles_left == 0 {
+                    csr.notify_done();
+                    if csr.take_start().is_some() {
+                        starts += 1;
+                        busy_cycles_left = 50;
+                    }
+                }
+            }
+        }
+        assert!(cpu.halted(), "program did not finish");
+        assert_eq!(starts, expect_starts);
+        assert!(!csr.is_busy());
+    }
+
+    #[test]
+    fn non_cpl_program_runs_all_repeats() {
+        let program = gen_config_program(&[image()], 10, false);
+        run_program(program, false, 10);
+    }
+
+    #[test]
+    fn cpl_program_runs_all_repeats() {
+        let program = gen_config_program(&[image()], 10, true);
+        run_program(program, true, 10);
+    }
+
+    #[test]
+    fn multi_call_sequence() {
+        let calls = vec![image(), image(), image()];
+        let program = gen_config_program(&calls, 4, true);
+        run_program(program, true, 12);
+    }
+
+    #[test]
+    fn estimate_counts_li_widths() {
+        let csrs: CsrImage = vec![(CSR_BOUNDS, 3), (CSR_A_BASE, 0x123456)];
+        // 1 (small li) + 2 (large li) + 2 csrrw + 1 start
+        assert_eq!(config_instruction_estimate(&csrs), 6);
+    }
+}

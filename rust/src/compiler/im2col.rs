@@ -1,0 +1,215 @@
+//! Convolution-as-GeMM translation (Sec. 2.3 and [21]).
+//!
+//! A convolution with input `(N, H, W, C)` (NHWC) and kernel
+//! `(KH, KW, C, K)` lowers to a GeMM with
+//! `A: (N*OH*OW, KH*KW*C)` and `B: (KH*KW*C, K)` — the paper's
+//! `(Ox*Oy, Fx*Fy*C) x (Fx*Fy*C, K)` formulation. Grouped/depthwise
+//! convolutions lower to `groups` independent GeMMs with `C/groups`
+//! channels each (for depthwise: K' = 1, the "thin channel" case the
+//! paper blames for MobileNetV2's lower utilization).
+
+use super::tiling::GemmShape;
+
+/// A convolution layer shape (VALID padding handled by pre-padded H/W;
+/// `pad` is applied symmetrically before the window walk).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvShape {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// Channel groups (1 = dense conv, `c` = depthwise).
+    pub groups: usize,
+}
+
+impl ConvShape {
+    pub fn dense(n: usize, h: usize, w: usize, c: usize, kh: usize, kw: usize, k: usize, stride: usize, pad: usize) -> ConvShape {
+        ConvShape { n, h, w, c, kh, kw, k, stride, pad, groups: 1 }
+    }
+
+    pub fn depthwise(n: usize, h: usize, w: usize, c: usize, kh: usize, kw: usize, stride: usize, pad: usize) -> ConvShape {
+        ConvShape { n, h, w, c, kh, kw, k: c, stride, pad, groups: c }
+    }
+
+    pub fn out_h(&self) -> usize {
+        (self.h + 2 * self.pad - self.kh) / self.stride + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        (self.w + 2 * self.pad - self.kw) / self.stride + 1
+    }
+
+    /// The GeMM shape of ONE group after im2col.
+    pub fn gemm_shape(&self) -> GemmShape {
+        assert_eq!(self.c % self.groups, 0, "channels not divisible by groups");
+        assert_eq!(self.k % self.groups, 0, "filters not divisible by groups");
+        let cg = self.c / self.groups;
+        let kg = self.k / self.groups;
+        GemmShape::new(
+            self.n * self.out_h() * self.out_w(),
+            self.kh * self.kw * cg,
+            kg,
+        )
+    }
+
+    /// Number of identical GeMMs this conv lowers to (= groups).
+    pub fn gemm_count(&self) -> usize {
+        self.groups
+    }
+
+    /// Real MACs of the full convolution.
+    pub fn macs(&self) -> u64 {
+        self.gemm_shape().macs() * self.groups as u64
+    }
+}
+
+/// Functional im2col for one group of an NHWC int8 tensor: returns the
+/// `(N*OH*OW) x (KH*KW*Cg)` A-matrix, feature order (kh, kw, c) — the
+/// same order as the Python oracle (`im2col_ref`) and the weight
+/// reshape `w.reshape(KH*KW*C, K)`.
+pub fn im2col(x: &[i8], s: &ConvShape, group: usize) -> Vec<i8> {
+    let cg = s.c / s.groups;
+    let c_lo = group * cg;
+    assert_eq!(x.len(), s.n * s.h * s.w * s.c, "input size mismatch");
+    let (oh, ow) = (s.out_h(), s.out_w());
+    let mut out = vec![0i8; s.n * oh * ow * s.kh * s.kw * cg];
+    let mut row = 0usize;
+    for n in 0..s.n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let base = row * (s.kh * s.kw * cg);
+                for ky in 0..s.kh {
+                    let iy = (oy * s.stride + ky) as isize - s.pad as isize;
+                    for kx in 0..s.kw {
+                        let ix = (ox * s.stride + kx) as isize - s.pad as isize;
+                        for ci in 0..cg {
+                            let dst = base + (ky * s.kw + kx) * cg + ci;
+                            if iy >= 0 && (iy as usize) < s.h && ix >= 0 && (ix as usize) < s.w {
+                                let src = ((n * s.h + iy as usize) * s.w + ix as usize) * s.c
+                                    + c_lo
+                                    + ci;
+                                out[dst] = x[src];
+                            } // else zero padding
+                        }
+                    }
+                }
+                row += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Reshape a `(KH, KW, C, K)` weight tensor into the B-matrix
+/// `(KH*KW*Cg, Kg)` of one group.
+pub fn weights_to_b(w: &[i8], s: &ConvShape, group: usize) -> Vec<i8> {
+    let cg = s.c / s.groups;
+    let kg = s.k / s.groups;
+    assert_eq!(w.len(), s.kh * s.kw * s.c * s.k, "weight size mismatch");
+    let mut out = vec![0i8; s.kh * s.kw * cg * kg];
+    for ky in 0..s.kh {
+        for kx in 0..s.kw {
+            for ci in 0..cg {
+                for ko in 0..kg {
+                    let src = ((ky * s.kw + kx) * s.c + group * cg + ci) * s.k + group * kg + ko;
+                    let dst = ((ky * s.kw + kx) * cg + ci) * kg + ko;
+                    out[dst] = w[src];
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_dims() {
+        let s = ConvShape::dense(1, 224, 224, 3, 7, 7, 64, 2, 3);
+        assert_eq!(s.out_h(), 112);
+        let g = s.gemm_shape();
+        assert_eq!((g.m, g.k, g.n), (112 * 112, 147, 64));
+    }
+
+    #[test]
+    fn depthwise_lowering() {
+        let s = ConvShape::depthwise(1, 56, 56, 32, 3, 3, 1, 1);
+        assert_eq!(s.gemm_count(), 32);
+        let g = s.gemm_shape();
+        assert_eq!((g.m, g.k, g.n), (56 * 56, 9, 1));
+        assert_eq!(s.macs(), 56 * 56 * 9 * 32);
+    }
+
+    #[test]
+    fn im2col_matches_direct_conv() {
+        // tiny conv, brute-force reference
+        let s = ConvShape::dense(1, 5, 5, 2, 3, 3, 4, 1, 0);
+        let x: Vec<i8> = (0..5 * 5 * 2).map(|i| (i as i8).wrapping_mul(3)).collect();
+        let w: Vec<i8> = (0..3 * 3 * 2 * 4).map(|i| (i as i8).wrapping_sub(20)).collect();
+        let a = im2col(&x, &s, 0);
+        let b = weights_to_b(&w, &s, 0);
+        let g = s.gemm_shape();
+        // GeMM
+        let mut c = vec![0i64; g.m * g.n];
+        for i in 0..g.m {
+            for j in 0..g.n {
+                for kk in 0..g.k {
+                    c[i * g.n + j] += a[i * g.k + kk] as i64 * b[kk * g.n + j] as i64;
+                }
+            }
+        }
+        // direct convolution
+        for oy in 0..3usize {
+            for ox in 0..3usize {
+                for ko in 0..4usize {
+                    let mut acc = 0i64;
+                    for ky in 0..3 {
+                        for kx in 0..3 {
+                            for ci in 0..2 {
+                                let xv = x[((oy + ky) * 5 + (ox + kx)) * 2 + ci] as i64;
+                                let wv = w[((ky * 3 + kx) * 2 + ci) * 4 + ko] as i64;
+                                acc += xv * wv;
+                            }
+                        }
+                    }
+                    assert_eq!(c[(oy * 3 + ox) * 4 + ko], acc, "at ({oy},{ox},{ko})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn padding_zeroes_outside() {
+        let s = ConvShape::dense(1, 3, 3, 1, 3, 3, 1, 1, 1);
+        let x = vec![1i8; 9];
+        let a = im2col(&x, &s, 0);
+        assert_eq!(s.out_h(), 3);
+        // corner output (0,0): 4 taps inside, 5 outside
+        let first_row = &a[0..9];
+        let inside: i32 = first_row.iter().map(|&v| v as i32).sum();
+        assert_eq!(inside, 4);
+    }
+
+    #[test]
+    fn grouped_conv_partitions_channels() {
+        let mut s = ConvShape::dense(1, 4, 4, 4, 1, 1, 4, 1, 0);
+        s.groups = 2;
+        let x: Vec<i8> = (0..4 * 4 * 4).map(|i| i as i8).collect();
+        let a0 = im2col(&x, &s, 0);
+        let a1 = im2col(&x, &s, 1);
+        // group 0 sees channels 0..2, group 1 sees channels 2..4
+        assert_eq!(a0[0], x[0]);
+        assert_eq!(a0[1], x[1]);
+        assert_eq!(a1[0], x[2]);
+        assert_eq!(a1[1], x[3]);
+        let g = s.gemm_shape();
+        assert_eq!((g.m, g.k, g.n), (16, 2, 2));
+    }
+}

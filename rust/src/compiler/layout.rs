@@ -1,0 +1,497 @@
+//! Data-layout planning: the strided-memory-access mechanism (Sec. 3.4).
+//!
+//! Three layouts are supported, in increasing order of bank-conflict
+//! freedom:
+//!
+//! - [`Layout::RowMajor`]: operands stored exactly as the host produced
+//!   them. Tile rows land `K/8` (or `N/8`) words apart, so a single tile
+//!   fetch can hit the same bank repeatedly (Fig. 4(c)(2))
+//! - [`Layout::TiledContiguous`]: each array tile is one contiguous
+//!   64-byte burst; fetches are conflict-free *within* a streamer but A
+//!   and B fetches still collide whenever their tile indices land in the
+//!   same bank group.
+//! - [`Layout::TiledInterleaved`]: A and B tiles interleave on a two-tile
+//!   pitch so A only ever occupies even 8-word bank groups and B odd
+//!   groups — the contention-free layout of Fig. 4(c)(3).
+//!
+//! `plan()` resolves a padded GeMM call to base addresses + the sixteen
+//! run-time CSR values; `pack_a`/`pack_b`/`unpack_c` are the functional
+//! (data-moving) counterparts used by functional simulation, standing in
+//! for the DMA/host writing the SPM image.
+
+use crate::config::PlatformConfig;
+use crate::csr::{
+    pack_bounds, ConfigRegs, CSR_A_BASE, CSR_A_SPATIAL0, CSR_A_SPATIAL1, CSR_A_STRIDE_K,
+    CSR_A_STRIDE_M, CSR_BOUNDS, CSR_B_BASE, CSR_B_SPATIAL0, CSR_B_SPATIAL1, CSR_B_STRIDE_K,
+    CSR_B_STRIDE_N, CSR_BASE, CSR_C_BASE, CSR_C_SPATIAL0, CSR_C_SPATIAL1, CSR_C_STRIDE_M,
+    CSR_C_STRIDE_N,
+};
+use crate::spm::Spm;
+use crate::streamer::LoopBounds;
+
+use super::tiling::GemmShape;
+
+/// SPM data layout for one accelerator call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Layout {
+    RowMajor,
+    TiledContiguous,
+    TiledInterleaved,
+}
+
+/// A resolved call: padded shape, loop bounds, and the CSR programming
+/// image (the values the host must write).
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub layout: Layout,
+    /// Padded (tile-aligned) dimensions of this call.
+    pub padded: GemmShape,
+    pub bounds: LoopBounds,
+    pub a_base: u64,
+    pub b_base: u64,
+    pub c_base: u64,
+    /// Run-time CSR (address, value) pairs in programming order.
+    pub csr_writes: Vec<(u32, u32)>,
+}
+
+impl Placement {
+    /// Rebuild a ConfigRegs bank from the CSR write list (what the
+    /// hardware would hold after the host ran the config program).
+    pub fn config_regs(&self) -> ConfigRegs {
+        let mut regs = ConfigRegs::default();
+        for &(addr, value) in &self.csr_writes {
+            regs.regs[(addr - CSR_BASE) as usize] = value;
+        }
+        regs
+    }
+
+    /// Total SPM footprint in bytes (exclusive upper bound address).
+    pub fn footprint(&self) -> u64 {
+        self.c_base + 4 * (self.padded.m * self.padded.n) as u64
+    }
+}
+
+/// Resolve a padded GeMM call to addresses and CSR values.
+pub fn plan(cfg: &PlatformConfig, shape: &GemmShape, layout: Layout) -> Placement {
+    let core = &cfg.core;
+    let padded = shape.padded(core);
+    let bounds = shape.bounds(core);
+    let (mp, kp, np) = (padded.m as u64, padded.k as u64, padded.n as u64);
+    let (mu, nu, ku) = (core.mu as u64, core.nu as u64, core.ku as u64);
+    let word = cfg.mem.word_bytes() as u64;
+    let a_tile = core.a_tile_bytes() as u64;
+    let b_tile = core.b_tile_bytes() as u64;
+    let c_tile = core.c_tile_bytes() as u64;
+    let (at, bt) = (bounds.mt * bounds.kt, bounds.kt * bounds.nt);
+
+    // (a_base, b_base, c_base, per-streamer strides)
+    struct S {
+        base: u64,
+        m: u64,
+        n: u64,
+        k: u64,
+        sp0: u64,
+        sp1: u64,
+    }
+    let (a, b, c) = match layout {
+        Layout::RowMajor => {
+            let a_base = 0;
+            let b_base = mp * kp;
+            let c_base = b_base + kp * np;
+            (
+                S { base: a_base, m: mu * kp, n: 0, k: ku, sp0: word, sp1: kp },
+                S { base: b_base, m: 0, n: nu, k: ku * np, sp0: word, sp1: np },
+                S { base: c_base, m: 4 * mu * np, n: 4 * nu, k: 0, sp0: word, sp1: 4 * np },
+            )
+        }
+        Layout::TiledContiguous => {
+            let a_base = 0;
+            let b_base = a_tile * at;
+            let c_base = b_base + b_tile * bt;
+            (
+                S { base: a_base, m: a_tile * bounds.kt, n: 0, k: a_tile, sp0: word, sp1: word * (ku * core.pa_bits as u64 / 8 / word).max(1) },
+                S { base: b_base, m: 0, n: b_tile, k: b_tile * bounds.nt, sp0: word, sp1: word * (nu * core.pb_bits as u64 / 8 / word).max(1) },
+                S { base: c_base, m: c_tile * bounds.nt, n: c_tile, k: 0, sp0: word, sp1: nu * core.pc_bits as u64 / 8 },
+            )
+        }
+        Layout::TiledInterleaved => {
+            let pitch = 2 * a_tile.max(b_tile);
+            let a_base = 0;
+            let b_base = a_tile.max(b_tile);
+            let c_base = pitch * at.max(bt);
+            (
+                S { base: a_base, m: pitch * bounds.kt, n: 0, k: pitch, sp0: word, sp1: word * (ku * core.pa_bits as u64 / 8 / word).max(1) },
+                S { base: b_base, m: 0, n: pitch, k: pitch * bounds.nt, sp0: word, sp1: word * (nu * core.pb_bits as u64 / 8 / word).max(1) },
+                S { base: c_base, m: c_tile * bounds.nt, n: c_tile, k: 0, sp0: word, sp1: nu * core.pc_bits as u64 / 8 },
+            )
+        }
+    };
+
+    let csr_writes = vec![
+        (CSR_BOUNDS, pack_bounds(bounds)),
+        (CSR_A_BASE, a.base as u32),
+        (CSR_A_STRIDE_M, a.m as u32),
+        (CSR_A_STRIDE_K, a.k as u32),
+        (CSR_A_SPATIAL0, a.sp0 as u32),
+        (CSR_A_SPATIAL1, a.sp1 as u32),
+        (CSR_B_BASE, b.base as u32),
+        (CSR_B_STRIDE_N, b.n as u32),
+        (CSR_B_STRIDE_K, b.k as u32),
+        (CSR_B_SPATIAL0, b.sp0 as u32),
+        (CSR_B_SPATIAL1, b.sp1 as u32),
+        (CSR_C_BASE, c.base as u32),
+        (CSR_C_STRIDE_M, c.m as u32),
+        (CSR_C_STRIDE_N, c.n as u32),
+        (CSR_C_SPATIAL0, c.sp0 as u32),
+        (CSR_C_SPATIAL1, c.sp1 as u32),
+    ];
+
+    Placement {
+        layout,
+        padded,
+        bounds,
+        a_base: a.base,
+        b_base: b.base,
+        c_base: c.base,
+        csr_writes,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Functional SPM image construction (the DMA's job in the real system)
+// ---------------------------------------------------------------------
+
+/// Write operand A (row-major `m x k`, true dims) into the SPM under the
+/// placement's layout, zero-padding to the padded dims.
+pub fn pack_a(spm: &mut Spm, cfg: &PlatformConfig, p: &Placement, a: &[i8], m: usize, k: usize) {
+    assert_eq!(a.len(), m * k, "A size mismatch");
+    let core = &cfg.core;
+    let (mu, ku) = (core.mu, core.ku);
+    let kp = p.padded.k;
+    match p.layout {
+        Layout::RowMajor => {
+            let mut row = vec![0i8; kp];
+            for i in 0..p.padded.m {
+                row.iter_mut().for_each(|v| *v = 0);
+                if i < m {
+                    row[..k].copy_from_slice(&a[i * k..(i + 1) * k]);
+                }
+                spm.write_i8(p.a_base + (i * kp) as u64, &row);
+            }
+        }
+        Layout::TiledContiguous | Layout::TiledInterleaved => {
+            let stride_k = tile_stride_k_a(cfg, p);
+            let stride_m = stride_k * p.bounds.kt;
+            let mut tile = vec![0i8; mu * ku];
+            for m1 in 0..p.bounds.mt as usize {
+                for k1 in 0..p.bounds.kt as usize {
+                    tile.iter_mut().for_each(|v| *v = 0);
+                    for r in 0..mu {
+                        let src_r = m1 * mu + r;
+                        if src_r >= m {
+                            continue;
+                        }
+                        for c in 0..ku {
+                            let src_c = k1 * ku + c;
+                            if src_c < k {
+                                tile[r * ku + c] = a[src_r * k + src_c];
+                            }
+                        }
+                    }
+                    let addr = p.a_base + stride_m * m1 as u64 + stride_k * k1 as u64;
+                    spm.write_i8(addr, &tile);
+                }
+            }
+        }
+    }
+}
+
+/// Write operand B (row-major `k x n`, true dims) into the SPM.
+pub fn pack_b(spm: &mut Spm, cfg: &PlatformConfig, p: &Placement, b: &[i8], k: usize, n: usize) {
+    assert_eq!(b.len(), k * n, "B size mismatch");
+    let core = &cfg.core;
+    let (ku, nu) = (core.ku, core.nu);
+    let np = p.padded.n;
+    match p.layout {
+        Layout::RowMajor => {
+            let mut row = vec![0i8; np];
+            for i in 0..p.padded.k {
+                row.iter_mut().for_each(|v| *v = 0);
+                if i < k {
+                    row[..n].copy_from_slice(&b[i * n..(i + 1) * n]);
+                }
+                spm.write_i8(p.b_base + (i * np) as u64, &row);
+            }
+        }
+        Layout::TiledContiguous | Layout::TiledInterleaved => {
+            let stride_n = tile_stride_n_b(cfg, p);
+            let stride_k = stride_n * p.bounds.nt;
+            let mut tile = vec![0i8; ku * nu];
+            for k1 in 0..p.bounds.kt as usize {
+                for n1 in 0..p.bounds.nt as usize {
+                    tile.iter_mut().for_each(|v| *v = 0);
+                    for r in 0..ku {
+                        let src_r = k1 * ku + r;
+                        if src_r >= k {
+                            continue;
+                        }
+                        for c in 0..nu {
+                            let src_c = n1 * nu + c;
+                            if src_c < n {
+                                tile[r * nu + c] = b[src_r * n + src_c];
+                            }
+                        }
+                    }
+                    let addr = p.b_base + stride_k * k1 as u64 + stride_n * n1 as u64;
+                    spm.write_i8(addr, &tile);
+                }
+            }
+        }
+    }
+}
+
+/// Read result C (true dims `m x n`, row-major) back out of the SPM.
+pub fn unpack_c(spm: &Spm, cfg: &PlatformConfig, p: &Placement, m: usize, n: usize) -> Vec<i32> {
+    let core = &cfg.core;
+    let (mu, nu) = (core.mu, core.nu);
+    let np = p.padded.n;
+    let mut out = vec![0i32; m * n];
+    match p.layout {
+        Layout::RowMajor => {
+            let mut row = vec![0i32; n];
+            for i in 0..m {
+                spm.read_i32(p.c_base + 4 * (i * np) as u64, &mut row);
+                out[i * n..(i + 1) * n].copy_from_slice(&row);
+            }
+        }
+        Layout::TiledContiguous | Layout::TiledInterleaved => {
+            let c_tile = core.c_tile_bytes() as u64;
+            let stride_n = c_tile;
+            let stride_m = c_tile * p.bounds.nt;
+            let mut tile = vec![0i32; mu * nu];
+            for m1 in 0..p.bounds.mt as usize {
+                for n1 in 0..p.bounds.nt as usize {
+                    let addr = p.c_base + stride_m * m1 as u64 + stride_n * n1 as u64;
+                    spm.read_i32(addr, &mut tile);
+                    for r in 0..mu {
+                        let dst_r = m1 * mu + r;
+                        if dst_r >= m {
+                            continue;
+                        }
+                        for c in 0..nu {
+                            let dst_c = n1 * nu + c;
+                            if dst_c < n {
+                                out[dst_r * n + dst_c] = tile[r * nu + c];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+fn tile_stride_k_a(cfg: &PlatformConfig, p: &Placement) -> u64 {
+    let a_tile = cfg.core.a_tile_bytes() as u64;
+    let b_tile = cfg.core.b_tile_bytes() as u64;
+    match p.layout {
+        Layout::RowMajor => unreachable!("tiled helper on row-major"),
+        Layout::TiledContiguous => a_tile,
+        Layout::TiledInterleaved => 2 * a_tile.max(b_tile),
+    }
+}
+
+fn tile_stride_n_b(cfg: &PlatformConfig, p: &Placement) -> u64 {
+    let a_tile = cfg.core.a_tile_bytes() as u64;
+    let b_tile = cfg.core.b_tile_bytes() as u64;
+    match p.layout {
+        Layout::RowMajor => unreachable!("tiled helper on row-major"),
+        Layout::TiledContiguous => b_tile,
+        Layout::TiledInterleaved => 2 * a_tile.max(b_tile),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+
+    fn cfg() -> PlatformConfig {
+        PlatformConfig::case_study()
+    }
+
+    fn all_layouts() -> [Layout; 3] {
+        [Layout::RowMajor, Layout::TiledContiguous, Layout::TiledInterleaved]
+    }
+
+    #[test]
+    fn placement_fits_and_regions_disjoint() {
+        let cfg = cfg();
+        for layout in all_layouts() {
+            let p = plan(&cfg, &GemmShape::new(64, 64, 64), layout);
+            assert!(p.footprint() <= cfg.mem.capacity_bytes() as u64, "{layout:?}");
+            assert!(p.a_base < p.c_base);
+            assert!(p.b_base < p.c_base);
+        }
+    }
+
+    #[test]
+    fn interleaved_ab_never_share_bank_group() {
+        let cfg = cfg();
+        let p = plan(&cfg, &GemmShape::new(64, 64, 64), Layout::TiledInterleaved);
+        let regs = p.config_regs();
+        let a = regs.a_agu(&cfg.core, 8);
+        let b = regs.b_agu(&cfg.core, 8);
+        let bounds = p.bounds;
+        let mut aw = Vec::new();
+        let mut bw = Vec::new();
+        // For every temporal position, the 8+8 word addresses must map to
+        // 16 distinct banks.
+        for pos in 0..bounds.total_tiles() {
+            let (m1, n1, k1) = bounds.decompose(pos);
+            a.tile_word_addrs(m1, n1, k1, 8, &mut aw);
+            b.tile_word_addrs(m1, n1, k1, 8, &mut bw);
+            let mut banks: Vec<usize> =
+                aw.iter().chain(bw.iter()).map(|&w| (w % 32) as usize).collect();
+            banks.sort_unstable();
+            banks.dedup();
+            assert_eq!(banks.len(), 16, "conflict at {:?}", (m1, n1, k1));
+        }
+    }
+
+    #[test]
+    fn row_major_has_conflicts_for_wide_k() {
+        let cfg = cfg();
+        // K = 256 -> A tile rows are 32 words apart -> all 8 in one bank
+        let p = plan(&cfg, &GemmShape::new(64, 256, 64), Layout::RowMajor);
+        let regs = p.config_regs();
+        let a = regs.a_agu(&cfg.core, 8);
+        let mut aw = Vec::new();
+        a.tile_word_addrs(0, 0, 0, 8, &mut aw);
+        let banks: std::collections::HashSet<u64> = aw.iter().map(|&w| w % 32).collect();
+        assert_eq!(banks.len(), 1, "expected full serialization");
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_c_layouts() {
+        let cfg = cfg();
+        for layout in all_layouts() {
+            let shape = GemmShape::new(13, 22, 17);
+            let p = plan(&cfg, &shape, layout);
+            let mut spm = Spm::new(cfg.mem);
+            // write a known C image through the C AGU the way the output
+            // streamer would, then unpack
+            let regs = p.config_regs();
+            let c_agu = regs.c_agu(&cfg.core, 8);
+            for m1 in 0..p.bounds.mt {
+                for n1 in 0..p.bounds.nt {
+                    let tile: Vec<i32> = (0..64)
+                        .map(|i| (m1 * 1000 + n1 * 100) as i32 + i)
+                        .collect();
+                    // write word-by-word through the AGU ports, exactly
+                    // like the output streamer's writeback epoch
+                    for port in 0..c_agu.ports() as u64 {
+                        let byte = c_agu.byte_addr(m1, n1, 0, port);
+                        let idx = (port * 2) as usize;
+                        spm.write_i32(byte, &tile[idx..idx + 2]);
+                    }
+                }
+            }
+            let c = unpack_c(&spm, &cfg, &p, 13, 17);
+            // element (i, j) lives in tile (i/8, j/8) at offset (i%8)*8+(j%8)
+            for i in 0..13 {
+                for j in 0..17 {
+                    let expect = ((i / 8) * 1000 + (j / 8) * 100 + (i % 8) * 8 + (j % 8)) as i32;
+                    assert_eq!(c[i * 17 + j], expect, "{layout:?} at ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_a_matches_agu_view() {
+        let cfg = cfg();
+        for layout in all_layouts() {
+            let shape = GemmShape::new(20, 30, 10);
+            let p = plan(&cfg, &shape, layout);
+            let mut spm = Spm::new(cfg.mem);
+            let a: Vec<i8> = (0..20 * 30).map(|i| (i % 251) as i8).collect();
+            pack_a(&mut spm, &cfg, &p, &a, 20, 30);
+            // read every tile through the AGU and check elements
+            let regs = p.config_regs();
+            let agu = regs.a_agu(&cfg.core, 8);
+            let mut tile = vec![0i8; 64];
+            for m1 in 0..p.bounds.mt {
+                for k1 in 0..p.bounds.kt {
+                    // port r reads row r of the tile (8 bytes)
+                    for r in 0..8u64 {
+                        let byte = agu.byte_addr(m1, 0, k1, r);
+                        spm.read_i8(byte, &mut tile[(r as usize) * 8..(r as usize + 1) * 8]);
+                    }
+                    for r in 0..8usize {
+                        for c in 0..8usize {
+                            let gr = m1 as usize * 8 + r;
+                            let gc = k1 as usize * 8 + c;
+                            let expect = if gr < 20 && gc < 30 {
+                                ((gr * 30 + gc) % 251) as i8
+                            } else {
+                                0
+                            };
+                            assert_eq!(
+                                tile[r * 8 + c],
+                                expect,
+                                "{layout:?} tile ({m1},{k1}) elem ({r},{c})"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_b_matches_agu_view() {
+        let cfg = cfg();
+        for layout in all_layouts() {
+            let shape = GemmShape::new(8, 19, 23);
+            let p = plan(&cfg, &shape, layout);
+            let mut spm = Spm::new(cfg.mem);
+            let b: Vec<i8> = (0..19 * 23).map(|i| ((i * 7) % 127) as i8).collect();
+            pack_b(&mut spm, &cfg, &p, &b, 19, 23);
+            let regs = p.config_regs();
+            let agu = regs.b_agu(&cfg.core, 8);
+            let mut tile = vec![0i8; 64];
+            for k1 in 0..p.bounds.kt {
+                for n1 in 0..p.bounds.nt {
+                    for r in 0..8u64 {
+                        let byte = agu.byte_addr(0, n1, k1, r);
+                        spm.read_i8(byte, &mut tile[(r as usize) * 8..(r as usize + 1) * 8]);
+                    }
+                    for r in 0..8usize {
+                        for c in 0..8usize {
+                            let gr = k1 as usize * 8 + r;
+                            let gc = n1 as usize * 8 + c;
+                            let expect = if gr < 19 && gc < 23 {
+                                (((gr * 23 + gc) * 7) % 127) as i8
+                            } else {
+                                0
+                            };
+                            assert_eq!(tile[r * 8 + c], expect, "{layout:?} ({k1},{n1})");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn csr_write_list_covers_all_config_regs() {
+        let cfg = cfg();
+        let p = plan(&cfg, &GemmShape::new(8, 8, 8), Layout::TiledInterleaved);
+        assert_eq!(p.csr_writes.len(), 16);
+        let addrs: std::collections::HashSet<u32> =
+            p.csr_writes.iter().map(|&(a, _)| a).collect();
+        assert_eq!(addrs.len(), 16, "no duplicate CSR addresses");
+    }
+}

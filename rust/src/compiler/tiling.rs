@@ -1,0 +1,276 @@
+//! GeMM shapes, padding, and software tiling over the SPM capacity.
+//!
+//! The hardware loop controller handles matrices up to the on-chip
+//! buffer capacity; larger problems are split by software into multiple
+//! accelerator calls ("extra tiling as more nested temporal loops on
+//! higher-level memories", Sec. 2.3). The split shrinks N first, then M,
+//! keeping K whole — output-stationary dataflow wants the full K
+//! reduction inside one call so partial sums never leave the
+//! accumulators.
+
+use crate::config::{GemmCoreParams, PlatformConfig};
+use crate::gemm_core::MAX_LOOP_BOUND;
+use crate::streamer::LoopBounds;
+
+use super::layout::Layout;
+
+/// A GeMM problem in element space: C[M,N] = A[M,K] x B[K,N].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GemmShape {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl GemmShape {
+    pub fn new(m: usize, k: usize, n: usize) -> GemmShape {
+        assert!(m > 0 && k > 0 && n > 0, "degenerate GeMM ({m},{k},{n})");
+        GemmShape { m, k, n }
+    }
+
+    /// Real multiply-accumulates.
+    pub fn macs(&self) -> u64 {
+        self.m as u64 * self.k as u64 * self.n as u64
+    }
+
+    /// Operations (1 MAC = 2 ops), the paper's GOPS numerator.
+    pub fn ops(&self) -> u64 {
+        2 * self.macs()
+    }
+
+    /// Dimensions padded up to array-tile multiples.
+    pub fn padded(&self, core: &GemmCoreParams) -> GemmShape {
+        let up = |d: usize, u: usize| d.div_ceil(u) * u;
+        GemmShape {
+            m: up(self.m, core.mu),
+            k: up(self.k, core.ku),
+            n: up(self.n, core.nu),
+        }
+    }
+
+    /// Temporal loop bounds on the array.
+    pub fn bounds(&self, core: &GemmCoreParams) -> LoopBounds {
+        LoopBounds {
+            mt: self.m.div_ceil(core.mu) as u64,
+            nt: self.n.div_ceil(core.nu) as u64,
+            kt: self.k.div_ceil(core.ku) as u64,
+        }
+    }
+
+    /// MACs the padded execution burns (tiles x full array).
+    pub fn padded_macs(&self, core: &GemmCoreParams) -> u64 {
+        self.bounds(core).total_tiles() * core.macs_per_cycle()
+    }
+
+    /// Spatial utilization of this shape on the array: real MACs over
+    /// padded MACs (Sec. 4.3, "SU").
+    pub fn spatial_utilization(&self, core: &GemmCoreParams) -> f64 {
+        self.macs() as f64 / self.padded_macs(core) as f64
+    }
+
+    /// Ideal compute cycles (one tile-MAC per cycle, zero stalls).
+    pub fn ideal_cycles(&self, core: &GemmCoreParams) -> u64 {
+        self.bounds(core).total_tiles()
+    }
+}
+
+/// One accelerator call produced by the software tiler: a sub-GeMM and
+/// its offsets inside the parent problem.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmBlock {
+    pub shape: GemmShape,
+    pub m_off: usize,
+    pub n_off: usize,
+}
+
+/// Split error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SplitError(pub String);
+
+impl std::fmt::Display for SplitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "cannot tile workload onto SPM: {}", self.0)
+    }
+}
+
+impl std::error::Error for SplitError {}
+
+/// SPM bytes one call occupies under `layout` for padded dims.
+pub fn call_footprint(
+    cfg: &PlatformConfig,
+    padded: &GemmShape,
+    layout: Layout,
+) -> u64 {
+    let bounds = padded.bounds(&cfg.core);
+    let a_bytes = (padded.m * padded.k) as u64;
+    let b_bytes = (padded.k * padded.n) as u64;
+    let c_bytes = 4 * (padded.m * padded.n) as u64;
+    match layout {
+        Layout::RowMajor | Layout::TiledContiguous => a_bytes + b_bytes + c_bytes,
+        Layout::TiledInterleaved => {
+            // A and B tiles interleave on a 2-tile pitch; the region spans
+            // 2 * tile_bytes * max(At, Bt), then C tiles packed densely.
+            let at = bounds.mt * bounds.kt;
+            let bt = bounds.kt * bounds.nt;
+            let tile = cfg.core.a_tile_bytes().max(cfg.core.b_tile_bytes()) as u64;
+            2 * tile * at.max(bt) + c_bytes
+        }
+    }
+}
+
+/// Split a GeMM into blocks that each fit the SPM and the hardware loop
+/// bounds. Blocks cover the (M, N) space; K stays whole.
+pub fn split_for_capacity(
+    cfg: &PlatformConfig,
+    shape: GemmShape,
+    layout: Layout,
+) -> Result<Vec<GemmBlock>, SplitError> {
+    let core = &cfg.core;
+    let capacity = cfg.mem.capacity_bytes() as u64;
+    let padded = shape.padded(core);
+
+    // Candidate block dims: shrink N by halving (tile-aligned), then M.
+    let mut bm = padded.m;
+    let mut bn = padded.n;
+    let fits = |bm: usize, bn: usize| {
+        let blk = GemmShape { m: bm, k: padded.k, n: bn };
+        let b = blk.bounds(core);
+        call_footprint(cfg, &blk, layout) <= capacity
+            && b.mt <= MAX_LOOP_BOUND
+            && b.nt <= MAX_LOOP_BOUND
+            && b.kt <= MAX_LOOP_BOUND
+    };
+    let halve = |d: usize, unit: usize| -> usize {
+        let tiles = d / unit;
+        ((tiles + 1) / 2).max(1) * unit
+    };
+    while !fits(bm, bn) {
+        if bn > core.nu {
+            bn = halve(bn, core.nu);
+        } else if bm > core.mu {
+            bm = halve(bm, core.mu);
+        } else {
+            return Err(SplitError(format!(
+                "K={} too large: a single ({},{K},{}) tile exceeds SPM capacity {capacity}B",
+                padded.k,
+                core.mu,
+                core.nu,
+                K = padded.k,
+            )));
+        }
+    }
+
+    // Enumerate blocks in (m, n) row-major order; edge blocks shrink to
+    // the true (unpadded) extent so SU accounting stays exact.
+    let mut blocks = Vec::new();
+    let mut m_off = 0;
+    while m_off < shape.m {
+        let bm_real = bm.min(shape.m - m_off);
+        let mut n_off = 0;
+        while n_off < shape.n {
+            let bn_real = bn.min(shape.n - n_off);
+            blocks.push(GemmBlock {
+                shape: GemmShape::new(bm_real, shape.k, bn_real),
+                m_off,
+                n_off,
+            });
+            n_off += bn;
+        }
+        m_off += bm;
+    }
+    Ok(blocks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+
+    fn cfg() -> PlatformConfig {
+        PlatformConfig::case_study()
+    }
+
+    #[test]
+    fn padding_and_su() {
+        let core = GemmCoreParams::CASE_STUDY;
+        let s = GemmShape::new(13, 22, 17);
+        let p = s.padded(&core);
+        assert_eq!((p.m, p.k, p.n), (16, 24, 24));
+        assert_eq!(s.bounds(&core), LoopBounds { mt: 2, nt: 3, kt: 3 });
+        let su = s.spatial_utilization(&core);
+        let expect = (13.0 * 22.0 * 17.0) / (16.0 * 24.0 * 24.0);
+        assert!((su - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn aligned_shape_full_su() {
+        let core = GemmCoreParams::CASE_STUDY;
+        let s = GemmShape::new(64, 64, 64);
+        assert_eq!(s.spatial_utilization(&core), 1.0);
+        assert_eq!(s.ideal_cycles(&core), 512);
+    }
+
+    #[test]
+    fn small_gemm_single_block() {
+        let cfg = cfg();
+        let blocks =
+            split_for_capacity(&cfg, GemmShape::new(64, 64, 64), Layout::TiledInterleaved)
+                .unwrap();
+        assert_eq!(blocks.len(), 1);
+        assert_eq!(blocks[0].shape, GemmShape::new(64, 64, 64));
+    }
+
+    #[test]
+    fn capacity_split_256_cubed() {
+        let cfg = cfg();
+        let shape = GemmShape::new(256, 256, 256);
+        let blocks = split_for_capacity(&cfg, shape, Layout::TiledInterleaved).unwrap();
+        assert!(blocks.len() >= 2, "256^3 exceeds 264 KiB SPM; got {blocks:?}");
+        // blocks tile the output space exactly
+        let covered: u64 = blocks.iter().map(|b| (b.shape.m * b.shape.n) as u64).sum();
+        assert_eq!(covered, 256 * 256);
+        // every block fits
+        for b in &blocks {
+            let padded = b.shape.padded(&cfg.core);
+            assert!(
+                call_footprint(&cfg, &padded, Layout::TiledInterleaved)
+                    <= cfg.mem.capacity_bytes() as u64
+            );
+        }
+    }
+
+    #[test]
+    fn blocks_cover_without_overlap() {
+        let cfg = cfg();
+        let shape = GemmShape::new(250, 256, 250); // irregular edges
+        let blocks = split_for_capacity(&cfg, shape, Layout::RowMajor).unwrap();
+        let mut covered = vec![false; shape.m * shape.n];
+        for b in &blocks {
+            for i in 0..b.shape.m {
+                for j in 0..b.shape.n {
+                    let idx = (b.m_off + i) * shape.n + (b.n_off + j);
+                    assert!(!covered[idx], "overlap at ({},{})", b.m_off + i, b.n_off + j);
+                    covered[idx] = true;
+                }
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+    }
+
+    #[test]
+    fn huge_k_is_rejected() {
+        let cfg = cfg();
+        // K so large that even an 8x8 output tile cannot fit its operands
+        let shape = GemmShape::new(8, 300_000, 8);
+        assert!(split_for_capacity(&cfg, shape, Layout::RowMajor).is_err());
+    }
+
+    #[test]
+    fn footprint_interleaved_larger_when_unbalanced() {
+        let cfg = cfg();
+        let shape = GemmShape::new(8, 64, 256).padded(&cfg.core);
+        let dense = call_footprint(&cfg, &shape, Layout::RowMajor);
+        let inter = call_footprint(&cfg, &shape, Layout::TiledInterleaved);
+        assert!(inter >= dense);
+    }
+}

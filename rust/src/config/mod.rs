@@ -1,0 +1,414 @@
+//! Design-time configuration of the OpenGeMM platform generator.
+//!
+//! Mirrors Table 1 of the paper: the GeMM-core parameters `(Mu, Nu, Ku,
+//! P_A, P_B, P_C)` and the memory-system parameters `(D_stream, R_mem,
+//! W_mem, P_word, N_bank, D_mem)`. A `PlatformConfig` is the analogue of
+//! one elaborated Chisel instance; `validate()` enforces the same
+//! structural constraints elaboration would.
+
+mod toml;
+
+pub use toml::{parse_toml, TomlValue};
+
+use std::fmt;
+
+/// GeMM accelerator generator parameters (paper Table 1, top half).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmCoreParams {
+    /// Number of rows of the DotProd mesh (spatial unrolling of M).
+    pub mu: usize,
+    /// Number of columns of the DotProd mesh (spatial unrolling of N).
+    pub nu: usize,
+    /// Size of each DotProd unit (spatial unrolling of K).
+    pub ku: usize,
+    /// Integer bit precision of A operands.
+    pub pa_bits: usize,
+    /// Integer bit precision of B operands.
+    pub pb_bits: usize,
+    /// Integer bit precision of C accumulators/outputs.
+    pub pc_bits: usize,
+}
+
+/// Memory subsystem parameters (paper Table 1, bottom half).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemParams {
+    /// Pre-fetch buffer and output buffer depth (in tiles).
+    pub d_stream: usize,
+    /// Number of SPM read ports feeding the input streamers.
+    pub r_mem: usize,
+    /// Number of SPM write ports draining the output streamer.
+    pub w_mem: usize,
+    /// Data width of one memory port, in bits.
+    pub p_word_bits: usize,
+    /// Number of SPM banks.
+    pub n_bank: usize,
+    /// Depth of each bank, in words.
+    pub d_mem: usize,
+    /// SPM read latency in cycles (bank access + interconnect).
+    pub read_latency: u64,
+    /// SPM write latency in cycles.
+    pub write_latency: u64,
+}
+
+/// Run-time utilization mechanisms (the paper's Arch(1)..(4) ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Mechanisms {
+    /// Configuration pre-loading (Sec. 3.2): shadow CSRs let the host
+    /// program run n+1 while run n computes.
+    pub config_preloading: bool,
+    /// Input pre-fetch + output buffering (Sec. 3.3). When false the
+    /// streamers fetch on demand and the core stalls on every tile.
+    pub prefetch: bool,
+    /// Strided memory access / data-layout optimization (Sec. 3.4). When
+    /// false, operands sit in naive row-major layout and suffer bank
+    /// contention.
+    pub strided_layout: bool,
+}
+
+impl Mechanisms {
+    /// Paper Arch(1): everything off.
+    pub const BASELINE: Mechanisms = Mechanisms {
+        config_preloading: false,
+        prefetch: false,
+        strided_layout: false,
+    };
+    /// Paper Arch(2): + configuration pre-loading.
+    pub const CPL: Mechanisms = Mechanisms {
+        config_preloading: true,
+        prefetch: false,
+        strided_layout: false,
+    };
+    /// Paper Arch(3): + input pre-fetch / output buffering.
+    pub const CPL_BUF: Mechanisms = Mechanisms {
+        config_preloading: true,
+        prefetch: true,
+        strided_layout: false,
+    };
+    /// Paper Arch(4): all three mechanisms.
+    pub const ALL: Mechanisms = Mechanisms {
+        config_preloading: true,
+        prefetch: true,
+        strided_layout: true,
+    };
+
+    pub fn label(&self) -> String {
+        match (self.config_preloading, self.prefetch, self.strided_layout) {
+            (false, false, false) => "Arch1 (baseline)".into(),
+            (true, false, false) => "Arch2 (+CPL)".into(),
+            (true, true, false) => "Arch3 (+prefetch/outbuf)".into(),
+            (true, true, true) => "Arch4 (+SMA)".into(),
+            (c, p, s) => format!("custom(cpl={c},buf={p},sma={s})"),
+        }
+    }
+}
+
+/// One elaborated OpenGeMM platform instance.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlatformConfig {
+    pub core: GemmCoreParams,
+    pub mem: MemParams,
+    /// Core clock frequency in MHz (evaluation point: 200 MHz).
+    pub freq_mhz: u64,
+}
+
+/// Configuration validation error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConfigError(pub String);
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "invalid platform config: {}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl GemmCoreParams {
+    /// The paper's case-study core: an 8x8x8 array of int8 MACs with
+    /// int32 accumulators.
+    pub const CASE_STUDY: GemmCoreParams = GemmCoreParams {
+        mu: 8,
+        nu: 8,
+        ku: 8,
+        pa_bits: 8,
+        pb_bits: 8,
+        pc_bits: 32,
+    };
+
+    /// MACs per cycle (array peak).
+    pub fn macs_per_cycle(&self) -> u64 {
+        (self.mu * self.nu * self.ku) as u64
+    }
+
+    /// Bytes of one A' tile (Mu x Ku operands).
+    pub fn a_tile_bytes(&self) -> usize {
+        self.mu * self.ku * self.pa_bits / 8
+    }
+
+    /// Bytes of one B' tile (Ku x Nu operands).
+    pub fn b_tile_bytes(&self) -> usize {
+        self.ku * self.nu * self.pb_bits / 8
+    }
+
+    /// Bytes of one C' tile (Mu x Nu results).
+    pub fn c_tile_bytes(&self) -> usize {
+        self.mu * self.nu * self.pc_bits / 8
+    }
+}
+
+impl MemParams {
+    /// Paper Table 1 case-study memory system: 270 KiB SPM in 32 banks of
+    /// 1056 x 64-bit words; 16 read + 32 write ports; buffer depth 3.
+    pub const CASE_STUDY: MemParams = MemParams {
+        d_stream: 3,
+        r_mem: 16,
+        w_mem: 32,
+        p_word_bits: 64,
+        n_bank: 32,
+        d_mem: 1056,
+        read_latency: 1,
+        write_latency: 1,
+    };
+
+    pub fn word_bytes(&self) -> usize {
+        self.p_word_bits / 8
+    }
+
+    /// Total SPM capacity in bytes.
+    pub fn capacity_bytes(&self) -> usize {
+        self.n_bank * self.d_mem * self.word_bytes()
+    }
+
+    /// Read bandwidth in bytes/cycle.
+    pub fn read_bw(&self) -> usize {
+        self.r_mem * self.word_bytes()
+    }
+
+    /// Write bandwidth in bytes/cycle.
+    pub fn write_bw(&self) -> usize {
+        self.w_mem * self.word_bytes()
+    }
+}
+
+impl PlatformConfig {
+    /// The paper's evaluated instance (Table 1 case-study column).
+    pub fn case_study() -> PlatformConfig {
+        PlatformConfig {
+            core: GemmCoreParams::CASE_STUDY,
+            mem: MemParams::CASE_STUDY,
+            freq_mhz: 200,
+        }
+    }
+
+    /// Peak throughput in GOPS (1 MAC = 2 ops), paper Sec. 4.4:
+    /// 2 * 8*8*8 * 200 MHz = 204.8 GOPS for the case study.
+    pub fn peak_gops(&self) -> f64 {
+        2.0 * self.core.macs_per_cycle() as f64 * self.freq_mhz as f64 * 1e6 / 1e9
+    }
+
+    /// Validate structural constraints the Chisel generator would check
+    /// at elaboration time.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let c = &self.core;
+        let m = &self.mem;
+        let err = |msg: String| Err(ConfigError(msg));
+
+        if c.mu == 0 || c.nu == 0 || c.ku == 0 {
+            return err(format!("array dims must be positive: ({},{},{})", c.mu, c.nu, c.ku));
+        }
+        if ![2, 4, 8].contains(&c.pa_bits) || ![2, 4, 8].contains(&c.pb_bits) {
+            return err(format!(
+                "operand precisions must be 2/4/8 bits, got A={} B={}",
+                c.pa_bits, c.pb_bits
+            ));
+        }
+        if c.pc_bits < c.pa_bits + c.pb_bits {
+            return err(format!(
+                "accumulator precision {} too small for {}x{} products",
+                c.pc_bits, c.pa_bits, c.pb_bits
+            ));
+        }
+        if m.p_word_bits == 0 || m.p_word_bits % 8 != 0 {
+            return err(format!("port width must be a byte multiple: {}", m.p_word_bits));
+        }
+        if !m.n_bank.is_power_of_two() {
+            return err(format!("bank count must be a power of two: {}", m.n_bank));
+        }
+        if m.d_stream == 0 {
+            return err("streamer buffer depth must be >= 1".into());
+        }
+        // The input ports must sustain one A' + one B' tile per cycle,
+        // otherwise the generated core can never reach full utilization
+        // (the generator rejects such configurations).
+        let per_cycle = c.a_tile_bytes() + c.b_tile_bytes();
+        if m.read_bw() < per_cycle {
+            return err(format!(
+                "read bandwidth {}B/cy < tile demand {}B/cy",
+                m.read_bw(),
+                per_cycle
+            ));
+        }
+        // Write ports must drain one C' tile in at most K/Ku cycles; the
+        // structural requirement checked at elaboration is >= one C' tile
+        // per ceil(c_tile/w_bw) <= some bound; we require a full tile
+        // within Ku cycles (the minimum K-loop length).
+        let c_tile = c.c_tile_bytes();
+        if m.write_bw() * c.ku < c_tile {
+            return err(format!(
+                "write bandwidth {}B/cy cannot drain a {}B C' tile within Ku={} cycles",
+                m.write_bw(),
+                c_tile,
+                c.ku
+            ));
+        }
+        // Working set of one double-buffered tile set must fit the SPM.
+        let min_capacity = (c.a_tile_bytes() + c.b_tile_bytes() + c.c_tile_bytes()) * 2;
+        if m.capacity_bytes() < min_capacity {
+            return err(format!(
+                "SPM capacity {}B below minimum working set {}B",
+                m.capacity_bytes(),
+                min_capacity
+            ));
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML-subset config file (see `config/toml.rs`).
+    pub fn from_toml(text: &str) -> Result<PlatformConfig, ConfigError> {
+        let doc = parse_toml(text).map_err(|e| ConfigError(format!("toml: {e}")))?;
+        let mut cfg = PlatformConfig::case_study();
+        let lookup = |section: &str, key: &str| -> Option<i64> {
+            doc.get(section).and_then(|s| s.get(key)).and_then(|v| v.as_int())
+        };
+        macro_rules! set {
+            ($field:expr, $section:expr, $key:expr) => {
+                if let Some(v) = lookup($section, $key) {
+                    $field = v as usize;
+                }
+            };
+        }
+        set!(cfg.core.mu, "core", "mu");
+        set!(cfg.core.nu, "core", "nu");
+        set!(cfg.core.ku, "core", "ku");
+        set!(cfg.core.pa_bits, "core", "pa_bits");
+        set!(cfg.core.pb_bits, "core", "pb_bits");
+        set!(cfg.core.pc_bits, "core", "pc_bits");
+        set!(cfg.mem.d_stream, "mem", "d_stream");
+        set!(cfg.mem.r_mem, "mem", "r_mem");
+        set!(cfg.mem.w_mem, "mem", "w_mem");
+        set!(cfg.mem.p_word_bits, "mem", "p_word_bits");
+        set!(cfg.mem.n_bank, "mem", "n_bank");
+        set!(cfg.mem.d_mem, "mem", "d_mem");
+        if let Some(v) = lookup("platform", "freq_mhz") {
+            cfg.freq_mhz = v as u64;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn case_study_matches_paper() {
+        let cfg = PlatformConfig::case_study();
+        cfg.validate().expect("case study must validate");
+        // 204.8 GOPS peak (Sec. 4.4)
+        assert!((cfg.peak_gops() - 204.8).abs() < 1e-9);
+        // 270 KiB SPM: 32 banks x 1056 words x 8B = 270336 B
+        assert_eq!(cfg.mem.capacity_bytes(), 270336);
+        assert_eq!(cfg.mem.capacity_bytes() / 1024, 264); // 264 KiB data array
+        // read ports sustain exactly A'+B' per cycle
+        assert_eq!(cfg.mem.read_bw(), cfg.core.a_tile_bytes() + cfg.core.b_tile_bytes());
+        // write ports drain exactly one C' tile per cycle
+        assert_eq!(cfg.mem.write_bw(), cfg.core.c_tile_bytes());
+    }
+
+    #[test]
+    fn tile_byte_sizes() {
+        let c = GemmCoreParams::CASE_STUDY;
+        assert_eq!(c.a_tile_bytes(), 64);
+        assert_eq!(c.b_tile_bytes(), 64);
+        assert_eq!(c.c_tile_bytes(), 256);
+        assert_eq!(c.macs_per_cycle(), 512);
+    }
+
+    #[test]
+    fn rejects_undersized_read_bandwidth() {
+        let mut cfg = PlatformConfig::case_study();
+        cfg.mem.r_mem = 4; // 32 B/cy < 128 B/cy demand
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_small_accumulator() {
+        let mut cfg = PlatformConfig::case_study();
+        cfg.core.pc_bits = 8;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_non_pow2_banks() {
+        let mut cfg = PlatformConfig::case_study();
+        cfg.mem.n_bank = 12;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_zero_buffer_depth() {
+        let mut cfg = PlatformConfig::case_study();
+        cfg.mem.d_stream = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn accepts_generator_variants() {
+        // vector dot-product unit: 1x1 mesh of one big DotProd
+        let mut cfg = PlatformConfig::case_study();
+        cfg.core.mu = 1;
+        cfg.core.nu = 1;
+        cfg.core.ku = 64;
+        cfg.validate().unwrap();
+        // outer-product-ish: Ku = 1 needs pc_bits >= 16 and more write bw
+        let mut cfg = PlatformConfig::case_study();
+        cfg.core.ku = 1;
+        cfg.core.pc_bits = 32;
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn mechanisms_labels() {
+        assert!(Mechanisms::BASELINE.label().contains("Arch1"));
+        assert!(Mechanisms::ALL.label().contains("Arch4"));
+    }
+
+    #[test]
+    fn from_toml_overrides() {
+        let text = r#"
+[core]
+mu = 16
+nu = 16
+ku = 8
+
+[mem]
+r_mem = 32
+w_mem = 128
+
+[platform]
+freq_mhz = 500
+"#;
+        let cfg = PlatformConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.core.mu, 16);
+        assert_eq!(cfg.freq_mhz, 500);
+        assert!((cfg.peak_gops() - 2.0 * 2048.0 * 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn from_toml_rejects_invalid() {
+        // mu=64 makes the A' tile 512B > 128B read bandwidth
+        let text = "[core]\nmu = 64\n";
+        assert!(PlatformConfig::from_toml(text).is_err());
+    }
+}

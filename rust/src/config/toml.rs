@@ -1,0 +1,182 @@
+//! Minimal TOML-subset parser for platform config files.
+//!
+//! Supports: `[section]` headers, `key = value` with integer, float,
+//! boolean and basic-string values, `#` comments and blank lines. This is
+//! all the surface the config files use; nested tables, arrays and dates
+//! are rejected loudly rather than mis-parsed.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl TomlValue {
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+/// Parse a TOML-subset document into `section -> key -> value`.
+/// Top-level keys (before any section header) land in section `""`.
+pub fn parse_toml(text: &str) -> Result<TomlDoc, String> {
+    let mut doc: TomlDoc = BTreeMap::new();
+    let mut section = String::new();
+    doc.entry(section.clone()).or_default();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated section header", lineno + 1))?
+                .trim();
+            if name.is_empty() || name.contains('[') || name.contains('.') {
+                return Err(format!("line {}: unsupported section {name:?}", lineno + 1));
+            }
+            section = name.to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(format!("line {}: empty key", lineno + 1));
+        }
+        let value = parse_value(value.trim())
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        doc.get_mut(&section).unwrap().insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside a basic string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body
+            .strip_suffix('"')
+            .ok_or_else(|| format!("unterminated string: {s:?}"))?;
+        if body.contains('\\') {
+            return Err("string escapes not supported".into());
+        }
+        return Ok(TomlValue::Str(body.to_string()));
+    }
+    if s.starts_with('[') || s.starts_with('{') {
+        return Err(format!("arrays/inline tables not supported: {s:?}"));
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse_toml(
+            r#"
+# platform file
+top = 1
+
+[core]
+mu = 8          # rows
+scale = 1.5
+name = "gemm"
+fast = true
+big = 1_000_000
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["top"], TomlValue::Int(1));
+        assert_eq!(doc["core"]["mu"].as_int(), Some(8));
+        assert_eq!(doc["core"]["scale"].as_f64(), Some(1.5));
+        assert_eq!(doc["core"]["name"].as_str(), Some("gemm"));
+        assert_eq!(doc["core"]["fast"].as_bool(), Some(true));
+        assert_eq!(doc["core"]["big"].as_int(), Some(1_000_000));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = parse_toml(r##"k = "a#b""##).unwrap();
+        assert_eq!(doc[""]["k"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn rejects_unsupported_syntax() {
+        assert!(parse_toml("[a.b]\n").is_err());
+        assert!(parse_toml("k = [1, 2]\n").is_err());
+        assert!(parse_toml("k =\n").is_err());
+        assert!(parse_toml("just a line\n").is_err());
+        assert!(parse_toml("[unterminated\n").is_err());
+    }
+
+    #[test]
+    fn later_keys_override() {
+        let doc = parse_toml("[s]\nk = 1\nk = 2\n").unwrap();
+        assert_eq!(doc["s"]["k"].as_int(), Some(2));
+    }
+}

@@ -1,0 +1,269 @@
+//! L3 coordinator: a multi-worker simulation service.
+//!
+//! The evaluation workloads are embarrassingly parallel across GeMM
+//! shapes (Fig. 5 runs 500 workloads x 7 architecture variants), so the
+//! coordinator owns a pool of worker threads, each with its own
+//! [`Platform`] instance, and distributes compiled jobs over a work
+//! queue (tokio is unavailable offline; std threads + channels carry
+//! the same architecture). Results come back over a bounded channel in
+//! submission order.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::compiler::{compile_gemm, GemmShape, Layout, SplitError};
+use crate::config::{Mechanisms, PlatformConfig};
+use crate::sim::{JobResult, Platform, SimError, SimOptions};
+
+/// A simulation request.
+#[derive(Debug, Clone)]
+pub struct JobRequest {
+    pub shape: GemmShape,
+    pub layout: Layout,
+    pub mechanisms: Mechanisms,
+    pub repeats: u32,
+    /// Functional operands (A, B); None = timing-only.
+    pub operands: Option<(Vec<i8>, Vec<i8>)>,
+}
+
+impl JobRequest {
+    pub fn timing(shape: GemmShape, mechanisms: Mechanisms, repeats: u32) -> JobRequest {
+        // Without SMA the DMA still places operand tiles contiguously in
+        // streaming order (the paper's Fig. 4(c)(2) baseline) but cannot
+        // avoid cross-operand bank-group collisions; SMA interleaves A
+        // and B on disjoint bank groups (Fig. 4(c)(3)).
+        let layout = if mechanisms.strided_layout {
+            Layout::TiledInterleaved
+        } else {
+            Layout::TiledContiguous
+        };
+        JobRequest { shape, layout, mechanisms, repeats, operands: None }
+    }
+}
+
+/// Outcome of one request.
+pub type JobOutcome = Result<JobResult, String>;
+
+struct WorkItem {
+    index: usize,
+    request: JobRequest,
+}
+
+/// Aggregated coordinator statistics.
+#[derive(Debug, Default, Clone)]
+pub struct CoordinatorStats {
+    pub jobs_completed: u64,
+    pub jobs_failed: u64,
+    pub simulated_cycles: u64,
+}
+
+/// The worker pool.
+pub struct Coordinator {
+    cfg: PlatformConfig,
+    csr_latency: u64,
+    workers: usize,
+    stats: Arc<Mutex<CoordinatorStats>>,
+}
+
+impl Coordinator {
+    pub fn new(cfg: PlatformConfig) -> Coordinator {
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .clamp(1, 32);
+        Coordinator {
+            cfg,
+            csr_latency: SimOptions::default().csr_latency,
+            workers,
+            stats: Arc::new(Mutex::new(CoordinatorStats::default())),
+        }
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> Coordinator {
+        self.workers = workers.max(1);
+        self
+    }
+
+    pub fn with_csr_latency(mut self, latency: u64) -> Coordinator {
+        self.csr_latency = latency;
+        self
+    }
+
+    pub fn stats(&self) -> CoordinatorStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Run a batch of requests in parallel; results in request order.
+    pub fn run_batch(&self, requests: Vec<JobRequest>) -> Vec<JobOutcome> {
+        let n = requests.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let (work_tx, work_rx) = mpsc::channel::<WorkItem>();
+        let work_rx = Arc::new(Mutex::new(work_rx));
+        let (done_tx, done_rx) = mpsc::channel::<(usize, JobOutcome)>();
+
+        for (index, request) in requests.into_iter().enumerate() {
+            work_tx.send(WorkItem { index, request }).unwrap();
+        }
+        drop(work_tx);
+
+        let workers = self.workers.min(n);
+        let mut handles: Vec<JoinHandle<()>> = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let work_rx = Arc::clone(&work_rx);
+            let done_tx = done_tx.clone();
+            let cfg = self.cfg.clone();
+            let stats = Arc::clone(&self.stats);
+            let csr_latency = self.csr_latency;
+            handles.push(std::thread::spawn(move || {
+                // one platform per worker, reconfigured per job
+                loop {
+                    let item = {
+                        let rx = work_rx.lock().unwrap();
+                        rx.recv()
+                    };
+                    let Ok(WorkItem { index, request }) = item else { break };
+                    let outcome = run_one(&cfg, csr_latency, &request);
+                    {
+                        let mut s = stats.lock().unwrap();
+                        match &outcome {
+                            Ok(r) => {
+                                s.jobs_completed += 1;
+                                s.simulated_cycles += r.metrics.total_cycles;
+                            }
+                            Err(_) => s.jobs_failed += 1,
+                        }
+                    }
+                    let _ = done_tx.send((index, outcome));
+                }
+            }));
+        }
+        drop(done_tx);
+
+        let mut results: Vec<Option<JobOutcome>> = (0..n).map(|_| None).collect();
+        for (index, outcome) in done_rx {
+            results[index] = Some(outcome);
+        }
+        for h in handles {
+            h.join().expect("worker panicked");
+        }
+        results
+            .into_iter()
+            .map(|r| r.unwrap_or_else(|| Err("worker dropped the job".into())))
+            .collect()
+    }
+
+    /// Run a single request inline (no pool).
+    pub fn run_one(&self, request: &JobRequest) -> JobOutcome {
+        run_one(&self.cfg, self.csr_latency, request)
+    }
+}
+
+fn run_one(cfg: &PlatformConfig, csr_latency: u64, request: &JobRequest) -> JobOutcome {
+    let job = compile_gemm(
+        cfg,
+        request.shape,
+        request.layout,
+        request.repeats,
+        request.mechanisms.config_preloading,
+    )
+    .map_err(|e: SplitError| e.to_string())?;
+    let opts = SimOptions {
+        mechanisms: request.mechanisms,
+        functional: request.operands.is_some(),
+        csr_latency,
+        ..Default::default()
+    };
+    let mut platform = Platform::new(cfg.clone(), opts);
+    let (a, b) = match &request.operands {
+        Some((a, b)) => (Some(a.as_slice()), Some(b.as_slice())),
+        None => (None, None),
+    };
+    platform
+        .run_job(&job, a, b)
+        .map_err(|e: SimError| e.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn coordinator() -> Coordinator {
+        Coordinator::new(PlatformConfig::case_study()).with_workers(4)
+    }
+
+    #[test]
+    fn batch_preserves_order_and_completes() {
+        let c = coordinator();
+        let shapes = [(8, 8, 8), (16, 16, 16), (24, 8, 40), (64, 64, 64)];
+        let reqs: Vec<JobRequest> = shapes
+            .iter()
+            .map(|&(m, k, n)| {
+                JobRequest::timing(GemmShape::new(m, k, n), Mechanisms::ALL, 2)
+            })
+            .collect();
+        let results = c.run_batch(reqs);
+        assert_eq!(results.len(), 4);
+        for (i, r) in results.iter().enumerate() {
+            let r = r.as_ref().expect("job ok");
+            let (m, k, n) = shapes[i];
+            let ideal = (m.div_ceil(8) * k.div_ceil(8) * n.div_ceil(8)) as u64;
+            assert_eq!(r.metrics.compute_cycles, ideal * 2, "shape {i}");
+        }
+        let stats = c.stats();
+        assert_eq!(stats.jobs_completed, 4);
+        assert_eq!(stats.jobs_failed, 0);
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let c = coordinator();
+        let req = JobRequest::timing(GemmShape::new(40, 48, 56), Mechanisms::CPL_BUF, 3);
+        let serial = c.run_one(&req).unwrap();
+        let batch = c.run_batch(vec![req.clone(), req.clone()]);
+        for r in batch {
+            let r = r.unwrap();
+            assert_eq!(r.metrics.total_cycles, serial.metrics.total_cycles);
+            assert_eq!(r.report.overall, serial.report.overall);
+        }
+    }
+
+    #[test]
+    fn functional_batch_returns_data() {
+        let c = coordinator();
+        let shape = GemmShape::new(12, 20, 9);
+        let mut rng = Pcg32::seeded(5);
+        let mut a = vec![0i8; shape.m * shape.k];
+        let mut b = vec![0i8; shape.k * shape.n];
+        rng.fill_i8(&mut a);
+        rng.fill_i8(&mut b);
+        let req = JobRequest {
+            shape,
+            layout: Layout::TiledInterleaved,
+            mechanisms: Mechanisms::ALL,
+            repeats: 1,
+            operands: Some((a.clone(), b.clone())),
+        };
+        let results = c.run_batch(vec![req]);
+        let c_mat = results[0].as_ref().unwrap().c.as_ref().unwrap().clone();
+        // spot-check one element
+        let (i, j) = (3, 4);
+        let expect: i32 = (0..shape.k)
+            .map(|kk| a[i * shape.k + kk] as i32 * b[kk * shape.n + j] as i32)
+            .sum();
+        assert_eq!(c_mat[i * shape.n + j], expect);
+    }
+
+    #[test]
+    fn failed_jobs_reported_not_panicked() {
+        let c = coordinator();
+        // oversized K fails the tiler
+        let req = JobRequest::timing(GemmShape::new(8, 300_000, 8), Mechanisms::ALL, 1);
+        let results = c.run_batch(vec![req]);
+        assert!(results[0].is_err());
+        assert_eq!(c.stats().jobs_failed, 1);
+    }
+}

@@ -1,0 +1,418 @@
+//! CSR-based accelerator programming interface (Sec. 3.1-3.2).
+//!
+//! The host programs the GeMM core and the three data streamers through
+//! standard RISC-V CSR instructions in a dedicated address range — no ISA
+//! extension, no custom compiler. A `CSRManager` mediates between the
+//! Snitch core and the accelerator at 32 bits/cycle, and implements
+//! **configuration pre-loading (CPL)**: CSR writes land in a *staging*
+//! bank while the accelerator runs, and a start command issued during a
+//! run is latched and fires the moment the current run finishes,
+//! overlapping configuration time with compute (Fig. 4(b)(1)).
+//!
+//! Register map (offsets within the accelerator CSR window):
+//!
+//! | off  | name        | meaning                                        |
+//! |------|-------------|------------------------------------------------|
+//! | 0x00 | BOUNDS      | packed loop bounds: Mt | Nt<<10 | Kt<<20        |
+//! | 0x01 | A_BASE      | A operand byte base                            |
+//! | 0x02 | A_STRIDE_M  | A byte stride per m1                           |
+//! | 0x03 | A_STRIDE_K  | A byte stride per k1                           |
+//! | 0x04 | A_SPATIAL0  | A inner spatial byte stride                    |
+//! | 0x05 | A_SPATIAL1  | A outer spatial byte stride                    |
+//! | 0x06 | B_BASE      | B operand byte base                            |
+//! | 0x07 | B_STRIDE_N  | B byte stride per n1                           |
+//! | 0x08 | B_STRIDE_K  | B byte stride per k1                           |
+//! | 0x09 | B_SPATIAL0  | B inner spatial byte stride                    |
+//! | 0x0a | B_SPATIAL1  | B outer spatial byte stride                    |
+//! | 0x0b | C_BASE      | C result byte base                             |
+//! | 0x0c | C_STRIDE_M  | C byte stride per m1                           |
+//! | 0x0d | C_STRIDE_N  | C byte stride per n1                           |
+//! | 0x0e | C_SPATIAL0  | C inner spatial byte stride                    |
+//! | 0x0f | C_SPATIAL1  | C outer spatial byte stride                    |
+//! | 0x10 | CTRL        | write 1: start                                 |
+//! | 0x11 | STATUS      | read-only: bit0 busy, bit1 start-pending       |
+//!
+//! Spatial loop *counts* are design-time constants derived from the core
+//! geometry (Sec. 3.4: "at design time we configure the AGU ... how many
+//! nested loops are needed"); only the strides are run-time CSRs.
+//!
+//! BOUNDS packs all three bounds in one CSR ("multiple accelerator
+//! configurations can be consolidated into a single CSR to optimize
+//! configuration cycles"), 10 bits each.
+
+use crate::config::GemmCoreParams;
+use crate::streamer::{AguConfig, LoopBounds};
+
+/// Base CSR address of the accelerator window (the platform allocates a
+/// custom-range block, as SNAX does).
+pub const CSR_BASE: u32 = 0x3c0;
+/// Number of implemented CSRs.
+pub const CSR_COUNT: usize = 18;
+
+pub const CSR_BOUNDS: u32 = CSR_BASE;
+pub const CSR_A_BASE: u32 = CSR_BASE + 0x1;
+pub const CSR_A_STRIDE_M: u32 = CSR_BASE + 0x2;
+pub const CSR_A_STRIDE_K: u32 = CSR_BASE + 0x3;
+pub const CSR_A_SPATIAL0: u32 = CSR_BASE + 0x4;
+pub const CSR_A_SPATIAL1: u32 = CSR_BASE + 0x5;
+pub const CSR_B_BASE: u32 = CSR_BASE + 0x6;
+pub const CSR_B_STRIDE_N: u32 = CSR_BASE + 0x7;
+pub const CSR_B_STRIDE_K: u32 = CSR_BASE + 0x8;
+pub const CSR_B_SPATIAL0: u32 = CSR_BASE + 0x9;
+pub const CSR_B_SPATIAL1: u32 = CSR_BASE + 0xa;
+pub const CSR_C_BASE: u32 = CSR_BASE + 0xb;
+pub const CSR_C_STRIDE_M: u32 = CSR_BASE + 0xc;
+pub const CSR_C_STRIDE_N: u32 = CSR_BASE + 0xd;
+pub const CSR_C_SPATIAL0: u32 = CSR_BASE + 0xe;
+pub const CSR_C_SPATIAL1: u32 = CSR_BASE + 0xf;
+pub const CSR_CTRL: u32 = CSR_BASE + 0x10;
+pub const CSR_STATUS: u32 = CSR_BASE + 0x11;
+
+/// Design-time spatial counts for each streamer's AGU, derived from the
+/// core geometry and the memory word size.
+pub fn spatial_counts(core: &GemmCoreParams, word_bytes: usize) -> ((usize, usize), (usize, usize), (usize, usize)) {
+    let row = |bytes: usize| (bytes / word_bytes).max(1);
+    // A': Mu rows of Ku*P_A/8 bytes; B': Ku rows of Nu*P_B/8 bytes;
+    // C': Mu rows of Nu*P_C/8 bytes.
+    let a = (row(core.ku * core.pa_bits / 8), core.mu);
+    let b = (row(core.nu * core.pb_bits / 8), core.ku);
+    let c = (row(core.nu * core.pc_bits / 8), core.mu);
+    (a, b, c)
+}
+
+pub const STATUS_BUSY: u32 = 1 << 0;
+pub const STATUS_PENDING: u32 = 1 << 1;
+
+/// Pack (Mt, Nt, Kt) into the BOUNDS register (10 bits each).
+pub fn pack_bounds(b: LoopBounds) -> u32 {
+    debug_assert!(b.mt <= 1024 && b.nt <= 1024 && b.kt <= 1024);
+    // A bound of 1024 encodes as 0 is ambiguous with 0; hardware encodes
+    // bound-1 per field.
+    (((b.mt - 1) & 0x3ff) | (((b.nt - 1) & 0x3ff) << 10) | (((b.kt - 1) & 0x3ff) << 20)) as u32
+}
+
+/// Unpack the BOUNDS register.
+pub fn unpack_bounds(v: u32) -> LoopBounds {
+    LoopBounds {
+        mt: ((v as u64) & 0x3ff) + 1,
+        nt: ((v as u64 >> 10) & 0x3ff) + 1,
+        kt: ((v as u64 >> 20) & 0x3ff) + 1,
+    }
+}
+
+/// A complete accelerator configuration snapshot (one staging bank).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ConfigRegs {
+    pub regs: [u32; CSR_COUNT],
+}
+
+impl ConfigRegs {
+    fn idx(addr: u32) -> usize {
+        (addr - CSR_BASE) as usize
+    }
+
+    pub fn bounds(&self) -> LoopBounds {
+        unpack_bounds(self.regs[Self::idx(CSR_BOUNDS)])
+    }
+
+    /// Build the A-streamer AGU program. Spatial counts are design-time
+    /// properties derived from the core geometry.
+    pub fn a_agu(&self, core: &GemmCoreParams, word_bytes: usize) -> AguConfig {
+        let ((c0, c1), _, _) = spatial_counts(core, word_bytes);
+        AguConfig {
+            base: self.regs[Self::idx(CSR_A_BASE)] as u64,
+            stride_m: self.regs[Self::idx(CSR_A_STRIDE_M)] as i32 as i64,
+            stride_n: 0, // A is reused along n1 (design-time pattern)
+            stride_k: self.regs[Self::idx(CSR_A_STRIDE_K)] as i32 as i64,
+            spatial0_count: c0,
+            spatial0_stride: self.regs[Self::idx(CSR_A_SPATIAL0)] as i32 as i64,
+            spatial1_count: c1,
+            spatial1_stride: self.regs[Self::idx(CSR_A_SPATIAL1)] as i32 as i64,
+        }
+    }
+
+    pub fn b_agu(&self, core: &GemmCoreParams, word_bytes: usize) -> AguConfig {
+        let (_, (c0, c1), _) = spatial_counts(core, word_bytes);
+        AguConfig {
+            base: self.regs[Self::idx(CSR_B_BASE)] as u64,
+            stride_m: 0, // B is reused along m1
+            stride_n: self.regs[Self::idx(CSR_B_STRIDE_N)] as i32 as i64,
+            stride_k: self.regs[Self::idx(CSR_B_STRIDE_K)] as i32 as i64,
+            spatial0_count: c0,
+            spatial0_stride: self.regs[Self::idx(CSR_B_SPATIAL0)] as i32 as i64,
+            spatial1_count: c1,
+            spatial1_stride: self.regs[Self::idx(CSR_B_SPATIAL1)] as i32 as i64,
+        }
+    }
+
+    pub fn c_agu(&self, core: &GemmCoreParams, word_bytes: usize) -> AguConfig {
+        let (_, _, (c0, c1)) = spatial_counts(core, word_bytes);
+        AguConfig {
+            base: self.regs[Self::idx(CSR_C_BASE)] as u64,
+            stride_m: self.regs[Self::idx(CSR_C_STRIDE_M)] as i32 as i64,
+            stride_n: self.regs[Self::idx(CSR_C_STRIDE_N)] as i32 as i64,
+            stride_k: 0, // C is output-stationary: no k1 dependence
+            spatial0_count: c0,
+            spatial0_stride: self.regs[Self::idx(CSR_C_SPATIAL0)] as i32 as i64,
+            spatial1_count: c1,
+            spatial1_stride: self.regs[Self::idx(CSR_C_SPATIAL1)] as i32 as i64,
+        }
+    }
+}
+
+/// Error on CSR access.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CsrError {
+    /// Address outside the accelerator window.
+    BadAddress(u32),
+    /// Start issued while busy with CPL disabled (the host must poll).
+    StartWhileBusy,
+    /// Start issued while a pre-loaded start is already pending.
+    DoublePending,
+}
+
+impl std::fmt::Display for CsrError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CsrError::BadAddress(a) => write!(f, "CSR address {a:#x} not mapped"),
+            CsrError::StartWhileBusy => write!(f, "start while busy without CPL"),
+            CsrError::DoublePending => write!(f, "start while a start is already pending"),
+        }
+    }
+}
+
+impl std::error::Error for CsrError {}
+
+/// The CSRManager: staging bank + pre-load latch.
+#[derive(Debug, Clone)]
+pub struct CsrManager {
+    /// Configuration pre-loading enabled (design-time mechanism toggle
+    /// for the ablation; always true in the shipping platform).
+    pub cpl: bool,
+    staging: ConfigRegs,
+    /// Latched (config, ) waiting for the current run to finish.
+    pending: Option<ConfigRegs>,
+    /// Set for one platform poll after a start fires.
+    start_fired: Option<ConfigRegs>,
+    /// Mirrors the accelerator busy state (updated by the platform).
+    busy: bool,
+    /// Cycles the host spent on accepted CSR accesses.
+    pub access_cycles: u64,
+}
+
+impl CsrManager {
+    pub fn new(cpl: bool) -> CsrManager {
+        CsrManager {
+            cpl,
+            staging: ConfigRegs::default(),
+            pending: None,
+            start_fired: None,
+            busy: false,
+            access_cycles: 0,
+        }
+    }
+
+    /// Host-side CSR write (one cycle per accepted write).
+    pub fn write(&mut self, addr: u32, value: u32) -> Result<(), CsrError> {
+        if !(CSR_BASE..CSR_BASE + CSR_COUNT as u32).contains(&addr) {
+            return Err(CsrError::BadAddress(addr));
+        }
+        self.access_cycles += 1;
+        if addr == CSR_CTRL {
+            if value & 1 == 0 {
+                return Ok(()); // no-op control write
+            }
+            return self.request_start();
+        }
+        if addr == CSR_STATUS {
+            return Ok(()); // read-only: writes ignored
+        }
+        self.staging.regs[ConfigRegs::idx(addr)] = value;
+        Ok(())
+    }
+
+    /// Host-side CSR read.
+    pub fn read(&mut self, addr: u32) -> Result<u32, CsrError> {
+        if !(CSR_BASE..CSR_BASE + CSR_COUNT as u32).contains(&addr) {
+            return Err(CsrError::BadAddress(addr));
+        }
+        self.access_cycles += 1;
+        if addr == CSR_STATUS {
+            let mut v = 0;
+            if self.busy {
+                v |= STATUS_BUSY;
+            }
+            if self.pending.is_some() {
+                v |= STATUS_PENDING;
+            }
+            return Ok(v);
+        }
+        Ok(self.staging.regs[ConfigRegs::idx(addr)])
+    }
+
+    fn request_start(&mut self) -> Result<(), CsrError> {
+        if self.busy {
+            if !self.cpl {
+                return Err(CsrError::StartWhileBusy);
+            }
+            if self.pending.is_some() {
+                return Err(CsrError::DoublePending);
+            }
+            // CPL: snapshot the staging bank; fires on run completion.
+            self.pending = Some(self.staging);
+            return Ok(());
+        }
+        self.start_fired = Some(self.staging);
+        self.busy = true;
+        Ok(())
+    }
+
+    /// Platform side: the accelerator finished its run. If a pre-loaded
+    /// start is pending it fires immediately (the 1-cycle CPL swap).
+    pub fn notify_done(&mut self) {
+        self.busy = false;
+        if let Some(cfg) = self.pending.take() {
+            self.start_fired = Some(cfg);
+            self.busy = true;
+        }
+    }
+
+    /// Platform side: poll for a fired start (consumed once).
+    pub fn take_start(&mut self) -> Option<ConfigRegs> {
+        self.start_fired.take()
+    }
+
+    pub fn is_busy(&self) -> bool {
+        self.busy
+    }
+
+    pub fn has_pending(&self) -> bool {
+        self.pending.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounds_pack_roundtrip() {
+        for b in [
+            LoopBounds { mt: 1, nt: 1, kt: 1 },
+            LoopBounds { mt: 32, nt: 17, kt: 1024 },
+            LoopBounds { mt: 1024, nt: 1024, kt: 1024 },
+        ] {
+            assert_eq!(unpack_bounds(pack_bounds(b)), b);
+        }
+    }
+
+    #[test]
+    fn write_then_start_fires() {
+        let mut csr = CsrManager::new(false);
+        csr.write(CSR_BOUNDS, pack_bounds(LoopBounds { mt: 2, nt: 3, kt: 4 })).unwrap();
+        csr.write(CSR_A_BASE, 0x100).unwrap();
+        csr.write(CSR_CTRL, 1).unwrap();
+        let cfg = csr.take_start().expect("start fired");
+        assert_eq!(cfg.bounds(), LoopBounds { mt: 2, nt: 3, kt: 4 });
+        assert!(csr.is_busy());
+        assert!(csr.take_start().is_none(), "consumed once");
+    }
+
+    #[test]
+    fn start_while_busy_without_cpl_rejected() {
+        let mut csr = CsrManager::new(false);
+        csr.write(CSR_CTRL, 1).unwrap();
+        csr.take_start().unwrap();
+        assert_eq!(csr.write(CSR_CTRL, 1), Err(CsrError::StartWhileBusy));
+    }
+
+    #[test]
+    fn cpl_latches_and_fires_on_done() {
+        let mut csr = CsrManager::new(true);
+        csr.write(CSR_BOUNDS, pack_bounds(LoopBounds { mt: 1, nt: 1, kt: 1 })).unwrap();
+        csr.write(CSR_CTRL, 1).unwrap();
+        csr.take_start().unwrap();
+        // pre-load the next run while busy
+        csr.write(CSR_BOUNDS, pack_bounds(LoopBounds { mt: 5, nt: 6, kt: 7 })).unwrap();
+        csr.write(CSR_CTRL, 1).unwrap();
+        assert!(csr.has_pending());
+        assert_eq!(csr.read(CSR_STATUS).unwrap(), STATUS_BUSY | STATUS_PENDING);
+        // double pre-load is a programming error
+        assert_eq!(csr.write(CSR_CTRL, 1), Err(CsrError::DoublePending));
+        // run completes -> pending start fires with the *new* config
+        csr.notify_done();
+        let cfg = csr.take_start().expect("pre-loaded start fired");
+        assert_eq!(cfg.bounds(), LoopBounds { mt: 5, nt: 6, kt: 7 });
+        assert!(csr.is_busy());
+    }
+
+    #[test]
+    fn staging_isolated_from_running_config() {
+        let mut csr = CsrManager::new(true);
+        csr.write(CSR_A_BASE, 111).unwrap();
+        csr.write(CSR_CTRL, 1).unwrap();
+        let run1 = csr.take_start().unwrap();
+        // mutate staging during the run; run1's snapshot must not change
+        csr.write(CSR_A_BASE, 222).unwrap();
+        assert_eq!(run1.regs[1], 111);
+        assert_eq!(csr.read(CSR_A_BASE).unwrap(), 222);
+    }
+
+    #[test]
+    fn status_reflects_done() {
+        let mut csr = CsrManager::new(false);
+        csr.write(CSR_CTRL, 1).unwrap();
+        csr.take_start().unwrap();
+        assert_eq!(csr.read(CSR_STATUS).unwrap() & STATUS_BUSY, STATUS_BUSY);
+        csr.notify_done();
+        assert_eq!(csr.read(CSR_STATUS).unwrap() & STATUS_BUSY, 0);
+    }
+
+    #[test]
+    fn bad_address_rejected() {
+        let mut csr = CsrManager::new(false);
+        assert!(matches!(csr.write(0x100, 0), Err(CsrError::BadAddress(_))));
+        assert!(matches!(csr.read(0x7ff), Err(CsrError::BadAddress(_))));
+    }
+
+    #[test]
+    fn agu_builders_use_design_time_pattern() {
+        let core = GemmCoreParams::CASE_STUDY;
+        let mut csr = CsrManager::new(false);
+        csr.write(CSR_A_BASE, 0).unwrap();
+        csr.write(CSR_A_STRIDE_M, 512).unwrap();
+        csr.write(CSR_A_STRIDE_K, 8).unwrap();
+        csr.write(CSR_A_SPATIAL1, 64).unwrap();
+        csr.write(CSR_CTRL, 1).unwrap();
+        let cfg = csr.take_start().unwrap();
+        let a = cfg.a_agu(&core, 8);
+        assert_eq!(a.ports(), 8);
+        assert_eq!(a.stride_n, 0, "A has no n1 dependence by construction");
+        let c = cfg.c_agu(&core, 8);
+        assert_eq!(c.ports(), 32);
+        assert_eq!(c.stride_k, 0, "C is output-stationary");
+    }
+
+    #[test]
+    fn spatial_counts_match_geometry() {
+        let core = GemmCoreParams::CASE_STUDY;
+        let (a, b, c) = spatial_counts(&core, 8);
+        assert_eq!(a, (1, 8));
+        assert_eq!(b, (1, 8));
+        assert_eq!(c, (4, 8));
+        // 16-bit accumulator variant: C rows are 16B = 2 words
+        let mut core16 = core;
+        core16.pc_bits = 16;
+        let (_, _, c16) = spatial_counts(&core16, 8);
+        assert_eq!(c16, (2, 8));
+    }
+
+    #[test]
+    fn access_cycles_counted() {
+        let mut csr = CsrManager::new(false);
+        csr.write(CSR_A_BASE, 1).unwrap();
+        csr.read(CSR_A_BASE).unwrap();
+        csr.read(CSR_STATUS).unwrap();
+        assert_eq!(csr.access_cycles, 3);
+    }
+}

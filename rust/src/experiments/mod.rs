@@ -1,0 +1,15 @@
+//! Experiment drivers: one function per paper table/figure, shared by
+//! the CLI (`opengemm <subcommand>`) and the `cargo bench` targets.
+//! Each driver returns structured results plus a `render()` to markdown.
+
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod table2;
+pub mod table3;
+
+pub use fig5::{fig5_ablation, Fig5Options, Fig5Result};
+pub use fig6::{fig6_area_power, Fig6Result};
+pub use fig7::{fig7_gemmini, Fig7Options, Fig7Result};
+pub use table2::{table2_dnn, Table2Options, Table2Result};
+pub use table3::{table3_sota, Table3Result};

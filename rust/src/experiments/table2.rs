@@ -1,0 +1,169 @@
+//! Table 2: utilization and cycle counts of real DNN workloads.
+//!
+//! Each model's GeMM stream is folded to unique shapes; every unique
+//! shape is simulated (with CPL amortization over its repeat count) and
+//! scaled back. SU is MAC-weighted over the stream; TU weights each
+//! shape's cycles by its count — the same aggregate the paper reports.
+
+use crate::compiler::GemmShape;
+use crate::config::PlatformConfig;
+use crate::coordinator::{Coordinator, JobRequest};
+use crate::config::Mechanisms;
+use crate::util::table::{fmt_f, fmt_sci, Table};
+use crate::workloads::{bert_base, mobilenet_v2, mobilenet_v2_host_dw, resnet18, vit_b16, ModelWorkload};
+
+#[derive(Debug, Clone, Copy)]
+pub struct Table2Options {
+    pub bert_seq: usize,
+    pub workers: usize,
+    /// Cap on per-shape CPL amortization repeats (10 mirrors Fig. 5).
+    pub max_repeats: u32,
+}
+
+impl Default for Table2Options {
+    fn default() -> Self {
+        Table2Options { bert_seq: 512, workers: 0, max_repeats: 10 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelRow {
+    pub name: String,
+    pub spatial: f64,
+    pub temporal: f64,
+    pub overall: f64,
+    pub cycles: f64,
+    pub macs: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Table2Result {
+    pub rows: Vec<ModelRow>,
+}
+
+fn run_model(cfg: &PlatformConfig, model: &ModelWorkload, opts: &Table2Options) -> ModelRow {
+    let coord = {
+        let c = Coordinator::new(cfg.clone());
+        if opts.workers > 0 {
+            c.with_workers(opts.workers)
+        } else {
+            c
+        }
+    };
+    let unique = model.unique_shapes();
+    let requests: Vec<JobRequest> = unique
+        .iter()
+        .map(|&(shape, count)| {
+            let repeats = (count as u32).clamp(1, opts.max_repeats);
+            JobRequest::timing(shape, Mechanisms::ALL, repeats)
+        })
+        .collect();
+    let results = coord.run_batch(requests);
+
+    let mut total_cycles = 0f64;
+    let mut compute_cycles = 0f64;
+    for ((shape, count), outcome) in unique.iter().zip(results) {
+        let r = outcome.unwrap_or_else(|e| panic!("{}: shape {shape:?}: {e}", model.name));
+        let reps = r.metrics.runs_completed.max(1) as f64
+            / cfg_calls(cfg, shape) as f64;
+        // per-execution steady-state cycles (config amortized by CPL)
+        let per_exec_total = r.metrics.total_cycles as f64 / reps;
+        let per_exec_compute = r.metrics.compute_cycles as f64 / reps;
+        total_cycles += per_exec_total * *count as f64;
+        compute_cycles += per_exec_compute * *count as f64;
+    }
+    let su = model.spatial_utilization(&cfg.core);
+    let tu = compute_cycles / total_cycles;
+    ModelRow {
+        name: model.name.clone(),
+        spatial: su,
+        temporal: tu,
+        overall: su * tu,
+        cycles: total_cycles,
+        macs: model.total_macs(),
+    }
+}
+
+fn cfg_calls(cfg: &PlatformConfig, shape: &GemmShape) -> u64 {
+    use crate::compiler::{split_for_capacity, Layout};
+    split_for_capacity(cfg, *shape, Layout::TiledInterleaved)
+        .map(|b| b.len() as u64)
+        .unwrap_or(1)
+}
+
+pub fn table2_dnn(cfg: &PlatformConfig, opts: Table2Options) -> Table2Result {
+    let models = vec![
+        mobilenet_v2(),
+        mobilenet_v2_host_dw(),
+        resnet18(),
+        vit_b16(),
+        bert_base(opts.bert_seq),
+    ];
+    let rows = models.iter().map(|m| run_model(cfg, m, &opts)).collect();
+    Table2Result { rows }
+}
+
+impl Table2Result {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("## Table 2 — utilization and performance on real DNNs\n\n");
+        let mut t = Table::new(&["model", "SU %", "TU %", "OU %", "cycles", "GMACs"]);
+        for r in &self.rows {
+            t.row(vec![
+                r.name.clone(),
+                fmt_f(100.0 * r.spatial, 2),
+                fmt_f(100.0 * r.temporal, 2),
+                fmt_f(100.0 * r.overall, 2),
+                fmt_sci(r.cycles),
+                fmt_f(r.macs as f64 / 1e9, 2),
+            ]);
+        }
+        out.push_str(&t.markdown());
+        out.push_str(
+            "\npaper: MobileNetV2 81.89 / ResNet18 95.74 / ViT-B-16 98.16 / BERT-Base 99.34 (OU %)\n",
+        );
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_ou_band_and_ordering() {
+        let cfg = PlatformConfig::case_study();
+        // short BERT keeps the test fast; utilization is insensitive to
+        // sequence length beyond ~128
+        let res = table2_dnn(&cfg, Table2Options { bert_seq: 128, workers: 0, max_repeats: 10 });
+        let get = |name: &str| {
+            res.rows
+                .iter()
+                .find(|r| r.name.starts_with(name))
+                .unwrap_or_else(|| panic!("row {name}"))
+        };
+        let bert = get("BERT-Base");
+        let vit = get("ViT-B-16");
+        let r18 = get("ResNet18");
+        let mnv2_host = get("MobileNetV2(host-dw)");
+        // paper ordering: MobileNetV2 < ResNet18 < ViT < BERT
+        assert!(mnv2_host.overall < r18.overall + 0.05);
+        assert!(r18.overall < vit.overall);
+        assert!(vit.overall <= bert.overall + 0.01);
+        // transformers approach peak (paper: 98-99%)
+        assert!(bert.overall > 0.9, "BERT OU {}", bert.overall);
+        assert!(vit.overall > 0.9, "ViT OU {}", vit.overall);
+        // ResNet18 in the paper band (95.74%): allow a margin
+        assert!(r18.overall > 0.8, "ResNet18 OU {}", r18.overall);
+        // TU is high everywhere with all mechanisms on — except the
+        // naive per-channel depthwise MobileNetV2 lowering, where
+        // hundreds of trivially small (M, 9, 1) accelerator calls are
+        // configuration-bound (the extreme of the paper's "thin
+        // channels -> lower temporal utilization" observation; see
+        // EXPERIMENTS.md deviations)
+        for r in &res.rows {
+            let bound = if r.name == "MobileNetV2" { 0.40 } else { 0.65 };
+            assert!(r.temporal > bound, "{} TU {}", r.name, r.temporal);
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! Functional datapath of the 3D MAC array (Fig. 3).
+//!
+//! The array is an `(Mu, Nu)` mesh of `Ku`-wide dot-product units. In one
+//! cycle it consumes an A' tile `(Mu x Ku)` and a B' tile `(Ku x Nu)` and
+//! accumulates into the `(Mu x Nu)` int32 accumulator register file
+//! (output-stationary). Products and sums are two's-complement wrapping,
+//! like the RTL (no saturation on the accumulate path).
+
+use crate::config::GemmCoreParams;
+
+/// The accumulator register file of the DotProd mesh.
+#[derive(Debug, Clone)]
+pub struct Accumulators {
+    pub acc: Vec<i32>,
+    mu: usize,
+    nu: usize,
+}
+
+impl Accumulators {
+    pub fn new(core: &GemmCoreParams) -> Accumulators {
+        Accumulators {
+            acc: vec![0; core.mu * core.nu],
+            mu: core.mu,
+            nu: core.nu,
+        }
+    }
+
+    /// Hardware "accumulator reset" issued by the loop controller at
+    /// k1 == 0.
+    pub fn reset(&mut self) {
+        self.acc.iter_mut().for_each(|v| *v = 0);
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> i32 {
+        self.acc[i * self.nu + j]
+    }
+
+    /// Snapshot the accumulators as an output tile payload.
+    pub fn snapshot(&self) -> Box<[i32]> {
+        self.acc.clone().into_boxed_slice()
+    }
+
+    pub fn mu(&self) -> usize {
+        self.mu
+    }
+
+    pub fn nu(&self) -> usize {
+        self.nu
+    }
+}
+
+/// One array cycle: `acc[i][j] += sum_k a[i][k] * b[k][j]`.
+///
+/// `a` is row-major `(Mu, Ku)`, `b` is row-major `(Ku, Nu)`. All `Ku`
+/// products per DotProd are combinationally summed, exactly one result
+/// update per accumulator per cycle.
+pub fn tile_mac(acc: &mut Accumulators, core: &GemmCoreParams, a: &[i8], b: &[i8]) {
+    let (mu, nu, ku) = (core.mu, core.nu, core.ku);
+    debug_assert_eq!(a.len(), mu * ku, "A' tile size");
+    debug_assert_eq!(b.len(), ku * nu, "B' tile size");
+    for i in 0..mu {
+        let arow = &a[i * ku..(i + 1) * ku];
+        let accrow = &mut acc.acc[i * nu..(i + 1) * nu];
+        for (k, &av) in arow.iter().enumerate() {
+            if av == 0 {
+                continue; // zero operand contributes nothing (incl. padding)
+            }
+            let av = av as i32;
+            let brow = &b[k * nu..(k + 1) * nu];
+            for (j, &bv) in brow.iter().enumerate() {
+                accrow[j] = accrow[j].wrapping_add(av.wrapping_mul(bv as i32));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GemmCoreParams;
+    use crate::util::check::property;
+
+    fn core() -> GemmCoreParams {
+        GemmCoreParams::CASE_STUDY
+    }
+
+    fn naive(a: &[i8], b: &[i8], mu: usize, nu: usize, ku: usize) -> Vec<i32> {
+        let mut c = vec![0i32; mu * nu];
+        for i in 0..mu {
+            for j in 0..nu {
+                for k in 0..ku {
+                    c[i * nu + j] = c[i * nu + j]
+                        .wrapping_add((a[i * ku + k] as i32).wrapping_mul(b[k * nu + j] as i32));
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn identity_tile() {
+        let c = core();
+        let mut acc = Accumulators::new(&c);
+        let mut a = vec![0i8; 64];
+        for i in 0..8 {
+            a[i * 8 + i] = 1; // identity
+        }
+        let b: Vec<i8> = (0..64).map(|i| (i as i8).wrapping_mul(3)).collect();
+        tile_mac(&mut acc, &c, &a, &b);
+        for i in 0..8 {
+            for j in 0..8 {
+                assert_eq!(acc.at(i, j), b[i * 8 + j] as i32);
+            }
+        }
+    }
+
+    #[test]
+    fn accumulation_across_cycles() {
+        let c = core();
+        let mut acc = Accumulators::new(&c);
+        let a = vec![1i8; 64];
+        let b = vec![1i8; 64];
+        tile_mac(&mut acc, &c, &a, &b);
+        tile_mac(&mut acc, &c, &a, &b);
+        assert_eq!(acc.at(0, 0), 16); // 8 per cycle, 2 cycles
+        acc.reset();
+        assert_eq!(acc.at(0, 0), 0);
+    }
+
+    #[test]
+    fn wrapping_semantics() {
+        let mut p = core();
+        p.ku = 1;
+        let mut acc = Accumulators::new(&p);
+        // pre-load near overflow by repeated max products
+        let a = vec![i8::MIN; 8];
+        let b = vec![i8::MIN; 8];
+        // (-128)^2 = 16384; 131072 iterations exceed i32::MAX -> wraps
+        for _ in 0..140_000 {
+            tile_mac(&mut acc, &p, &a, &b);
+        }
+        // must not panic; value defined by wrapping arithmetic
+        let expect = (16384i64 * 140_000) as i128;
+        let wrapped = (expect % (1i128 << 32)) as i64;
+        let wrapped = if wrapped > i32::MAX as i64 { wrapped - (1i64 << 32) } else { wrapped };
+        assert_eq!(acc.at(0, 0) as i64, wrapped);
+    }
+
+    #[test]
+    fn matches_naive_reference() {
+        property("tile_mac vs naive", 40, |rng| {
+            let c = core();
+            let mut a = vec![0i8; c.mu * c.ku];
+            let mut b = vec![0i8; c.ku * c.nu];
+            rng.fill_i8(&mut a);
+            rng.fill_i8(&mut b);
+            let mut acc = Accumulators::new(&c);
+            tile_mac(&mut acc, &c, &a, &b);
+            let want = naive(&a, &b, c.mu, c.nu, c.ku);
+            crate::prop_assert_eq!(acc.acc, want, "tile MAC mismatch");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn non_square_generator_instance() {
+        let p = GemmCoreParams { mu: 4, nu: 2, ku: 16, ..GemmCoreParams::CASE_STUDY };
+        let mut acc = Accumulators::new(&p);
+        let a: Vec<i8> = (0..64).map(|i| (i % 5) as i8 - 2).collect();
+        let b: Vec<i8> = (0..32).map(|i| (i % 7) as i8 - 3).collect();
+        tile_mac(&mut acc, &p, &a, &b);
+        assert_eq!(acc.acc, naive(&a, &b, 4, 2, 16));
+    }
+}

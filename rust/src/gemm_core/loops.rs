@@ -1,0 +1,160 @@
+//! Built-in hardware loop controller (Sec. 2.3).
+//!
+//! The GeMM accelerator sequences the three *temporal* loops `(m1, n1,
+//! k1)` in hardware — the host only programs the bounds. The controller
+//! is "in charge of the timely input data request, outputting of result
+//! data, and accumulator resets": [`LoopController::at_k_first`] drives
+//! the accumulator reset, [`LoopController::at_k_last`] the result
+//! writeback.
+//!
+//! Bounds are limited by on-chip buffer capacity; larger matrices are
+//! tiled by software (the compiler) into multiple accelerator calls.
+
+use crate::streamer::LoopBounds;
+
+/// Hardware limit on each loop bound (paper: "maximum hardware loop
+/// upper bound when the required data amount reaches the on-chip buffer
+/// capacity"). 2^10 tiles per dimension mirrors a 10-bit bound register
+/// (the CSR packing allots 10 bits per bound).
+pub const MAX_LOOP_BOUND: u64 = 1 << 10;
+
+#[derive(Debug, Clone)]
+pub struct LoopController {
+    bounds: LoopBounds,
+    pos: u64,
+    total: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LoopError(pub LoopBounds);
+
+impl std::fmt::Display for LoopError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "loop bounds exceed hardware limits: {:?}", self.0)
+    }
+}
+
+impl std::error::Error for LoopError {}
+
+impl LoopController {
+    pub fn new(bounds: LoopBounds) -> Result<LoopController, LoopError> {
+        let ok = |b: u64| b >= 1 && b <= MAX_LOOP_BOUND;
+        if !(ok(bounds.mt) && ok(bounds.nt) && ok(bounds.kt)) {
+            return Err(LoopError(bounds));
+        }
+        Ok(LoopController { bounds, pos: 0, total: bounds.total_tiles() })
+    }
+
+    pub fn bounds(&self) -> LoopBounds {
+        self.bounds
+    }
+
+    /// Current (m1, n1, k1).
+    #[inline]
+    pub fn current(&self) -> (u64, u64, u64) {
+        self.bounds.decompose(self.pos)
+    }
+
+    /// True when the upcoming compute cycle starts a new output tile
+    /// (k1 == 0) — the controller resets the accumulators.
+    #[inline]
+    pub fn at_k_first(&self) -> bool {
+        self.pos % self.bounds.kt == 0
+    }
+
+    /// True when the upcoming compute cycle finishes an output tile
+    /// (k1 == kt-1) — the controller emits the C' tile.
+    #[inline]
+    pub fn at_k_last(&self) -> bool {
+        self.pos % self.bounds.kt == self.bounds.kt - 1
+    }
+
+    /// Advance one tile-MAC. Returns true while more work remains.
+    #[inline]
+    pub fn advance(&mut self) -> bool {
+        debug_assert!(self.pos < self.total);
+        self.pos += 1;
+        self.pos < self.total
+    }
+
+    pub fn finished(&self) -> bool {
+        self.pos >= self.total
+    }
+
+    pub fn completed_tiles(&self) -> u64 {
+        self.pos
+    }
+
+    pub fn total_tiles(&self) -> u64 {
+        self.total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bounds(mt: u64, nt: u64, kt: u64) -> LoopBounds {
+        LoopBounds { mt, nt, kt }
+    }
+
+    #[test]
+    fn iterates_k_innermost() {
+        let mut lc = LoopController::new(bounds(2, 2, 3)).unwrap();
+        let mut seq = Vec::new();
+        loop {
+            seq.push(lc.current());
+            if !lc.advance() {
+                break;
+            }
+        }
+        assert_eq!(seq.len(), 12);
+        assert_eq!(seq[0], (0, 0, 0));
+        assert_eq!(seq[1], (0, 0, 1));
+        assert_eq!(seq[2], (0, 0, 2));
+        assert_eq!(seq[3], (0, 1, 0));
+        assert_eq!(seq[11], (1, 1, 2));
+    }
+
+    #[test]
+    fn k_first_and_last_flags() {
+        let mut lc = LoopController::new(bounds(1, 2, 3)).unwrap();
+        let mut firsts = 0;
+        let mut lasts = 0;
+        loop {
+            firsts += lc.at_k_first() as u64;
+            lasts += lc.at_k_last() as u64;
+            if !lc.advance() {
+                break;
+            }
+        }
+        // one reset and one writeback per output tile
+        assert_eq!(firsts, 2);
+        assert_eq!(lasts, 2);
+    }
+
+    #[test]
+    fn kt_one_is_first_and_last() {
+        let lc = LoopController::new(bounds(1, 1, 1)).unwrap();
+        assert!(lc.at_k_first() && lc.at_k_last());
+    }
+
+    #[test]
+    fn rejects_out_of_range_bounds() {
+        assert!(LoopController::new(bounds(0, 1, 1)).is_err());
+        assert!(LoopController::new(bounds(1, MAX_LOOP_BOUND + 1, 1)).is_err());
+        assert!(LoopController::new(bounds(1, MAX_LOOP_BOUND, 1)).is_ok());
+    }
+
+    #[test]
+    fn finished_only_after_total() {
+        let mut lc = LoopController::new(bounds(2, 1, 2)).unwrap();
+        assert!(!lc.finished());
+        for _ in 0..3 {
+            assert!(lc.advance() || lc.finished());
+        }
+        lc.advance();
+        assert!(lc.finished());
+        assert_eq!(lc.completed_tiles(), 4);
+    }
+}

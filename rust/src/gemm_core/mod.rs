@@ -1,0 +1,301 @@
+//! The GeMM accelerator core: a 3D MAC array driven by the hardware loop
+//! controller, consuming A'/B' tiles from the input streamers and
+//! emitting C' tiles to the output streamer (Sec. 2, Fig. 2-3).
+//!
+//! One call to [`GemmCore::step`] models one core clock cycle.
+
+pub mod dotprod;
+pub mod loops;
+
+pub use dotprod::{tile_mac, Accumulators};
+pub use loops::{LoopController, LoopError, MAX_LOOP_BOUND};
+
+use crate::config::GemmCoreParams;
+use crate::streamer::{InputStreamer, LoopBounds, OutTile, OutputStreamer};
+
+/// Why the array did not compute this cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StallReason {
+    /// A' tile not yet in the A pre-fetch buffer.
+    InputA,
+    /// B' tile not yet in the B pre-fetch buffer.
+    InputB,
+    /// Output buffer full (writeback backpressure).
+    Output,
+}
+
+/// Outcome of one core cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoreEvent {
+    /// Not started (waiting for configuration / start pulse).
+    Idle,
+    /// Started but stalled.
+    Stalled(StallReason),
+    /// One tile-MAC issued; `finished` marks the run's last cycle.
+    Computed { emitted_output: bool, finished: bool },
+}
+
+/// Per-run compute statistics (the utilization numerators/denominators).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CoreStats {
+    pub compute_cycles: u64,
+    pub stall_input_a: u64,
+    pub stall_input_b: u64,
+    pub stall_output: u64,
+    pub output_tiles: u64,
+}
+
+impl CoreStats {
+    pub fn stall_cycles(&self) -> u64 {
+        self.stall_input_a + self.stall_input_b + self.stall_output
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct GemmCore {
+    params: GemmCoreParams,
+    lc: Option<LoopController>,
+    acc: Accumulators,
+    /// Functional mode: actually compute tile MACs (timing-only runs skip
+    /// the arithmetic but keep identical cycle behaviour).
+    pub functional: bool,
+    pub stats: CoreStats,
+}
+
+impl GemmCore {
+    pub fn new(params: GemmCoreParams, functional: bool) -> GemmCore {
+        GemmCore {
+            acc: Accumulators::new(&params),
+            params,
+            lc: None,
+            functional,
+            stats: CoreStats::default(),
+        }
+    }
+
+    pub fn params(&self) -> &GemmCoreParams {
+        &self.params
+    }
+
+    pub fn busy(&self) -> bool {
+        self.lc.is_some()
+    }
+
+    /// Start a run with the given temporal bounds (the CSR start pulse).
+    pub fn start(&mut self, bounds: LoopBounds) -> Result<(), LoopError> {
+        assert!(self.lc.is_none(), "start while busy");
+        self.lc = Some(LoopController::new(bounds)?);
+        Ok(())
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = CoreStats::default();
+    }
+
+    /// One core clock cycle.
+    pub fn step(
+        &mut self,
+        a: &mut InputStreamer,
+        b: &mut InputStreamer,
+        out: &mut OutputStreamer,
+    ) -> CoreEvent {
+        let Some(lc) = self.lc.as_mut() else {
+            return CoreEvent::Idle;
+        };
+
+        // Operand availability.
+        if a.head().is_none() {
+            self.stats.stall_input_a += 1;
+            return CoreEvent::Stalled(StallReason::InputA);
+        }
+        if b.head().is_none() {
+            self.stats.stall_input_b += 1;
+            return CoreEvent::Stalled(StallReason::InputB);
+        }
+        // Result backpressure: the cycle that finishes an output tile
+        // needs a free output-buffer slot.
+        if lc.at_k_last() && !out.can_accept() {
+            self.stats.stall_output += 1;
+            return CoreEvent::Stalled(StallReason::Output);
+        }
+
+        let (m1, n1, k1) = lc.current();
+        let at_first = lc.at_k_first();
+        let at_last = lc.at_k_last();
+
+        let a_tile = a.pop().expect("checked above");
+        let b_tile = b.pop().expect("checked above");
+        debug_assert_eq!(
+            (a_tile.m1, a_tile.n1, a_tile.k1),
+            (m1, n1, k1),
+            "A streamer out of sync with loop controller"
+        );
+        debug_assert_eq!(
+            (b_tile.m1, b_tile.n1, b_tile.k1),
+            (m1, n1, k1),
+            "B streamer out of sync with loop controller"
+        );
+
+        if at_first {
+            self.acc.reset();
+        }
+        if self.functional {
+            let a_data = a_tile.data.as_deref().expect("functional mode needs A data");
+            let b_data = b_tile.data.as_deref().expect("functional mode needs B data");
+            tile_mac(&mut self.acc, &self.params, a_data, b_data);
+        }
+
+        let mut emitted = false;
+        if at_last {
+            let data = self.functional.then(|| self.acc.snapshot());
+            out.accept(OutTile { m1, n1, data });
+            self.stats.output_tiles += 1;
+            emitted = true;
+        }
+
+        self.stats.compute_cycles += 1;
+        let more = lc.advance();
+        let finished = !more;
+        if finished {
+            self.lc = None;
+        }
+        CoreEvent::Computed { emitted_output: emitted, finished }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::streamer::AguConfig;
+
+    fn make_streamers(bounds: LoopBounds, depth: usize) -> (InputStreamer, InputStreamer, OutputStreamer) {
+        let mut a = InputStreamer::new(depth, true);
+        let mut b = InputStreamer::new(depth, true);
+        a.configure(AguConfig::linear(0, 1, 0), bounds);
+        b.configure(AguConfig::linear(0, 1, 0), bounds);
+        let o = OutputStreamer::new(depth);
+        (a, b, o)
+    }
+
+    fn feed(s: &mut InputStreamer) {
+        let mut addrs = Vec::new();
+        while s.wants_fetch(u64::MAX, true) || s.wants_fetch(u64::MAX, false) {
+            let pos = s.begin_fetch(8, &mut addrs);
+            s.commit_fetch(pos, None, 0, 0);
+        }
+        s.deliver_ready(u64::MAX);
+    }
+
+    #[test]
+    fn idle_until_started() {
+        let bounds = LoopBounds { mt: 1, nt: 1, kt: 1 };
+        let (mut a, mut b, mut o) = make_streamers(bounds, 2);
+        let mut core = GemmCore::new(GemmCoreParams::CASE_STUDY, false);
+        assert_eq!(core.step(&mut a, &mut b, &mut o), CoreEvent::Idle);
+    }
+
+    #[test]
+    fn stalls_without_operands() {
+        let bounds = LoopBounds { mt: 1, nt: 1, kt: 2 };
+        let (mut a, mut b, mut o) = make_streamers(bounds, 2);
+        let mut core = GemmCore::new(GemmCoreParams::CASE_STUDY, false);
+        core.start(bounds).unwrap();
+        assert_eq!(core.step(&mut a, &mut b, &mut o), CoreEvent::Stalled(StallReason::InputA));
+        feed(&mut a);
+        assert_eq!(core.step(&mut a, &mut b, &mut o), CoreEvent::Stalled(StallReason::InputB));
+        feed(&mut b);
+        assert!(matches!(core.step(&mut a, &mut b, &mut o), CoreEvent::Computed { .. }));
+        assert_eq!(core.stats.stall_input_a, 1);
+        assert_eq!(core.stats.stall_input_b, 1);
+    }
+
+    #[test]
+    fn full_run_produces_all_output_tiles() {
+        let bounds = LoopBounds { mt: 2, nt: 3, kt: 4 };
+        let (mut a, mut b, mut o) = make_streamers(bounds, 4);
+        let mut core = GemmCore::new(GemmCoreParams::CASE_STUDY, false);
+        core.start(bounds).unwrap();
+        let mut outputs = 0;
+        let mut cycles = 0;
+        while core.busy() {
+            feed(&mut a);
+            feed(&mut b);
+            // drain the output buffer continuously
+            if o.wants_write(0) {
+                let mut addrs = Vec::new();
+                let t = o.begin_write(8, &mut addrs);
+                o.commit_write(t, 0, 0);
+                o.deliver_ready(u64::MAX);
+            }
+            match core.step(&mut a, &mut b, &mut o) {
+                CoreEvent::Computed { emitted_output, .. } => {
+                    outputs += emitted_output as u64;
+                    cycles += 1;
+                }
+                e => panic!("unexpected event {e:?}"),
+            }
+        }
+        assert_eq!(outputs, 6);
+        assert_eq!(cycles, 24); // one cycle per tile-MAC, zero stalls
+        assert_eq!(core.stats.compute_cycles, 24);
+        assert_eq!(core.stats.output_tiles, 6);
+    }
+
+    #[test]
+    fn output_backpressure_stalls_only_k_last() {
+        let bounds = LoopBounds { mt: 1, nt: 1, kt: 3 };
+        let (mut a, mut b, mut o) = make_streamers(bounds, 4);
+        let mut core = GemmCore::new(GemmCoreParams::CASE_STUDY, false);
+        core.start(bounds).unwrap();
+        feed(&mut a);
+        feed(&mut b);
+        // fill the output buffer so it cannot accept
+        while o.can_accept() {
+            o.accept(OutTile { m1: 9, n1: 9, data: None });
+        }
+        // k=0,1 compute fine
+        assert!(matches!(core.step(&mut a, &mut b, &mut o), CoreEvent::Computed { .. }));
+        assert!(matches!(core.step(&mut a, &mut b, &mut o), CoreEvent::Computed { .. }));
+        // k=2 (k_last) stalls on output
+        assert_eq!(core.step(&mut a, &mut b, &mut o), CoreEvent::Stalled(StallReason::Output));
+    }
+
+    #[test]
+    fn functional_mode_computes_known_product() {
+        let params = GemmCoreParams::CASE_STUDY;
+        let bounds = LoopBounds { mt: 1, nt: 1, kt: 2 };
+        let mut a = InputStreamer::new(4, true);
+        let mut b = InputStreamer::new(4, true);
+        a.configure(AguConfig::linear(0, 1, 0), bounds);
+        b.configure(AguConfig::linear(0, 1, 0), bounds);
+        let mut o = OutputStreamer::new(2);
+        let mut core = GemmCore::new(params, true);
+        core.start(bounds).unwrap();
+        let mut addrs = Vec::new();
+        for s in [&mut a, &mut b] {
+            while s.wants_fetch(u64::MAX, true) {
+                let pos = s.begin_fetch(8, &mut addrs);
+                s.commit_fetch(pos, Some(vec![1i8; 64].into_boxed_slice()), 0, 0);
+            }
+            s.deliver_ready(u64::MAX);
+        }
+        while core.busy() {
+            core.step(&mut a, &mut b, &mut o);
+        }
+        let mut w = Vec::new();
+        let tile = o.begin_write(8, &mut w);
+        let data = tile.data.clone().unwrap();
+        o.commit_write(tile, 0, 0);
+        // ones(8,8) @ ones(8,8) accumulated over kt=2: every entry = 16
+        assert!(data.iter().all(|&v| v == 16));
+    }
+
+    #[test]
+    #[should_panic(expected = "start while busy")]
+    fn double_start_panics() {
+        let bounds = LoopBounds { mt: 1, nt: 1, kt: 1 };
+        let mut core = GemmCore::new(GemmCoreParams::CASE_STUDY, false);
+        core.start(bounds).unwrap();
+        core.start(bounds).unwrap();
+    }
+}

@@ -1,0 +1,553 @@
+//! RV32I + Zicsr instruction-set simulator: the lightweight Snitch-class
+//! host core (Sec. 3.1).
+//!
+//! Single-issue, in-order: one instruction per cycle, taken
+//! control-transfers cost [`BRANCH_TAKEN_CYCLES`] (no branch predictor —
+//! the fetch bubble of a tiny in-order core). Accelerator CSRs in the
+//! custom window are routed to a [`CsrBus`] (the platform's CSRManager);
+//! `mcycle`/`mcycleh` read the core cycle counter.
+
+use crate::csr::{CsrError, CsrManager};
+
+/// Cycles charged for a taken branch/jump (fetch bubble).
+pub const BRANCH_TAKEN_CYCLES: u64 = 2;
+/// Data-RAM base address (host-local TCDM slice for stack/locals).
+pub const DATA_BASE: u32 = 0x1000_0000;
+
+/// Where the host's CSR traffic goes.
+pub trait CsrBus {
+    fn csr_read(&mut self, addr: u32) -> Result<u32, CsrError>;
+    fn csr_write(&mut self, addr: u32, value: u32) -> Result<(), CsrError>;
+}
+
+impl CsrBus for CsrManager {
+    fn csr_read(&mut self, addr: u32) -> Result<u32, CsrError> {
+        self.read(addr)
+    }
+    fn csr_write(&mut self, addr: u32, value: u32) -> Result<(), CsrError> {
+        self.write(addr, value)
+    }
+}
+
+/// Execution fault.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Fault {
+    BadInstruction { pc: u32, word: u32 },
+    BadFetch { pc: u32 },
+    BadLoad { pc: u32, addr: u32 },
+    BadStore { pc: u32, addr: u32 },
+    Csr { pc: u32, err: CsrError },
+}
+
+impl std::fmt::Display for Fault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Fault::BadInstruction { pc, word } => {
+                write!(f, "illegal instruction {word:#010x} at pc={pc:#x}")
+            }
+            Fault::BadFetch { pc } => write!(f, "fetch outside program at pc={pc:#x}"),
+            Fault::BadLoad { pc, addr } => write!(f, "bad load {addr:#x} at pc={pc:#x}"),
+            Fault::BadStore { pc, addr } => write!(f, "bad store {addr:#x} at pc={pc:#x}"),
+            Fault::Csr { pc, err } => write!(f, "CSR fault at pc={pc:#x}: {err}"),
+        }
+    }
+}
+
+impl std::error::Error for Fault {}
+
+/// Outcome of one step.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StepResult {
+    /// Executed an instruction, consuming `cycles`.
+    Ran { cycles: u64 },
+    /// Hit `ebreak`/`ecall` — the program is done.
+    Halted,
+    /// Execution fault (model/program bug).
+    Fault(Fault),
+}
+
+/// The host core.
+#[derive(Debug, Clone)]
+pub struct Cpu {
+    pub regs: [u32; 32],
+    pub pc: u32,
+    program: Vec<u32>,
+    data: Vec<u8>,
+    /// Total cycles retired (including branch bubbles).
+    pub cycles: u64,
+    /// Instructions retired.
+    pub instret: u64,
+    halted: bool,
+}
+
+impl Cpu {
+    /// Create a CPU with the given program (loaded at address 0) and a
+    /// data RAM of `data_size` bytes at [`DATA_BASE`].
+    pub fn new(program: Vec<u32>, data_size: usize) -> Cpu {
+        let mut cpu = Cpu {
+            regs: [0; 32],
+            pc: 0,
+            program,
+            data: vec![0; data_size],
+            cycles: 0,
+            instret: 0,
+            halted: false,
+        };
+        // stack pointer at top of data RAM
+        cpu.regs[2] = DATA_BASE + data_size as u32;
+        cpu
+    }
+
+    pub fn halted(&self) -> bool {
+        self.halted
+    }
+
+    /// Restart the program counter (for re-running the same program).
+    pub fn restart(&mut self) {
+        self.pc = 0;
+        self.halted = false;
+    }
+
+    #[inline]
+    fn x(&self, r: u32) -> u32 {
+        self.regs[r as usize]
+    }
+
+    #[inline]
+    fn set_x(&mut self, r: u32, v: u32) {
+        if r != 0 {
+            self.regs[r as usize] = v;
+        }
+    }
+
+    fn load(&self, pc: u32, addr: u32, size: u32, signed: bool) -> Result<u32, Fault> {
+        let off = addr.wrapping_sub(DATA_BASE) as usize;
+        if off + size as usize > self.data.len() {
+            return Err(Fault::BadLoad { pc, addr });
+        }
+        let mut v = 0u32;
+        for i in 0..size {
+            v |= (self.data[off + i as usize] as u32) << (8 * i);
+        }
+        if signed {
+            let shift = 32 - 8 * size;
+            v = (((v << shift) as i32) >> shift) as u32;
+        }
+        Ok(v)
+    }
+
+    fn store(&mut self, pc: u32, addr: u32, size: u32, value: u32) -> Result<(), Fault> {
+        let off = addr.wrapping_sub(DATA_BASE) as usize;
+        if off + size as usize > self.data.len() {
+            return Err(Fault::BadStore { pc, addr });
+        }
+        for i in 0..size {
+            self.data[off + i as usize] = (value >> (8 * i)) as u8;
+        }
+        Ok(())
+    }
+
+    /// Execute one instruction. CSR traffic goes to `bus`.
+    pub fn step<B: CsrBus>(&mut self, bus: &mut B) -> StepResult {
+        if self.halted {
+            return StepResult::Halted;
+        }
+        let pc = self.pc;
+        let idx = (pc / 4) as usize;
+        if pc % 4 != 0 || idx >= self.program.len() {
+            return StepResult::Fault(Fault::BadFetch { pc });
+        }
+        let w = self.program[idx];
+        let opcode = w & 0x7f;
+        let rd = (w >> 7) & 0x1f;
+        let funct3 = (w >> 12) & 0x7;
+        let rs1 = (w >> 15) & 0x1f;
+        let rs2 = (w >> 20) & 0x1f;
+        let funct7 = w >> 25;
+        let imm_i = (w as i32) >> 20;
+        let mut next_pc = pc.wrapping_add(4);
+        let mut cycles = 1u64;
+
+        macro_rules! fault {
+            () => {
+                return StepResult::Fault(Fault::BadInstruction { pc, word: w })
+            };
+        }
+
+        match opcode {
+            0x37 => self.set_x(rd, w & 0xffff_f000), // LUI
+            0x17 => self.set_x(rd, pc.wrapping_add(w & 0xffff_f000)), // AUIPC
+            0x6f => {
+                // JAL
+                let imm = (((w >> 31) & 1) << 20)
+                    | (((w >> 12) & 0xff) << 12)
+                    | (((w >> 20) & 1) << 11)
+                    | (((w >> 21) & 0x3ff) << 1);
+                let imm = ((imm << 11) as i32) >> 11;
+                self.set_x(rd, next_pc);
+                next_pc = pc.wrapping_add(imm as u32);
+                cycles = BRANCH_TAKEN_CYCLES;
+            }
+            0x67 => {
+                // JALR
+                if funct3 != 0 {
+                    fault!();
+                }
+                let target = self.x(rs1).wrapping_add(imm_i as u32) & !1;
+                self.set_x(rd, next_pc);
+                next_pc = target;
+                cycles = BRANCH_TAKEN_CYCLES;
+            }
+            0x63 => {
+                // branches
+                let imm = (((w >> 31) & 1) << 12)
+                    | (((w >> 7) & 1) << 11)
+                    | (((w >> 25) & 0x3f) << 5)
+                    | (((w >> 8) & 0xf) << 1);
+                let imm = ((imm << 19) as i32) >> 19;
+                let (a, b) = (self.x(rs1), self.x(rs2));
+                let taken = match funct3 {
+                    0x0 => a == b,
+                    0x1 => a != b,
+                    0x4 => (a as i32) < (b as i32),
+                    0x5 => (a as i32) >= (b as i32),
+                    0x6 => a < b,
+                    0x7 => a >= b,
+                    _ => fault!(),
+                };
+                if taken {
+                    next_pc = pc.wrapping_add(imm as u32);
+                    cycles = BRANCH_TAKEN_CYCLES;
+                }
+            }
+            0x03 => {
+                // loads
+                let addr = self.x(rs1).wrapping_add(imm_i as u32);
+                let v = match funct3 {
+                    0x0 => self.load(pc, addr, 1, true),
+                    0x1 => self.load(pc, addr, 2, true),
+                    0x2 => self.load(pc, addr, 4, false),
+                    0x4 => self.load(pc, addr, 1, false),
+                    0x5 => self.load(pc, addr, 2, false),
+                    _ => fault!(),
+                };
+                match v {
+                    Ok(v) => self.set_x(rd, v),
+                    Err(f) => return StepResult::Fault(f),
+                }
+            }
+            0x23 => {
+                // stores
+                let imm = ((funct7 << 5) | rd) as i32;
+                let imm = (imm << 20) >> 20;
+                let addr = self.x(rs1).wrapping_add(imm as u32);
+                let size = match funct3 {
+                    0x0 => 1,
+                    0x1 => 2,
+                    0x2 => 4,
+                    _ => fault!(),
+                };
+                if let Err(f) = self.store(pc, addr, size, self.x(rs2)) {
+                    return StepResult::Fault(f);
+                }
+            }
+            0x13 => {
+                // op-imm
+                let a = self.x(rs1);
+                let v = match funct3 {
+                    0x0 => a.wrapping_add(imm_i as u32),
+                    0x2 => ((a as i32) < imm_i) as u32,
+                    0x3 => (a < imm_i as u32) as u32,
+                    0x4 => a ^ imm_i as u32,
+                    0x6 => a | imm_i as u32,
+                    0x7 => a & imm_i as u32,
+                    0x1 => {
+                        if funct7 != 0 {
+                            fault!();
+                        }
+                        a << (rs2 & 0x1f)
+                    }
+                    0x5 => match funct7 {
+                        0x00 => a >> (rs2 & 0x1f),
+                        0x20 => ((a as i32) >> (rs2 & 0x1f)) as u32,
+                        _ => fault!(),
+                    },
+                    _ => fault!(),
+                };
+                self.set_x(rd, v);
+            }
+            0x33 => {
+                // op (RV32I only: no M extension on this host!)
+                let (a, b) = (self.x(rs1), self.x(rs2));
+                let v = match (funct7, funct3) {
+                    (0x00, 0x0) => a.wrapping_add(b),
+                    (0x20, 0x0) => a.wrapping_sub(b),
+                    (0x00, 0x1) => a << (b & 0x1f),
+                    (0x00, 0x2) => ((a as i32) < (b as i32)) as u32,
+                    (0x00, 0x3) => (a < b) as u32,
+                    (0x00, 0x4) => a ^ b,
+                    (0x00, 0x5) => a >> (b & 0x1f),
+                    (0x20, 0x5) => ((a as i32) >> (b & 0x1f)) as u32,
+                    (0x00, 0x6) => a | b,
+                    (0x00, 0x7) => a & b,
+                    _ => fault!(),
+                };
+                self.set_x(rd, v);
+            }
+            0x0f => {} // FENCE: nop on this single-hart platform
+            0x73 => {
+                let csr = w >> 20;
+                match funct3 {
+                    0x0 => {
+                        // ECALL / EBREAK: halt the host program
+                        self.halted = true;
+                        self.cycles += 1;
+                        self.instret += 1;
+                        return StepResult::Halted;
+                    }
+                    0x1 | 0x2 | 0x3 | 0x5 | 0x6 | 0x7 => {
+                        let write_val = if funct3 >= 0x5 { rs1 } else { self.x(rs1) };
+                        let res = self.csr_op(bus, pc, csr, funct3 & 0x3, rd, rs1, write_val);
+                        match res {
+                            Ok(read_val) => self.set_x(rd, read_val),
+                            Err(f) => return StepResult::Fault(f),
+                        }
+                    }
+                    _ => fault!(),
+                }
+            }
+            _ => fault!(),
+        }
+
+        self.pc = next_pc;
+        self.cycles += cycles;
+        self.instret += 1;
+        StepResult::Ran { cycles }
+    }
+
+    fn csr_op<B: CsrBus>(
+        &mut self,
+        bus: &mut B,
+        pc: u32,
+        csr: u32,
+        op: u32, // 1=rw 2=rs 3=rc
+        rd: u32,
+        rs1: u32,
+        write_val: u32,
+    ) -> Result<u32, Fault> {
+        // Host-local performance counters.
+        if csr == 0xb00 || csr == 0xc00 {
+            return Ok(self.cycles as u32); // mcycle / cycle
+        }
+        if csr == 0xb80 || csr == 0xc80 {
+            return Ok((self.cycles >> 32) as u32); // mcycleh / cycleh
+        }
+        if csr == 0xc02 {
+            return Ok(self.instret as u32); // instret
+        }
+        let maperr = |err| Fault::Csr { pc, err };
+        // CSRRW with rd=x0 skips the read (spec); CSRRS/RC with rs1=x0
+        // skip the write.
+        let old = if op == 1 && rd == 0 {
+            0
+        } else {
+            bus.csr_read(csr).map_err(maperr)?
+        };
+        let new = match op {
+            1 => Some(write_val),
+            2 if rs1 != 0 => Some(old | write_val),
+            3 if rs1 != 0 => Some(old & !write_val),
+            _ => None,
+        };
+        if let Some(v) = new {
+            bus.csr_write(csr, v).map_err(maperr)?;
+        }
+        Ok(old)
+    }
+
+    /// Run to completion against `bus`, with a cycle limit (deadlock
+    /// guard). Returns total cycles.
+    pub fn run<B: CsrBus>(&mut self, bus: &mut B, max_cycles: u64) -> Result<u64, Fault> {
+        let start = self.cycles;
+        while !self.halted {
+            match self.step(bus) {
+                StepResult::Ran { .. } => {}
+                StepResult::Halted => break,
+                StepResult::Fault(f) => return Err(f),
+            }
+            if self.cycles - start > max_cycles {
+                return Err(Fault::BadFetch { pc: self.pc }); // treated as runaway
+            }
+        }
+        Ok(self.cycles - start)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::host::encode::{self as enc, reg, Asm};
+
+    /// A CsrBus that records accesses into a simple map.
+    #[derive(Default)]
+    struct TestBus {
+        regs: std::collections::HashMap<u32, u32>,
+        writes: Vec<(u32, u32)>,
+    }
+
+    impl CsrBus for TestBus {
+        fn csr_read(&mut self, addr: u32) -> Result<u32, CsrError> {
+            Ok(*self.regs.get(&addr).unwrap_or(&0))
+        }
+        fn csr_write(&mut self, addr: u32, value: u32) -> Result<(), CsrError> {
+            self.regs.insert(addr, value);
+            self.writes.push((addr, value));
+            Ok(())
+        }
+    }
+
+    fn run_asm(build: impl FnOnce(&mut Asm)) -> (Cpu, TestBus) {
+        let mut asm = Asm::new();
+        build(&mut asm);
+        asm.emit(enc::ebreak());
+        let mut cpu = Cpu::new(asm.assemble(), 4096);
+        let mut bus = TestBus::default();
+        cpu.run(&mut bus, 1_000_000).expect("program fault");
+        (cpu, bus)
+    }
+
+    #[test]
+    fn arithmetic_and_li() {
+        let (cpu, _) = run_asm(|a| {
+            a.li(reg::T0, 0x12345678);
+            a.li(reg::T1, -1000);
+            a.emit(enc::add(reg::T2, reg::T0, reg::T1));
+        });
+        assert_eq!(cpu.regs[reg::T2 as usize], 0x12345678u32.wrapping_add(-1000i32 as u32));
+    }
+
+    #[test]
+    fn branch_loop_counts() {
+        // for (i = 0; i != 10; i++);
+        let (cpu, _) = run_asm(|a| {
+            a.li(reg::T0, 0);
+            a.li(reg::T1, 10);
+            a.label("loop");
+            a.emit(enc::addi(reg::T0, reg::T0, 1));
+            a.bne_to(reg::T0, reg::T1, "loop");
+        });
+        assert_eq!(cpu.regs[reg::T0 as usize], 10);
+        // 2 li + 10 addi + 9 taken (2cy) + 1 not-taken + ebreak(1)
+        assert_eq!(cpu.cycles, 2 + 10 + 9 * 2 + 1 + 1);
+    }
+
+    #[test]
+    fn memory_roundtrip_and_sign_extension() {
+        let (cpu, _) = run_asm(|a| {
+            a.li(reg::T0, DATA_BASE as i32);
+            a.li(reg::T1, -5i32);
+            a.emit(enc::sb(reg::T1, reg::T0, 0));
+            a.emit(enc::lb(reg::T2, reg::T0, 0)); // sign-extended
+            a.emit(enc::lbu(reg::T3, reg::T0, 0)); // zero-extended
+            a.emit(enc::sw(reg::T1, reg::T0, 8));
+            a.emit(enc::lw(reg::T4, reg::T0, 8));
+        });
+        assert_eq!(cpu.regs[reg::T2 as usize] as i32, -5);
+        assert_eq!(cpu.regs[reg::T3 as usize], 0xfb);
+        assert_eq!(cpu.regs[reg::T4 as usize] as i32, -5);
+    }
+
+    #[test]
+    fn call_ret_and_stack() {
+        let (cpu, _) = run_asm(|a| {
+            a.li(reg::A0, 7);
+            a.call("double");
+            a.beq_to(reg::ZERO, reg::ZERO, "end");
+            a.label("double");
+            a.emit(enc::add(reg::A0, reg::A0, reg::A0));
+            a.ret();
+            a.label("end");
+        });
+        assert_eq!(cpu.regs[reg::A0 as usize], 14);
+    }
+
+    #[test]
+    fn csr_instructions_hit_the_bus() {
+        let (cpu, bus) = run_asm(|a| {
+            a.li(reg::T0, 0xbeef);
+            a.emit(enc::csrrw(reg::ZERO, 0x3c1, reg::T0));
+            a.emit(enc::csrrs(reg::T1, 0x3c1, reg::ZERO)); // read back
+        });
+        assert_eq!(bus.writes, vec![(0x3c1, 0xbeef)]);
+        assert_eq!(cpu.regs[reg::T1 as usize], 0xbeef);
+    }
+
+    #[test]
+    fn mcycle_reads_cycle_counter() {
+        let (cpu, _) = run_asm(|a| {
+            a.emit(enc::nop());
+            a.emit(enc::nop());
+            a.emit(enc::csrrs(reg::T0, 0xb00, reg::ZERO));
+        });
+        // two nops retired before the csr read
+        assert_eq!(cpu.regs[reg::T0 as usize], 2);
+        assert!(cpu.cycles >= 3);
+    }
+
+    #[test]
+    fn shift_ops() {
+        let (cpu, _) = run_asm(|a| {
+            a.li(reg::T0, -64);
+            a.emit(enc::srai(reg::T1, reg::T0, 3));
+            a.emit(enc::srli(reg::T2, reg::T0, 3));
+            a.li(reg::T3, 5);
+            a.emit(enc::slli(reg::T3, reg::T3, 4));
+        });
+        assert_eq!(cpu.regs[reg::T1 as usize] as i32, -8);
+        assert_eq!(cpu.regs[reg::T2 as usize], (-64i32 as u32) >> 3);
+        assert_eq!(cpu.regs[reg::T3 as usize], 80);
+    }
+
+    #[test]
+    fn sltu_and_slt() {
+        let (cpu, _) = run_asm(|a| {
+            a.li(reg::T0, -1); // 0xffffffff
+            a.li(reg::T1, 1);
+            a.emit(enc::slt(reg::T2, reg::T0, reg::T1)); // -1 < 1 -> 1
+            a.emit(enc::sltu(reg::T3, reg::T0, reg::T1)); // max_u32 < 1 -> 0
+        });
+        assert_eq!(cpu.regs[reg::T2 as usize], 1);
+        assert_eq!(cpu.regs[reg::T3 as usize], 0);
+    }
+
+    #[test]
+    fn x0_is_hardwired_zero() {
+        let (cpu, _) = run_asm(|a| {
+            a.emit(enc::addi(reg::ZERO, reg::ZERO, 42));
+            a.emit(enc::add(reg::T0, reg::ZERO, reg::ZERO));
+        });
+        assert_eq!(cpu.regs[0], 0);
+        assert_eq!(cpu.regs[reg::T0 as usize], 0);
+    }
+
+    #[test]
+    fn fault_on_bad_memory() {
+        let mut asm = Asm::new();
+        asm.li(reg::T0, 0x4000_0000u32 as i32);
+        asm.emit(enc::lw(reg::T1, reg::T0, 0));
+        asm.emit(enc::ebreak());
+        let mut cpu = Cpu::new(asm.assemble(), 64);
+        let mut bus = TestBus::default();
+        assert!(matches!(cpu.run(&mut bus, 1000), Err(Fault::BadLoad { .. })));
+    }
+
+    #[test]
+    fn runaway_guard_trips() {
+        let mut asm = Asm::new();
+        asm.label("spin");
+        asm.beq_to(reg::ZERO, reg::ZERO, "spin");
+        let mut cpu = Cpu::new(asm.assemble(), 64);
+        let mut bus = TestBus::default();
+        assert!(cpu.run(&mut bus, 100).is_err());
+    }
+}

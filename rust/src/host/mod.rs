@@ -1,0 +1,15 @@
+//! The lightweight RISC-V host: an RV32I + Zicsr instruction-set
+//! simulator (the Snitch-class control core of Sec. 3.1) plus the
+//! assembler the compiler uses to generate real configuration programs.
+//!
+//! The host has **no M extension** — exactly like the paper's compact
+//! RV32I core — so address/stride arithmetic in generated config code
+//! uses shift-add sequences (see `compiler/codegen.rs`), which is a real
+//! contributor to the configuration overhead that configuration
+//! pre-loading hides.
+
+pub mod cpu;
+pub mod encode;
+
+pub use cpu::{Cpu, CsrBus, Fault, StepResult, BRANCH_TAKEN_CYCLES, DATA_BASE};
+pub use encode::{reg, Asm};

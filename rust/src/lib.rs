@@ -1,0 +1,27 @@
+//! # OpenGeMM — reproduction library
+//!
+//! A cycle-accurate, functionally-verified model of the OpenGeMM
+//! acceleration platform (Yi et al., ASPDAC'25): a parameterized GeMM
+//! accelerator generator with a lightweight RV32I host, tightly-coupled
+//! multi-banked scratchpad, and data streamers, plus the paper's three
+//! utilization mechanisms (configuration pre-loading, input pre-fetch /
+//! output buffering, and strided memory access).
+//!
+//! See DESIGN.md for the system inventory and experiment index, and
+//! EXPERIMENTS.md for reproduced paper results.
+
+pub mod baseline;
+pub mod compiler;
+pub mod config;
+pub mod coordinator;
+pub mod csr;
+pub mod experiments;
+pub mod gemm_core;
+pub mod host;
+pub mod power;
+pub mod runtime;
+pub mod sim;
+pub mod spm;
+pub mod streamer;
+pub mod util;
+pub mod workloads;

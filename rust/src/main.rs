@@ -1,0 +1,300 @@
+//! `opengemm` — command-line launcher for the OpenGeMM reproduction
+//! platform.
+//!
+//! Subcommands map one-to-one to the paper's experiments (DESIGN.md
+//! experiment index):
+//!
+//! ```text
+//! opengemm simulate  --shape MxKxN [--arch 1..4] [--repeats R] [--layout L]
+//! opengemm ablation  [--workloads N] [--seed S] [--repeats R]      # Fig. 5
+//! opengemm dnn       [--bert-seq S]                                # Table 2
+//! opengemm area-power                                              # Fig. 6
+//! opengemm sota                                                    # Table 3
+//! opengemm compare-gemmini [--repeats R]                           # Fig. 7
+//! opengemm verify    [--artifacts DIR]     # simulator vs PJRT golden model
+//! opengemm info      [--config FILE.toml]  # show an instance's parameters
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+use opengemm::compiler::{GemmShape, Layout};
+use opengemm::config::{Mechanisms, PlatformConfig};
+use opengemm::coordinator::{Coordinator, JobRequest};
+use opengemm::experiments::{
+    fig5_ablation, fig6_area_power, fig7_gemmini, table2_dnn, table3_sota, Fig5Options,
+    Fig7Options, Table2Options,
+};
+use opengemm::power::PowerModel;
+use opengemm::runtime::Runtime;
+use opengemm::util::cli::Args;
+use opengemm::util::rng::Pcg32;
+
+const USAGE: &str = "\
+opengemm — cycle-accurate OpenGeMM platform (ASPDAC'25 reproduction)
+
+USAGE:
+  opengemm <subcommand> [flags]
+
+SUBCOMMANDS:
+  simulate          run one GeMM through the platform simulator
+                    --shape MxKxN  --arch 1|2|3|4  --repeats N
+                    --layout row|tiled|interleaved  --functional
+  ablation          Fig. 5: mechanism ablation over random workloads
+                    --workloads N  --seed S  --repeats N  --workers N
+  dnn               Table 2: DNN benchmark (MobileNetV2/ResNet18/ViT/BERT)
+                    --bert-seq N  --workers N
+  area-power        Fig. 6: area & power breakdown, TOPS/W
+  sota              Table 3: state-of-the-art comparison
+  compare-gemmini   Fig. 7: normalized throughput vs Gemmini OS/WS
+                    --repeats N
+  verify            functional equivalence: simulator vs AOT artifacts
+                    --artifacts DIR
+  info              print platform instance parameters
+                    --config FILE.toml
+";
+
+fn mechanisms_for(arch: usize) -> Result<Mechanisms> {
+    Ok(match arch {
+        1 => Mechanisms::BASELINE,
+        2 => Mechanisms::CPL,
+        3 => Mechanisms::CPL_BUF,
+        4 => Mechanisms::ALL,
+        a => bail!("--arch must be 1..4, got {a}"),
+    })
+}
+
+fn layout_for(name: &str) -> Result<Layout> {
+    Ok(match name {
+        "row" => Layout::RowMajor,
+        "tiled" => Layout::TiledContiguous,
+        "interleaved" => Layout::TiledInterleaved,
+        other => bail!("--layout must be row|tiled|interleaved, got {other}"),
+    })
+}
+
+fn load_config(args: &Args) -> Result<PlatformConfig> {
+    match args.get("config") {
+        None => Ok(PlatformConfig::case_study()),
+        Some(path) => {
+            let text = std::fs::read_to_string(path)?;
+            PlatformConfig::from_toml(&text).map_err(|e| anyhow!("{e}"))
+        }
+    }
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let shape = args.shape_or("shape", (64, 64, 64))?;
+    let shape = GemmShape::new(shape.0, shape.1, shape.2);
+    let mech = mechanisms_for(args.usize_or("arch", 4)?)?;
+    let repeats = args.usize_or("repeats", 10)? as u32;
+    let layout = match args.get("layout") {
+        Some(l) => layout_for(l)?,
+        None => {
+            if mech.strided_layout {
+                Layout::TiledInterleaved
+            } else {
+                Layout::RowMajor
+            }
+        }
+    };
+    let functional = args.has("functional");
+
+    let coord = Coordinator::new(cfg.clone());
+    let operands = if functional {
+        let mut rng = Pcg32::seeded(args.u64_or("seed", 42)?);
+        let mut a = vec![0i8; shape.m * shape.k];
+        let mut b = vec![0i8; shape.k * shape.n];
+        rng.fill_i8(&mut a);
+        rng.fill_i8(&mut b);
+        Some((a, b))
+    } else {
+        None
+    };
+    let req = JobRequest { shape, layout, mechanisms: mech, repeats, operands };
+    let r = coord.run_one(&req).map_err(|e| anyhow!(e))?;
+    println!("shape          ({}, {}, {})", shape.m, shape.k, shape.n);
+    println!("arch           {}", mech.label());
+    println!("layout         {layout:?}  repeats {repeats}");
+    println!("total cycles   {}", r.metrics.total_cycles);
+    println!("compute cycles {}", r.metrics.compute_cycles);
+    println!(
+        "stalls         A {} / B {} / out {}",
+        r.metrics.stall_input_a, r.metrics.stall_input_b, r.metrics.stall_output
+    );
+    println!("host instret   {}", r.metrics.host_instret);
+    println!(
+        "SU {:.4}  TU {:.4}  OU {:.4}  (kernel TU {:.4})",
+        r.report.spatial,
+        r.report.temporal,
+        r.report.overall,
+        r.metrics.kernel_utilization()
+    );
+    let gops = r.report.achieved_gops(shape.ops() * repeats as u64, cfg.freq_mhz);
+    println!("achieved       {gops:.2} GOPS of {:.1} peak", cfg.peak_gops());
+    if let Some(c) = r.c {
+        let checksum: i64 = c.iter().map(|&v| v as i64).sum();
+        println!("functional     C checksum {checksum}");
+    }
+    Ok(())
+}
+
+fn cmd_ablation(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let opts = Fig5Options {
+        seed: args.u64_or("seed", 2024)?,
+        workloads: args.usize_or("workloads", 500)?,
+        repeats: args.usize_or("repeats", 10)? as u32,
+        workers: args.usize_or("workers", 0)?,
+    };
+    eprintln!(
+        "running {} workloads x 10 repeats x 6 variants ...",
+        opts.workloads
+    );
+    let res = fig5_ablation(&cfg, opts);
+    println!("{}", res.render());
+    maybe_write(args, "fig5", &res.render())
+}
+
+fn cmd_dnn(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let opts = Table2Options {
+        bert_seq: args.usize_or("bert-seq", 512)?,
+        workers: args.usize_or("workers", 0)?,
+        max_repeats: args.usize_or("max-repeats", 10)? as u32,
+    };
+    let res = table2_dnn(&cfg, opts);
+    println!("{}", res.render());
+    maybe_write(args, "table2", &res.render())
+}
+
+fn cmd_area_power(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let res = fig6_area_power(&cfg);
+    println!("{}", res.render());
+    maybe_write(args, "fig6", &res.render())
+}
+
+fn cmd_sota(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let res = table3_sota(&cfg);
+    println!("{}", res.render());
+    maybe_write(args, "table3", &res.render())
+}
+
+fn cmd_compare_gemmini(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let opts = Fig7Options {
+        repeats: args.usize_or("repeats", 10)? as u32,
+        workers: args.usize_or("workers", 0)?,
+    };
+    let res = fig7_gemmini(&cfg, opts);
+    println!("{}", res.render());
+    maybe_write(args, "fig7", &res.render())
+}
+
+fn cmd_verify(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Runtime::default_dir);
+    let mut rt = Runtime::load(&dir)?;
+    let coord = Coordinator::new(cfg.clone());
+    let mut rng = Pcg32::seeded(args.u64_or("seed", 7)?);
+    let mut checked = 0;
+    for name in rt.artifact_names().iter().map(|s| s.to_string()).collect::<Vec<_>>() {
+        if !name.starts_with("gemm_") {
+            continue;
+        }
+        let meta = rt.meta(&name).unwrap().clone();
+        let (m, k) = (meta.args[0].shape[0], meta.args[0].shape[1]);
+        let n = meta.args[1].shape[1];
+        let mut a = vec![0i8; m * k];
+        let mut b = vec![0i8; k * n];
+        rng.fill_i8(&mut a);
+        rng.fill_i8(&mut b);
+        let golden = rt.execute_gemm(&name, &a, &b)?;
+        let req = JobRequest {
+            shape: GemmShape::new(m, k, n),
+            layout: Layout::TiledInterleaved,
+            mechanisms: Mechanisms::ALL,
+            repeats: 1,
+            operands: Some((a, b)),
+        };
+        let sim = coord.run_one(&req).map_err(|e| anyhow!(e))?;
+        let c = sim.c.expect("functional result");
+        if c != golden {
+            bail!("MISMATCH on {name}: simulator != AOT golden model");
+        }
+        println!("  {name:<24} ({m} x {k} x {n})  OK — bit-exact");
+        checked += 1;
+    }
+    println!("verified {checked} GeMM artifacts: simulator == JAX/Pallas golden model");
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let model = PowerModel::default();
+    println!("OpenGeMM platform instance");
+    println!("  core     (Mu, Nu, Ku) = ({}, {}, {})", cfg.core.mu, cfg.core.nu, cfg.core.ku);
+    println!(
+        "  precision A/B/C       = {}/{}/{} bit",
+        cfg.core.pa_bits, cfg.core.pb_bits, cfg.core.pc_bits
+    );
+    println!("  SPM      {} banks x {} x {}B = {} KiB",
+        cfg.mem.n_bank, cfg.mem.d_mem, cfg.mem.word_bytes(),
+        cfg.mem.capacity_bytes() / 1024);
+    println!("  ports    R {} / W {}  buffers depth {}", cfg.mem.r_mem, cfg.mem.w_mem, cfg.mem.d_stream);
+    println!("  clock    {} MHz", cfg.freq_mhz);
+    println!("  peak     {:.1} GOPS", cfg.peak_gops());
+    println!("  area     {:.3} mm^2 cell / {:.3} mm^2 layout (modeled)",
+        model.total_area(&cfg), model.layout_area(&cfg));
+    println!("  power    {:.1} mW @ full load -> {:.2} TOPS/W",
+        model.total_power(&cfg, 1.0), model.tops_per_watt(&cfg, 1.0));
+    Ok(())
+}
+
+fn maybe_write(args: &Args, name: &str, content: &str) -> Result<()> {
+    if let Some(dir) = args.get("out-dir") {
+        std::fs::create_dir_all(dir)?;
+        let path = std::path::Path::new(dir).join(format!("{name}.md"));
+        std::fs::write(&path, content)?;
+        eprintln!("wrote {path:?}");
+    }
+    Ok(())
+}
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let sub = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match sub {
+        "simulate" => cmd_simulate(&args),
+        "ablation" => cmd_ablation(&args),
+        "dnn" => cmd_dnn(&args),
+        "area-power" => cmd_area_power(&args),
+        "sota" => cmd_sota(&args),
+        "compare-gemmini" => cmd_compare_gemmini(&args),
+        "verify" => cmd_verify(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand {other:?}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

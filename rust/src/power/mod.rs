@@ -1,0 +1,352 @@
+//! Analytical area & power model (Sec. 4.4, Fig. 6, Table 3).
+//!
+//! We cannot re-run Synopsys DC / PrimeTime on TSMC 16nm, so we rebuild
+//! the *model*: per-component area/power terms that scale with the
+//! generator parameters, anchored so the paper's case-study instance
+//! (8x8x8 core, 270 KiB SPM, 200 MHz, 0.675 V) reproduces the published
+//! operating point — 0.531 mm^2 cell area, 43.8 mW total power, and the
+//! Fig. 6 breakdown percentages. DSE sweeps then expose the same trends
+//! (bigger arrays grow the core share, more banks grow the SPM share).
+//!
+//! Published anchors (Fig. 6):
+//! - area: SPM+interconnect 63.47%, GeMM core 11.86%, streamers 2.26%,
+//!   RISC-V host 1.13%, remainder (icache, DMA, CSR, misc) 21.28%
+//! - power: SPM 41.90%, icache 17.06%, GeMM core 13.18%, streamers
+//!   6.50%, host 2.40%, remainder 18.96%
+
+use crate::config::PlatformConfig;
+
+/// Published case-study anchors.
+pub const ANCHOR_AREA_MM2: f64 = 0.531;
+pub const ANCHOR_POWER_MW: f64 = 43.8;
+/// Cell -> layout scaling used by Table 3 (placement & routing estimate
+/// "with 60% cell density according to [27]"): 0.531 -> 0.62 mm^2.
+pub const LAYOUT_FACTOR: f64 = 0.62 / 0.531;
+
+/// Fig. 6 area shares of the case-study instance.
+const A_SPM: f64 = 0.6347;
+const A_CORE: f64 = 0.1186;
+const A_STREAMER: f64 = 0.0226;
+const A_HOST: f64 = 0.0113;
+const A_ICACHE: f64 = 0.08;
+const A_DMA: f64 = 0.06;
+// remainder: CSR manager + misc glue
+const A_OTHER: f64 = 1.0 - A_SPM - A_CORE - A_STREAMER - A_HOST - A_ICACHE - A_DMA;
+
+/// Fig. 6 power shares of the case-study instance.
+const P_SPM: f64 = 0.4190;
+const P_ICACHE: f64 = 0.1706;
+const P_CORE: f64 = 0.1318;
+const P_STREAMER: f64 = 0.0650;
+const P_HOST: f64 = 0.0240;
+const P_OTHER: f64 = 1.0 - P_SPM - P_ICACHE - P_CORE - P_STREAMER - P_HOST;
+
+/// A per-component breakdown (same categories as Fig. 6).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Breakdown {
+    pub spm: f64,
+    pub gemm_core: f64,
+    pub streamers: f64,
+    pub host: f64,
+    pub icache: f64,
+    pub dma: f64,
+    pub other: f64,
+}
+
+impl Breakdown {
+    pub fn total(&self) -> f64 {
+        self.spm + self.gemm_core + self.streamers + self.host + self.icache + self.dma + self.other
+    }
+
+    pub fn entries(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("multi-banked SPM", self.spm),
+            ("GeMM core", self.gemm_core),
+            ("data streamers", self.streamers),
+            ("RISC-V host", self.host),
+            ("instruction cache", self.icache),
+            ("DMA", self.dma),
+            ("other (CSR, glue)", self.other),
+        ]
+    }
+
+    pub fn percentages(&self) -> Vec<(&'static str, f64)> {
+        let t = self.total();
+        self.entries().into_iter().map(|(n, v)| (n, 100.0 * v / t)).collect()
+    }
+}
+
+/// The analytical model.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerModel {
+    /// Anchor instance (the paper's Table 1 case study).
+    anchor: AnchorScales,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct AnchorScales {
+    /// mm^2 per SPM KiB (incl. interconnect share).
+    area_per_spm_kib: f64,
+    /// mm^2 per MAC (incl. accumulator share, at 8-bit operands).
+    area_per_mac: f64,
+    /// mm^2 per streamer buffer byte.
+    area_per_buf_byte: f64,
+    /// fixed blocks (host, icache, dma, other), mm^2.
+    area_host: f64,
+    area_icache: f64,
+    area_dma: f64,
+    area_other: f64,
+    /// mW per (SPM KiB) at the anchor's access activity & frequency.
+    power_per_spm_kib: f64,
+    /// mW per MAC at 100% utilization, anchor frequency.
+    power_per_mac: f64,
+    power_per_buf_byte: f64,
+    power_host: f64,
+    power_icache: f64,
+    power_dma_other: f64,
+    anchor_freq_mhz: f64,
+}
+
+impl Default for PowerModel {
+    fn default() -> Self {
+        let cfg = PlatformConfig::case_study();
+        let spm_kib = cfg.mem.capacity_bytes() as f64 / 1024.0;
+        let macs = cfg.core.macs_per_cycle() as f64;
+        let buf_bytes = (cfg.mem.d_stream
+            * (cfg.core.a_tile_bytes() + cfg.core.b_tile_bytes() + cfg.core.c_tile_bytes()))
+            as f64;
+        // the paper's power workload runs near-full utilization; treat
+        // the anchor power as utilization ~1.0 at 200 MHz.
+        PowerModel {
+            anchor: AnchorScales {
+                area_per_spm_kib: ANCHOR_AREA_MM2 * A_SPM / spm_kib,
+                area_per_mac: ANCHOR_AREA_MM2 * A_CORE / macs,
+                area_per_buf_byte: ANCHOR_AREA_MM2 * A_STREAMER / buf_bytes,
+                area_host: ANCHOR_AREA_MM2 * A_HOST,
+                area_icache: ANCHOR_AREA_MM2 * A_ICACHE,
+                area_dma: ANCHOR_AREA_MM2 * A_DMA,
+                area_other: ANCHOR_AREA_MM2 * A_OTHER,
+                power_per_spm_kib: ANCHOR_POWER_MW * P_SPM / spm_kib,
+                power_per_mac: ANCHOR_POWER_MW * P_CORE / macs,
+                power_per_buf_byte: ANCHOR_POWER_MW * P_STREAMER / buf_bytes,
+                power_host: ANCHOR_POWER_MW * P_HOST,
+                power_icache: ANCHOR_POWER_MW * P_ICACHE,
+                power_dma_other: ANCHOR_POWER_MW * P_OTHER,
+                anchor_freq_mhz: 200.0,
+            },
+        }
+    }
+}
+
+impl PowerModel {
+    /// Cell-area breakdown of an instance (mm^2).
+    pub fn area(&self, cfg: &PlatformConfig) -> Breakdown {
+        let a = &self.anchor;
+        let spm_kib = cfg.mem.capacity_bytes() as f64 / 1024.0;
+        let macs = cfg.core.macs_per_cycle() as f64;
+        let buf_bytes = (cfg.mem.d_stream
+            * (cfg.core.a_tile_bytes() + cfg.core.b_tile_bytes() + cfg.core.c_tile_bytes()))
+            as f64;
+        Breakdown {
+            spm: a.area_per_spm_kib * spm_kib,
+            gemm_core: a.area_per_mac * macs,
+            streamers: a.area_per_buf_byte * buf_bytes,
+            host: a.area_host,
+            icache: a.area_icache,
+            dma: a.area_dma,
+            other: a.area_other,
+        }
+    }
+
+    /// Total cell area (mm^2).
+    pub fn total_area(&self, cfg: &PlatformConfig) -> f64 {
+        self.area(cfg).total()
+    }
+
+    /// Layout (post-P&R) area used for area-normalized metrics.
+    pub fn layout_area(&self, cfg: &PlatformConfig) -> f64 {
+        self.total_area(cfg) * LAYOUT_FACTOR
+    }
+
+    /// Power breakdown (mW) at `utilization` (overall array utilization
+    /// of the running workload; dynamic terms scale with it, static and
+    /// host/icache terms do not).
+    pub fn power(&self, cfg: &PlatformConfig, utilization: f64) -> Breakdown {
+        let a = &self.anchor;
+        let f_scale = cfg.freq_mhz as f64 / a.anchor_freq_mhz;
+        let u = utilization.clamp(0.0, 1.0);
+        let spm_kib = cfg.mem.capacity_bytes() as f64 / 1024.0;
+        let macs = cfg.core.macs_per_cycle() as f64;
+        let buf_bytes = (cfg.mem.d_stream
+            * (cfg.core.a_tile_bytes() + cfg.core.b_tile_bytes() + cfg.core.c_tile_bytes()))
+            as f64;
+        // dynamic components scale with utilization and frequency; the
+        // static floor is ~15% of anchor component power (16nm FFC at
+        // 0.675 V is leakage-light).
+        let dyn_scale = (0.15 + 0.85 * u) * f_scale;
+        Breakdown {
+            spm: a.power_per_spm_kib * spm_kib * dyn_scale,
+            gemm_core: a.power_per_mac * macs * dyn_scale,
+            streamers: a.power_per_buf_byte * buf_bytes * dyn_scale,
+            host: a.power_host * f_scale,
+            icache: a.power_icache * f_scale,
+            dma: a.power_dma_other * 0.5 * f_scale,
+            other: a.power_dma_other * 0.5 * f_scale,
+        }
+    }
+
+    /// Total power (mW).
+    pub fn total_power(&self, cfg: &PlatformConfig, utilization: f64) -> f64 {
+        self.power(cfg, utilization).total()
+    }
+
+    /// System efficiency in TOPS/W at peak performance (the paper's
+    /// headline: 204.8 GOPS / 43.8 mW = 4.68 TOPS/W).
+    pub fn tops_per_watt(&self, cfg: &PlatformConfig, utilization: f64) -> f64 {
+        let gops = cfg.peak_gops();
+        gops / self.total_power(cfg, utilization)
+    }
+}
+
+/// One row of the Table 3 SotA comparison.
+#[derive(Debug, Clone)]
+pub struct SotaRow {
+    pub name: &'static str,
+    pub tech_nm: u32,
+    pub area_mm2: f64,
+    pub memory_kib: u32,
+    pub freq_mhz: u32,
+    pub peak_gops: f64,
+    pub peak_tops_w: Option<f64>,
+    pub precision: &'static str,
+    pub open_source: bool,
+    pub generated: bool,
+}
+
+impl SotaRow {
+    pub fn gops_per_mm2(&self) -> f64 {
+        self.peak_gops / self.area_mm2
+    }
+
+    pub fn op_area_eff(&self) -> Option<f64> {
+        self.peak_tops_w.map(|t| t / self.area_mm2)
+    }
+}
+
+/// Published rows of Table 3 (8-bit numbers where multi-precision).
+pub fn sota_published() -> Vec<SotaRow> {
+    vec![
+        SotaRow { name: "SIGMA", tech_nm: 28, area_mm2: 65.0, memory_kib: 6000, freq_mhz: 500, peak_gops: 16000.0, peak_tops_w: Some(0.48), precision: "BFP16/FP32", open_source: true, generated: false },
+        SotaRow { name: "CONNA", tech_nm: 65, area_mm2: 2.36, memory_kib: 144, freq_mhz: 200, peak_gops: 102.4, peak_tops_w: Some(0.856), precision: "INT4/8/16/32", open_source: false, generated: true },
+        SotaRow { name: "Gemmini", tech_nm: 22, area_mm2: 1.03, memory_kib: 256, freq_mhz: 1000, peak_gops: 512.0, peak_tops_w: None, precision: "INT8", open_source: true, generated: true },
+        SotaRow { name: "DIANA(Dig.)", tech_nm: 22, area_mm2: 8.91, memory_kib: 512, freq_mhz: 280, peak_gops: 224.0, peak_tops_w: Some(1.7), precision: "INT8", open_source: true, generated: false },
+        SotaRow { name: "RBE", tech_nm: 22, area_mm2: 2.42, memory_kib: 128, freq_mhz: 420, peak_gops: 91.0, peak_tops_w: Some(0.74), precision: "INT2/4/8", open_source: true, generated: false },
+        SotaRow { name: "RedMule", tech_nm: 22, area_mm2: 0.73, memory_kib: 128, freq_mhz: 470, peak_gops: 89.0, peak_tops_w: Some(1.6), precision: "FP8/16", open_source: true, generated: false },
+    ]
+}
+
+/// Our modeled OpenGeMM row.
+pub fn opengemm_row(model: &PowerModel, cfg: &PlatformConfig) -> SotaRow {
+    // Table 3 reports the layout-estimated area and the power measured
+    // on the (32,32,32) block workload (near-full utilization).
+    SotaRow {
+        name: "OpenGeMM",
+        tech_nm: 16,
+        area_mm2: model.layout_area(cfg),
+        memory_kib: (cfg.mem.capacity_bytes() / 1024) as u32,
+        freq_mhz: cfg.freq_mhz as u32,
+        peak_gops: cfg.peak_gops(),
+        peak_tops_w: Some(model.tops_per_watt(cfg, 1.0)),
+        precision: "INT2/4/8*",
+        open_source: true,
+        generated: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (PowerModel, PlatformConfig) {
+        (PowerModel::default(), PlatformConfig::case_study())
+    }
+
+    #[test]
+    fn anchor_reproduces_published_area() {
+        let (m, cfg) = setup();
+        assert!((m.total_area(&cfg) - ANCHOR_AREA_MM2).abs() < 1e-9);
+        let pct = m.area(&cfg).percentages();
+        let spm = pct.iter().find(|(n, _)| n.contains("SPM")).unwrap().1;
+        assert!((spm - 63.47).abs() < 0.1, "SPM area share {spm}");
+        let core = pct.iter().find(|(n, _)| n.contains("GeMM")).unwrap().1;
+        assert!((core - 11.86).abs() < 0.1);
+    }
+
+    #[test]
+    fn anchor_reproduces_published_power_and_efficiency() {
+        let (m, cfg) = setup();
+        let total = m.total_power(&cfg, 1.0);
+        assert!((total - ANCHOR_POWER_MW).abs() < 1e-6, "total {total}");
+        let eff = m.tops_per_watt(&cfg, 1.0);
+        assert!((eff - 4.675).abs() < 0.02, "TOPS/W {eff}");
+        let pct = m.power(&cfg, 1.0).percentages();
+        let spm = pct.iter().find(|(n, _)| n.contains("SPM")).unwrap().1;
+        assert!((spm - 41.90).abs() < 0.1, "SPM power share {spm}");
+    }
+
+    #[test]
+    fn layout_area_matches_table3() {
+        let (m, cfg) = setup();
+        assert!((m.layout_area(&cfg) - 0.62).abs() < 0.005);
+        let row = opengemm_row(&m, &cfg);
+        assert!((row.gops_per_mm2() - 329.0).abs() < 5.0, "{}", row.gops_per_mm2());
+        assert!((row.op_area_eff().unwrap() - 7.55).abs() < 0.15);
+    }
+
+    #[test]
+    fn idle_power_below_full_power() {
+        let (m, cfg) = setup();
+        assert!(m.total_power(&cfg, 0.0) < m.total_power(&cfg, 1.0) * 0.6);
+    }
+
+    #[test]
+    fn bigger_array_grows_core_share() {
+        let (m, mut cfg) = setup();
+        cfg.core.mu = 16;
+        cfg.core.nu = 16;
+        cfg.mem.r_mem = 32; // keep config valid
+        cfg.mem.w_mem = 128;
+        let base_share = {
+            let c = PlatformConfig::case_study();
+            let b = m.area(&c);
+            b.gemm_core / b.total()
+        };
+        let b = m.area(&cfg);
+        assert!(b.gemm_core / b.total() > base_share * 2.0);
+    }
+
+    #[test]
+    fn sota_table_has_opengemm_best_op_area_eff_int8() {
+        let (m, cfg) = setup();
+        let ours = opengemm_row(&m, &cfg);
+        for row in sota_published() {
+            if let Some(e) = row.op_area_eff() {
+                assert!(
+                    ours.op_area_eff().unwrap() > e,
+                    "{} beats us: {e} vs {:?}",
+                    row.name,
+                    ours.op_area_eff()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn frequency_scales_power() {
+        let (m, mut cfg) = setup();
+        let p200 = m.total_power(&cfg, 1.0);
+        cfg.freq_mhz = 400;
+        let p400 = m.total_power(&cfg, 1.0);
+        assert!((p400 / p200 - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,202 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) and executes them on the XLA CPU client.
+//!
+//! This is the *functional golden model* of the platform: the Pallas
+//! output-stationary GeMM kernel (L1), lowered through the JAX graphs
+//! (L2), executed from Rust (L3). Integration tests cross-check the
+//! cycle-accurate simulator's datapath bit-exactly against these
+//! executables. Python never runs here — the HLO text was produced once
+//! by `make artifacts`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::PrimitiveType;
+
+use crate::util::json::{self, Json};
+
+/// Argument/result metadata from `manifest.json`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorMeta {
+    pub shape: Vec<usize>,
+    pub dtype: String, // "s8" | "s32" | "f32"
+}
+
+impl TensorMeta {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact's manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub args: Vec<TensorMeta>,
+    pub results: Vec<TensorMeta>,
+}
+
+/// A typed input value.
+pub enum Value {
+    I8(Vec<i8>),
+    I32(Vec<i32>),
+}
+
+/// The runtime: PJRT client + compiled executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: HashMap<String, ArtifactMeta>,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+fn tensor_meta(v: &Json) -> Result<TensorMeta> {
+    let shape = v
+        .get("shape")
+        .and_then(|s| s.as_arr())
+        .ok_or_else(|| anyhow!("manifest entry missing shape"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = v
+        .get("dtype")
+        .and_then(|d| d.as_str())
+        .ok_or_else(|| anyhow!("manifest entry missing dtype"))?
+        .to_string();
+    Ok(TensorMeta { shape, dtype })
+}
+
+impl Runtime {
+    /// Load the manifest and create the PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
+        let doc = json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let obj = doc.as_obj().ok_or_else(|| anyhow!("manifest is not an object"))?;
+        let mut manifest = HashMap::new();
+        for (name, entry) in obj {
+            let file = entry
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow!("artifact {name} missing file"))?
+                .to_string();
+            let args = entry
+                .get("args")
+                .and_then(|a| a.as_arr())
+                .ok_or_else(|| anyhow!("artifact {name} missing args"))?
+                .iter()
+                .map(tensor_meta)
+                .collect::<Result<Vec<_>>>()?;
+            let results = entry
+                .get("results")
+                .and_then(|a| a.as_arr())
+                .ok_or_else(|| anyhow!("artifact {name} missing results"))?
+                .iter()
+                .map(tensor_meta)
+                .collect::<Result<Vec<_>>>()?;
+            manifest.insert(name.clone(), ArtifactMeta { file, args, results });
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, dir, manifest, cache: HashMap::new() })
+    }
+
+    /// Default artifacts directory (repo-root/artifacts), overridable
+    /// with OPENGEMM_ARTIFACTS.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("OPENGEMM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.manifest.keys().map(|s| s.as_str()).collect();
+        names.sort_unstable();
+        names
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.manifest.get(name)
+    }
+
+    /// Compile (and cache) an artifact.
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let meta = self
+                .manifest
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
+            let path = self.dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(self.cache.get(name).unwrap())
+    }
+
+    fn literal(value: &Value, meta: &TensorMeta) -> Result<xla::Literal> {
+        let dims: Vec<i64> = meta.shape.iter().map(|&d| d as i64).collect();
+        match (value, meta.dtype.as_str()) {
+            (Value::I8(v), "s8") => {
+                if v.len() != meta.elements() {
+                    bail!("arg size {} != expected {}", v.len(), meta.elements());
+                }
+                // the xla crate has no native i8 literal constructor;
+                // build i32 and convert (exact for the int8 range)
+                let v32: Vec<i32> = v.iter().map(|&x| x as i32).collect();
+                Ok(xla::Literal::vec1(&v32).reshape(&dims)?.convert(PrimitiveType::S8)?)
+            }
+            (Value::I32(v), "s32") => {
+                if v.len() != meta.elements() {
+                    bail!("arg size {} != expected {}", v.len(), meta.elements());
+                }
+                Ok(xla::Literal::vec1(v).reshape(&dims)?)
+            }
+            (_, d) => bail!("unsupported arg dtype {d:?}"),
+        }
+    }
+
+    /// Execute an artifact with typed inputs; returns raw result
+    /// literals (tuple-unpacked).
+    pub fn execute(&mut self, name: &str, args: &[Value]) -> Result<Vec<xla::Literal>> {
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?
+            .clone();
+        if args.len() != meta.args.len() {
+            bail!("artifact {name}: {} args given, {} expected", args.len(), meta.args.len());
+        }
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .zip(&meta.args)
+            .map(|(v, m)| Self::literal(v, m))
+            .collect::<Result<Vec<_>>>()?;
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // lowered with return_tuple=True
+        Ok(result.to_tuple()?)
+    }
+
+    /// Execute an int8 GeMM artifact: `C[M,N] = A[M,K] @ B[K,N]`.
+    pub fn execute_gemm(&mut self, name: &str, a: &[i8], b: &[i8]) -> Result<Vec<i32>> {
+        let outs = self.execute(name, &[Value::I8(a.to_vec()), Value::I8(b.to_vec())])?;
+        let out = outs
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("artifact {name} returned no results"))?;
+        Ok(out.to_vec::<i32>()?)
+    }
+
+    /// Read back an int8 result literal (requantized outputs).
+    pub fn result_i8(lit: &xla::Literal) -> Result<Vec<i8>> {
+        // no native i8 reader either: convert to s32 first
+        let as32 = lit.convert(PrimitiveType::S32)?;
+        Ok(as32.to_vec::<i32>()?.into_iter().map(|v| v as i8).collect())
+    }
+}

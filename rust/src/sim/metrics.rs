@@ -1,0 +1,129 @@
+//! Utilization accounting (Sec. 4.2/4.3 definitions).
+//!
+//! - **Spatial utilization (SU)**: real MACs over array-slot MACs burned
+//!   (padding waste), a static property of the tiling.
+//! - **Temporal utilization (TU)**: array-active cycles over total
+//!   cycles (config exposure, memory stalls, drain).
+//! - **Overall utilization (OU)**: SU x TU — fraction of peak MACs
+//!   actually used.
+
+use crate::spm::SpmStats;
+
+/// Cycle-level counters accumulated by one simulation.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct SimMetrics {
+    /// Total platform cycles from program start to full drain.
+    pub total_cycles: u64,
+    /// Cycles the MAC array issued a tile-MAC.
+    pub compute_cycles: u64,
+    /// Core started but starved on the A streamer.
+    pub stall_input_a: u64,
+    /// Core started but starved on the B streamer.
+    pub stall_input_b: u64,
+    /// Core started but blocked on the output buffer.
+    pub stall_output: u64,
+    /// Core idle (configuration exposure, inter-run gaps, drain).
+    pub idle_cycles: u64,
+    /// Accelerator runs launched / completed.
+    pub starts: u64,
+    pub runs_completed: u64,
+    /// Sum over runs of (completion cycle - start cycle): the kernel
+    /// window, excluding host configuration gaps between runs. This is
+    /// the "accelerator busy window" view used for throughput
+    /// comparisons (Fig. 7), where configuration is amortized or
+    /// excluded by measurement.
+    pub kernel_cycles: u64,
+    /// Host instructions retired.
+    pub host_instret: u64,
+    /// Host cycles stalled on accelerator-CSR handshakes.
+    pub host_csr_stall: u64,
+    /// SPM traffic stats snapshot.
+    pub spm: SpmStats,
+}
+
+impl SimMetrics {
+    pub fn stall_cycles(&self) -> u64 {
+        self.stall_input_a + self.stall_input_b + self.stall_output
+    }
+
+    /// Temporal utilization.
+    pub fn temporal_utilization(&self) -> f64 {
+        if self.total_cycles == 0 {
+            return 0.0;
+        }
+        self.compute_cycles as f64 / self.total_cycles as f64
+    }
+
+    /// Kernel-window temporal utilization (config excluded).
+    pub fn kernel_utilization(&self) -> f64 {
+        if self.kernel_cycles == 0 {
+            return 0.0;
+        }
+        self.compute_cycles as f64 / self.kernel_cycles as f64
+    }
+}
+
+/// Final per-job report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UtilizationReport {
+    pub spatial: f64,
+    pub temporal: f64,
+    pub overall: f64,
+    pub total_cycles: u64,
+    pub compute_cycles: u64,
+}
+
+impl UtilizationReport {
+    pub fn from_metrics(su: f64, m: &SimMetrics) -> UtilizationReport {
+        let tu = m.temporal_utilization();
+        UtilizationReport {
+            spatial: su,
+            temporal: tu,
+            overall: su * tu,
+            total_cycles: m.total_cycles,
+            compute_cycles: m.compute_cycles,
+        }
+    }
+
+    /// Achieved GOPS at a clock frequency, given real ops executed.
+    pub fn achieved_gops(&self, real_ops: u64, freq_mhz: u64) -> f64 {
+        if self.total_cycles == 0 {
+            return 0.0;
+        }
+        real_ops as f64 / self.total_cycles as f64 * freq_mhz as f64 * 1e6 / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tu_and_ou() {
+        let m = SimMetrics { total_cycles: 1000, compute_cycles: 800, ..Default::default() };
+        let r = UtilizationReport::from_metrics(0.9, &m);
+        assert!((r.temporal - 0.8).abs() < 1e-12);
+        assert!((r.overall - 0.72).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_metrics_zero_tu() {
+        let m = SimMetrics::default();
+        assert_eq!(m.temporal_utilization(), 0.0);
+    }
+
+    #[test]
+    fn gops_math() {
+        let r = UtilizationReport {
+            spatial: 1.0,
+            temporal: 1.0,
+            overall: 1.0,
+            total_cycles: 1000,
+            compute_cycles: 1000,
+        };
+        // 1000 cycles at 200 MHz executing 1024*1000 ops:
+        // ops/s = 1024 * 200e6 -> 204.8 GOPS
+        let gops = r.achieved_gops(1024 * 1000, 200);
+        assert!((gops - 204.8).abs() < 1e-9);
+    }
+}

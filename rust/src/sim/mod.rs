@@ -1,0 +1,670 @@
+//! The cycle-accurate OpenGeMM platform simulator.
+//!
+//! One [`Platform`] instance wires together the RV32I host, the
+//! CSRManager, the GeMM core, the three data streamers and the
+//! multi-banked SPM, and advances them in lock-step, one clock cycle per
+//! [`Platform::cycle`]. This is the evaluation vehicle standing in for
+//! the paper's Verilator RTL simulation (Sec. 4.1): every utilization
+//! number in the reproduced figures/tables comes out of this loop.
+//!
+//! ## Memory model
+//!
+//! SPM accesses are *epochs*: all port requests issued in the same cycle
+//! (A-tile fetch, B-tile fetch, C-tile writeback) are arbitrated
+//! together; the epoch occupies the interconnect for `max bank load`
+//! cycles (single-ported banks). Streamers hold at most one outstanding
+//! tile access each — exactly one request pipeline per streamer, as in
+//! the RTL.
+//!
+//! ## DMA / data loading
+//!
+//! Operand data appears in the SPM "for free" at run start and results
+//! are collected at run completion: the paper excludes DRAM<->SPM
+//! movement from all cycle counts (Sec. 4.3 footnote), and so do we.
+
+pub mod metrics;
+
+pub use metrics::{SimMetrics, UtilizationReport};
+
+use crate::compiler::{layout, CompiledCall, CompiledJob};
+use crate::config::{Mechanisms, PlatformConfig};
+use crate::csr::{CsrError, CsrManager};
+use crate::gemm_core::{CoreEvent, GemmCore};
+use crate::host::{Cpu, CsrBus, StepResult};
+use crate::spm::Spm;
+use crate::streamer::{InputStreamer, OutputStreamer};
+
+/// Simulation options.
+#[derive(Debug, Clone, Copy)]
+pub struct SimOptions {
+    pub mechanisms: Mechanisms,
+    /// Carry and verify real data through the datapath.
+    pub functional: bool,
+    /// Extra host-stall cycles per accelerator CSR access (CSRManager
+    /// handshake / clock-domain crossing). 1 access = 1 + this.
+    pub csr_latency: u64,
+    /// Runaway guard.
+    pub max_cycles: u64,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions {
+            mechanisms: Mechanisms::ALL,
+            functional: false,
+            csr_latency: 8,
+            max_cycles: 2_000_000_000,
+        }
+    }
+}
+
+/// Result of running one compiled job.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub metrics: SimMetrics,
+    pub report: UtilizationReport,
+    /// Result matrix (row-major M x N), functional mode only.
+    pub c: Option<Vec<i32>>,
+}
+
+/// Simulation failure.
+#[derive(Debug)]
+pub enum SimError {
+    HostFault(crate::host::Fault),
+    Csr(CsrError),
+    CycleLimit(u64),
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::HostFault(e) => write!(f, "host fault: {e}"),
+            SimError::Csr(e) => write!(f, "csr error: {e}"),
+            SimError::CycleLimit(c) => write!(f, "cycle limit {c} exceeded (deadlock?)"),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+/// Counting CSR bus: forwards to the CsrManager and counts accelerator
+/// accesses so the platform can charge handshake latency.
+struct CountingBus<'a> {
+    csr: &'a mut CsrManager,
+    accesses: u64,
+}
+
+impl CsrBus for CountingBus<'_> {
+    fn csr_read(&mut self, addr: u32) -> Result<u32, CsrError> {
+        self.accesses += 1;
+        self.csr.read(addr)
+    }
+    fn csr_write(&mut self, addr: u32, value: u32) -> Result<(), CsrError> {
+        self.accesses += 1;
+        self.csr.write(addr, value)
+    }
+}
+
+/// The platform.
+pub struct Platform {
+    pub cfg: PlatformConfig,
+    pub opts: SimOptions,
+    spm: Spm,
+    core: GemmCore,
+    csr: CsrManager,
+    a_stream: InputStreamer,
+    b_stream: InputStreamer,
+    c_stream: OutputStreamer,
+    host: Option<Cpu>,
+    host_stall: u64,
+    now: u64,
+    addr_a: Vec<u64>,
+    addr_b: Vec<u64>,
+    addr_c: Vec<u64>,
+    pub metrics: SimMetrics,
+    // job state
+    job: Option<JobState>,
+}
+
+struct JobState {
+    calls: Vec<CompiledCall>,
+    /// Which call the *next* start corresponds to.
+    next_call: usize,
+    /// Which call is currently running.
+    running_call: Option<usize>,
+    functional_inputs: Option<Vec<(Vec<i8>, Vec<i8>)>>,
+    /// Assembled output (row-major m x n of the parent shape).
+    c_out: Option<Vec<i32>>,
+    parent_n: usize,
+    parent_m: usize,
+    run_active: bool,
+    run_start_cycle: u64,
+}
+
+impl Platform {
+    pub fn new(cfg: PlatformConfig, opts: SimOptions) -> Platform {
+        cfg.validate().expect("invalid platform config");
+        let mech = opts.mechanisms;
+        let depth = if mech.prefetch { cfg.mem.d_stream.max(2) } else { 1 };
+        let out_depth = if mech.prefetch { cfg.mem.d_stream.max(2) } else { 1 };
+        Platform {
+            spm: Spm::new(cfg.mem),
+            core: GemmCore::new(cfg.core, opts.functional),
+            csr: CsrManager::new(mech.config_preloading),
+            a_stream: InputStreamer::new(depth, mech.prefetch),
+            b_stream: InputStreamer::new(depth, mech.prefetch),
+            c_stream: OutputStreamer::new(out_depth),
+            host: None,
+            host_stall: 0,
+            now: 0,
+            addr_a: Vec::with_capacity(64),
+            addr_b: Vec::with_capacity(64),
+            addr_c: Vec::with_capacity(64),
+            metrics: SimMetrics::default(),
+            cfg,
+            opts,
+            job: None,
+        }
+    }
+
+    /// Run a compiled job to completion. `a`/`b` are the parent operand
+    /// matrices (row-major, true dims) in functional mode.
+    pub fn run_job(
+        &mut self,
+        job: &CompiledJob,
+        a: Option<&[i8]>,
+        b: Option<&[i8]>,
+    ) -> Result<JobResult, SimError> {
+        let (m, k, n) = (job.shape.m, job.shape.k, job.shape.n);
+        let functional = self.opts.functional;
+        if functional {
+            assert_eq!(a.map(|x| x.len()), Some(m * k), "A operand size");
+            assert_eq!(b.map(|x| x.len()), Some(k * n), "B operand size");
+        }
+
+        // Pre-slice per-call operand blocks (the DMA's work list).
+        let functional_inputs = if functional {
+            let a = a.unwrap();
+            let b = b.unwrap();
+            Some(
+                job.calls
+                    .iter()
+                    .map(|call| {
+                        let blk = &call.block;
+                        let mut asub = vec![0i8; blk.shape.m * k];
+                        for i in 0..blk.shape.m {
+                            let src = (blk.m_off + i) * k;
+                            asub[i * k..(i + 1) * k].copy_from_slice(&a[src..src + k]);
+                        }
+                        let mut bsub = vec![0i8; k * blk.shape.n];
+                        for i in 0..k {
+                            let src = i * n + blk.n_off;
+                            bsub[i * blk.shape.n..(i + 1) * blk.shape.n]
+                                .copy_from_slice(&b[src..src + blk.shape.n]);
+                        }
+                        (asub, bsub)
+                    })
+                    .collect(),
+            )
+        } else {
+            None
+        };
+
+        self.reset_run_state();
+        self.job = Some(JobState {
+            calls: job.calls.clone(),
+            next_call: 0,
+            running_call: None,
+            functional_inputs,
+            c_out: functional.then(|| vec![0i32; m * n]),
+            parent_m: m,
+            parent_n: n,
+            run_active: false,
+            run_start_cycle: 0,
+        });
+        self.host = Some(Cpu::new(job.program.clone(), 1 << 16));
+
+        while !self.finished() {
+            self.cycle()?;
+            if self.metrics.total_cycles > self.opts.max_cycles {
+                return Err(SimError::CycleLimit(self.opts.max_cycles));
+            }
+        }
+
+        let job_state = self.job.take().unwrap();
+        let su = job.spatial_utilization(&self.cfg);
+        self.metrics.spm = self.spm.stats.clone();
+        let report = UtilizationReport::from_metrics(su, &self.metrics);
+        Ok(JobResult { metrics: self.metrics.clone(), report, c: job_state.c_out })
+    }
+
+    fn reset_run_state(&mut self) {
+        let mech = self.opts.mechanisms;
+        let depth = if mech.prefetch { self.cfg.mem.d_stream.max(2) } else { 1 };
+        self.core = GemmCore::new(self.cfg.core, self.opts.functional);
+        self.csr = CsrManager::new(mech.config_preloading);
+        self.a_stream = InputStreamer::new(depth, mech.prefetch);
+        self.b_stream = InputStreamer::new(depth, mech.prefetch);
+        self.c_stream = OutputStreamer::new(depth);
+        self.host_stall = 0;
+        self.now = 0;
+        self.metrics = SimMetrics::default();
+        self.spm.reset_stats();
+    }
+
+    fn finished(&self) -> bool {
+        let host_done = self.host.as_ref().map(|h| h.halted()).unwrap_or(true);
+        let job_quiet = self
+            .job
+            .as_ref()
+            .map(|j| !j.run_active)
+            .unwrap_or(true);
+        host_done && !self.csr.is_busy() && job_quiet
+    }
+
+    /// Advance the platform one clock cycle.
+    pub fn cycle(&mut self) -> Result<(), SimError> {
+        self.now += 1;
+        self.metrics.total_cycles += 1;
+        let now = self.now;
+
+        // ---- 1. deliver completed memory traffic --------------------
+        self.a_stream.deliver_ready(now);
+        self.b_stream.deliver_ready(now);
+        if let Some(tile) = self.c_stream.deliver_ready(now) {
+            self.commit_output_tile(tile);
+        }
+
+        // ---- 2. issue new memory requests (per-streamer pipelines) --
+        self.issue_memory(now);
+
+        // ---- 3. core cycle -------------------------------------------
+        match self.core.step(&mut self.a_stream, &mut self.b_stream, &mut self.c_stream) {
+            CoreEvent::Idle => self.metrics.idle_cycles += 1,
+            CoreEvent::Stalled(reason) => {
+                use crate::gemm_core::StallReason::*;
+                match reason {
+                    InputA => self.metrics.stall_input_a += 1,
+                    InputB => self.metrics.stall_input_b += 1,
+                    Output => self.metrics.stall_output += 1,
+                }
+            }
+            CoreEvent::Computed { finished, .. } => {
+                self.metrics.compute_cycles += 1;
+                if finished {
+                    // run completion is gated on the output drain below
+                    if let Some(job) = self.job.as_mut() {
+                        debug_assert!(job.run_active);
+                    }
+                }
+            }
+        }
+
+        // ---- 4. run completion --------------------------------------
+        let run_done = self
+            .job
+            .as_ref()
+            .map(|j| j.run_active && !self.core.busy() && self.c_stream.is_drained())
+            .unwrap_or(false);
+        if run_done {
+            self.finish_run();
+        }
+
+        // ---- 5. accelerator start -----------------------------------
+        if !self.core.busy() {
+            if let Some(regs) = self.csr.take_start() {
+                self.launch(regs);
+            }
+        }
+
+        // ---- 6. host cycle -------------------------------------------
+        if self.host_stall > 0 {
+            self.host_stall -= 1;
+            self.metrics.host_csr_stall += 1;
+        } else if let Some(host) = self.host.as_mut() {
+            if !host.halted() {
+                let mut bus = CountingBus { csr: &mut self.csr, accesses: 0 };
+                match host.step(&mut bus) {
+                    StepResult::Ran { cycles } => {
+                        let extra = bus.accesses * self.opts.csr_latency;
+                        self.host_stall = (cycles - 1) + extra;
+                        self.metrics.host_instret += 1;
+                    }
+                    StepResult::Halted => {}
+                    StepResult::Fault(f) => return Err(SimError::HostFault(f)),
+                }
+            }
+        }
+
+        Ok(())
+    }
+
+    /// Per-streamer memory issue. Each input streamer pipelines up to
+    /// its buffer depth of outstanding tile fetches; its banks are busy
+    /// for `max own-bank load` cycles per fetch, and a fetch issued the
+    /// same cycle as the other input streamer pays one arbitration
+    /// cycle per shared bank group (the read crossbar serializes them).
+    /// The output writer runs on the independent write-port network
+    /// (banks are 1R1W).
+    fn issue_memory(&mut self, now: u64) {
+        let word = self.cfg.mem.word_bytes() as u64;
+        let word_shift = word.trailing_zeros();
+        let n_bank = self.cfg.mem.n_bank as u32;
+        let rd_lat = self.cfg.mem.read_latency;
+        let wr_lat = self.cfg.mem.write_latency;
+        let a_starved = self.core.busy() && self.a_stream.head().is_none();
+        let b_starved = self.core.busy() && self.b_stream.head().is_none();
+        let functional = self.opts.functional;
+
+        let a_issues = self.a_stream.wants_fetch(now, a_starved);
+        let b_issues = self.b_stream.wants_fetch(now, b_starved);
+
+        // Timing-only fast path: the precomputed bank pattern gives the
+        // access cost and bank mask without materializing addresses.
+        let mut a_banks = 0u64; // banks touched by A this cycle
+        if a_issues {
+            let (cost, mask, pos, data) = match (functional, self.a_stream.pattern) {
+                (false, Some(p)) if !p.self_conflict => {
+                    let (pos, base) = self.a_stream.begin_fetch_timing();
+                    let base_bank = ((base as u64) >> word_shift) & (n_bank - 1) as u64;
+                    let mask = p.mask_at(base_bank as u32);
+                    self.spm.note_fast_access(self.a_stream.agu.ports() as u64, 1);
+                    (1, mask, pos, None)
+                }
+                _ => {
+                    let pos = self.a_stream.begin_fetch(word, &mut self.addr_a);
+                    let cost = self.spm.read_cost(&self.addr_a);
+                    let mut mask = 0u64;
+                    for &w in &self.addr_a {
+                        mask |= 1u64 << self.spm.bank_of(w);
+                    }
+                    let data =
+                        functional.then(|| Self::read_tile(&self.spm, word, &self.addr_a));
+                    (cost, mask, pos, data)
+                }
+            };
+            a_banks = mask;
+            self.a_stream
+                .commit_fetch(pos, data, now + cost + rd_lat - 1, now + cost);
+        }
+        if b_issues {
+            let (mut cost, mask, pos, data) = match (functional, self.b_stream.pattern) {
+                (false, Some(p)) if !p.self_conflict => {
+                    let (pos, base) = self.b_stream.begin_fetch_timing();
+                    let base_bank = ((base as u64) >> word_shift) & (n_bank - 1) as u64;
+                    let mask = p.mask_at(base_bank as u32);
+                    self.spm.note_fast_access(self.b_stream.agu.ports() as u64, 1);
+                    (1u64, mask, pos, None)
+                }
+                _ => {
+                    let pos = self.b_stream.begin_fetch(word, &mut self.addr_b);
+                    let cost = self.spm.read_cost(&self.addr_b);
+                    let mut mask = 0u64;
+                    for &w in &self.addr_b {
+                        mask |= 1u64 << self.spm.bank_of(w);
+                    }
+                    let data =
+                        functional.then(|| Self::read_tile(&self.spm, word, &self.addr_b));
+                    (cost, mask, pos, data)
+                }
+            };
+            if a_issues && a_banks & mask != 0 {
+                // same-cycle arbitration against A on shared banks
+                cost += 1;
+                self.spm.stats.conflict_cycles += 1;
+            }
+            self.b_stream
+                .commit_fetch(pos, data, now + cost + rd_lat - 1, now + cost);
+        }
+        if self.c_stream.wants_write(now) {
+            match (functional, self.c_stream.pattern) {
+                (false, Some(p)) if !p.self_conflict => {
+                    let (tile, _base) = self.c_stream.begin_write_timing();
+                    self.spm.note_fast_access(self.c_stream.agu.ports() as u64, 1);
+                    self.c_stream.commit_write(tile, now + wr_lat, now + 1);
+                }
+                _ => {
+                    let tile = self.c_stream.begin_write(word, &mut self.addr_c);
+                    let cost = self.spm.write_cost(&self.addr_c);
+                    self.c_stream.commit_write(tile, now + cost + wr_lat - 1, now + cost);
+                }
+            }
+        }
+    }
+
+    /// Functional commit of a completed C' tile through the C AGU.
+    fn commit_output_tile(&mut self, tile: crate::streamer::OutTile) {
+        let Some(data) = tile.data else { return };
+        let word = self.cfg.mem.word_bytes() as u64;
+        let agu = self.c_stream.agu;
+        let per_word = (word / 4) as usize;
+        for port in 0..agu.ports() as u64 {
+            let byte = agu.byte_addr(tile.m1, tile.n1, 0, port);
+            let idx = port as usize * per_word;
+            if idx < data.len() {
+                let end = (idx + per_word).min(data.len());
+                self.spm.write_i32(byte, &data[idx..end]);
+            }
+        }
+    }
+
+    fn read_tile(spm: &Spm, word: u64, word_addrs: &[u64]) -> Box<[i8]> {
+        let mut out = vec![0i8; word_addrs.len() * word as usize];
+        for (i, &w) in word_addrs.iter().enumerate() {
+            spm.read_i8(w * word, &mut out[i * word as usize..(i + 1) * word as usize]);
+        }
+        out.into_boxed_slice()
+    }
+
+    fn launch(&mut self, regs: crate::csr::ConfigRegs) {
+        let word = self.cfg.mem.word_bytes();
+        let bounds = regs.bounds();
+        let job = self.job.as_mut().expect("start without a job");
+        let call_idx = job.next_call;
+        job.next_call = (job.next_call + 1) % job.calls.len();
+        job.running_call = Some(call_idx);
+        job.run_active = true;
+        job.run_start_cycle = self.metrics.total_cycles;
+        self.metrics.starts += 1;
+
+        // "DMA": place this call's operands (functional mode only; zero
+        // simulated cycles per the paper's accounting).
+        if let Some(inputs) = job.functional_inputs.as_ref() {
+            let call = &job.calls[call_idx];
+            let (asub, bsub) = &inputs[call_idx];
+            layout::pack_a(
+                &mut self.spm,
+                &self.cfg,
+                &call.placement,
+                asub,
+                call.block.shape.m,
+                call.block.shape.k,
+            );
+            layout::pack_b(
+                &mut self.spm,
+                &self.cfg,
+                &call.placement,
+                bsub,
+                call.block.shape.k,
+                call.block.shape.n,
+            );
+        }
+
+        let wb = word as u64;
+        let nb = self.cfg.mem.n_bank;
+        self.a_stream.configure2(regs.a_agu(&self.cfg.core, word), bounds, wb, nb);
+        self.b_stream.configure2(regs.b_agu(&self.cfg.core, word), bounds, wb, nb);
+        self.c_stream.configure2(regs.c_agu(&self.cfg.core, word), wb, nb);
+        self.core.start(bounds).expect("loop bounds validated at compile time");
+    }
+
+    fn finish_run(&mut self) {
+        let job = self.job.as_mut().expect("run completion without a job");
+        let call_idx = job.running_call.take().expect("no running call");
+        job.run_active = false;
+        self.metrics.kernel_cycles += self.metrics.total_cycles - job.run_start_cycle;
+        self.metrics.runs_completed += 1;
+
+        // collect functional results into the parent C
+        if let Some(c_out) = job.c_out.as_mut() {
+            let call = &job.calls[call_idx];
+            let c = layout::unpack_c(
+                &self.spm,
+                &self.cfg,
+                &call.placement,
+                call.block.shape.m,
+                call.block.shape.n,
+            );
+            let n = job.parent_n;
+            for i in 0..call.block.shape.m {
+                for j in 0..call.block.shape.n {
+                    c_out[(call.block.m_off + i) * n + (call.block.n_off + j)] =
+                        c[i * call.block.shape.n + j];
+                }
+            }
+            debug_assert!(call.block.m_off + call.block.shape.m <= job.parent_m);
+        }
+
+        // CPL: a pre-loaded start may fire instantly
+        self.csr.notify_done();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile_gemm, GemmShape, Layout};
+    use crate::util::rng::Pcg32;
+
+    fn run(
+        shape: GemmShape,
+        layout: Layout,
+        mech: Mechanisms,
+        repeats: u32,
+        functional: bool,
+    ) -> (JobResult, CompiledJob) {
+        let cfg = PlatformConfig::case_study();
+        let job = compile_gemm(&cfg, shape, layout, repeats, mech.config_preloading).unwrap();
+        let opts = SimOptions { mechanisms: mech, functional, ..Default::default() };
+        let mut platform = Platform::new(cfg, opts);
+        let (a, b) = if functional {
+            let mut rng = Pcg32::seeded(42);
+            let mut a = vec![0i8; shape.m * shape.k];
+            let mut b = vec![0i8; shape.k * shape.n];
+            rng.fill_i8(&mut a);
+            rng.fill_i8(&mut b);
+            (Some(a), Some(b))
+        } else {
+            (None, None)
+        };
+        let res = platform.run_job(&job, a.as_deref(), b.as_deref()).unwrap();
+        (res, job)
+    }
+
+    fn naive_gemm(a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
+        let mut c = vec![0i32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0i32;
+                for kk in 0..k {
+                    acc = acc
+                        .wrapping_add((a[i * k + kk] as i32).wrapping_mul(b[kk * n + j] as i32));
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn functional_gemm_matches_naive() {
+        let shape = GemmShape::new(13, 22, 17);
+        let (res, _) = run(shape, Layout::TiledInterleaved, Mechanisms::ALL, 1, true);
+        let mut rng = Pcg32::seeded(42);
+        let mut a = vec![0i8; shape.m * shape.k];
+        let mut b = vec![0i8; shape.k * shape.n];
+        rng.fill_i8(&mut a);
+        rng.fill_i8(&mut b);
+        assert_eq!(res.c.unwrap(), naive_gemm(&a, &b, 13, 22, 17));
+    }
+
+    #[test]
+    fn functional_gemm_row_major_layout() {
+        let shape = GemmShape::new(32, 40, 24);
+        let (res, _) = run(shape, Layout::RowMajor, Mechanisms::BASELINE, 1, true);
+        let mut rng = Pcg32::seeded(42);
+        let mut a = vec![0i8; shape.m * shape.k];
+        let mut b = vec![0i8; shape.k * shape.n];
+        rng.fill_i8(&mut a);
+        rng.fill_i8(&mut b);
+        assert_eq!(res.c.unwrap(), naive_gemm(&a, &b, 32, 40, 24));
+    }
+
+    #[test]
+    fn functional_split_job_matches_naive() {
+        // 256^3 splits into multiple calls
+        let shape = GemmShape::new(256, 64, 256);
+        let (res, job) = run(shape, Layout::TiledInterleaved, Mechanisms::ALL, 1, true);
+        assert!(job.calls.len() >= 1);
+        let mut rng = Pcg32::seeded(42);
+        let mut a = vec![0i8; shape.m * shape.k];
+        let mut b = vec![0i8; shape.k * shape.n];
+        rng.fill_i8(&mut a);
+        rng.fill_i8(&mut b);
+        assert_eq!(res.c.unwrap(), naive_gemm(&a, &b, 256, 64, 256));
+    }
+
+    #[test]
+    fn mechanisms_strictly_improve_utilization() {
+        let shape = GemmShape::new(128, 128, 128);
+        let (r1, _) = run(shape, Layout::RowMajor, Mechanisms::BASELINE, 10, false);
+        let (r2, _) = run(shape, Layout::RowMajor, Mechanisms::CPL, 10, false);
+        let (r3, _) = run(shape, Layout::RowMajor, Mechanisms::CPL_BUF, 10, false);
+        let (r4, _) = run(shape, Layout::TiledInterleaved, Mechanisms::ALL, 10, false);
+        let u = |r: &JobResult| r.report.overall;
+        assert!(u(&r2) >= u(&r1), "CPL must not hurt: {} vs {}", u(&r2), u(&r1));
+        assert!(u(&r3) > u(&r2), "prefetch must help: {} vs {}", u(&r3), u(&r2));
+        assert!(u(&r4) > u(&r3), "SMA must help: {} vs {}", u(&r4), u(&r3));
+        assert!(u(&r4) > 0.85, "full mechanisms should approach peak: {}", u(&r4));
+    }
+
+    #[test]
+    fn compute_cycles_equal_ideal_times_repeats() {
+        let shape = GemmShape::new(64, 64, 64);
+        let (res, job) = run(shape, Layout::TiledInterleaved, Mechanisms::ALL, 10, false);
+        let cfg = PlatformConfig::case_study();
+        assert_eq!(res.metrics.compute_cycles, job.ideal_cycles(&cfg) * 10);
+        assert_eq!(res.metrics.starts, 10);
+        assert_eq!(res.metrics.runs_completed, 10);
+    }
+
+    #[test]
+    fn aligned_all_mech_utilization_near_one() {
+        let shape = GemmShape::new(128, 128, 128);
+        let (res, _) = run(shape, Layout::TiledInterleaved, Mechanisms::ALL, 10, false);
+        assert!(
+            res.report.overall > 0.9,
+            "expected near-peak utilization, got {:?}",
+            res.report
+        );
+    }
+
+    #[test]
+    fn baseline_utilization_is_much_lower() {
+        let shape = GemmShape::new(64, 64, 64);
+        let (res, _) = run(shape, Layout::RowMajor, Mechanisms::BASELINE, 10, false);
+        assert!(
+            res.report.overall < 0.5,
+            "baseline should be slow, got {:?}",
+            res.report
+        );
+    }
+
+    #[test]
+    fn tiny_gemm_dominated_by_config() {
+        let shape = GemmShape::new(8, 8, 8);
+        let (res, _) = run(shape, Layout::TiledInterleaved, Mechanisms::BASELINE, 10, false);
+        // 10 tile-MACs of work under hundreds of config cycles
+        assert!(res.report.temporal < 0.1, "{:?}", res.report);
+    }
+}

@@ -1,0 +1,376 @@
+//! Multi-banked scratchpad memory (SPM) model.
+//!
+//! The paper tightly couples a wide, software-managed, word-interleaved
+//! multi-bank SRAM to the GeMM core (Sec. 3.1, Table 1): `N_bank` banks of
+//! `D_mem` words of `P_word` bits. Banks are 1R1W SRAM macros (the
+//! platform exposes separate `R_mem` read and `W_mem` write port
+//! networks): two *reads* (or two *writes*) landing in the same bank in
+//! the same cycle serialize — this is precisely the contention that the
+//! strided memory access mechanism (Sec. 3.4, Fig. 4(c)) exists to
+//! avoid.
+//!
+//! The model is functional + timing:
+//! - functional: a flat word array with bounds-checked read/write;
+//! - timing: [`Spm::epoch_cost`] computes how many cycles a batch of
+//!   simultaneous port requests takes (max per-bank load), and records
+//!   conflict statistics.
+
+use crate::config::MemParams;
+
+/// Accumulated SPM traffic statistics.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct SpmStats {
+    /// Total word-granularity requests served.
+    pub word_requests: u64,
+    /// Total access epochs (batches of simultaneous requests).
+    pub epochs: u64,
+    /// Cycles spent serving epochs (>= epochs; surplus is conflict cost).
+    pub busy_cycles: u64,
+    /// Extra cycles caused by bank conflicts.
+    pub conflict_cycles: u64,
+}
+
+/// The scratchpad: word-interleaved banks of 64-bit words.
+#[derive(Debug, Clone)]
+pub struct Spm {
+    params: MemParams,
+    words: Vec<u64>,
+    /// Scratch per-bank counters reused across epochs (no per-epoch alloc).
+    bank_load: Vec<u16>,
+    bank_wload: Vec<u16>,
+    pub stats: SpmStats,
+}
+
+/// A single port request: word address plus direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Req {
+    Read(u64),
+    Write(u64),
+}
+
+impl Req {
+    #[inline]
+    pub fn word_addr(&self) -> u64 {
+        match *self {
+            Req::Read(a) | Req::Write(a) => a,
+        }
+    }
+}
+
+impl Spm {
+    pub fn new(params: MemParams) -> Spm {
+        let n_words = params.n_bank * params.d_mem;
+        Spm {
+            bank_load: vec![0; params.n_bank],
+            bank_wload: vec![0; params.n_bank],
+            words: vec![0; n_words],
+            params,
+            stats: SpmStats::default(),
+        }
+    }
+
+    pub fn params(&self) -> &MemParams {
+        &self.params
+    }
+
+    pub fn n_words(&self) -> u64 {
+        self.words.len() as u64
+    }
+
+    /// Bank index of a word address (word-interleaved mapping).
+    #[inline]
+    pub fn bank_of(&self, word_addr: u64) -> usize {
+        // n_bank is validated to be a power of two.
+        (word_addr as usize) & (self.params.n_bank - 1)
+    }
+
+    /// Byte address -> word address (word size = P_word/8).
+    #[inline]
+    pub fn word_of_byte(&self, byte_addr: u64) -> u64 {
+        byte_addr / self.params.word_bytes() as u64
+    }
+
+    // ---------------------------------------------------------------
+    // Timing
+    // ---------------------------------------------------------------
+
+    /// Cost in cycles of serving `reqs` issued in the same cycle.
+    ///
+    /// Banks are 1R1W SRAM macros (the platform exposes separate read
+    /// ports `R_mem` and write ports `W_mem`, Table 1): reads arbitrate
+    /// against reads and writes against writes, independently. The
+    /// epoch cost is the worse of the two per-bank maxima, plus the
+    /// pipelined access latency minus one.
+    ///
+    /// Records statistics. An empty batch costs 0.
+    pub fn epoch_cost(&mut self, reqs: &[Req]) -> u64 {
+        if reqs.is_empty() {
+            return 0;
+        }
+        self.bank_load.iter_mut().for_each(|c| *c = 0);
+        self.bank_wload.iter_mut().for_each(|c| *c = 0);
+        for r in reqs {
+            let b = self.bank_of(r.word_addr());
+            match r {
+                Req::Read(_) => self.bank_load[b] += 1,
+                Req::Write(_) => self.bank_wload[b] += 1,
+            }
+        }
+        let max_r = self.bank_load.iter().max().copied().unwrap_or(0) as u64;
+        let max_w = self.bank_wload.iter().max().copied().unwrap_or(0) as u64;
+        let max_load = max_r.max(max_w).max(1);
+        let latency = self.params.read_latency.max(self.params.write_latency);
+        let cost = max_load + latency - 1;
+        self.stats.word_requests += reqs.len() as u64;
+        self.stats.epochs += 1;
+        self.stats.busy_cycles += cost;
+        self.stats.conflict_cycles += max_load - 1;
+        cost
+    }
+
+    /// Cost of one read burst (cycles the read ports of the touched
+    /// banks stay busy): max per-bank read load. Records statistics.
+    pub fn read_cost(&mut self, word_addrs: &[u64]) -> u64 {
+        self.port_cost(word_addrs)
+    }
+
+    /// Cost of one write burst on the independent write-port network.
+    pub fn write_cost(&mut self, word_addrs: &[u64]) -> u64 {
+        self.port_cost(word_addrs)
+    }
+
+    fn port_cost(&mut self, word_addrs: &[u64]) -> u64 {
+        if word_addrs.is_empty() {
+            return 0;
+        }
+        // Fast path: banks fit a u64 bitmask (n_bank <= 64, the common
+        // case); a batch with all-distinct banks costs exactly 1 cycle,
+        // no per-bank counters needed. This is the hot path of the
+        // simulator (every tile fetch goes through here).
+        let cost = if self.params.n_bank <= 64 {
+            let mut mask = 0u64;
+            let mut dup = false;
+            for &a in word_addrs {
+                let bit = 1u64 << self.bank_of(a);
+                dup |= mask & bit != 0;
+                mask |= bit;
+            }
+            if !dup {
+                1
+            } else {
+                self.slow_max_load(word_addrs)
+            }
+        } else {
+            self.slow_max_load(word_addrs)
+        };
+        self.stats.word_requests += word_addrs.len() as u64;
+        self.stats.epochs += 1;
+        self.stats.busy_cycles += cost;
+        self.stats.conflict_cycles += cost - 1;
+        cost
+    }
+
+    #[cold]
+    fn slow_max_load(&mut self, word_addrs: &[u64]) -> u64 {
+        self.bank_load.iter_mut().for_each(|c| *c = 0);
+        for &a in word_addrs {
+            let b = self.bank_of(a);
+            self.bank_load[b] += 1;
+        }
+        *self.bank_load.iter().max().unwrap() as u64
+    }
+
+    /// Record a conflict-free access served via the precomputed bank
+    /// pattern (timing fast path; keeps traffic statistics coherent).
+    #[inline]
+    pub fn note_fast_access(&mut self, words: u64, cost: u64) {
+        self.stats.word_requests += words;
+        self.stats.epochs += 1;
+        self.stats.busy_cycles += cost;
+    }
+
+    /// Pure conflict analysis (no stats): max per-bank load of a batch.
+    pub fn max_bank_load(&self, word_addrs: &[u64]) -> u64 {
+        let mut load = vec![0u16; self.params.n_bank];
+        for &a in word_addrs {
+            load[self.bank_of(a)] += 1;
+        }
+        load.into_iter().max().unwrap_or(0) as u64
+    }
+
+    // ---------------------------------------------------------------
+    // Functional storage
+    // ---------------------------------------------------------------
+
+    pub fn read_word(&self, word_addr: u64) -> u64 {
+        self.words[word_addr as usize]
+    }
+
+    pub fn write_word(&mut self, word_addr: u64, value: u64) {
+        self.words[word_addr as usize] = value;
+    }
+
+    /// Read a run of bytes (little-endian within words).
+    pub fn read_bytes(&self, byte_addr: u64, out: &mut [u8]) {
+        for (i, b) in out.iter_mut().enumerate() {
+            let addr = byte_addr + i as u64;
+            let word = self.words[(addr / 8) as usize];
+            *b = (word >> ((addr % 8) * 8)) as u8;
+        }
+    }
+
+    /// Write a run of bytes (little-endian within words).
+    pub fn write_bytes(&mut self, byte_addr: u64, data: &[u8]) {
+        for (i, &b) in data.iter().enumerate() {
+            let addr = byte_addr + i as u64;
+            let word = &mut self.words[(addr / 8) as usize];
+            let shift = (addr % 8) * 8;
+            *word = (*word & !(0xffu64 << shift)) | ((b as u64) << shift);
+        }
+    }
+
+    /// Write a slice of i8 (operand matrices are int8).
+    pub fn write_i8(&mut self, byte_addr: u64, data: &[i8]) {
+        // Safety: i8 and u8 have identical layout.
+        let bytes: &[u8] =
+            unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
+        self.write_bytes(byte_addr, bytes);
+    }
+
+    /// Read a slice of i8.
+    pub fn read_i8(&self, byte_addr: u64, out: &mut [i8]) {
+        let bytes: &mut [u8] = unsafe {
+            std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, out.len())
+        };
+        self.read_bytes(byte_addr, bytes);
+    }
+
+    /// Write a slice of i32 little-endian (C result tiles).
+    pub fn write_i32(&mut self, byte_addr: u64, data: &[i32]) {
+        for (i, &v) in data.iter().enumerate() {
+            self.write_bytes(byte_addr + 4 * i as u64, &v.to_le_bytes());
+        }
+    }
+
+    /// Read a slice of i32.
+    pub fn read_i32(&self, byte_addr: u64, out: &mut [i32]) {
+        let mut buf = [0u8; 4];
+        for (i, v) in out.iter_mut().enumerate() {
+            self.read_bytes(byte_addr + 4 * i as u64, &mut buf);
+            *v = i32::from_le_bytes(buf);
+        }
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = SpmStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MemParams;
+
+    fn spm() -> Spm {
+        Spm::new(MemParams::CASE_STUDY)
+    }
+
+    #[test]
+    fn bank_mapping_is_word_interleaved() {
+        let s = spm();
+        assert_eq!(s.bank_of(0), 0);
+        assert_eq!(s.bank_of(1), 1);
+        assert_eq!(s.bank_of(31), 31);
+        assert_eq!(s.bank_of(32), 0);
+        assert_eq!(s.bank_of(33), 1);
+    }
+
+    #[test]
+    fn conflict_free_batch_costs_latency() {
+        let mut s = spm();
+        // 16 reads to 16 distinct banks
+        let reqs: Vec<Req> = (0..16).map(Req::Read).collect();
+        assert_eq!(s.epoch_cost(&reqs), 1);
+        assert_eq!(s.stats.conflict_cycles, 0);
+    }
+
+    #[test]
+    fn same_bank_requests_serialize() {
+        let mut s = spm();
+        // 4 reads all hitting bank 0 (addresses 0, 32, 64, 96)
+        let reqs: Vec<Req> = (0..4).map(|i| Req::Read(i * 32)).collect();
+        assert_eq!(s.epoch_cost(&reqs), 4);
+        assert_eq!(s.stats.conflict_cycles, 3);
+    }
+
+    #[test]
+    fn read_and_write_to_same_bank_do_not_conflict() {
+        // banks are 1R1W: one read + one write to bank 0 in one cycle
+        let mut s = spm();
+        let reqs = [Req::Read(0), Req::Write(32)];
+        assert_eq!(s.epoch_cost(&reqs), 1);
+    }
+
+    #[test]
+    fn writes_conflict_with_writes() {
+        let mut s = spm();
+        let reqs = [Req::Write(0), Req::Write(32), Req::Write(64)];
+        assert_eq!(s.epoch_cost(&reqs), 3);
+    }
+
+    #[test]
+    fn empty_batch_is_free() {
+        let mut s = spm();
+        assert_eq!(s.epoch_cost(&[]), 0);
+        assert_eq!(s.stats.epochs, 0);
+    }
+
+    #[test]
+    fn byte_rw_roundtrip() {
+        let mut s = spm();
+        let data: Vec<u8> = (0..37).map(|i| (i * 7 + 3) as u8).collect();
+        s.write_bytes(13, &data);
+        let mut out = vec![0u8; 37];
+        s.read_bytes(13, &mut out);
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn i8_and_i32_roundtrip() {
+        let mut s = spm();
+        let xs: Vec<i8> = (-64..64).collect();
+        s.write_i8(100, &xs);
+        let mut got = vec![0i8; xs.len()];
+        s.read_i8(100, &mut got);
+        assert_eq!(got, xs);
+
+        let ys = [i32::MIN, -1, 0, 1, i32::MAX];
+        s.write_i32(1000, &ys);
+        let mut got32 = [0i32; 5];
+        s.read_i32(1000, &mut got32);
+        assert_eq!(got32, ys);
+    }
+
+    #[test]
+    fn unaligned_bytes_cross_words() {
+        let mut s = spm();
+        s.write_bytes(6, &[0xaa, 0xbb, 0xcc, 0xdd]); // spans words 0 and 1
+        let w0 = s.read_word(0);
+        let w1 = s.read_word(1);
+        assert_eq!((w0 >> 48) & 0xffff, 0xbbaa);
+        assert_eq!(w1 & 0xffff, 0xddcc);
+    }
+
+    #[test]
+    fn capacity_matches_params() {
+        let s = spm();
+        assert_eq!(s.n_words(), 32 * 1056);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_bounds_read_panics() {
+        let s = spm();
+        s.read_word(s.n_words());
+    }
+}

@@ -1,0 +1,287 @@
+//! Programmable strided address-generation unit (AGU).
+//!
+//! Sec. 3.4: each data streamer has a configurable strided AGU. At design
+//! time the *pattern* is fixed — how many nested spatial loops the access
+//! needs and the port count; at run time the host programs *hardware loop
+//! bounds, a base address, and two-dimensional memory strides*. The AGU
+//! follows the GeMM core's three temporal loops `(m1, n1, k1)` and emits,
+//! per tile, one word address per port:
+//!
+//! ```text
+//! addr(port, m1, n1, k1) = base + m1*stride_m + n1*stride_n + k1*stride_k
+//!                               + (port % c0)*spatial0 + (port / c0)*spatial1
+//! ```
+//!
+//! where `(c0, c1)` are the design-time spatial counts (`port` ranges
+//! over `c0*c1`). A-/B-streamers use a degenerate 1D pattern (`c0 = 1`);
+//! the C-streamer writes `Mu` rows of `Nu*P_C` bits and needs the full
+//! 2D form. A zero temporal stride expresses operand reuse along that
+//! loop (A does not depend on n1, B does not depend on m1) — the same
+//! trick the paper's streamers use to rewalk a tile without host
+//! involvement.
+
+/// Precomputed bank-occupancy pattern of one tile access (timing-only
+/// fast path): rotate by the tile base to get the actual bank set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BankPattern {
+    /// Banks touched with the tile base at bank 0.
+    pub mask: u64,
+    /// True if two ports of one access land in the same bank.
+    pub self_conflict: bool,
+    pub n_bank: u32,
+}
+
+impl BankPattern {
+    /// Bank mask for a tile whose base word sits in `base_bank`.
+    #[inline]
+    pub fn mask_at(&self, base_bank: u32) -> u64 {
+        let n = self.n_bank;
+        debug_assert!(base_bank < n);
+        let all = if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
+        ((self.mask << base_bank) | (self.mask >> (n - base_bank).min(63))) & all
+    }
+}
+
+/// Run-time AGU program (one per streamer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct AguConfig {
+    /// Base byte address of the operand in SPM.
+    pub base: u64,
+    /// Byte stride applied per m1 step.
+    pub stride_m: i64,
+    /// Byte stride applied per n1 step.
+    pub stride_n: i64,
+    /// Byte stride applied per k1 step.
+    pub stride_k: i64,
+    /// Inner spatial count (design-time; words per row of the access).
+    pub spatial0_count: usize,
+    /// Inner spatial byte stride (run-time).
+    pub spatial0_stride: i64,
+    /// Outer spatial count (design-time; rows of the access).
+    pub spatial1_count: usize,
+    /// Outer spatial byte stride (run-time).
+    pub spatial1_stride: i64,
+}
+
+impl AguConfig {
+    /// A degenerate 1D spatial pattern with `ports` words.
+    pub fn linear(base: u64, ports: usize, spatial_stride: i64) -> AguConfig {
+        AguConfig {
+            base,
+            spatial0_count: 1,
+            spatial0_stride: 0,
+            spatial1_count: ports,
+            spatial1_stride: spatial_stride,
+            ..Default::default()
+        }
+    }
+
+    /// Total ports (words per tile access).
+    #[inline]
+    pub fn ports(&self) -> usize {
+        self.spatial0_count * self.spatial1_count
+    }
+
+    /// Byte address of `port` at temporal position `(m1, n1, k1)`.
+    #[inline]
+    pub fn byte_addr(&self, m1: u64, n1: u64, k1: u64, port: u64) -> u64 {
+        let s0 = (port % self.spatial0_count as u64) as i64;
+        let s1 = (port / self.spatial0_count as u64) as i64;
+        let off = m1 as i64 * self.stride_m
+            + n1 as i64 * self.stride_n
+            + k1 as i64 * self.stride_k
+            + s0 * self.spatial0_stride
+            + s1 * self.spatial1_stride;
+        (self.base as i64 + off) as u64
+    }
+
+    /// Emit the word addresses of one tile access into `out`
+    /// (`out.len() == ports()`), given the word size in bytes.
+    ///
+    /// Hot path: walks the two spatial loops incrementally (no per-port
+    /// multiply) and uses a shift for the byte->word conversion
+    /// (`word_bytes` is a power of two for every valid MemParams).
+    pub fn tile_word_addrs(
+        &self,
+        m1: u64,
+        n1: u64,
+        k1: u64,
+        word_bytes: u64,
+        out: &mut Vec<u64>,
+    ) {
+        out.clear();
+        debug_assert!(word_bytes.is_power_of_two());
+        let shift = word_bytes.trailing_zeros();
+        let tile_base = self.base as i64
+            + m1 as i64 * self.stride_m
+            + n1 as i64 * self.stride_n
+            + k1 as i64 * self.stride_k;
+        let mut row = tile_base;
+        for _ in 0..self.spatial1_count {
+            let mut addr = row;
+            for _ in 0..self.spatial0_count {
+                out.push((addr as u64) >> shift);
+                addr += self.spatial0_stride;
+            }
+            row += self.spatial1_stride;
+        }
+    }
+
+    /// Byte address of port 0 at `(m1, n1, k1)` (the tile base).
+    #[inline]
+    pub fn tile_base(&self, m1: u64, n1: u64, k1: u64) -> i64 {
+        self.base as i64
+            + m1 as i64 * self.stride_m
+            + n1 as i64 * self.stride_n
+            + k1 as i64 * self.stride_k
+    }
+
+    /// Precompute the bank-occupancy pattern of one tile access for
+    /// timing-only simulation: the set of banks touched relative to the
+    /// tile base, valid for any word-aligned tile base (every layout the
+    /// compiler emits is word-aligned). Returns `None` when the spatial
+    /// strides are not word multiples (the simulator then falls back to
+    /// materializing addresses).
+    pub fn bank_pattern(&self, word_bytes: u64, n_bank: usize) -> Option<BankPattern> {
+        if n_bank > 64 || !n_bank.is_power_of_two() {
+            return None;
+        }
+        let mut mask = 0u64;
+        let mut self_conflict = false;
+        for s1 in 0..self.spatial1_count as i64 {
+            for s0 in 0..self.spatial0_count as i64 {
+                let off = s0 * self.spatial0_stride + s1 * self.spatial1_stride;
+                if off % word_bytes as i64 != 0 {
+                    return None;
+                }
+                let bank = (off / word_bytes as i64).rem_euclid(n_bank as i64) as u32;
+                let bit = 1u64 << bank;
+                self_conflict |= mask & bit != 0;
+                mask |= bit;
+            }
+        }
+        // temporal strides must also be word multiples for the rotation
+        // trick to stay exact
+        for st in [self.stride_m, self.stride_n, self.stride_k, self.base as i64] {
+            if st % word_bytes as i64 != 0 {
+                return None;
+            }
+        }
+        Some(BankPattern { mask, self_conflict, n_bank: n_bank as u32 })
+    }
+
+    /// Highest byte address touched over the loop volume (for bounds
+    /// validation against SPM capacity). Assumes non-negative strides.
+    pub fn max_byte_addr(&self, bound_m: u64, bound_n: u64, bound_k: u64) -> u64 {
+        let last = |b: u64| b.saturating_sub(1) as i64;
+        let off = last(bound_m) * self.stride_m.max(0)
+            + last(bound_n) * self.stride_n.max(0)
+            + last(bound_k) * self.stride_k.max(0)
+            + last(self.spatial0_count as u64) * self.spatial0_stride.max(0)
+            + last(self.spatial1_count as u64) * self.spatial1_stride.max(0);
+        (self.base as i64 + off) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A-streamer over a row-major (M,K) int8 matrix, case-study tiles:
+    /// 8 ports, each reading one 8-byte row segment of the A' tile.
+    fn row_major_a(k: u64) -> AguConfig {
+        AguConfig {
+            base: 0,
+            stride_m: (8 * k) as i64, // next tile row block: 8 rows down
+            stride_n: 0,              // A reused across n1
+            stride_k: 8,              // next 8 columns
+            spatial0_count: 1,
+            spatial0_stride: 0,
+            spatial1_count: 8,
+            spatial1_stride: k as i64, // consecutive rows within the tile
+        }
+    }
+
+    #[test]
+    fn row_major_walk_matches_manual_indexing() {
+        let k = 64u64;
+        let agu = row_major_a(k);
+        // tile (m1=2, k1=3), port 5 -> element A[2*8+5][3*8] at byte
+        // (2*8+5)*64 + 24
+        let expect = (2 * 8 + 5) * 64 + 3 * 8;
+        assert_eq!(agu.byte_addr(2, 9, 3, 5), expect);
+        // n1 must not affect A addresses
+        assert_eq!(agu.byte_addr(2, 0, 3, 5), agu.byte_addr(2, 7, 3, 5));
+    }
+
+    #[test]
+    fn word_addrs_divide_by_word_size() {
+        let agu = row_major_a(64);
+        let mut out = Vec::new();
+        agu.tile_word_addrs(0, 0, 0, 8, &mut out);
+        assert_eq!(out, vec![0, 8, 16, 24, 32, 40, 48, 56]);
+    }
+
+    #[test]
+    fn two_level_spatial_walk() {
+        // C-streamer, row-major C (M, N=32) int32: C' tile = 8 rows of 4
+        // words; rows are 32*4 = 128 bytes apart.
+        let agu = AguConfig {
+            base: 0,
+            stride_m: 8 * 128,
+            stride_n: 32,
+            stride_k: 0,
+            spatial0_count: 4,
+            spatial0_stride: 8,
+            spatial1_count: 8,
+            spatial1_stride: 128,
+        };
+        assert_eq!(agu.ports(), 32);
+        // port 5 = row 1, word 1 -> byte 128 + 8
+        assert_eq!(agu.byte_addr(0, 0, 0, 5), 136);
+        // tile (m1=1, n1=2): base offset 1024 + 64
+        assert_eq!(agu.byte_addr(1, 2, 0, 0), 1024 + 64);
+    }
+
+    #[test]
+    fn linear_constructor() {
+        let agu = AguConfig::linear(100, 8, 8);
+        assert_eq!(agu.ports(), 8);
+        assert_eq!(agu.byte_addr(0, 0, 0, 3), 124);
+    }
+
+    #[test]
+    fn zero_stride_reuse() {
+        let agu = AguConfig::linear(128, 1, 0);
+        assert_eq!(agu.byte_addr(5, 6, 7, 0), 128);
+    }
+
+    #[test]
+    fn max_addr_covers_loop_volume() {
+        let agu = row_major_a(64);
+        // M=32 -> bound_m = 4, K=64 -> bound_k = 8
+        let max = agu.max_byte_addr(4, 10, 8);
+        // last element: (3*8+7)*64 + 7*8 = 31*64+56 = 2040
+        assert_eq!(max, 2040);
+    }
+
+    #[test]
+    fn tiled_contiguous_layout() {
+        // SMA tiled layout: tile t at byte 64*t (A iterated (m1, k1)),
+        // Kt = 8 tiles per row-block.
+        let agu = AguConfig {
+            base: 0,
+            stride_m: 64 * 8,
+            stride_n: 0,
+            stride_k: 64,
+            spatial0_count: 1,
+            spatial0_stride: 0,
+            spatial1_count: 8,
+            spatial1_stride: 8,
+        };
+        let mut out = Vec::new();
+        agu.tile_word_addrs(1, 0, 2, 8, &mut out);
+        // tile index = 1*8+2 = 10 -> words 80..88
+        assert_eq!(out, (80..88).collect::<Vec<u64>>());
+    }
+}

@@ -1,0 +1,148 @@
+//! Fixed-capacity ring-buffer FIFO used for the input pre-fetch buffers
+//! and the output buffers (paper Sec. 3.3, design-time depth `D_stream`).
+
+/// A bounded FIFO with occupancy statistics.
+#[derive(Debug, Clone)]
+pub struct Fifo<T> {
+    buf: Vec<Option<T>>,
+    head: usize,
+    len: usize,
+    /// High-water mark (peak occupancy) since last reset.
+    pub peak: usize,
+    /// Total pushes since last reset.
+    pub pushes: u64,
+}
+
+impl<T> Fifo<T> {
+    pub fn new(capacity: usize) -> Fifo<T> {
+        assert!(capacity > 0, "FIFO capacity must be >= 1");
+        Fifo {
+            buf: (0..capacity).map(|_| None).collect(),
+            head: 0,
+            len: 0,
+            peak: 0,
+            pushes: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len == self.buf.len()
+    }
+
+    /// Push; panics if full (producers must check `is_full` — backpressure
+    /// is explicit in the simulator, a full-FIFO push is a model bug).
+    pub fn push(&mut self, item: T) {
+        assert!(!self.is_full(), "push into full FIFO");
+        let tail = (self.head + self.len) % self.buf.len();
+        self.buf[tail] = Some(item);
+        self.len += 1;
+        self.pushes += 1;
+        self.peak = self.peak.max(self.len);
+    }
+
+    pub fn pop(&mut self) -> Option<T> {
+        if self.len == 0 {
+            return None;
+        }
+        let item = self.buf[self.head].take();
+        self.head = (self.head + 1) % self.buf.len();
+        self.len -= 1;
+        item
+    }
+
+    pub fn peek(&self) -> Option<&T> {
+        if self.len == 0 {
+            None
+        } else {
+            self.buf[self.head].as_ref()
+        }
+    }
+
+    pub fn clear(&mut self) {
+        while self.pop().is_some() {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::property;
+    use std::collections::VecDeque;
+
+    #[test]
+    fn fifo_ordering() {
+        let mut f = Fifo::new(3);
+        f.push(1);
+        f.push(2);
+        f.push(3);
+        assert!(f.is_full());
+        assert_eq!(f.pop(), Some(1));
+        f.push(4);
+        assert_eq!(f.pop(), Some(2));
+        assert_eq!(f.pop(), Some(3));
+        assert_eq!(f.pop(), Some(4));
+        assert_eq!(f.pop(), None);
+    }
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let mut f = Fifo::new(4);
+        f.push(1);
+        f.push(2);
+        f.pop();
+        f.push(3);
+        assert_eq!(f.peak, 2);
+        assert_eq!(f.pushes, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "full FIFO")]
+    fn push_full_panics() {
+        let mut f = Fifo::new(1);
+        f.push(1);
+        f.push(2);
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity")]
+    fn zero_capacity_rejected() {
+        let _ = Fifo::<u8>::new(0);
+    }
+
+    #[test]
+    fn behaves_like_vecdeque() {
+        property("fifo vs VecDeque", 50, |rng| {
+            let cap = 1 + rng.below(8) as usize;
+            let mut fifo = Fifo::new(cap);
+            let mut model: VecDeque<u32> = VecDeque::new();
+            for _ in 0..200 {
+                if rng.below(2) == 0 && !fifo.is_full() {
+                    let v = rng.next_u32();
+                    fifo.push(v);
+                    model.push_back(v);
+                } else {
+                    crate::prop_assert_eq!(fifo.pop(), model.pop_front(), "pop mismatch");
+                }
+                crate::prop_assert_eq!(fifo.len(), model.len(), "len mismatch");
+                crate::prop_assert_eq!(
+                    fifo.peek().copied(),
+                    model.front().copied(),
+                    "peek mismatch"
+                );
+            }
+            Ok(())
+        });
+    }
+}

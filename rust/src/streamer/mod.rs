@@ -1,0 +1,474 @@
+//! Data streamers between the multi-banked SPM and the GeMM core
+//! (Sec. 3.1/3.3/3.4): programmable hardware loops for autonomous,
+//! streaming data access, with input pre-fetch FIFOs and output buffers.
+
+pub mod agu;
+pub mod fifo;
+
+pub use agu::{AguConfig, BankPattern};
+pub use fifo::Fifo;
+
+/// Temporal loop bounds shared by streamers and the core's loop
+/// controller: (M/Mu, N/Nu, K/Ku) tile counts, k1 innermost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct LoopBounds {
+    pub mt: u64,
+    pub nt: u64,
+    pub kt: u64,
+}
+
+impl LoopBounds {
+    pub fn total_tiles(&self) -> u64 {
+        self.mt * self.nt * self.kt
+    }
+
+    pub fn output_tiles(&self) -> u64 {
+        self.mt * self.nt
+    }
+
+    /// Linear tile position -> (m1, n1, k1); k1 fastest (output
+    /// stationary), then n1, then m1.
+    #[inline]
+    pub fn decompose(&self, pos: u64) -> (u64, u64, u64) {
+        let k1 = pos % self.kt;
+        let n1 = (pos / self.kt) % self.nt;
+        let m1 = pos / (self.kt * self.nt);
+        (m1, n1, k1)
+    }
+}
+
+/// An input tile in flight: its temporal position plus (in functional
+/// mode) the fetched bytes.
+#[derive(Debug, Clone)]
+pub struct InTile {
+    pub m1: u64,
+    pub n1: u64,
+    pub k1: u64,
+    pub data: Option<Box<[i8]>>,
+}
+
+/// A result tile awaiting writeback.
+#[derive(Debug, Clone)]
+pub struct OutTile {
+    pub m1: u64,
+    pub n1: u64,
+    pub data: Option<Box<[i32]>>,
+}
+
+/// Input streamer state machine (one for A, one for B).
+///
+/// With pre-fetching enabled it issues a new tile fetch whenever its FIFO
+/// has room (the producer side of the paper's producer-consumer buffer);
+/// without, it fetches only when the core is starved (Arch(1)/(2)
+/// on-demand behaviour).
+#[derive(Debug, Clone)]
+pub struct InputStreamer {
+    pub agu: AguConfig,
+    pub bounds: LoopBounds,
+    fifo: Fifo<InTile>,
+    next_pos: u64,
+    /// In-flight fetches: (completion cycle, tile), issue order.
+    inflight: std::collections::VecDeque<(u64, InTile)>,
+    /// Earliest cycle the streamer may issue its next fetch (its target
+    /// banks are busy until then).
+    pub issue_gate: u64,
+    /// Precomputed bank pattern (timing-only fast path).
+    pub pattern: Option<BankPattern>,
+    pub prefetch: bool,
+    /// Cycles this streamer spent with at least one request in flight.
+    pub fetch_busy_cycles: u64,
+}
+
+impl InputStreamer {
+    pub fn new(depth: usize, prefetch: bool) -> InputStreamer {
+        InputStreamer {
+            agu: AguConfig::default(),
+            bounds: LoopBounds::default(),
+            fifo: Fifo::new(depth.max(1)),
+            next_pos: 0,
+            inflight: std::collections::VecDeque::new(),
+            issue_gate: 0,
+            pattern: None,
+            prefetch,
+            fetch_busy_cycles: 0,
+        }
+    }
+
+    /// Program the streamer for a new run (the CSR "streamer config").
+    /// `word_bytes`/`n_bank` let the streamer precompute its bank
+    /// pattern for the timing-only fast path.
+    pub fn configure2(&mut self, agu: AguConfig, bounds: LoopBounds, word_bytes: u64, n_bank: usize) {
+        assert!(self.inflight.is_empty(), "reconfigure while fetch in flight");
+        self.agu = agu;
+        self.bounds = bounds;
+        self.next_pos = 0;
+        self.pattern = agu.bank_pattern(word_bytes, n_bank);
+        self.fifo.clear();
+    }
+
+    /// Program the streamer (tests / no fast path).
+    pub fn configure(&mut self, agu: AguConfig, bounds: LoopBounds) {
+        self.configure2(agu, bounds, 8, 1 << 30); // pattern disabled
+    }
+
+    /// Timing-only issue: advance to the next tile and return its
+    /// position and base byte address (no address materialization).
+    pub fn begin_fetch_timing(&mut self) -> ((u64, u64, u64), i64) {
+        debug_assert!(!self.done_fetching());
+        let pos = self.bounds.decompose(self.next_pos);
+        self.next_pos += 1;
+        (pos, self.agu.tile_base(pos.0, pos.1, pos.2))
+    }
+
+    pub fn done_fetching(&self) -> bool {
+        self.next_pos >= self.bounds.total_tiles()
+    }
+
+    pub fn fifo_len(&self) -> usize {
+        self.fifo.len()
+    }
+
+    pub fn fifo_peak(&self) -> usize {
+        self.fifo.peak
+    }
+
+    pub fn inflight_len(&self) -> usize {
+        self.inflight.len()
+    }
+
+    pub fn has_outstanding(&self) -> bool {
+        !self.inflight.is_empty()
+    }
+
+    /// Should a new fetch be issued at cycle `now`? `core_starved` is
+    /// true when the core is waiting on this streamer's tile.
+    ///
+    /// With pre-fetching the streamer pipelines requests: up to
+    /// `capacity` tiles may be in flight + buffered (the producer side
+    /// of the paper's producer-consumer buffer). Without, it fetches
+    /// one tile at a time, on demand (Arch1/2 behaviour).
+    pub fn wants_fetch(&self, now: u64, core_starved: bool) -> bool {
+        if self.done_fetching() || now < self.issue_gate {
+            return false;
+        }
+        if self.fifo.len() + self.inflight.len() >= self.fifo.capacity() {
+            return false;
+        }
+        if self.prefetch {
+            true
+        } else {
+            // On-demand: one outstanding max, only when the consumer is
+            // actually waiting.
+            core_starved && self.fifo.is_empty() && self.inflight.is_empty()
+        }
+    }
+
+    /// Issue the next tile fetch; emits the word addresses into `addrs`.
+    /// The platform computes the service time and calls
+    /// [`InputStreamer::commit_fetch`] with the completion cycle.
+    pub fn begin_fetch(&mut self, word_bytes: u64, addrs: &mut Vec<u64>) -> (u64, u64, u64) {
+        debug_assert!(!self.done_fetching());
+        let (m1, n1, k1) = self.bounds.decompose(self.next_pos);
+        self.agu.tile_word_addrs(m1, n1, k1, word_bytes, addrs);
+        self.next_pos += 1;
+        (m1, n1, k1)
+    }
+
+    /// Commit the fetch issued by `begin_fetch`.
+    pub fn commit_fetch(
+        &mut self,
+        pos: (u64, u64, u64),
+        data: Option<Box<[i8]>>,
+        completion: u64,
+        bank_free: u64,
+    ) {
+        // in-order completion: later fetches cannot overtake
+        let completion = self
+            .inflight
+            .back()
+            .map(|&(t, _)| t.max(completion))
+            .unwrap_or(completion);
+        self.inflight.push_back((
+            completion,
+            InTile { m1: pos.0, n1: pos.1, k1: pos.2, data },
+        ));
+        self.issue_gate = bank_free;
+    }
+
+    /// Move completed fetches into the FIFO.
+    pub fn deliver_ready(&mut self, now: u64) {
+        while let Some(&(t, _)) = self.inflight.front() {
+            if t > now {
+                break;
+            }
+            let (_, tile) = self.inflight.pop_front().unwrap();
+            self.fifo.push(tile);
+        }
+    }
+
+    pub fn head(&self) -> Option<&InTile> {
+        self.fifo.peek()
+    }
+
+    pub fn pop(&mut self) -> Option<InTile> {
+        self.fifo.pop()
+    }
+
+    pub fn tick_busy(&mut self) {
+        if !self.inflight.is_empty() {
+            self.fetch_busy_cycles += 1;
+        }
+    }
+}
+
+/// Output streamer: buffers C' tiles and drains them to the SPM in the
+/// background (round-robin over `D_stream` buffers in the RTL; FIFO
+/// semantics here). Without output buffering the core blocks on a full
+/// buffer of depth 1 until the writeback epoch completes.
+#[derive(Debug, Clone)]
+pub struct OutputStreamer {
+    pub agu: AguConfig,
+    buffer: Fifo<OutTile>,
+    outstanding: Option<(u64, OutTile)>,
+    /// Earliest cycle the writer may start its next writeback.
+    pub issue_gate: u64,
+    /// Precomputed bank pattern (timing-only fast path).
+    pub pattern: Option<BankPattern>,
+    pub write_busy_cycles: u64,
+}
+
+impl OutputStreamer {
+    pub fn new(depth: usize) -> OutputStreamer {
+        OutputStreamer {
+            agu: AguConfig::default(),
+            buffer: Fifo::new(depth.max(1)),
+            outstanding: None,
+            issue_gate: 0,
+            pattern: None,
+            write_busy_cycles: 0,
+        }
+    }
+
+    pub fn configure2(&mut self, agu: AguConfig, word_bytes: u64, n_bank: usize) {
+        assert!(self.outstanding.is_none(), "reconfigure while write in flight");
+        self.agu = agu;
+        self.pattern = agu.bank_pattern(word_bytes, n_bank);
+        self.buffer.clear();
+    }
+
+    pub fn configure(&mut self, agu: AguConfig) {
+        self.configure2(agu, 8, 1 << 30); // pattern disabled
+    }
+
+    /// Timing-only writeback issue: pop the oldest tile, return it with
+    /// its base byte address.
+    pub fn begin_write_timing(&mut self) -> (OutTile, i64) {
+        debug_assert!(!self.buffer.is_empty() && self.outstanding.is_none());
+        let tile = self.buffer.pop().unwrap();
+        let base = self.agu.tile_base(tile.m1, tile.n1, 0);
+        (tile, base)
+    }
+
+    pub fn can_accept(&self) -> bool {
+        !self.buffer.is_full()
+    }
+
+    pub fn accept(&mut self, tile: OutTile) {
+        self.buffer.push(tile);
+    }
+
+    pub fn is_drained(&self) -> bool {
+        self.buffer.is_empty() && self.outstanding.is_none()
+    }
+
+    pub fn has_outstanding(&self) -> bool {
+        self.outstanding.is_some()
+    }
+
+    pub fn buffer_len(&self) -> usize {
+        self.buffer.len()
+    }
+
+    /// Should a writeback start at cycle `now`?
+    pub fn wants_write(&self, now: u64) -> bool {
+        self.outstanding.is_none() && !self.buffer.is_empty() && now >= self.issue_gate
+    }
+
+    /// Start writing the oldest buffered tile; emits word addresses.
+    /// The platform supplies the completion cycle via `commit_write`.
+    pub fn begin_write(&mut self, word_bytes: u64, addrs: &mut Vec<u64>) -> OutTile {
+        debug_assert!(!self.buffer.is_empty() && self.outstanding.is_none());
+        let tile = self.buffer.pop().unwrap();
+        self.agu.tile_word_addrs(tile.m1, tile.n1, 0, word_bytes, addrs);
+        tile
+    }
+
+    pub fn commit_write(&mut self, tile: OutTile, completion: u64, bank_free: u64) {
+        self.outstanding = Some((completion, tile));
+        self.issue_gate = bank_free;
+    }
+
+    /// Returns the written tile once `now` reaches its completion (for
+    /// functional commit to the SPM).
+    pub fn deliver_ready(&mut self, now: u64) -> Option<OutTile> {
+        if let Some((t, _)) = &self.outstanding {
+            if *t <= now {
+                return self.outstanding.take().map(|(_, tile)| tile);
+            }
+        }
+        None
+    }
+
+    pub fn tick_busy(&mut self) {
+        if self.outstanding.is_some() {
+            self.write_busy_cycles += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bounds() -> LoopBounds {
+        LoopBounds { mt: 2, nt: 3, kt: 4 }
+    }
+
+    #[test]
+    fn decompose_order_k_fastest() {
+        let b = bounds();
+        assert_eq!(b.decompose(0), (0, 0, 0));
+        assert_eq!(b.decompose(1), (0, 0, 1));
+        assert_eq!(b.decompose(4), (0, 1, 0));
+        assert_eq!(b.decompose(12), (1, 0, 0));
+        assert_eq!(b.decompose(23), (1, 2, 3));
+        assert_eq!(b.total_tiles(), 24);
+        assert_eq!(b.output_tiles(), 6);
+    }
+
+    #[test]
+    fn prefetch_streamer_pipelines_up_to_capacity() {
+        let mut s = InputStreamer::new(3, true);
+        s.configure(AguConfig::linear(0, 2, 8), bounds());
+        let mut addrs = Vec::new();
+        // may keep issuing until fifo + inflight reach capacity
+        for i in 0..3u64 {
+            assert!(s.wants_fetch(i, false), "issue {i}");
+            let pos = s.begin_fetch(8, &mut addrs);
+            s.commit_fetch(pos, None, i + 1, i + 1);
+        }
+        assert!(!s.wants_fetch(3, false), "capacity reached");
+        assert_eq!(s.inflight_len(), 3);
+        s.deliver_ready(10);
+        assert_eq!(s.fifo_len(), 3);
+        assert_eq!(s.inflight_len(), 0);
+    }
+
+    #[test]
+    fn issue_gate_blocks_next_fetch() {
+        let mut s = InputStreamer::new(4, true);
+        s.configure(AguConfig::linear(0, 1, 0), bounds());
+        let mut addrs = Vec::new();
+        let pos = s.begin_fetch(8, &mut addrs);
+        // banks busy until cycle 5
+        s.commit_fetch(pos, None, 5, 5);
+        assert!(!s.wants_fetch(3, false));
+        assert!(s.wants_fetch(5, false));
+    }
+
+    #[test]
+    fn in_order_completion_enforced() {
+        let mut s = InputStreamer::new(4, true);
+        s.configure(AguConfig::linear(0, 1, 0), bounds());
+        let mut addrs = Vec::new();
+        let p0 = s.begin_fetch(8, &mut addrs);
+        s.commit_fetch(p0, None, 10, 1);
+        let p1 = s.begin_fetch(8, &mut addrs);
+        // nominally completes at 2, but must not overtake p0
+        s.commit_fetch(p1, None, 2, 2);
+        s.deliver_ready(9);
+        assert_eq!(s.fifo_len(), 0, "nothing ready before 10");
+        s.deliver_ready(10);
+        assert_eq!(s.fifo_len(), 2, "both deliver at 10, in order");
+        assert_eq!(s.pop().unwrap().k1, 0);
+        assert_eq!(s.pop().unwrap().k1, 1);
+    }
+
+    #[test]
+    fn on_demand_streamer_waits_for_core() {
+        let mut s = InputStreamer::new(3, false);
+        s.configure(AguConfig::linear(0, 1, 0), bounds());
+        assert!(!s.wants_fetch(0, false), "no fetch until core starves");
+        assert!(s.wants_fetch(0, true));
+        let mut addrs = Vec::new();
+        let pos = s.begin_fetch(8, &mut addrs);
+        s.commit_fetch(pos, None, 1, 1);
+        assert!(!s.wants_fetch(1, true), "one outstanding max");
+        s.deliver_ready(1);
+        assert_eq!(s.fifo_len(), 1);
+        assert!(!s.wants_fetch(2, true), "FIFO non-empty");
+    }
+
+    #[test]
+    fn fetch_sequence_covers_all_tiles_in_order() {
+        let b = bounds();
+        let mut s = InputStreamer::new(2, true);
+        s.configure(AguConfig::linear(0, 1, 0), b);
+        let mut addrs = Vec::new();
+        let mut seen = Vec::new();
+        let mut now = 0u64;
+        while !(s.done_fetching() && s.fifo_len() == 0 && s.inflight_len() == 0) {
+            if s.wants_fetch(now, false) {
+                let pos = s.begin_fetch(8, &mut addrs);
+                s.commit_fetch(pos, None, now + 1, now + 1);
+            }
+            s.deliver_ready(now);
+            if let Some(t) = s.pop() {
+                seen.push((t.m1, t.n1, t.k1));
+            }
+            now += 1;
+        }
+        let expect: Vec<_> = (0..b.total_tiles()).map(|p| b.decompose(p)).collect();
+        assert_eq!(seen, expect);
+    }
+
+    #[test]
+    fn output_streamer_backpressure() {
+        let mut o = OutputStreamer::new(2);
+        o.configure(AguConfig::linear(0, 1, 0));
+        assert!(o.can_accept());
+        o.accept(OutTile { m1: 0, n1: 0, data: None });
+        o.accept(OutTile { m1: 0, n1: 1, data: None });
+        assert!(!o.can_accept(), "buffer full");
+        let mut addrs = Vec::new();
+        assert!(o.wants_write(0));
+        let tile = o.begin_write(8, &mut addrs);
+        o.commit_write(tile, 2, 2);
+        assert!(o.can_accept(), "popped into outstanding");
+        assert!(o.deliver_ready(1).is_none(), "not done yet");
+        let t = o.deliver_ready(2).expect("write completes at 2");
+        assert_eq!((t.m1, t.n1), (0, 0));
+        assert!(!o.is_drained());
+    }
+
+    #[test]
+    fn output_addresses_use_mn_position() {
+        let mut o = OutputStreamer::new(1);
+        o.configure(AguConfig {
+            base: 0,
+            stride_m: 1024,
+            stride_n: 32,
+            stride_k: 0,
+            spatial0_count: 4,
+            spatial0_stride: 8,
+            spatial1_count: 1,
+            spatial1_stride: 0,
+        });
+        o.accept(OutTile { m1: 2, n1: 3, data: None });
+        let mut addrs = Vec::new();
+        let tile = o.begin_write(8, &mut addrs);
+        o.commit_write(tile, 1, 1);
+        // base = 2*1024 + 3*32 = 2144 bytes -> word 268
+        assert_eq!(addrs, vec![268, 269, 270, 271]);
+    }
+}

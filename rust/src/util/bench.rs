@@ -1,0 +1,146 @@
+//! Micro-benchmark harness — criterion is unavailable offline, so the
+//! `cargo bench` targets (`harness = false`) use this small, dependency-
+//! free runner: warm-up, calibrated iteration counts, and robust summary
+//! statistics (median + MAD instead of mean + stddev).
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters_per_sample: u64,
+    pub samples_ns: Vec<f64>,
+    pub median_ns: f64,
+    pub mad_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.median_ns * 1e-9)
+    }
+}
+
+pub struct Bencher {
+    warmup: Duration,
+    target_sample: Duration,
+    samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(300),
+            target_sample: Duration::from_millis(120),
+            samples: 12,
+            results: Vec::new(),
+        }
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            target_sample: Duration::from_millis(30),
+            samples: 6,
+            results: Vec::new(),
+        }
+    }
+
+    /// Run a closure repeatedly and record a result line.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warm-up and calibration: find iters such that one sample takes
+        // roughly `target_sample`.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup || warm_iters == 0 {
+            f();
+            warm_iters += 1;
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+        let iters = ((self.target_sample.as_secs_f64() / per_iter).ceil() as u64).max(1);
+
+        let mut samples_ns = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples_ns.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        let mut sorted = samples_ns.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[sorted.len() / 2];
+        let mut dev: Vec<f64> = sorted.iter().map(|s| (s - median).abs()).collect();
+        dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = dev[dev.len() / 2];
+        let result = BenchResult {
+            name: name.to_string(),
+            iters_per_sample: iters,
+            min_ns: sorted[0],
+            median_ns: median,
+            mad_ns: mad,
+            samples_ns,
+        };
+        println!(
+            "bench {:<44} {:>12} /iter  (±{:>9}, {} iters x {} samples)",
+            result.name,
+            fmt_ns(result.median_ns),
+            fmt_ns(result.mad_ns),
+            iters,
+            self.samples,
+        );
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher::quick();
+        let mut acc = 0u64;
+        let r = b
+            .bench("noop-ish", || {
+                acc = black_box(acc.wrapping_add(1));
+            })
+            .clone();
+        assert!(r.median_ns > 0.0);
+        assert!(r.iters_per_sample >= 1);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("µs"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(2e9).ends_with('s'));
+    }
+}

@@ -1,0 +1,121 @@
+//! Property-based testing helper (proptest is unavailable offline).
+//!
+//! `property(name, cases, f)` runs `f` against `cases` independently
+//! seeded PRNGs; a failure reports the exact case seed so it can be
+//! replayed deterministically with `replay(seed, f)`. No shrinking — the
+//! generators in this codebase draw small structured values, so failing
+//! cases are already readable.
+
+use super::rng::Pcg32;
+
+/// Run a property over `cases` random cases. Panics (with the replay
+/// seed) on the first failure.
+pub fn property<F>(name: &str, cases: u64, mut f: F)
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    // Derive per-case seeds from the property name so adding properties
+    // does not perturb existing ones.
+    let name_hash = fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = name_hash ^ (case.wrapping_mul(0x9e3779b97f4a7c15));
+        let mut rng = Pcg32::seeded(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property {name:?} failed on case {case} (replay seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay<F>(seed: u64, mut f: F)
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    let mut rng = Pcg32::seeded(seed);
+    if let Err(msg) = f(&mut rng) {
+        panic!("replayed case (seed {seed:#x}) failed: {msg}");
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Equality assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr, $($fmt:tt)*) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} (left={:?}, right={:?})",
+                format!($($fmt)*),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut hash: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        hash ^= b as u64;
+        hash = hash.wrapping_mul(0x100000001b3);
+    }
+    hash
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        property("always-true", 25, |_rng| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        property("always-false", 5, |_rng| Err("nope".into()));
+    }
+
+    #[test]
+    fn prop_macros_work() {
+        property("macros", 10, |rng| {
+            let v = rng.below(10);
+            prop_assert!(v < 10, "v out of range: {v}");
+            prop_assert_eq!(v, v, "identity");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn seeds_stable_across_runs() {
+        let mut first: Vec<u32> = Vec::new();
+        property("stability", 3, |rng| {
+            first.push(rng.next_u32());
+            Ok(())
+        });
+        let mut second: Vec<u32> = Vec::new();
+        property("stability", 3, |rng| {
+            second.push(rng.next_u32());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

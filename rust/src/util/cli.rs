@@ -1,0 +1,169 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed accessors and an auto-generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct ArgError(pub String);
+
+impl std::fmt::Display for ArgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "argument error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ArgError {}
+
+impl Args {
+    /// Parse raw argv (without the program name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, ArgError> {
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminator: rest is positional
+                    positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    flags.insert(body.to_string(), v);
+                } else {
+                    flags.insert(body.to_string(), String::from("true"));
+                }
+            } else {
+                positional.push(arg);
+            }
+        }
+        Ok(Args { flags, positional })
+    }
+
+    pub fn from_env() -> Result<Args, ArgError> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, ArgError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ArgError(format!("--{key} expects an integer, got {v:?}"))),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, ArgError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ArgError(format!("--{key} expects an integer, got {v:?}"))),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, ArgError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ArgError(format!("--{key} expects a number, got {v:?}"))),
+        }
+    }
+
+    pub fn bool_flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Parse a `MxKxN` triple like `64x128x32`.
+    pub fn shape_or(
+        &self,
+        key: &str,
+        default: (usize, usize, usize),
+    ) -> Result<(usize, usize, usize), ArgError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                let parts: Vec<_> = v.split('x').collect();
+                if parts.len() != 3 {
+                    return Err(ArgError(format!("--{key} expects MxKxN, got {v:?}")));
+                }
+                let parse = |s: &str| {
+                    s.parse::<usize>()
+                        .map_err(|_| ArgError(format!("--{key}: bad dimension {s:?}")))
+                };
+                Ok((parse(parts[0])?, parse(parts[1])?, parse(parts[2])?))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(&["run", "--size", "32", "--verbose", "--k=v"]);
+        assert_eq!(a.positional(), &["run".to_string()]);
+        assert_eq!(a.get("size"), Some("32"));
+        assert!(a.bool_flag("verbose"));
+        assert_eq!(a.get("k"), Some("v"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse(&["--n", "10", "--x", "1.5"]);
+        assert_eq!(a.usize_or("n", 0).unwrap(), 10);
+        assert_eq!(a.f64_or("x", 0.0).unwrap(), 1.5);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+        assert!(a.usize_or("x", 0).is_err());
+    }
+
+    #[test]
+    fn shape_triple() {
+        let a = parse(&["--shape", "64x128x32"]);
+        assert_eq!(a.shape_or("shape", (0, 0, 0)).unwrap(), (64, 128, 32));
+        assert!(parse(&["--shape", "8x8"]).shape_or("shape", (0, 0, 0)).is_err());
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = parse(&["--a", "1", "--", "--not-a-flag"]);
+        assert_eq!(a.positional(), &["--not-a-flag".to_string()]);
+    }
+}

@@ -1,0 +1,159 @@
+//! Summary statistics for experiment reporting: the paper's Fig. 5 is a
+//! box plot over 500 utilization samples, so we need exact quantiles,
+//! whiskers and outlier fences.
+
+/// Five-number summary plus mean, matching a Tukey box plot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BoxStats {
+    pub n: usize,
+    pub min: f64,
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub max: f64,
+    pub mean: f64,
+    /// Whisker ends at the last data point within 1.5*IQR of the box.
+    pub whisker_lo: f64,
+    pub whisker_hi: f64,
+    pub outliers: usize,
+}
+
+/// Linear-interpolated quantile (type 7, the numpy default) of a sorted
+/// slice.
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "quantile of empty slice");
+    assert!((0.0..=1.0).contains(&q), "q out of range: {q}");
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+impl BoxStats {
+    pub fn compute(samples: &[f64]) -> BoxStats {
+        assert!(!samples.is_empty(), "BoxStats of empty sample set");
+        let mut sorted: Vec<f64> = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
+        let q1 = quantile_sorted(&sorted, 0.25);
+        let median = quantile_sorted(&sorted, 0.5);
+        let q3 = quantile_sorted(&sorted, 0.75);
+        let iqr = q3 - q1;
+        let lo_fence = q1 - 1.5 * iqr;
+        let hi_fence = q3 + 1.5 * iqr;
+        let whisker_lo = sorted
+            .iter()
+            .copied()
+            .find(|&v| v >= lo_fence)
+            .unwrap_or(sorted[0]);
+        let whisker_hi = sorted
+            .iter()
+            .rev()
+            .copied()
+            .find(|&v| v <= hi_fence)
+            .unwrap_or(*sorted.last().unwrap());
+        let outliers = sorted
+            .iter()
+            .filter(|&&v| v < lo_fence || v > hi_fence)
+            .count();
+        BoxStats {
+            n: sorted.len(),
+            min: sorted[0],
+            q1,
+            median,
+            q3,
+            max: *sorted.last().unwrap(),
+            mean: sorted.iter().sum::<f64>() / sorted.len() as f64,
+            whisker_lo,
+            whisker_hi,
+            outliers,
+        }
+    }
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Geometric mean (used for speedup aggregation across workloads).
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    assert!(xs.iter().all(|&x| x > 0.0), "geomean needs positive values");
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_of_known_sequence() {
+        let xs: Vec<f64> = (1..=5).map(|i| i as f64).collect();
+        assert_eq!(quantile_sorted(&xs, 0.0), 1.0);
+        assert_eq!(quantile_sorted(&xs, 0.5), 3.0);
+        assert_eq!(quantile_sorted(&xs, 1.0), 5.0);
+        assert_eq!(quantile_sorted(&xs, 0.25), 2.0);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((quantile_sorted(&xs, 0.3) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn box_stats_basic() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let s = BoxStats::compute(&xs);
+        assert_eq!(s.n, 100);
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 99.0);
+        assert!((s.median - 49.5).abs() < 1e-12);
+        assert_eq!(s.outliers, 0);
+    }
+
+    #[test]
+    fn box_stats_detects_outliers() {
+        let mut xs: Vec<f64> = vec![10.0; 50];
+        xs.push(1000.0);
+        let s = BoxStats::compute(&xs);
+        assert_eq!(s.outliers, 1);
+        assert_eq!(s.whisker_hi, 10.0);
+    }
+
+    #[test]
+    fn geomean_of_powers() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stddev_constant_is_zero() {
+        assert_eq!(stddev(&[5.0, 5.0, 5.0]), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_samples_panic() {
+        BoxStats::compute(&[]);
+    }
+
+    #[test]
+    fn single_sample() {
+        let s = BoxStats::compute(&[3.5]);
+        assert_eq!(s.median, 3.5);
+        assert_eq!(s.q1, 3.5);
+        assert_eq!(s.q3, 3.5);
+    }
+}

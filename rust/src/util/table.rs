@@ -1,0 +1,182 @@
+//! ASCII/markdown table rendering for regenerated paper tables and
+//! figure data series.
+
+/// A simple column-aligned table builder.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        w
+    }
+
+    /// Render as a GitHub-flavoured markdown table.
+    pub fn markdown(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], w: &[usize]| {
+            let mut line = String::from("|");
+            for (c, width) in cells.iter().zip(w) {
+                line.push_str(&format!(" {:<width$} |", c, width = width));
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &w));
+        out.push('\n');
+        out.push('|');
+        for width in &w {
+            out.push_str(&format!("{:-<w$}|", "", w = width + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &w));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as CSV (no quoting needed for our numeric tables; commas in
+    /// cells are replaced by semicolons defensively).
+    pub fn csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |s: &str| s.replace(',', ";");
+        out.push_str(
+            &self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a float with a fixed number of decimals, trimming noise.
+pub fn fmt_f(v: f64, decimals: usize) -> String {
+    format!("{v:.decimals$}")
+}
+
+/// Format a large count in scientific-ish notation like the paper's
+/// "3.33 x 10^8" cycle counts.
+pub fn fmt_sci(v: f64) -> String {
+    if v == 0.0 {
+        return "0".into();
+    }
+    let exp = v.abs().log10().floor() as i32;
+    let mant = v / 10f64.powi(exp);
+    format!("{mant:.2}e{exp}")
+}
+
+/// Render a horizontal ASCII box plot row on a [lo, hi] axis of `width`
+/// characters (used by the Fig. 5 report).
+pub fn ascii_box(
+    lo: f64,
+    hi: f64,
+    width: usize,
+    min: f64,
+    q1: f64,
+    med: f64,
+    q3: f64,
+    max: f64,
+) -> String {
+    assert!(hi > lo && width >= 10);
+    let clamp_pos = |v: f64| -> usize {
+        let t = ((v - lo) / (hi - lo)).clamp(0.0, 1.0);
+        ((width - 1) as f64 * t).round() as usize
+    };
+    let (pmin, pq1, pmed, pq3, pmax) =
+        (clamp_pos(min), clamp_pos(q1), clamp_pos(med), clamp_pos(q3), clamp_pos(max));
+    let mut chars = vec![' '; width];
+    for c in chars.iter_mut().take(pq1).skip(pmin) {
+        *c = '-';
+    }
+    for c in chars.iter_mut().take(pmax + 1).skip(pq3 + 1) {
+        *c = '-';
+    }
+    for c in chars.iter_mut().take(pq3 + 1).skip(pq1) {
+        *c = '=';
+    }
+    chars[pq1] = '[';
+    chars[pq3] = ']';
+    chars[pmed] = '|';
+    chars.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_has_header_and_rows() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.markdown();
+        assert!(md.contains("| a | bb |"));
+        assert!(md.contains("| 1 | 2  |"));
+        assert!(md.lines().nth(1).unwrap().starts_with("|-"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_mismatch_panics() {
+        Table::new(&["a"]).row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut t = Table::new(&["x", "y"]);
+        t.row(vec!["1".into(), "2,5".into()]);
+        let csv = t.csv();
+        assert_eq!(csv, "x,y\n1,2;5\n");
+    }
+
+    #[test]
+    fn sci_format() {
+        assert_eq!(fmt_sci(3.33e8), "3.33e8");
+        assert_eq!(fmt_sci(0.0), "0");
+        assert_eq!(fmt_sci(204.8), "2.05e2");
+    }
+
+    #[test]
+    fn box_plot_markers_ordered() {
+        let s = ascii_box(0.0, 1.0, 40, 0.1, 0.3, 0.5, 0.7, 0.9);
+        let i1 = s.find('[').unwrap();
+        let im = s.find('|').unwrap();
+        let i3 = s.find(']').unwrap();
+        assert!(i1 < im && im < i3);
+        assert_eq!(s.len(), 40);
+    }
+}

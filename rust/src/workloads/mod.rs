@@ -1,0 +1,123 @@
+//! DNN workload extraction: the GeMM streams of the paper's four
+//! benchmark models (Sec. 4.3, Table 2) plus the random workload suite
+//! of the Fig. 5 ablation.
+//!
+//! Each model is expressed as a list of [`WorkloadItem`]s — a GeMM shape
+//! with a repetition count (identical layers, attention heads, or
+//! depthwise channel groups). Convolutions are lowered via im2col
+//! exactly as the platform executes them.
+
+pub mod models;
+pub mod random;
+
+pub use models::{bert_base, mobilenet_v2, mobilenet_v2_host_dw, resnet18, vit_b16};
+pub use random::random_suite;
+
+use crate::compiler::GemmShape;
+use crate::config::GemmCoreParams;
+
+/// One GeMM shape appearing `count` times in a model's execution.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkloadItem {
+    pub name: String,
+    pub shape: GemmShape,
+    pub count: u64,
+}
+
+/// A full model workload.
+#[derive(Debug, Clone)]
+pub struct ModelWorkload {
+    pub name: String,
+    pub items: Vec<WorkloadItem>,
+}
+
+impl ModelWorkload {
+    /// Total real MACs across the model.
+    pub fn total_macs(&self) -> u64 {
+        self.items.iter().map(|i| i.shape.macs() * i.count).sum()
+    }
+
+    /// Aggregate spatial utilization: MAC-weighted over items (real MACs
+    /// over array-slot MACs), the Table 2 "SU" definition.
+    pub fn spatial_utilization(&self, core: &GemmCoreParams) -> f64 {
+        let real: u64 = self.total_macs();
+        let padded: u64 = self
+            .items
+            .iter()
+            .map(|i| i.shape.padded_macs(core) * i.count)
+            .sum();
+        real as f64 / padded as f64
+    }
+
+    /// Unique shapes with their total counts (simulate once, scale).
+    pub fn unique_shapes(&self) -> Vec<(GemmShape, u64)> {
+        let mut map: std::collections::BTreeMap<(usize, usize, usize), u64> =
+            std::collections::BTreeMap::new();
+        for item in &self.items {
+            *map.entry((item.shape.m, item.shape.k, item.shape.n)).or_default() += item.count;
+        }
+        map.into_iter()
+            .map(|((m, k, n), c)| (GemmShape::new(m, k, n), c))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GemmCoreParams;
+
+    #[test]
+    fn model_macs_are_plausible() {
+        // batch-1 inference MAC counts, cross-checked against published
+        // model statistics (tolerances cover head/padding details):
+        let r18 = resnet18().total_macs() as f64;
+        assert!((1.5e9..2.2e9).contains(&r18), "ResNet18 ~1.8 GMACs, got {r18:e}");
+        let mnv2 = mobilenet_v2().total_macs() as f64;
+        assert!((2.5e8..4.5e8).contains(&mnv2), "MobileNetV2 ~0.3 GMACs, got {mnv2:e}");
+        let vit = vit_b16().total_macs() as f64;
+        assert!((1.5e10..2.0e10).contains(&vit), "ViT-B/16 ~17.5 GMACs, got {vit:e}");
+        let bert = bert_base(512).total_macs() as f64;
+        assert!((4.0e10..5.0e10).contains(&bert), "BERT-Base(512) ~43 GMACs, got {bert:e}");
+    }
+
+    #[test]
+    fn su_ordering_matches_paper() {
+        // Table 2: SU(MobileNetV2) < SU(ResNet18) < SU(ViT) < SU(BERT)
+        let core = GemmCoreParams::CASE_STUDY;
+        let su_mnv2 = mobilenet_v2().spatial_utilization(&core);
+        let su_r18 = resnet18().spatial_utilization(&core);
+        let su_vit = vit_b16().spatial_utilization(&core);
+        let su_bert = bert_base(512).spatial_utilization(&core);
+        assert!(su_mnv2 < su_r18, "{su_mnv2} vs {su_r18}");
+        assert!(su_r18 < su_vit, "{su_r18} vs {su_vit}");
+        assert!(su_vit <= su_bert, "{su_vit} vs {su_bert}");
+        // With the naive per-channel depthwise lowering (K=9, N=1) the
+        // MobileNetV2 SU is ~0.50; the paper's 87.36% implies a more
+        // efficient depthwise mapping (see EXPERIMENTS.md deviation
+        // notes). The host-offloaded-depthwise variant lands near the
+        // published number.
+        assert!(su_mnv2 > 0.45, "MobileNetV2 SU sane: {su_mnv2}");
+        let su_host_dw = mobilenet_v2_host_dw().spatial_utilization(&core);
+        assert!(
+            (0.82..0.97).contains(&su_host_dw),
+            "MobileNetV2 (host dw) near paper's 87.36%: {su_host_dw}"
+        );
+        assert!(su_bert > 0.97, "BERT SU near 1: {su_bert}");
+    }
+
+    #[test]
+    fn unique_shapes_fold_counts() {
+        let m = ModelWorkload {
+            name: "t".into(),
+            items: vec![
+                WorkloadItem { name: "a".into(), shape: GemmShape::new(8, 8, 8), count: 2 },
+                WorkloadItem { name: "b".into(), shape: GemmShape::new(8, 8, 8), count: 3 },
+                WorkloadItem { name: "c".into(), shape: GemmShape::new(16, 8, 8), count: 1 },
+            ],
+        };
+        let u = m.unique_shapes();
+        assert_eq!(u.len(), 2);
+        assert_eq!(u[0].1, 5);
+    }
+}

@@ -1,0 +1,205 @@
+//! GeMM-stream definitions of the four benchmark DNNs (batch 1).
+//!
+//! Convolutional layers lower via im2col (`ConvShape::gemm_shape`);
+//! attention lowers head-by-head; depthwise convolutions lower to
+//! per-channel thin GeMMs (K = 9, N = 1) — the "tick channel" case the
+//! paper calls out for MobileNetV2. Layer dimensioning follows the
+//! original papers ([28][29][30][31]).
+
+use crate::compiler::{ConvShape, GemmShape};
+
+use super::{ModelWorkload, WorkloadItem};
+
+fn conv_item(name: &str, s: ConvShape) -> WorkloadItem {
+    WorkloadItem {
+        name: name.to_string(),
+        shape: s.gemm_shape(),
+        count: s.gemm_count() as u64,
+    }
+}
+
+fn gemm_item(name: &str, m: usize, k: usize, n: usize, count: u64) -> WorkloadItem {
+    WorkloadItem { name: name.to_string(), shape: GemmShape::new(m, k, n), count }
+}
+
+/// ResNet-18 (ImageNet 224x224, batch 1) [28].
+pub fn resnet18() -> ModelWorkload {
+    let mut items = Vec::new();
+    // stem: 7x7/2 conv, 3 -> 64
+    items.push(conv_item("conv1", ConvShape::dense(1, 224, 224, 3, 7, 7, 64, 2, 3)));
+    // (after 3x3/2 maxpool: 56x56)
+    // layer1: 4 convs 3x3 64->64 @ 56
+    let c = ConvShape::dense(1, 56, 56, 64, 3, 3, 64, 1, 1);
+    for i in 0..4 {
+        items.push(conv_item(&format!("layer1.conv{i}"), c));
+    }
+    // layer2: 64->128 @ 28
+    items.push(conv_item("layer2.conv_down", ConvShape::dense(1, 56, 56, 64, 3, 3, 128, 2, 1)));
+    items.push(conv_item("layer2.shortcut", ConvShape::dense(1, 56, 56, 64, 1, 1, 128, 2, 0)));
+    let c = ConvShape::dense(1, 28, 28, 128, 3, 3, 128, 1, 1);
+    for i in 0..3 {
+        items.push(conv_item(&format!("layer2.conv{i}"), c));
+    }
+    // layer3: 128->256 @ 14
+    items.push(conv_item("layer3.conv_down", ConvShape::dense(1, 28, 28, 128, 3, 3, 256, 2, 1)));
+    items.push(conv_item("layer3.shortcut", ConvShape::dense(1, 28, 28, 128, 1, 1, 256, 2, 0)));
+    let c = ConvShape::dense(1, 14, 14, 256, 3, 3, 256, 1, 1);
+    for i in 0..3 {
+        items.push(conv_item(&format!("layer3.conv{i}"), c));
+    }
+    // layer4: 256->512 @ 7
+    items.push(conv_item("layer4.conv_down", ConvShape::dense(1, 14, 14, 256, 3, 3, 512, 2, 1)));
+    items.push(conv_item("layer4.shortcut", ConvShape::dense(1, 14, 14, 256, 1, 1, 512, 2, 0)));
+    let c = ConvShape::dense(1, 7, 7, 512, 3, 3, 512, 1, 1);
+    for i in 0..3 {
+        items.push(conv_item(&format!("layer4.conv{i}"), c));
+    }
+    // classifier
+    items.push(gemm_item("fc", 1, 512, 1000, 1));
+    ModelWorkload { name: "ResNet18".into(), items }
+}
+
+/// MobileNetV2 (ImageNet 224x224, batch 1) [29].
+pub fn mobilenet_v2() -> ModelWorkload {
+    let mut items = Vec::new();
+    // stem: 3x3/2 conv 3 -> 32
+    items.push(conv_item("stem", ConvShape::dense(1, 224, 224, 3, 3, 3, 32, 2, 1)));
+
+    // inverted residual table: (expansion t, out channels c, repeats n, stride s)
+    let table: [(usize, usize, usize, usize); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut cin = 32usize;
+    let mut hw = 112usize;
+    for (bi, &(t, cout, n, s)) in table.iter().enumerate() {
+        for r in 0..n {
+            let stride = if r == 0 { s } else { 1 };
+            let hidden = cin * t;
+            let tag = format!("b{bi}.{r}");
+            // 1x1 expand (skipped when t == 1: the first block has no expansion)
+            if t != 1 {
+                items.push(conv_item(
+                    &format!("{tag}.expand"),
+                    ConvShape::dense(1, hw, hw, cin, 1, 1, hidden, 1, 0),
+                ));
+            }
+            // 3x3 depthwise
+            let hw_out = if stride == 2 { hw / 2 } else { hw };
+            items.push(conv_item(
+                &format!("{tag}.dw"),
+                ConvShape::depthwise(1, hw, hw, hidden, 3, 3, stride, 1),
+            ));
+            // 1x1 project
+            items.push(conv_item(
+                &format!("{tag}.project"),
+                ConvShape::dense(1, hw_out, hw_out, hidden, 1, 1, cout, 1, 0),
+            ));
+            cin = cout;
+            hw = hw_out;
+        }
+    }
+    // final 1x1 conv 320 -> 1280 @ 7
+    items.push(conv_item("head.conv", ConvShape::dense(1, 7, 7, 320, 1, 1, 1280, 1, 0)));
+    items.push(gemm_item("fc", 1, 1280, 1000, 1));
+    ModelWorkload { name: "MobileNetV2".into(), items }
+}
+
+/// MobileNetV2 with depthwise convolutions executed on the host (the
+/// platform accelerates only the GeMM-friendly dense layers). The naive
+/// per-channel depthwise lowering (K=9, N=1) wastes 7/8 of the array's
+/// N lanes and most of the K depth; a deployment that cares about
+/// utilization runs those thin kernels on the Snitch core (or a
+/// dedicated depthwise unit) instead. This variant reproduces the
+/// paper's reported SU band for MobileNetV2.
+pub fn mobilenet_v2_host_dw() -> ModelWorkload {
+    let full = mobilenet_v2();
+    ModelWorkload {
+        name: "MobileNetV2(host-dw)".into(),
+        items: full.items.into_iter().filter(|i| !i.name.ends_with(".dw")).collect(),
+    }
+}
+
+/// ViT-B/16 (224x224, batch 1): 196 patches + CLS = 197 tokens, 12
+/// layers, 12 heads of 64, MLP 3072 [30].
+pub fn vit_b16() -> ModelWorkload {
+    let mut items = Vec::new();
+    let (s, d, h, dh, mlp, layers) = (197usize, 768usize, 12u64, 64usize, 3072usize, 12u64);
+    // patch embedding: 196 patches x (16*16*3) -> 768
+    items.push(gemm_item("patch_embed", 196, 768, 768, 1));
+    items.push(gemm_item("attn.qkv", s, d, 3 * d, layers));
+    items.push(gemm_item("attn.scores", s, dh, s, layers * h));
+    items.push(gemm_item("attn.context", s, s, dh, layers * h));
+    items.push(gemm_item("attn.proj", s, d, d, layers));
+    items.push(gemm_item("mlp.fc1", s, d, mlp, layers));
+    items.push(gemm_item("mlp.fc2", s, mlp, d, layers));
+    items.push(gemm_item("head", 1, d, 1000, 1));
+    ModelWorkload { name: "ViT-B-16".into(), items }
+}
+
+/// BERT-Base (sequence length `seq`, batch 1): hidden 768, 12 layers,
+/// 12 heads, FFN 3072 [31].
+pub fn bert_base(seq: usize) -> ModelWorkload {
+    let mut items = Vec::new();
+    let (d, h, dh, ffn, layers) = (768usize, 12u64, 64usize, 3072usize, 12u64);
+    items.push(gemm_item("attn.qkv", seq, d, 3 * d, layers));
+    items.push(gemm_item("attn.scores", seq, dh, seq, layers * h));
+    items.push(gemm_item("attn.context", seq, seq, dh, layers * h));
+    items.push(gemm_item("attn.proj", seq, d, d, layers));
+    items.push(gemm_item("ffn.fc1", seq, d, ffn, layers));
+    items.push(gemm_item("ffn.fc2", seq, ffn, d, layers));
+    ModelWorkload { name: "BERT-Base".into(), items }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet18_conv1_shape() {
+        let r = resnet18();
+        let conv1 = &r.items[0];
+        assert_eq!(conv1.shape, GemmShape::new(112 * 112, 147, 64));
+    }
+
+    #[test]
+    fn mobilenet_has_thin_depthwise_gemms() {
+        let m = mobilenet_v2();
+        let dw: Vec<_> = m.items.iter().filter(|i| i.name.ends_with(".dw")).collect();
+        assert!(!dw.is_empty());
+        for item in dw {
+            assert_eq!(item.shape.k, 9, "depthwise K = 3*3*1");
+            assert_eq!(item.shape.n, 1, "depthwise N = 1 per group");
+            assert!(item.count >= 16, "one GeMM per channel");
+        }
+    }
+
+    #[test]
+    fn mobilenet_channel_progression() {
+        let m = mobilenet_v2();
+        // last projection outputs 320 channels at 7x7
+        let proj = m.items.iter().rev().find(|i| i.name.ends_with(".project")).unwrap();
+        assert_eq!(proj.shape.n, 320);
+        assert_eq!(proj.shape.m, 49);
+    }
+
+    #[test]
+    fn vit_head_dims() {
+        let v = vit_b16();
+        let scores = v.items.iter().find(|i| i.name == "attn.scores").unwrap();
+        assert_eq!(scores.shape, GemmShape::new(197, 64, 197));
+        assert_eq!(scores.count, 144);
+    }
+
+    #[test]
+    fn bert_scales_with_seq() {
+        let b128 = bert_base(128).total_macs();
+        let b512 = bert_base(512).total_macs();
+        assert!(b512 > 4 * b128, "attention is superlinear in seq");
+    }
+}

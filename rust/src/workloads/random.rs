@@ -1,0 +1,47 @@
+//! The Fig. 5 random workload suite: 500 GeMM sizes with M, K, N drawn
+//! uniformly from {8, 16, 24, ..., 256} (Sec. 4.2), seeded for
+//! reproducibility.
+
+use crate::compiler::GemmShape;
+use crate::util::rng::Pcg32;
+
+/// The paper's dimension grid: multiples of 8 in [8, 256].
+pub const DIM_CHOICES: usize = 32;
+
+/// Generate `count` random shapes from the paper's grid.
+pub fn random_suite(seed: u64, count: usize) -> Vec<GemmShape> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..count)
+        .map(|_| {
+            let dim = |rng: &mut Pcg32| (rng.below(DIM_CHOICES as u32) as usize + 1) * 8;
+            GemmShape::new(dim(&mut rng), dim(&mut rng), dim(&mut rng))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_is_reproducible() {
+        assert_eq!(random_suite(7, 100), random_suite(7, 100));
+        assert_ne!(random_suite(7, 100), random_suite(8, 100));
+    }
+
+    #[test]
+    fn dims_on_the_grid() {
+        for s in random_suite(123, 500) {
+            for d in [s.m, s.k, s.n] {
+                assert!(d % 8 == 0 && (8..=256).contains(&d), "dim {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn coverage_of_extremes() {
+        let suite = random_suite(42, 500);
+        assert!(suite.iter().any(|s| s.m == 8 || s.k == 8 || s.n == 8));
+        assert!(suite.iter().any(|s| s.m == 256 || s.k == 256 || s.n == 256));
+    }
+}

@@ -1,0 +1,154 @@
+//! E8 — functional equivalence across the three layers.
+//!
+//! The cycle-accurate Rust simulator's datapath must agree bit-exactly
+//! with the AOT-compiled JAX/Pallas artifacts executed through PJRT.
+//! Requires `make artifacts` (tests are skipped with a notice if the
+//! artifacts directory is missing).
+
+use opengemm::compiler::{im2col_transform, weights_to_b, ConvShape, GemmShape, Layout};
+use opengemm::config::{Mechanisms, PlatformConfig};
+use opengemm::coordinator::{Coordinator, JobRequest};
+use opengemm::runtime::{Runtime, Value};
+use opengemm::util::rng::Pcg32;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built at {dir:?} (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load(dir).expect("artifact manifest loads"))
+}
+
+fn sim_gemm(m: usize, k: usize, n: usize, a: &[i8], b: &[i8], layout: Layout) -> Vec<i32> {
+    let coord = Coordinator::new(PlatformConfig::case_study());
+    let req = JobRequest {
+        shape: GemmShape::new(m, k, n),
+        layout,
+        mechanisms: Mechanisms::ALL,
+        repeats: 1,
+        operands: Some((a.to_vec(), b.to_vec())),
+    };
+    coord.run_one(&req).expect("sim ok").c.expect("functional data")
+}
+
+#[test]
+fn simulator_matches_pallas_gemm_artifacts() {
+    let Some(mut rt) = runtime() else { return };
+    let mut rng = Pcg32::seeded(101);
+    let names: Vec<String> = rt
+        .artifact_names()
+        .iter()
+        .filter(|n| n.starts_with("gemm_"))
+        .map(|s| s.to_string())
+        .collect();
+    assert!(names.len() >= 6, "expected several gemm artifacts");
+    for name in names {
+        let meta = rt.meta(&name).unwrap().clone();
+        let (m, k) = (meta.args[0].shape[0], meta.args[0].shape[1]);
+        let n = meta.args[1].shape[1];
+        let mut a = vec![0i8; m * k];
+        let mut b = vec![0i8; k * n];
+        rng.fill_i8(&mut a);
+        rng.fill_i8(&mut b);
+        let golden = rt.execute_gemm(&name, &a, &b).expect("artifact executes");
+        for layout in [Layout::RowMajor, Layout::TiledContiguous, Layout::TiledInterleaved] {
+            let sim = sim_gemm(m, k, n, &a, &b, layout);
+            assert_eq!(sim, golden, "{name} {layout:?}: simulator != Pallas golden");
+        }
+    }
+}
+
+#[test]
+fn simulator_matches_conv_artifact_via_im2col() {
+    let Some(mut rt) = runtime() else { return };
+    let name = "conv_1x16x16x16_3x3x16";
+    let Some(meta) = rt.meta(name).cloned() else {
+        panic!("conv artifact missing from manifest");
+    };
+    let mut rng = Pcg32::seeded(55);
+    let x_len: usize = meta.args[0].shape.iter().product();
+    let w_len: usize = meta.args[1].shape.iter().product();
+    let mut x = vec![0i8; x_len];
+    let mut w = vec![0i8; w_len];
+    rng.fill_i8(&mut x);
+    rng.fill_i8(&mut w);
+
+    // golden: the L2 conv graph (im2col inside JAX + Pallas GeMM)
+    let outs = rt
+        .execute(name, &[Value::I8(x.clone()), Value::I8(w.clone())])
+        .expect("conv artifact executes");
+    let golden = outs[0].to_vec::<i32>().expect("i32 results");
+
+    // platform path: Rust im2col -> simulator GeMM
+    let conv = ConvShape::dense(1, 16, 16, 16, 3, 3, 16, 1, 0);
+    let a = im2col_transform(&x, &conv, 0);
+    let b = weights_to_b(&w, &conv, 0);
+    let g = conv.gemm_shape();
+    let sim = sim_gemm(g.m, g.k, g.n, &a, &b, Layout::TiledInterleaved);
+    assert_eq!(sim, golden, "conv-as-GeMM mismatch vs JAX conv graph");
+}
+
+#[test]
+fn linear_artifact_executes_and_requantizes() {
+    let Some(mut rt) = runtime() else { return };
+    let name = "linear_64x64x64";
+    let meta = rt.meta(name).expect("linear artifact").clone();
+    assert_eq!(meta.results[0].dtype, "s8");
+    let mut rng = Pcg32::seeded(77);
+    let mut a = vec![0i8; 64 * 64];
+    let mut w = vec![0i8; 64 * 64];
+    rng.fill_i8(&mut a);
+    rng.fill_i8(&mut w);
+    let bias: Vec<i32> = (0..64).map(|i| (i as i32 - 32) * 100).collect();
+    let shift = vec![7i32];
+    let outs = rt
+        .execute(
+            name,
+            &[Value::I8(a.clone()), Value::I8(w.clone()), Value::I32(bias.clone()), Value::I32(shift)],
+        )
+        .expect("linear executes");
+    let got = Runtime::result_i8(&outs[0]).expect("i8 result");
+
+    // reference: simulator GeMM + host-side requantization
+    let acc = sim_gemm(64, 64, 64, &a, &w, Layout::TiledInterleaved);
+    let expect: Vec<i8> = acc
+        .iter()
+        .enumerate()
+        .map(|(idx, &v)| {
+            let v = v.wrapping_add(bias[idx % 64]);
+            let r = (v + (1 << 6)) >> 7;
+            r.clamp(-128, 127) as i8
+        })
+        .collect();
+    assert_eq!(got, expect, "fused linear kernel != simulator + host requant");
+}
+
+#[test]
+fn mha_scores_artifact_matches_sim_plus_requant() {
+    let Some(mut rt) = runtime() else { return };
+    let name = "mha_scores_s64_d64";
+    let mut rng = Pcg32::seeded(91);
+    let mut q = vec![0i8; 64 * 64];
+    let mut k = vec![0i8; 64 * 64];
+    rng.fill_i8(&mut q);
+    rng.fill_i8(&mut k);
+    let outs = rt
+        .execute(name, &[Value::I8(q.clone()), Value::I8(k.clone())])
+        .expect("mha executes");
+    let got = Runtime::result_i8(&outs[0]).expect("i8 scores");
+
+    // K^T on the host, GeMM on the simulated platform, shift 6
+    let mut kt = vec![0i8; 64 * 64];
+    for i in 0..64 {
+        for j in 0..64 {
+            kt[j * 64 + i] = k[i * 64 + j];
+        }
+    }
+    let acc = sim_gemm(64, 64, 64, &q, &kt, Layout::TiledInterleaved);
+    let expect: Vec<i8> = acc
+        .iter()
+        .map(|&v| (((v + (1 << 5)) >> 6).clamp(-128, 127)) as i8)
+        .collect();
+    assert_eq!(got, expect, "attention scores mismatch");
+}

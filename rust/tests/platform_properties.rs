@@ -1,0 +1,251 @@
+//! Property-based integration tests over the whole platform: random
+//! shapes, layouts and mechanism sets, checking functional correctness
+//! against a naive reference and cycle-level invariants.
+
+use opengemm::compiler::{compile_gemm, GemmShape, Layout};
+use opengemm::config::{Mechanisms, PlatformConfig};
+use opengemm::coordinator::{Coordinator, JobRequest};
+use opengemm::prop_assert;
+use opengemm::prop_assert_eq;
+use opengemm::util::check::property;
+use opengemm::util::rng::Pcg32;
+
+fn naive_gemm(a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
+    let mut c = vec![0i32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0i32;
+            for kk in 0..k {
+                acc = acc.wrapping_add((a[i * k + kk] as i32).wrapping_mul(b[kk * n + j] as i32));
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+fn rand_shape(rng: &mut Pcg32, max: u32) -> GemmShape {
+    GemmShape::new(
+        rng.below(max) as usize + 1,
+        rng.below(max) as usize + 1,
+        rng.below(max) as usize + 1,
+    )
+}
+
+#[test]
+fn functional_correctness_over_random_configs() {
+    let coord = Coordinator::new(PlatformConfig::case_study());
+    property("platform functional == naive", 25, |rng| {
+        let shape = rand_shape(rng, 48);
+        let layout = *rng.choose(&[
+            Layout::RowMajor,
+            Layout::TiledContiguous,
+            Layout::TiledInterleaved,
+        ]);
+        let mech = *rng.choose(&[
+            Mechanisms::BASELINE,
+            Mechanisms::CPL,
+            Mechanisms::CPL_BUF,
+            Mechanisms::ALL,
+        ]);
+        let mut a = vec![0i8; shape.m * shape.k];
+        let mut b = vec![0i8; shape.k * shape.n];
+        rng.fill_i8(&mut a);
+        rng.fill_i8(&mut b);
+        let req = JobRequest {
+            shape,
+            layout,
+            mechanisms: mech,
+            repeats: 1,
+            operands: Some((a.clone(), b.clone())),
+        };
+        let r = coord.run_one(&req).map_err(|e| e)?;
+        let want = naive_gemm(&a, &b, shape.m, shape.k, shape.n);
+        prop_assert_eq!(
+            r.c.as_ref().unwrap(),
+            &want,
+            "functional mismatch for {shape:?} {layout:?} {mech:?}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn compute_cycles_always_equal_ideal() {
+    // mechanisms/layouts change stalls, never the number of tile-MACs
+    let cfg = PlatformConfig::case_study();
+    let coord = Coordinator::new(cfg.clone());
+    property("compute cycles invariant", 30, |rng| {
+        let shape = rand_shape(rng, 120);
+        let mech = *rng.choose(&[Mechanisms::BASELINE, Mechanisms::ALL]);
+        let repeats = rng.below(4) + 1;
+        let req = JobRequest::timing(shape, mech, repeats);
+        let r = coord.run_one(&req)?;
+        let ideal = shape.ideal_cycles(&cfg.core);
+        prop_assert_eq!(
+            r.metrics.compute_cycles,
+            ideal * repeats as u64,
+            "compute != ideal x repeats for {shape:?}"
+        );
+        prop_assert_eq!(
+            r.metrics.runs_completed,
+            r.metrics.starts,
+            "every start completes"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn mechanisms_never_hurt() {
+    let coord = Coordinator::new(PlatformConfig::case_study());
+    property("arch ladder is monotone", 15, |rng| {
+        let shape = rand_shape(rng, 100);
+        let ladder = [
+            Mechanisms::BASELINE,
+            Mechanisms::CPL,
+            Mechanisms::CPL_BUF,
+            Mechanisms::ALL,
+        ];
+        let mut last = 0.0f64;
+        for mech in ladder {
+            let r = coord.run_one(&JobRequest::timing(shape, mech, 10))?;
+            let ou = r.report.overall;
+            prop_assert!(
+                ou >= last * 0.98,
+                "{} regressed: {ou} < {last} on {shape:?}",
+                mech.label()
+            );
+            last = ou.max(last);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn utilization_bounded_and_consistent() {
+    let coord = Coordinator::new(PlatformConfig::case_study());
+    property("0 < OU <= 1 and OU = SU*TU", 20, |rng| {
+        let shape = rand_shape(rng, 200);
+        let r = coord.run_one(&JobRequest::timing(shape, Mechanisms::ALL, 3))?;
+        let rep = &r.report;
+        prop_assert!(rep.spatial > 0.0 && rep.spatial <= 1.0, "SU {}", rep.spatial);
+        prop_assert!(rep.temporal > 0.0 && rep.temporal <= 1.0, "TU {}", rep.temporal);
+        prop_assert!(
+            (rep.overall - rep.spatial * rep.temporal).abs() < 1e-12,
+            "OU != SU*TU"
+        );
+        prop_assert!(
+            r.metrics.kernel_cycles <= r.metrics.total_cycles,
+            "kernel window exceeds total"
+        );
+        prop_assert!(
+            r.metrics.compute_cycles <= r.metrics.kernel_cycles,
+            "compute exceeds kernel window"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn split_jobs_preserve_results_and_work() {
+    // shapes that exceed SPM capacity split into multiple calls; the
+    // result must be identical and compute cycles unchanged
+    let cfg = PlatformConfig::case_study();
+    let coord = Coordinator::new(cfg.clone());
+    property("capacity splits are transparent", 6, |rng| {
+        // big enough that A/B region + C cannot co-reside in 264 KiB
+        let shape = GemmShape::new(
+            232 + rng.below(24) as usize,
+            192 + rng.below(64) as usize,
+            232 + rng.below(24) as usize,
+        );
+        let job = compile_gemm(&cfg, shape, Layout::TiledInterleaved, 1, true)
+            .map_err(|e| e.to_string())?;
+        prop_assert!(job.calls.len() >= 2, "expected a split for {shape:?}");
+        let mut a = vec![0i8; shape.m * shape.k];
+        let mut b = vec![0i8; shape.k * shape.n];
+        rng.fill_i8(&mut a);
+        rng.fill_i8(&mut b);
+        let req = JobRequest {
+            shape,
+            layout: Layout::TiledInterleaved,
+            mechanisms: Mechanisms::ALL,
+            repeats: 1,
+            operands: Some((a.clone(), b.clone())),
+        };
+        let r = coord.run_one(&req)?;
+        let want = naive_gemm(&a, &b, shape.m, shape.k, shape.n);
+        prop_assert_eq!(r.c.as_ref().unwrap(), &want, "split-job result mismatch");
+        Ok(())
+    });
+}
+
+#[test]
+fn cpl_gain_peaks_where_config_matches_compute() {
+    // CPL hides configuration under compute, so the win is largest when
+    // the two are comparable: too-small GeMMs are config-serial either
+    // way (nothing to hide *under*), huge GeMMs amortize config anyway.
+    let coord = Coordinator::new(PlatformConfig::case_study());
+    let gain = |shape: GemmShape| {
+        let base = coord
+            .run_one(&JobRequest::timing(shape, Mechanisms::BASELINE, 10))
+            .unwrap();
+        let cpl = coord
+            .run_one(&JobRequest::timing(shape, Mechanisms::CPL, 10))
+            .unwrap();
+        base.metrics.total_cycles as f64 / cpl.metrics.total_cycles as f64
+    };
+    let tiny = gain(GemmShape::new(8, 8, 8));
+    let mid = gain(GemmShape::new(48, 48, 48));
+    let large = gain(GemmShape::new(192, 192, 192));
+    assert!(mid > 1.3, "mid-size CPL gain only {mid:.2}x");
+    assert!(mid > tiny, "gain should peak mid-size: tiny {tiny:.2} mid {mid:.2}");
+    assert!(mid > large, "gain should peak mid-size: large {large:.2} mid {mid:.2}");
+    assert!(tiny >= 0.99 && large >= 0.99, "CPL never hurts");
+}
+
+#[test]
+fn timing_fast_path_matches_functional_timing() {
+    // The timing-only bank-pattern fast path must produce exactly the
+    // same cycle counts as the fully materialized (functional) path.
+    let coord = Coordinator::new(PlatformConfig::case_study());
+    property("fast path timing == functional timing", 15, |rng| {
+        let shape = rand_shape(rng, 96);
+        let layout = *rng.choose(&[
+            Layout::RowMajor,
+            Layout::TiledContiguous,
+            Layout::TiledInterleaved,
+        ]);
+        let mech = *rng.choose(&[Mechanisms::BASELINE, Mechanisms::CPL_BUF, Mechanisms::ALL]);
+        let timing = coord.run_one(&JobRequest {
+            shape,
+            layout,
+            mechanisms: mech,
+            repeats: 3,
+            operands: None,
+        })?;
+        let mut a = vec![0i8; shape.m * shape.k];
+        let mut b = vec![0i8; shape.k * shape.n];
+        rng.fill_i8(&mut a);
+        rng.fill_i8(&mut b);
+        let functional = coord.run_one(&JobRequest {
+            shape,
+            layout,
+            mechanisms: mech,
+            repeats: 3,
+            operands: Some((a, b)),
+        })?;
+        prop_assert_eq!(
+            timing.metrics.total_cycles,
+            functional.metrics.total_cycles,
+            "total cycles diverge for {shape:?} {layout:?}"
+        );
+        prop_assert_eq!(
+            timing.metrics.stall_cycles(),
+            functional.metrics.stall_cycles(),
+            "stall cycles diverge for {shape:?} {layout:?}"
+        );
+        Ok(())
+    });
+}
