@@ -28,7 +28,7 @@ fn encoder_layer_gemms(s: usize) -> Vec<(GemmShape, u64)> {
     ]
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> opengemm::util::error::Result<()> {
     let args = Args::from_env()?;
     let n_requests = args.usize_or("requests", 32)?;
     let cfg = PlatformConfig::case_study();

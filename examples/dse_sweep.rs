@@ -30,7 +30,7 @@ fn instance(mu: usize, nu: usize, ku: usize) -> Option<PlatformConfig> {
     Some(cfg)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> opengemm::util::error::Result<()> {
     // generator points: vector unit, outer-product-ish, square arrays
     let points = [
         (1usize, 1usize, 64usize), // big dot-product unit

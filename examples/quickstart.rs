@@ -11,7 +11,7 @@ use opengemm::runtime::Runtime;
 use opengemm::sim::{Platform, SimOptions};
 use opengemm::util::rng::Pcg32;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> opengemm::util::error::Result<()> {
     // 1. a platform instance: the paper's 8x8x8 case study
     let cfg = PlatformConfig::case_study();
     println!(

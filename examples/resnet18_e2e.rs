@@ -19,7 +19,7 @@ use opengemm::util::rng::Pcg32;
 use opengemm::util::table::{fmt_f, fmt_sci, Table};
 use opengemm::workloads::resnet18;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> opengemm::util::error::Result<()> {
     let cfg = PlatformConfig::case_study();
     let model = resnet18();
     println!(

@@ -21,6 +21,7 @@ fn main() {
         workloads: env_usize("FIG5_WORKLOADS", 500),
         repeats: 10,
         workers: env_usize("FIG5_WORKERS", 0),
+        ..Default::default()
     };
     eprintln!(
         "fig5: {} workloads x {} repeats x 6 variants",

@@ -7,13 +7,14 @@
 
 use opengemm::compiler::{compile_gemm, GemmShape, Layout};
 use opengemm::config::{GemmCoreParams, Mechanisms, PlatformConfig};
+use opengemm::csr::CsrManager;
 use opengemm::gemm_core::{tile_mac, Accumulators};
 use opengemm::host::{encode as enc, reg, Asm, Cpu};
-use opengemm::csr::CsrManager;
 use opengemm::sim::{Platform, SimOptions};
 use opengemm::spm::Spm;
 use opengemm::streamer::AguConfig;
 use opengemm::util::bench::{black_box, Bencher};
+use opengemm::util::json::Json;
 use opengemm::util::rng::Pcg32;
 
 fn bench_end_to_end(b: &mut Bencher) {
@@ -101,9 +102,174 @@ fn bench_components(b: &mut Bencher) {
     );
 }
 
+/// One throughput measurement: simulated cycles per host-second for a
+/// workload, in lockstep and fast-forward modes.
+struct ThroughputEntry {
+    label: String,
+    stall_heavy: bool,
+    simulated_cycles: u64,
+    steps_fast_forward: u64,
+    lockstep_cps: f64,
+    fast_forward_cps: f64,
+}
+
+impl ThroughputEntry {
+    fn speedup(&self) -> f64 {
+        self.fast_forward_cps / self.lockstep_cps
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn measure_throughput(
+    b: &mut Bencher,
+    label: &str,
+    stall_heavy: bool,
+    shape: GemmShape,
+    layout: Layout,
+    mech: Mechanisms,
+    repeats: u32,
+    csr_latency: u64,
+) -> ThroughputEntry {
+    let cfg = PlatformConfig::case_study();
+    let job = compile_gemm(&cfg, shape, layout, repeats, mech.config_preloading).unwrap();
+    let mut rates = [0.0f64; 2];
+    let mut cycles = 0u64;
+    let mut steps_ff = 0u64;
+    for (slot, fast_forward) in [(0usize, false), (1usize, true)] {
+        let mode = if fast_forward { "fast-forward" } else { "lockstep" };
+        let opts = SimOptions { mechanisms: mech, csr_latency, fast_forward, ..Default::default() };
+        let mut platform = Platform::new(cfg.clone(), opts);
+        let mut total = 0u64;
+        let mut steps = 0u64;
+        let r = b.bench(&format!("throughput/{label} {mode}"), || {
+            let res = platform.run_job(&job, None, None).unwrap();
+            total = res.metrics.total_cycles;
+            steps = platform.steps_executed;
+        });
+        rates[slot] = r.throughput(total as f64);
+        cycles = total;
+        if fast_forward {
+            steps_ff = steps;
+        }
+        println!(
+            "      -> {:.1} M simulated cycles/s ({} cycles, {} stepped)",
+            rates[slot] / 1e6,
+            total,
+            steps
+        );
+    }
+    ThroughputEntry {
+        label: label.to_string(),
+        stall_heavy,
+        simulated_cycles: cycles,
+        steps_fast_forward: steps_ff,
+        lockstep_cps: rates[0],
+        fast_forward_cps: rates[1],
+    }
+}
+
+/// Simulation-throughput benchmark: fast-forward vs lockstep, emitted
+/// as BENCH_sim_throughput.json at the repo root (the perf trajectory's
+/// tracked artifact).
+///
+/// The stall-heavy workloads run Arch1 (prefetch disabled) with a
+/// 48-cycle CSR handshake — the operating point where our CPL gain
+/// matches the paper's 1.40x median (see `ablation_cpl_sensitivity`),
+/// i.e. the calibrated cost of the paper's Snitch configuration path.
+fn bench_sim_throughput(b: &mut Bencher) -> Json {
+    let entries = vec![
+        // deep-K thin GeMM, no prefetch: every tile-MAC waits out a
+        // conflicting A-tile fetch, every call re-pays configuration
+        measure_throughput(
+            b,
+            "8x256x8 deepK arch1 csr48",
+            true,
+            GemmShape::new(8, 256, 8),
+            Layout::RowMajor,
+            Mechanisms::BASELINE,
+            10,
+            48,
+        ),
+        // configuration-bound tiny GeMM (the paper's TU<0.1 corner)
+        measure_throughput(
+            b,
+            "8x8x8 tiny arch1 csr48",
+            true,
+            GemmShape::new(8, 8, 8),
+            Layout::RowMajor,
+            Mechanisms::BASELINE,
+            20,
+            48,
+        ),
+        // deep-K at the default handshake cost
+        measure_throughput(
+            b,
+            "16x1024x16 deepK arch1 csr8",
+            true,
+            GemmShape::new(16, 1024, 16),
+            Layout::RowMajor,
+            Mechanisms::BASELINE,
+            4,
+            8,
+        ),
+        // compute-bound control: fast-forward must not slow this down
+        measure_throughput(
+            b,
+            "64x64x64 arch4 csr8",
+            false,
+            GemmShape::new(64, 64, 64),
+            Layout::TiledInterleaved,
+            Mechanisms::ALL,
+            10,
+            8,
+        ),
+    ];
+
+    let stall_heavy_speedup = entries
+        .iter()
+        .filter(|e| e.stall_heavy)
+        .map(ThroughputEntry::speedup)
+        .fold(0.0f64, f64::max);
+    println!(
+        "      == stall-heavy fast-forward speedup: {stall_heavy_speedup:.1}x \
+         (target >= 5x) =="
+    );
+
+    let entry_docs: Vec<Json> = entries
+        .iter()
+        .map(|e| {
+            Json::obj(vec![
+                ("workload", Json::str(e.label.clone())),
+                ("stall_heavy", Json::Bool(e.stall_heavy)),
+                ("simulated_cycles", Json::num(e.simulated_cycles as f64)),
+                ("steps_fast_forward", Json::num(e.steps_fast_forward as f64)),
+                ("lockstep_cycles_per_sec", Json::num(e.lockstep_cps)),
+                ("fast_forward_cycles_per_sec", Json::num(e.fast_forward_cps)),
+                ("speedup", Json::num(e.speedup())),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("bench", Json::str("sim_throughput")),
+        ("unit", Json::str("simulated cycles per host-second")),
+        ("stall_heavy_speedup", Json::num(stall_heavy_speedup)),
+        ("entries", Json::Arr(entry_docs)),
+    ])
+}
+
 fn main() {
     println!("== simulator hot-path microbenchmarks ==");
     let mut b = Bencher::default();
     bench_end_to_end(&mut b);
     bench_components(&mut b);
+    println!("== simulation throughput: fast-forward vs lockstep ==");
+    let doc = bench_sim_throughput(&mut b);
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("package root has a parent")
+        .join("BENCH_sim_throughput.json");
+    match std::fs::write(&out, doc.pretty()) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
 }

@@ -16,7 +16,8 @@ fn main() {
         .and_then(|v| v.parse().ok())
         .unwrap_or(512);
     let t0 = Instant::now();
-    let res = table2_dnn(&cfg, Table2Options { bert_seq, workers: 0, max_repeats: 10 });
+    let opts = Table2Options { bert_seq, workers: 0, max_repeats: 10, ..Default::default() };
+    let res = table2_dnn(&cfg, opts);
     let wall = t0.elapsed();
     println!("{}", res.render());
     println!("bench table2_dnn: {:.2}s wall", wall.as_secs_f64());

@@ -16,6 +16,8 @@ pub use im2col::{im2col as im2col_transform, weights_to_b, ConvShape};
 pub use layout::{pack_a, pack_b, plan, unpack_c, Layout, Placement};
 pub use tiling::{call_footprint, split_for_capacity, GemmBlock, GemmShape, SplitError};
 
+use std::sync::Arc;
+
 use crate::config::PlatformConfig;
 
 /// One compiled accelerator call.
@@ -32,7 +34,9 @@ pub struct CompiledJob {
     pub layout: Layout,
     pub repeats: u32,
     pub cpl: bool,
-    pub calls: Vec<CompiledCall>,
+    /// Shared so the simulator can reference the call list per run
+    /// without deep-copying every placement (`Arc` clone instead).
+    pub calls: Arc<[CompiledCall]>,
     /// RV32I machine code for the host.
     pub program: Vec<u32>,
 }
@@ -68,7 +72,7 @@ pub fn compile_gemm(
     cpl: bool,
 ) -> Result<CompiledJob, SplitError> {
     let blocks = split_for_capacity(cfg, shape, layout)?;
-    let calls: Vec<CompiledCall> = blocks
+    let calls: Arc<[CompiledCall]> = blocks
         .into_iter()
         .map(|block| CompiledCall {
             placement: plan(cfg, &block.shape, layout),

@@ -63,6 +63,7 @@ pub struct Coordinator {
     cfg: PlatformConfig,
     csr_latency: u64,
     workers: usize,
+    fast_forward: bool,
     stats: Arc<Mutex<CoordinatorStats>>,
 }
 
@@ -76,6 +77,7 @@ impl Coordinator {
             cfg,
             csr_latency: SimOptions::default().csr_latency,
             workers,
+            fast_forward: SimOptions::default().fast_forward,
             stats: Arc::new(Mutex::new(CoordinatorStats::default())),
         }
     }
@@ -87,6 +89,14 @@ impl Coordinator {
 
     pub fn with_csr_latency(mut self, latency: u64) -> Coordinator {
         self.csr_latency = latency;
+        self
+    }
+
+    /// Toggle the event-driven cycle-skipping engine (default on; the
+    /// lockstep mode exists for differential verification and the
+    /// `--no-fast-forward` escape hatch).
+    pub fn with_fast_forward(mut self, fast_forward: bool) -> Coordinator {
+        self.fast_forward = fast_forward;
         self
     }
 
@@ -117,6 +127,7 @@ impl Coordinator {
             let cfg = self.cfg.clone();
             let stats = Arc::clone(&self.stats);
             let csr_latency = self.csr_latency;
+            let fast_forward = self.fast_forward;
             handles.push(std::thread::spawn(move || {
                 // one platform per worker, reconfigured per job
                 loop {
@@ -125,7 +136,7 @@ impl Coordinator {
                         rx.recv()
                     };
                     let Ok(WorkItem { index, request }) = item else { break };
-                    let outcome = run_one(&cfg, csr_latency, &request);
+                    let outcome = run_one(&cfg, csr_latency, fast_forward, &request);
                     {
                         let mut s = stats.lock().unwrap();
                         match &outcome {
@@ -157,11 +168,16 @@ impl Coordinator {
 
     /// Run a single request inline (no pool).
     pub fn run_one(&self, request: &JobRequest) -> JobOutcome {
-        run_one(&self.cfg, self.csr_latency, request)
+        run_one(&self.cfg, self.csr_latency, self.fast_forward, request)
     }
 }
 
-fn run_one(cfg: &PlatformConfig, csr_latency: u64, request: &JobRequest) -> JobOutcome {
+fn run_one(
+    cfg: &PlatformConfig,
+    csr_latency: u64,
+    fast_forward: bool,
+    request: &JobRequest,
+) -> JobOutcome {
     let job = compile_gemm(
         cfg,
         request.shape,
@@ -174,6 +190,7 @@ fn run_one(cfg: &PlatformConfig, csr_latency: u64, request: &JobRequest) -> JobO
         mechanisms: request.mechanisms,
         functional: request.operands.is_some(),
         csr_latency,
+        fast_forward,
         ..Default::default()
     };
     let mut platform = Platform::new(cfg.clone(), opts);
@@ -255,6 +272,17 @@ mod tests {
             .map(|kk| a[i * shape.k + kk] as i32 * b[kk * shape.n + j] as i32)
             .sum();
         assert_eq!(c_mat[i * shape.n + j], expect);
+    }
+
+    #[test]
+    fn fast_forward_toggle_is_cycle_exact_through_the_pool() {
+        let req = JobRequest::timing(GemmShape::new(56, 72, 40), Mechanisms::BASELINE, 3);
+        let ff = coordinator().run_one(&req).unwrap();
+        let ls = Coordinator::new(PlatformConfig::case_study())
+            .with_fast_forward(false)
+            .run_one(&req)
+            .unwrap();
+        assert_eq!(ff.metrics, ls.metrics, "fast-forward must be bit-identical");
     }
 
     #[test]

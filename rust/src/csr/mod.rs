@@ -282,6 +282,13 @@ impl CsrManager {
         self.start_fired.take()
     }
 
+    /// Platform side: is a fired start waiting to be consumed? (Lets
+    /// the fast-forward engine see the launch coming without taking
+    /// it.)
+    pub fn has_fired_start(&self) -> bool {
+        self.start_fired.is_some()
+    }
+
     pub fn is_busy(&self) -> bool {
         self.busy
     }

@@ -23,11 +23,14 @@ pub struct Fig5Options {
     pub workloads: usize,
     pub repeats: u32,
     pub workers: usize,
+    /// Event-driven cycle skipping (cycle-exact; off only for
+    /// differential checks).
+    pub fast_forward: bool,
 }
 
 impl Default for Fig5Options {
     fn default() -> Self {
-        Fig5Options { seed: 2024, workloads: 500, repeats: 10, workers: 0 }
+        Fig5Options { seed: 2024, workloads: 500, repeats: 10, workers: 0, fast_forward: true }
     }
 }
 
@@ -64,7 +67,7 @@ pub fn fig5_ablation(base_cfg: &PlatformConfig, opts: Fig5Options) -> Fig5Result
     for (label, mech, depth) in variant_specs() {
         let mut cfg = base_cfg.clone();
         cfg.mem.d_stream = depth;
-        let mut coord = Coordinator::new(cfg);
+        let mut coord = Coordinator::new(cfg).with_fast_forward(opts.fast_forward);
         if opts.workers > 0 {
             coord = coord.with_workers(opts.workers);
         }
@@ -148,7 +151,7 @@ mod tests {
         let cfg = PlatformConfig::case_study();
         let res = fig5_ablation(
             &cfg,
-            Fig5Options { seed: 7, workloads: 40, repeats: 10, workers: 0 },
+            Fig5Options { seed: 7, workloads: 40, repeats: 10, workers: 0, fast_forward: true },
         );
         let med: Vec<f64> = res.variants.iter().map(|v| v.stats.median).collect();
         // each mechanism must improve the median
@@ -169,7 +172,7 @@ mod tests {
         let cfg = PlatformConfig::case_study();
         let res = fig5_ablation(
             &cfg,
-            Fig5Options { seed: 3, workloads: 8, repeats: 2, workers: 2 },
+            Fig5Options { seed: 3, workloads: 8, repeats: 2, workers: 2, fast_forward: true },
         );
         let text = res.render();
         for v in &res.variants {

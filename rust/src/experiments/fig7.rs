@@ -18,11 +18,14 @@ use crate::util::table::{fmt_f, Table};
 pub struct Fig7Options {
     pub repeats: u32,
     pub workers: usize,
+    /// Event-driven cycle skipping (cycle-exact; off only for
+    /// differential checks).
+    pub fast_forward: bool,
 }
 
 impl Default for Fig7Options {
     fn default() -> Self {
-        Fig7Options { repeats: 10, workers: 0 }
+        Fig7Options { repeats: 10, workers: 0, fast_forward: true }
     }
 }
 
@@ -50,7 +53,7 @@ pub fn fig7_gemmini(cfg: &PlatformConfig, opts: Fig7Options) -> Fig7Result {
     let area = power.layout_area(cfg);
     let gemmini = GemminiModel::default();
     let coord = {
-        let c = Coordinator::new(cfg.clone());
+        let c = Coordinator::new(cfg.clone()).with_fast_forward(opts.fast_forward);
         if opts.workers > 0 {
             c.with_workers(opts.workers)
         } else {
@@ -151,7 +154,7 @@ mod tests {
     #[test]
     fn opengemm_wins_everywhere_in_paper_band() {
         let cfg = PlatformConfig::case_study();
-        let res = fig7_gemmini(&cfg, Fig7Options { repeats: 10, workers: 0 });
+        let res = fig7_gemmini(&cfg, Fig7Options { repeats: 10, workers: 0, fast_forward: true });
         for p in &res.points {
             assert!(
                 p.speedup_vs_os > 1.5,
@@ -173,7 +176,7 @@ mod tests {
     #[test]
     fn gemmini_improves_with_size_but_stays_low() {
         let cfg = PlatformConfig::case_study();
-        let res = fig7_gemmini(&cfg, Fig7Options { repeats: 4, workers: 0 });
+        let res = fig7_gemmini(&cfg, Fig7Options { repeats: 4, workers: 0, fast_forward: true });
         let first = res.points.first().unwrap();
         let last = res.points.last().unwrap();
         assert!(last.gemmini_ws_gops_mm2 > first.gemmini_ws_gops_mm2);

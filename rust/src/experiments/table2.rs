@@ -18,11 +18,14 @@ pub struct Table2Options {
     pub workers: usize,
     /// Cap on per-shape CPL amortization repeats (10 mirrors Fig. 5).
     pub max_repeats: u32,
+    /// Event-driven cycle skipping (cycle-exact; off only for
+    /// differential checks).
+    pub fast_forward: bool,
 }
 
 impl Default for Table2Options {
     fn default() -> Self {
-        Table2Options { bert_seq: 512, workers: 0, max_repeats: 10 }
+        Table2Options { bert_seq: 512, workers: 0, max_repeats: 10, fast_forward: true }
     }
 }
 
@@ -43,7 +46,7 @@ pub struct Table2Result {
 
 fn run_model(cfg: &PlatformConfig, model: &ModelWorkload, opts: &Table2Options) -> ModelRow {
     let coord = {
-        let c = Coordinator::new(cfg.clone());
+        let c = Coordinator::new(cfg.clone()).with_fast_forward(opts.fast_forward);
         if opts.workers > 0 {
             c.with_workers(opts.workers)
         } else {
@@ -135,7 +138,10 @@ mod tests {
         let cfg = PlatformConfig::case_study();
         // short BERT keeps the test fast; utilization is insensitive to
         // sequence length beyond ~128
-        let res = table2_dnn(&cfg, Table2Options { bert_seq: 128, workers: 0, max_repeats: 10 });
+        let res = table2_dnn(
+            &cfg,
+            Table2Options { bert_seq: 128, workers: 0, max_repeats: 10, fast_forward: true },
+        );
         let get = |name: &str| {
             res.rows
                 .iter()

@@ -35,6 +35,20 @@ pub enum CoreEvent {
     Computed { emitted_output: bool, finished: bool },
 }
 
+/// What [`GemmCore::step`] *would* do this cycle, computed without
+/// mutating anything — the stall-reason introspection the event-driven
+/// fast-forward engine uses to batch-account skipped cycles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CorePending {
+    /// No run in flight.
+    Idle,
+    /// Started but unable to issue; the reason is stable until a
+    /// streamer delivery or writeback-drain event changes the inputs.
+    Stalled(StallReason),
+    /// A tile-MAC would issue — this cycle must be simulated.
+    Compute,
+}
+
 /// Per-run compute statistics (the utilization numerators/denominators).
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct CoreStats {
@@ -90,6 +104,42 @@ impl GemmCore {
 
     pub fn reset_stats(&mut self) {
         self.stats = CoreStats::default();
+    }
+
+    /// Preview of the upcoming [`GemmCore::step`] outcome. Must mirror
+    /// the short-circuit order of `step` exactly (A before B before
+    /// output backpressure) so batch-accounted stall counters are
+    /// bit-identical to stepping cycle by cycle.
+    pub fn pending(
+        &self,
+        a: &InputStreamer,
+        b: &InputStreamer,
+        out: &OutputStreamer,
+    ) -> CorePending {
+        let Some(lc) = self.lc.as_ref() else {
+            return CorePending::Idle;
+        };
+        if a.head().is_none() {
+            return CorePending::Stalled(StallReason::InputA);
+        }
+        if b.head().is_none() {
+            return CorePending::Stalled(StallReason::InputB);
+        }
+        if lc.at_k_last() && !out.can_accept() {
+            return CorePending::Stalled(StallReason::Output);
+        }
+        CorePending::Compute
+    }
+
+    /// Bulk-account `cycles` stalled cycles of one reason (the
+    /// fast-forward engine's replacement for `cycles` repeated
+    /// [`GemmCore::step`] calls while stalled).
+    pub fn account_stalls(&mut self, reason: StallReason, cycles: u64) {
+        match reason {
+            StallReason::InputA => self.stats.stall_input_a += cycles,
+            StallReason::InputB => self.stats.stall_input_b += cycles,
+            StallReason::Output => self.stats.stall_output += cycles,
+        }
     }
 
     /// One core clock cycle.
@@ -288,6 +338,39 @@ mod tests {
         o.commit_write(tile, 0, 0);
         // ones(8,8) @ ones(8,8) accumulated over kt=2: every entry = 16
         assert!(data.iter().all(|&v| v == 16));
+    }
+
+    #[test]
+    fn pending_mirrors_step() {
+        let bounds = LoopBounds { mt: 1, nt: 1, kt: 2 };
+        let (mut a, mut b, mut o) = make_streamers(bounds, 2);
+        let mut core = GemmCore::new(GemmCoreParams::CASE_STUDY, false);
+        assert_eq!(core.pending(&a, &b, &o), CorePending::Idle);
+        core.start(bounds).unwrap();
+        assert_eq!(core.pending(&a, &b, &o), CorePending::Stalled(StallReason::InputA));
+        feed(&mut a);
+        assert_eq!(core.pending(&a, &b, &o), CorePending::Stalled(StallReason::InputB));
+        feed(&mut b);
+        assert_eq!(core.pending(&a, &b, &o), CorePending::Compute);
+        // k_last with a full output buffer -> Output stall preview
+        assert!(matches!(core.step(&mut a, &mut b, &mut o), CoreEvent::Computed { .. }));
+        while o.can_accept() {
+            o.accept(OutTile { m1: 0, n1: 0, data: None });
+        }
+        assert_eq!(core.pending(&a, &b, &o), CorePending::Stalled(StallReason::Output));
+        assert_eq!(core.step(&mut a, &mut b, &mut o), CoreEvent::Stalled(StallReason::Output));
+    }
+
+    #[test]
+    fn account_stalls_bulk_matches_counters() {
+        let mut core = GemmCore::new(GemmCoreParams::CASE_STUDY, false);
+        core.account_stalls(StallReason::InputA, 5);
+        core.account_stalls(StallReason::InputB, 2);
+        core.account_stalls(StallReason::Output, 3);
+        assert_eq!(core.stats.stall_input_a, 5);
+        assert_eq!(core.stats.stall_input_b, 2);
+        assert_eq!(core.stats.stall_output, 3);
+        assert_eq!(core.stats.stall_cycles(), 10);
     }
 
     #[test]

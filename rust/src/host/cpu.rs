@@ -102,6 +102,21 @@ impl Cpu {
         self.halted
     }
 
+    /// Stall-horizon report for the event-driven platform: the next
+    /// absolute cycle at which this core retires an instruction, given
+    /// the current cycle and the platform's remaining external-stall
+    /// budget (CSR handshake / multi-cycle-op debt). `None` once
+    /// halted — a halted core never wakes the platform again. The
+    /// platform fast-forwards to this horizon instead of polling the
+    /// stalled core every cycle.
+    pub fn next_active_cycle(&self, now: u64, stall: u64) -> Option<u64> {
+        if self.halted {
+            None
+        } else {
+            Some(now + stall + 1)
+        }
+    }
+
     /// Restart the program counter (for re-running the same program).
     pub fn restart(&mut self) {
         self.pc = 0;

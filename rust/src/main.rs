@@ -15,7 +15,8 @@
 //! opengemm info      [--config FILE.toml]  # show an instance's parameters
 //! ```
 
-use anyhow::{anyhow, bail, Result};
+use opengemm::util::error::Result;
+use opengemm::{anyhow, bail};
 
 use opengemm::compiler::{GemmShape, Layout};
 use opengemm::config::{Mechanisms, PlatformConfig};
@@ -51,6 +52,11 @@ SUBCOMMANDS:
                     --artifacts DIR
   info              print platform instance parameters
                     --config FILE.toml
+
+GLOBAL FLAGS:
+  --no-fast-forward run the simulator in per-cycle lockstep instead of
+                    the event-driven cycle-skipping engine (slow; the
+                    two are verified cycle-exact against each other)
 ";
 
 fn mechanisms_for(arch: usize) -> Result<Mechanisms> {
@@ -100,7 +106,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     };
     let functional = args.has("functional");
 
-    let coord = Coordinator::new(cfg.clone());
+    let coord =
+        Coordinator::new(cfg.clone()).with_fast_forward(args.enabled_unless_no("fast-forward"));
     let operands = if functional {
         let mut rng = Pcg32::seeded(args.u64_or("seed", 42)?);
         let mut a = vec![0i8; shape.m * shape.k];
@@ -146,6 +153,7 @@ fn cmd_ablation(args: &Args) -> Result<()> {
         workloads: args.usize_or("workloads", 500)?,
         repeats: args.usize_or("repeats", 10)? as u32,
         workers: args.usize_or("workers", 0)?,
+        fast_forward: args.enabled_unless_no("fast-forward"),
     };
     eprintln!(
         "running {} workloads x 10 repeats x 6 variants ...",
@@ -162,6 +170,7 @@ fn cmd_dnn(args: &Args) -> Result<()> {
         bert_seq: args.usize_or("bert-seq", 512)?,
         workers: args.usize_or("workers", 0)?,
         max_repeats: args.usize_or("max-repeats", 10)? as u32,
+        fast_forward: args.enabled_unless_no("fast-forward"),
     };
     let res = table2_dnn(&cfg, opts);
     println!("{}", res.render());
@@ -187,6 +196,7 @@ fn cmd_compare_gemmini(args: &Args) -> Result<()> {
     let opts = Fig7Options {
         repeats: args.usize_or("repeats", 10)? as u32,
         workers: args.usize_or("workers", 0)?,
+        fast_forward: args.enabled_unless_no("fast-forward"),
     };
     let res = fig7_gemmini(&cfg, opts);
     println!("{}", res.render());
@@ -200,7 +210,8 @@ fn cmd_verify(args: &Args) -> Result<()> {
         .map(std::path::PathBuf::from)
         .unwrap_or_else(Runtime::default_dir);
     let mut rt = Runtime::load(&dir)?;
-    let coord = Coordinator::new(cfg.clone());
+    let coord =
+        Coordinator::new(cfg.clone()).with_fast_forward(args.enabled_unless_no("fast-forward"));
     let mut rng = Pcg32::seeded(args.u64_or("seed", 7)?);
     let mut checked = 0;
     for name in rt.artifact_names().iter().map(|s| s.to_string()).collect::<Vec<_>>() {

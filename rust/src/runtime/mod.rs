@@ -7,14 +7,41 @@
 //! cycle-accurate simulator's datapath bit-exactly against these
 //! executables. Python never runs here — the HLO text was produced once
 //! by `make artifacts`.
+//!
+//! The XLA backend needs the `xla` crate, which is not available in the
+//! offline crate registry. It is therefore gated behind the `pjrt`
+//! cargo feature: without it (the default), manifest loading and
+//! metadata queries still work, but executing an artifact returns an
+//! error, and the golden-model integration tests skip themselves via
+//! `cfg!(feature = "pjrt")`.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
-use xla::PrimitiveType;
-
+use crate::anyhow;
+use crate::bail;
+use crate::util::error::Result;
 use crate::util::json::{self, Json};
+
+#[cfg(feature = "pjrt")]
+pub use xla::Literal;
+
+/// Stand-in for `xla::Literal` in builds without the PJRT backend.
+/// Never constructed; it only keeps caller code compiling.
+#[cfg(not(feature = "pjrt"))]
+#[derive(Debug, Clone)]
+pub struct Literal(());
+
+#[cfg(not(feature = "pjrt"))]
+impl Literal {
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        bail!(NO_BACKEND)
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+const NO_BACKEND: &str = "PJRT backend unavailable: vendor the `xla` crate, add it to \
+     rust/Cargo.toml as a dependency, and rebuild with `--features pjrt`";
 
 /// Argument/result metadata from `manifest.json`.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -43,11 +70,15 @@ pub enum Value {
     I32(Vec<i32>),
 }
 
-/// The runtime: PJRT client + compiled executable cache.
+/// The runtime: artifact manifest plus (with the `pjrt` feature) the
+/// PJRT client and compiled-executable cache.
 pub struct Runtime {
-    client: xla::PjRtClient,
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
     dir: PathBuf,
     manifest: HashMap<String, ArtifactMeta>,
+    #[cfg(feature = "pjrt")]
+    client: xla::PjRtClient,
+    #[cfg(feature = "pjrt")]
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
@@ -67,40 +98,53 @@ fn tensor_meta(v: &Json) -> Result<TensorMeta> {
     Ok(TensorMeta { shape, dtype })
 }
 
+/// Parse `manifest.json` under `dir` into artifact metadata.
+fn load_manifest(dir: &Path) -> Result<HashMap<String, ArtifactMeta>> {
+    let manifest_path = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&manifest_path)
+        .map_err(|e| anyhow!("reading {manifest_path:?} (run `make artifacts`): {e}"))?;
+    let doc = json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+    let obj = doc.as_obj().ok_or_else(|| anyhow!("manifest is not an object"))?;
+    let mut manifest = HashMap::new();
+    for (name, entry) in obj {
+        let file = entry
+            .get("file")
+            .and_then(|f| f.as_str())
+            .ok_or_else(|| anyhow!("artifact {name} missing file"))?
+            .to_string();
+        let args = entry
+            .get("args")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("artifact {name} missing args"))?
+            .iter()
+            .map(tensor_meta)
+            .collect::<Result<Vec<_>>>()?;
+        let results = entry
+            .get("results")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("artifact {name} missing results"))?
+            .iter()
+            .map(tensor_meta)
+            .collect::<Result<Vec<_>>>()?;
+        manifest.insert(name.clone(), ArtifactMeta { file, args, results });
+    }
+    Ok(manifest)
+}
+
 impl Runtime {
-    /// Load the manifest and create the PJRT CPU client.
+    /// Load the manifest (and, with the `pjrt` feature, create the
+    /// PJRT CPU client).
     pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
         let dir = dir.as_ref().to_path_buf();
-        let manifest_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
-        let doc = json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
-        let obj = doc.as_obj().ok_or_else(|| anyhow!("manifest is not an object"))?;
-        let mut manifest = HashMap::new();
-        for (name, entry) in obj {
-            let file = entry
-                .get("file")
-                .and_then(|f| f.as_str())
-                .ok_or_else(|| anyhow!("artifact {name} missing file"))?
-                .to_string();
-            let args = entry
-                .get("args")
-                .and_then(|a| a.as_arr())
-                .ok_or_else(|| anyhow!("artifact {name} missing args"))?
-                .iter()
-                .map(tensor_meta)
-                .collect::<Result<Vec<_>>>()?;
-            let results = entry
-                .get("results")
-                .and_then(|a| a.as_arr())
-                .ok_or_else(|| anyhow!("artifact {name} missing results"))?
-                .iter()
-                .map(tensor_meta)
-                .collect::<Result<Vec<_>>>()?;
-            manifest.insert(name.clone(), ArtifactMeta { file, args, results });
-        }
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime { client, dir, manifest, cache: HashMap::new() })
+        let manifest = load_manifest(&dir)?;
+        Ok(Runtime {
+            #[cfg(feature = "pjrt")]
+            client: xla::PjRtClient::cpu()?,
+            #[cfg(feature = "pjrt")]
+            cache: HashMap::new(),
+            dir,
+            manifest,
+        })
     }
 
     /// Default artifacts directory (repo-root/artifacts), overridable
@@ -120,7 +164,10 @@ impl Runtime {
     pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
         self.manifest.get(name)
     }
+}
 
+#[cfg(feature = "pjrt")]
+impl Runtime {
     /// Compile (and cache) an artifact.
     fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
         if !self.cache.contains_key(name) {
@@ -140,6 +187,7 @@ impl Runtime {
     }
 
     fn literal(value: &Value, meta: &TensorMeta) -> Result<xla::Literal> {
+        use xla::PrimitiveType;
         let dims: Vec<i64> = meta.shape.iter().map(|&d| d as i64).collect();
         match (value, meta.dtype.as_str()) {
             (Value::I8(v), "s8") => {
@@ -163,7 +211,7 @@ impl Runtime {
 
     /// Execute an artifact with typed inputs; returns raw result
     /// literals (tuple-unpacked).
-    pub fn execute(&mut self, name: &str, args: &[Value]) -> Result<Vec<xla::Literal>> {
+    pub fn execute(&mut self, name: &str, args: &[Value]) -> Result<Vec<Literal>> {
         let meta = self
             .manifest
             .get(name)
@@ -172,13 +220,13 @@ impl Runtime {
         if args.len() != meta.args.len() {
             bail!("artifact {name}: {} args given, {} expected", args.len(), meta.args.len());
         }
-        let literals: Vec<xla::Literal> = args
+        let literals: Vec<Literal> = args
             .iter()
             .zip(&meta.args)
             .map(|(v, m)| Self::literal(v, m))
             .collect::<Result<Vec<_>>>()?;
         let exe = self.executable(name)?;
-        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let result = exe.execute::<Literal>(&literals)?[0][0].to_literal_sync()?;
         // lowered with return_tuple=True
         Ok(result.to_tuple()?)
     }
@@ -194,9 +242,53 @@ impl Runtime {
     }
 
     /// Read back an int8 result literal (requantized outputs).
-    pub fn result_i8(lit: &xla::Literal) -> Result<Vec<i8>> {
+    pub fn result_i8(lit: &Literal) -> Result<Vec<i8>> {
         // no native i8 reader either: convert to s32 first
-        let as32 = lit.convert(PrimitiveType::S32)?;
+        let as32 = lit.convert(xla::PrimitiveType::S32)?;
         Ok(as32.to_vec::<i32>()?.into_iter().map(|v| v as i8).collect())
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    pub fn execute(&mut self, _name: &str, _args: &[Value]) -> Result<Vec<Literal>> {
+        bail!(NO_BACKEND)
+    }
+
+    pub fn execute_gemm(&mut self, _name: &str, _a: &[i8], _b: &[i8]) -> Result<Vec<i32>> {
+        bail!(NO_BACKEND)
+    }
+
+    pub fn result_i8(_lit: &Literal) -> Result<Vec<i8>> {
+        bail!(NO_BACKEND)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_dir_points_at_artifacts() {
+        // The OPENGEMM_ARTIFACTS override is exercised by callers, not
+        // here: mutating process env races the parallel test harness.
+        if std::env::var_os("OPENGEMM_ARTIFACTS").is_none() {
+            assert!(Runtime::default_dir().ends_with("artifacts"));
+        }
+    }
+
+    #[test]
+    fn load_fails_cleanly_without_manifest() {
+        let err = Runtime::load("/definitely/not/a/dir").unwrap_err();
+        assert!(err.to_string().contains("manifest.json"), "{err}");
+    }
+
+    #[test]
+    fn tensor_meta_parses_shape_and_dtype() {
+        let doc = json::parse(r#"{"shape": [2, 3], "dtype": "s8"}"#).unwrap();
+        let meta = tensor_meta(&doc).unwrap();
+        assert_eq!(meta.shape, vec![2, 3]);
+        assert_eq!(meta.dtype, "s8");
+        assert_eq!(meta.elements(), 6);
     }
 }

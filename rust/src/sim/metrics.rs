@@ -7,6 +7,7 @@
 //! - **Overall utilization (OU)**: SU x TU — fraction of peak MACs
 //!   actually used.
 
+use crate::gemm_core::StallReason;
 use crate::spm::SpmStats;
 
 /// Cycle-level counters accumulated by one simulation.
@@ -44,6 +45,29 @@ pub struct SimMetrics {
 impl SimMetrics {
     pub fn stall_cycles(&self) -> u64 {
         self.stall_input_a + self.stall_input_b + self.stall_output
+    }
+
+    /// Bulk-account `n` skipped *stalled* cycles (fast-forward engine):
+    /// equivalent to `n` lockstep cycles in which the core reported the
+    /// same stall reason. Does not touch `total_cycles` — the caller
+    /// advances the clock.
+    pub fn add_stalls(&mut self, reason: StallReason, n: u64) {
+        match reason {
+            StallReason::InputA => self.stall_input_a += n,
+            StallReason::InputB => self.stall_input_b += n,
+            StallReason::Output => self.stall_output += n,
+        }
+    }
+
+    /// Bulk-account `n` skipped *idle* cycles (fast-forward engine).
+    pub fn add_idle(&mut self, n: u64) {
+        self.idle_cycles += n;
+    }
+
+    /// Bulk-account `n` skipped host-CSR-stall cycles (fast-forward
+    /// engine).
+    pub fn add_host_csr_stalls(&mut self, n: u64) {
+        self.host_csr_stall += n;
     }
 
     /// Temporal utilization.
@@ -104,6 +128,30 @@ mod tests {
         let r = UtilizationReport::from_metrics(0.9, &m);
         assert!((r.temporal - 0.8).abs() < 1e-12);
         assert!((r.overall - 0.72).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bulk_increments_match_lockstep_sums() {
+        let mut bulk = SimMetrics::default();
+        bulk.add_stalls(StallReason::InputA, 3);
+        bulk.add_stalls(StallReason::Output, 2);
+        bulk.add_idle(4);
+        bulk.add_host_csr_stalls(5);
+        let mut lock = SimMetrics::default();
+        for _ in 0..3 {
+            lock.stall_input_a += 1;
+        }
+        for _ in 0..2 {
+            lock.stall_output += 1;
+        }
+        for _ in 0..4 {
+            lock.idle_cycles += 1;
+        }
+        for _ in 0..5 {
+            lock.host_csr_stall += 1;
+        }
+        assert_eq!(bulk, lock);
+        assert_eq!(bulk.stall_cycles(), 5);
     }
 
     #[test]

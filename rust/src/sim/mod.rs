@@ -21,15 +21,49 @@
 //! Operand data appears in the SPM "for free" at run start and results
 //! are collected at run completion: the paper excludes DRAM<->SPM
 //! movement from all cycle counts (Sec. 4.3 footnote), and so do we.
+//!
+//! ## Event model: cycle-skipping fast-forward
+//!
+//! Long stretches of simulated time are *provably inert*: the core is
+//! stalled or idle, every streamer is waiting on an SPM access whose
+//! completion cycle is already scheduled, and the host is sleeping off
+//! a CSR-handshake stall with a known expiry. Stepping such stretches
+//! one [`Platform::cycle`] at a time only increments counters.
+//!
+//! With [`SimOptions::fast_forward`] (default on), [`Platform`] runs an
+//! event-driven engine instead: `next_event` computes the earliest
+//! future cycle at which the frozen platform state can change — the
+//! minimum over
+//!
+//! - the oldest in-flight fetch completion of each input streamer
+//!   ([`InputStreamer::next_delivery`]),
+//! - the outstanding writeback completion
+//!   ([`OutputStreamer::next_delivery`]),
+//! - each streamer's bank-gate expiry, when a new access is otherwise
+//!   issuable ([`InputStreamer::next_issue`] /
+//!   [`OutputStreamer::next_issue`]),
+//! - the host's stall horizon ([`crate::host::Cpu::next_active_cycle`]),
+//!
+//! and `advance_to` jumps the clock there in one step, batch-accounting
+//! the skipped cycles into the same [`SimMetrics`] / core-stall
+//! counters the lockstep loop would have incremented. Whenever
+//! anything *can* happen next cycle (a tile-MAC would issue, a latched
+//! start is waiting, a run is completing, the host is runnable), the
+//! engine degrades to plain single-cycle stepping, so the two modes are
+//! **bit-identical** in every counter — a property enforced by the
+//! `fast_forward_is_cycle_exact` differential test in
+//! `tests/platform_properties.rs`.
 
 pub mod metrics;
 
 pub use metrics::{SimMetrics, UtilizationReport};
 
+use std::sync::Arc;
+
 use crate::compiler::{layout, CompiledCall, CompiledJob};
 use crate::config::{Mechanisms, PlatformConfig};
 use crate::csr::{CsrError, CsrManager};
-use crate::gemm_core::{CoreEvent, GemmCore};
+use crate::gemm_core::{CoreEvent, CorePending, GemmCore};
 use crate::host::{Cpu, CsrBus, StepResult};
 use crate::spm::Spm;
 use crate::streamer::{InputStreamer, OutputStreamer};
@@ -45,6 +79,9 @@ pub struct SimOptions {
     pub csr_latency: u64,
     /// Runaway guard.
     pub max_cycles: u64,
+    /// Event-driven cycle skipping (see the module docs). Cycle-exact
+    /// vs the lockstep loop; disable only to cross-check timing.
+    pub fast_forward: bool,
 }
 
 impl Default for SimOptions {
@@ -54,6 +91,7 @@ impl Default for SimOptions {
             functional: false,
             csr_latency: 8,
             max_cycles: 2_000_000_000,
+            fast_forward: true,
         }
     }
 }
@@ -122,23 +160,75 @@ pub struct Platform {
     addr_b: Vec<u64>,
     addr_c: Vec<u64>,
     pub metrics: SimMetrics,
+    /// `cycle()` invocations actually executed this run — equals
+    /// `metrics.total_cycles` in lockstep mode, (much) smaller with
+    /// fast-forward. Host-effort telemetry only; not part of the
+    /// simulated-hardware metrics.
+    pub steps_executed: u64,
     // job state
     job: Option<JobState>,
 }
 
 struct JobState {
-    calls: Vec<CompiledCall>,
+    /// Shared with the [`CompiledJob`] — cloning the `Arc` per
+    /// `run_job` call replaces the per-run deep copy of every call's
+    /// placement and CSR image (benches re-run the same job thousands
+    /// of times).
+    calls: Arc<[CompiledCall]>,
     /// Which call the *next* start corresponds to.
     next_call: usize,
     /// Which call is currently running.
     running_call: Option<usize>,
-    functional_inputs: Option<Vec<(Vec<i8>, Vec<i8>)>>,
+    functional_inputs: Option<FunctionalInputs>,
     /// Assembled output (row-major m x n of the parent shape).
     c_out: Option<Vec<i32>>,
     parent_n: usize,
     parent_m: usize,
     run_active: bool,
     run_start_cycle: u64,
+}
+
+/// Per-call operand sub-blocks for functional mode, pre-sliced once per
+/// job into two flat buffers (instead of two fresh `Vec`s per call).
+struct FunctionalInputs {
+    a: Vec<i8>,
+    b: Vec<i8>,
+    /// Per call: (range into `a`, range into `b`).
+    spans: Vec<(std::ops::Range<usize>, std::ops::Range<usize>)>,
+}
+
+impl FunctionalInputs {
+    /// Slice the parent operands into each call's blocks (the DMA's
+    /// work list).
+    fn slice(job: &CompiledJob, a: &[i8], b: &[i8]) -> FunctionalInputs {
+        let (k, n) = (job.shape.k, job.shape.n);
+        let a_total: usize = job.calls.iter().map(|c| c.block.shape.m * k).sum();
+        let b_total: usize = job.calls.iter().map(|c| k * c.block.shape.n).sum();
+        let mut a_buf = Vec::with_capacity(a_total);
+        let mut b_buf = Vec::with_capacity(b_total);
+        let mut spans = Vec::with_capacity(job.calls.len());
+        for call in job.calls.iter() {
+            let blk = &call.block;
+            let a_start = a_buf.len();
+            for i in 0..blk.shape.m {
+                let src = (blk.m_off + i) * k;
+                a_buf.extend_from_slice(&a[src..src + k]);
+            }
+            let b_start = b_buf.len();
+            for i in 0..k {
+                let src = i * n + blk.n_off;
+                b_buf.extend_from_slice(&b[src..src + blk.shape.n]);
+            }
+            spans.push((a_start..a_buf.len(), b_start..b_buf.len()));
+        }
+        FunctionalInputs { a: a_buf, b: b_buf, spans }
+    }
+
+    /// The (A-block, B-block) slices of one call.
+    fn call(&self, idx: usize) -> (&[i8], &[i8]) {
+        let (ra, rb) = &self.spans[idx];
+        (&self.a[ra.clone()], &self.b[rb.clone()])
+    }
 }
 
 impl Platform {
@@ -161,6 +251,7 @@ impl Platform {
             addr_b: Vec::with_capacity(64),
             addr_c: Vec::with_capacity(64),
             metrics: SimMetrics::default(),
+            steps_executed: 0,
             cfg,
             opts,
             job: None,
@@ -182,37 +273,13 @@ impl Platform {
             assert_eq!(b.map(|x| x.len()), Some(k * n), "B operand size");
         }
 
-        // Pre-slice per-call operand blocks (the DMA's work list).
-        let functional_inputs = if functional {
-            let a = a.unwrap();
-            let b = b.unwrap();
-            Some(
-                job.calls
-                    .iter()
-                    .map(|call| {
-                        let blk = &call.block;
-                        let mut asub = vec![0i8; blk.shape.m * k];
-                        for i in 0..blk.shape.m {
-                            let src = (blk.m_off + i) * k;
-                            asub[i * k..(i + 1) * k].copy_from_slice(&a[src..src + k]);
-                        }
-                        let mut bsub = vec![0i8; k * blk.shape.n];
-                        for i in 0..k {
-                            let src = i * n + blk.n_off;
-                            bsub[i * blk.shape.n..(i + 1) * blk.shape.n]
-                                .copy_from_slice(&b[src..src + blk.shape.n]);
-                        }
-                        (asub, bsub)
-                    })
-                    .collect(),
-            )
-        } else {
-            None
-        };
+        // Pre-slice per-call operand blocks once, into flat buffers.
+        let functional_inputs =
+            functional.then(|| FunctionalInputs::slice(job, a.unwrap(), b.unwrap()));
 
         self.reset_run_state();
         self.job = Some(JobState {
-            calls: job.calls.clone(),
+            calls: Arc::clone(&job.calls),
             next_call: 0,
             running_call: None,
             functional_inputs,
@@ -224,7 +291,13 @@ impl Platform {
         });
         self.host = Some(Cpu::new(job.program.clone(), 1 << 16));
 
+        let fast_forward = self.opts.fast_forward;
         while !self.finished() {
+            if fast_forward {
+                if let Some(t) = self.next_event() {
+                    self.advance_to(t);
+                }
+            }
             self.cycle()?;
             if self.metrics.total_cycles > self.opts.max_cycles {
                 return Err(SimError::CycleLimit(self.opts.max_cycles));
@@ -249,6 +322,7 @@ impl Platform {
         self.host_stall = 0;
         self.now = 0;
         self.metrics = SimMetrics::default();
+        self.steps_executed = 0;
         self.spm.reset_stats();
     }
 
@@ -266,6 +340,7 @@ impl Platform {
     pub fn cycle(&mut self) -> Result<(), SimError> {
         self.now += 1;
         self.metrics.total_cycles += 1;
+        self.steps_executed += 1;
         let now = self.now;
 
         // ---- 1. deliver completed memory traffic --------------------
@@ -339,6 +414,96 @@ impl Platform {
         Ok(())
     }
 
+    /// The earliest absolute cycle `> self.now` at which the platform
+    /// state can change, or `None` when no event is scheduled (a
+    /// deadlocked platform; the caller then falls back to lockstep
+    /// stepping and the runaway guard).
+    ///
+    /// Returning `self.now + 1` means "something can happen next cycle
+    /// — simulate it"; any later value proves every cycle before it is
+    /// a pure counter increment (see [`Platform::advance_to`]).
+    fn next_event(&self) -> Option<u64> {
+        let next = self.now + 1;
+
+        // Immediately-actionable states: the coming cycle must be
+        // simulated for real.
+        if self.core.pending(&self.a_stream, &self.b_stream, &self.c_stream)
+            == CorePending::Compute
+        {
+            return Some(next);
+        }
+        if self.csr.has_fired_start() && !self.core.busy() {
+            return Some(next); // a latched start launches next cycle
+        }
+        let run_completing = self
+            .job
+            .as_ref()
+            .map(|j| j.run_active && !self.core.busy() && self.c_stream.is_drained())
+            .unwrap_or(false);
+        if run_completing {
+            return Some(next);
+        }
+        if let Some(host) = self.host.as_ref() {
+            if !host.halted() && self.host_stall == 0 {
+                return Some(next); // host retires an instruction
+            }
+        }
+
+        // Otherwise the state is frozen until the earliest scheduled
+        // event: a delivery, a bank-gate expiry that unblocks an issue,
+        // or the host's stall horizon.
+        let mut wake: Option<u64> = None;
+        let mut consider = |e: Option<u64>| {
+            if let Some(e) = e {
+                let e = e.max(next);
+                wake = Some(wake.map_or(e, |w| w.min(e)));
+            }
+        };
+        let a_starved = self.core.busy() && self.a_stream.head().is_none();
+        let b_starved = self.core.busy() && self.b_stream.head().is_none();
+        consider(self.a_stream.next_delivery());
+        consider(self.b_stream.next_delivery());
+        consider(self.c_stream.next_delivery());
+        consider(self.a_stream.next_issue(a_starved));
+        consider(self.b_stream.next_issue(b_starved));
+        consider(self.c_stream.next_issue());
+        if let Some(host) = self.host.as_ref() {
+            consider(host.next_active_cycle(self.now, self.host_stall));
+        }
+        wake
+    }
+
+    /// Fast-forward the clock to just before event time `t`,
+    /// batch-accounting the skipped cycles exactly as `t - now - 1`
+    /// no-op invocations of [`Platform::cycle`] would have: total /
+    /// idle / stall counters (platform *and* core statistics) and the
+    /// host's CSR-stall budget. Must only be called with the `t`
+    /// returned by [`Platform::next_event`].
+    fn advance_to(&mut self, t: u64) {
+        debug_assert!(t > self.now);
+        let skip = t - (self.now + 1);
+        if skip == 0 {
+            return;
+        }
+        match self.core.pending(&self.a_stream, &self.b_stream, &self.c_stream) {
+            CorePending::Idle => self.metrics.add_idle(skip),
+            CorePending::Stalled(reason) => {
+                self.metrics.add_stalls(reason, skip);
+                self.core.account_stalls(reason, skip);
+            }
+            CorePending::Compute => unreachable!("fast-forward across a compute cycle"),
+        }
+        if let Some(host) = self.host.as_ref() {
+            if !host.halted() {
+                debug_assert!(self.host_stall >= skip, "host wakes inside a fast-forward window");
+                self.host_stall -= skip;
+                self.metrics.add_host_csr_stalls(skip);
+            }
+        }
+        self.now += skip;
+        self.metrics.total_cycles += skip;
+    }
+
     /// Per-streamer memory issue. Each input streamer pipelines up to
     /// its buffer depth of outstanding tile fetches; its banks are busy
     /// for `max own-bank load` cycles per fetch, and a fetch issued the
@@ -348,7 +513,7 @@ impl Platform {
     /// (banks are 1R1W).
     fn issue_memory(&mut self, now: u64) {
         let word = self.cfg.mem.word_bytes() as u64;
-        let word_shift = word.trailing_zeros();
+        let word_shift = self.spm.word_shift();
         let n_bank = self.cfg.mem.n_bank as u32;
         let rd_lat = self.cfg.mem.read_latency;
         let wr_lat = self.cfg.mem.write_latency;
@@ -471,7 +636,7 @@ impl Platform {
         // simulated cycles per the paper's accounting).
         if let Some(inputs) = job.functional_inputs.as_ref() {
             let call = &job.calls[call_idx];
-            let (asub, bsub) = &inputs[call_idx];
+            let (asub, bsub) = inputs.call(call_idx);
             layout::pack_a(
                 &mut self.spm,
                 &self.cfg,
@@ -543,9 +708,20 @@ mod tests {
         repeats: u32,
         functional: bool,
     ) -> (JobResult, CompiledJob) {
+        run_mode(shape, layout, mech, repeats, functional, true)
+    }
+
+    fn run_mode(
+        shape: GemmShape,
+        layout: Layout,
+        mech: Mechanisms,
+        repeats: u32,
+        functional: bool,
+        fast_forward: bool,
+    ) -> (JobResult, CompiledJob) {
         let cfg = PlatformConfig::case_study();
         let job = compile_gemm(&cfg, shape, layout, repeats, mech.config_preloading).unwrap();
-        let opts = SimOptions { mechanisms: mech, functional, ..Default::default() };
+        let opts = SimOptions { mechanisms: mech, functional, fast_forward, ..Default::default() };
         let mut platform = Platform::new(cfg, opts);
         let (a, b) = if functional {
             let mut rng = Pcg32::seeded(42);
@@ -657,6 +833,53 @@ mod tests {
             res.report.overall < 0.5,
             "baseline should be slow, got {:?}",
             res.report
+        );
+    }
+
+    #[test]
+    fn fast_forward_matches_lockstep_smoke() {
+        // the exhaustive randomized grid lives in
+        // tests/platform_properties.rs; this pins a few known-tricky
+        // corners (deep-K stalls, config-bound tiny shapes, splits)
+        let cases = [
+            (GemmShape::new(16, 256, 16), Layout::RowMajor, Mechanisms::BASELINE, 3),
+            (GemmShape::new(8, 8, 8), Layout::TiledInterleaved, Mechanisms::BASELINE, 10),
+            (GemmShape::new(64, 64, 64), Layout::TiledInterleaved, Mechanisms::ALL, 10),
+            (GemmShape::new(48, 40, 56), Layout::TiledContiguous, Mechanisms::CPL_BUF, 2),
+            (GemmShape::new(256, 64, 256), Layout::TiledInterleaved, Mechanisms::ALL, 1),
+        ];
+        for (shape, layout, mech, repeats) in cases {
+            let (ff, _) = run_mode(shape, layout, mech, repeats, false, true);
+            let (ls, _) = run_mode(shape, layout, mech, repeats, false, false);
+            assert_eq!(
+                ff.metrics, ls.metrics,
+                "fast-forward metrics diverge for {shape:?} {layout:?} {}",
+                mech.label()
+            );
+            assert_eq!(ff.report, ls.report, "reports diverge for {shape:?}");
+        }
+    }
+
+    #[test]
+    fn fast_forward_skips_cycles_in_bulk() {
+        // on a stall-heavy workload (no prefetch, deep K, conflicting
+        // row-major layout) the engine must execute far fewer `cycle()`
+        // steps than simulated cycles — that ratio is the speedup lever
+        let cfg = PlatformConfig::case_study();
+        let job =
+            compile_gemm(&cfg, GemmShape::new(16, 256, 16), Layout::RowMajor, 3, false).unwrap();
+        let opts = SimOptions {
+            mechanisms: Mechanisms::BASELINE,
+            fast_forward: true,
+            ..Default::default()
+        };
+        let mut platform = Platform::new(cfg, opts);
+        platform.run_job(&job, None, None).unwrap();
+        let total = platform.metrics.total_cycles;
+        let steps = platform.steps_executed;
+        assert!(
+            steps * 2 < total,
+            "expected >50% of cycles skipped, got {steps} steps for {total} cycles"
         );
     }
 

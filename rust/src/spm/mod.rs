@@ -90,6 +90,15 @@ impl Spm {
         byte_addr / self.params.word_bytes() as u64
     }
 
+    /// log2 of the word size in bytes — the byte->word shift the
+    /// simulator's per-epoch hot path uses instead of re-deriving it
+    /// from the config every access.
+    #[inline]
+    pub fn word_shift(&self) -> u32 {
+        debug_assert!(self.params.word_bytes().is_power_of_two());
+        (self.params.word_bytes() as u64).trailing_zeros()
+    }
+
     // ---------------------------------------------------------------
     // Timing
     // ---------------------------------------------------------------

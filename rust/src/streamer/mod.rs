@@ -195,6 +195,35 @@ impl InputStreamer {
         self.issue_gate = bank_free;
     }
 
+    /// Completion cycle of the oldest in-flight fetch — the next
+    /// delivery event of this streamer (completions are in-order, so
+    /// the front of the queue is the earliest). `None` when nothing is
+    /// in flight.
+    pub fn next_delivery(&self) -> Option<u64> {
+        self.inflight.front().map(|&(t, _)| t)
+    }
+
+    /// Earliest cycle at which this streamer could issue a new fetch,
+    /// assuming the rest of the platform state stays frozen (no
+    /// deliveries, no FIFO pops) until then. `None` when no fetch can
+    /// become issuable without some other event happening first.
+    ///
+    /// Invariant used by the fast-forward engine: for any `now`,
+    /// `wants_fetch(now, starved)` is equivalent to
+    /// `next_issue(starved).is_some_and(|t| now >= t)`.
+    pub fn next_issue(&self, core_starved: bool) -> Option<u64> {
+        if self.done_fetching() {
+            return None;
+        }
+        if self.fifo.len() + self.inflight.len() >= self.fifo.capacity() {
+            return None;
+        }
+        if !self.prefetch && !(core_starved && self.fifo.is_empty() && self.inflight.is_empty()) {
+            return None;
+        }
+        Some(self.issue_gate)
+    }
+
     /// Move completed fetches into the FIFO.
     pub fn deliver_ready(&mut self, now: u64) {
         while let Some(&(t, _)) = self.inflight.front() {
@@ -306,6 +335,22 @@ impl OutputStreamer {
     pub fn commit_write(&mut self, tile: OutTile, completion: u64, bank_free: u64) {
         self.outstanding = Some((completion, tile));
         self.issue_gate = bank_free;
+    }
+
+    /// Completion cycle of the outstanding writeback — the next
+    /// delivery event of this streamer. `None` when idle.
+    pub fn next_delivery(&self) -> Option<u64> {
+        self.outstanding.as_ref().map(|&(t, _)| t)
+    }
+
+    /// Earliest cycle at which the writer could start its next
+    /// writeback, assuming frozen platform state until then (see
+    /// [`InputStreamer::next_issue`] for the invariant).
+    pub fn next_issue(&self) -> Option<u64> {
+        if self.outstanding.is_some() || self.buffer.is_empty() {
+            return None;
+        }
+        Some(self.issue_gate)
     }
 
     /// Returns the written tile once `now` reaches its completion (for
@@ -430,6 +475,52 @@ mod tests {
         }
         let expect: Vec<_> = (0..b.total_tiles()).map(|p| b.decompose(p)).collect();
         assert_eq!(seen, expect);
+    }
+
+    #[test]
+    fn next_issue_agrees_with_wants_fetch() {
+        // the fast-forward engine relies on this equivalence
+        for prefetch in [false, true] {
+            let mut s = InputStreamer::new(2, prefetch);
+            s.configure(AguConfig::linear(0, 1, 0), bounds());
+            let mut addrs = Vec::new();
+            for now in 0..40u64 {
+                for starved in [false, true] {
+                    let via_next = s.next_issue(starved).map(|t| now >= t).unwrap_or(false);
+                    assert_eq!(
+                        s.wants_fetch(now, starved),
+                        via_next,
+                        "prefetch={prefetch} now={now} starved={starved}"
+                    );
+                }
+                if s.wants_fetch(now, true) {
+                    let pos = s.begin_fetch(8, &mut addrs);
+                    s.commit_fetch(pos, None, now + 3, now + 2);
+                }
+                assert_eq!(s.next_delivery(), s.inflight.front().map(|&(t, _)| t));
+                if now % 3 == 0 {
+                    s.deliver_ready(now);
+                    let _ = s.pop();
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn output_next_issue_agrees_with_wants_write() {
+        let mut o = OutputStreamer::new(2);
+        o.configure(AguConfig::linear(0, 1, 0));
+        assert_eq!(o.next_issue(), None, "empty buffer: nothing to write");
+        o.accept(OutTile { m1: 0, n1: 0, data: None });
+        let mut addrs = Vec::new();
+        for now in 0..10u64 {
+            let via_next = o.next_issue().map(|t| now >= t).unwrap_or(false);
+            assert_eq!(o.wants_write(now), via_next, "now={now}");
+        }
+        let tile = o.begin_write(8, &mut addrs);
+        o.commit_write(tile, 5, 4);
+        assert_eq!(o.next_delivery(), Some(5));
+        assert_eq!(o.next_issue(), None, "outstanding write blocks issue");
     }
 
     #[test]

@@ -105,6 +105,11 @@ impl Args {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
 
+    /// Default-on switch: true unless `--no-<key>` was passed.
+    pub fn enabled_unless_no(&self, key: &str) -> bool {
+        !self.has(&format!("no-{key}"))
+    }
+
     /// Parse a `MxKxN` triple like `64x128x32`.
     pub fn shape_or(
         &self,
@@ -159,6 +164,13 @@ mod tests {
         let a = parse(&["--shape", "64x128x32"]);
         assert_eq!(a.shape_or("shape", (0, 0, 0)).unwrap(), (64, 128, 32));
         assert!(parse(&["--shape", "8x8"]).shape_or("shape", (0, 0, 0)).is_err());
+    }
+
+    #[test]
+    fn default_on_switches() {
+        let a = parse(&["--no-fast-forward"]);
+        assert!(!a.enabled_unless_no("fast-forward"));
+        assert!(a.enabled_unless_no("prefetch"));
     }
 
     #[test]

@@ -1,0 +1,82 @@
+//! Minimal error plumbing — `anyhow` is unavailable in the offline
+//! crate registry, so the binaries, examples and the runtime loader use
+//! a boxed dynamic error plus [`anyhow!`]/[`bail!`] macros mirroring
+//! the small subset of the anyhow API this codebase needs.
+//!
+//! [`anyhow!`]: crate::anyhow
+//! [`bail!`]: crate::bail
+
+/// A boxed dynamic error.
+pub type Error = Box<dyn std::error::Error + Send + Sync + 'static>;
+
+/// Result alias used by the CLI, the examples and the artifact runtime.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Build an [`Error`] from anything displayable.
+pub fn msg(m: impl std::fmt::Display) -> Error {
+    m.to_string().into()
+}
+
+/// Build an [`Error`] from a format string (with implicit capture) or
+/// from any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $(, $arg:expr)* $(,)?) => {
+        $crate::util::error::msg(format!($fmt $(, $arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::util::error::msg($err)
+    };
+}
+
+/// Return early with an [`anyhow!`]-constructed error.
+///
+/// [`anyhow!`]: crate::anyhow
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn msg_roundtrips_display() {
+        let e = msg("boom");
+        assert_eq!(e.to_string(), "boom");
+    }
+
+    #[test]
+    fn anyhow_macro_formats_and_wraps() {
+        let code = 7;
+        let e = crate::anyhow!("failed with {code}");
+        assert_eq!(e.to_string(), "failed with 7");
+        let io = std::io::Error::other("io down");
+        let e = crate::anyhow!(io);
+        assert_eq!(e.to_string(), "io down");
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                crate::bail!("nope: {}", 3);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(f(true).unwrap_err().to_string(), "nope: 3");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/path")?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+}

@@ -1,11 +1,12 @@
 //! Dependency-free utility substrates: PRNG, statistics, JSON, tables,
-//! CLI parsing, micro-benchmarking and property testing. These replace
-//! `rand`, `serde`, `clap`, `criterion` and `proptest`, none of which are
-//! available in the offline crate registry.
+//! CLI parsing, error plumbing, micro-benchmarking and property testing.
+//! These replace `rand`, `serde`, `clap`, `anyhow`, `criterion` and
+//! `proptest`, none of which are available in the offline crate registry.
 
 pub mod bench;
 pub mod check;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod rng;
 pub mod stats;

@@ -12,6 +12,10 @@ use opengemm::runtime::{Runtime, Value};
 use opengemm::util::rng::Pcg32;
 
 fn runtime() -> Option<Runtime> {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("SKIP: built without the `pjrt` feature (no XLA backend available)");
+        return None;
+    }
     let dir = Runtime::default_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("SKIP: artifacts not built at {dir:?} (run `make artifacts`)");

@@ -7,6 +7,7 @@ use opengemm::config::{Mechanisms, PlatformConfig};
 use opengemm::coordinator::{Coordinator, JobRequest};
 use opengemm::prop_assert;
 use opengemm::prop_assert_eq;
+use opengemm::sim::{Platform, SimOptions};
 use opengemm::util::check::property;
 use opengemm::util::rng::Pcg32;
 
@@ -203,6 +204,67 @@ fn cpl_gain_peaks_where_config_matches_compute() {
     assert!(mid > tiny, "gain should peak mid-size: tiny {tiny:.2} mid {mid:.2}");
     assert!(mid > large, "gain should peak mid-size: large {large:.2} mid {mid:.2}");
     assert!(tiny >= 0.99 && large >= 0.99, "CPL never hurts");
+}
+
+#[test]
+fn fast_forward_is_cycle_exact() {
+    // The event-driven cycle-skipping engine must produce *bit-identical*
+    // SimMetrics (total/compute/stall/idle cycles, host counters, SPM
+    // traffic) to the per-cycle lockstep loop, across a randomized
+    // shape x layout x mechanisms x functional/timing grid. This is the
+    // differential proof the fast-forward default rests on.
+    let cfg = PlatformConfig::case_study();
+    property("fast-forward == lockstep", 24, |rng| {
+        let shape = rand_shape(rng, 96);
+        let layout = *rng.choose(&[
+            Layout::RowMajor,
+            Layout::TiledContiguous,
+            Layout::TiledInterleaved,
+        ]);
+        let mech = *rng.choose(&[
+            Mechanisms::BASELINE,
+            Mechanisms::CPL,
+            Mechanisms::CPL_BUF,
+            Mechanisms::ALL,
+        ]);
+        let functional = rng.below(2) == 1;
+        let repeats = rng.below(3) + 1;
+        let job = compile_gemm(&cfg, shape, layout, repeats, mech.config_preloading)
+            .map_err(|e| e.to_string())?;
+        let operands = if functional {
+            let mut a = vec![0i8; shape.m * shape.k];
+            let mut b = vec![0i8; shape.k * shape.n];
+            rng.fill_i8(&mut a);
+            rng.fill_i8(&mut b);
+            Some((a, b))
+        } else {
+            None
+        };
+        let run = |fast_forward: bool| -> Result<opengemm::sim::JobResult, String> {
+            let opts = SimOptions {
+                mechanisms: mech,
+                functional,
+                fast_forward,
+                ..Default::default()
+            };
+            let mut platform = Platform::new(cfg.clone(), opts);
+            let (a, b) = match &operands {
+                Some((a, b)) => (Some(a.as_slice()), Some(b.as_slice())),
+                None => (None, None),
+            };
+            platform.run_job(&job, a, b).map_err(|e| e.to_string())
+        };
+        let ff = run(true)?;
+        let ls = run(false)?;
+        prop_assert_eq!(
+            ff.metrics,
+            ls.metrics,
+            "metrics diverge for {shape:?} {layout:?} {} functional={functional} x{repeats}",
+            mech.label()
+        );
+        prop_assert_eq!(ff.c, ls.c, "functional results diverge for {shape:?} {layout:?}");
+        Ok(())
+    });
 }
 
 #[test]
