@@ -8,7 +8,7 @@
 use opengemm::compiler::{compile_gemm, GemmShape, Layout};
 use opengemm::config::{GemmCoreParams, Mechanisms, PlatformConfig};
 use opengemm::csr::CsrManager;
-use opengemm::gemm_core::{tile_mac, Accumulators};
+use opengemm::gemm_core::{tile_mac, tile_mac_reference, Accumulators};
 use opengemm::host::{encode as enc, reg, Asm, Cpu};
 use opengemm::sim::{Platform, SimOptions};
 use opengemm::spm::Spm;
@@ -257,19 +257,185 @@ fn bench_sim_throughput(b: &mut Bencher) -> Json {
     ])
 }
 
-fn main() {
-    println!("== simulator hot-path microbenchmarks ==");
-    let mut b = Bencher::default();
-    bench_end_to_end(&mut b);
-    bench_components(&mut b);
-    println!("== simulation throughput: fast-forward vs lockstep ==");
-    let doc = bench_sim_throughput(&mut b);
+/// One functional-mode throughput measurement (the vectorized data
+/// plane's tracked metric: simulated cycles per host-second with real
+/// data flowing).
+struct FunctionalEntry {
+    label: String,
+    simulated_cycles: u64,
+    cycles_per_sec: f64,
+}
+
+fn measure_functional(
+    b: &mut Bencher,
+    label: &str,
+    shape: GemmShape,
+    layout: Layout,
+    mech: Mechanisms,
+    repeats: u32,
+) -> FunctionalEntry {
+    let cfg = PlatformConfig::case_study();
+    let job = compile_gemm(&cfg, shape, layout, repeats, mech.config_preloading).unwrap();
+    let opts = SimOptions { mechanisms: mech, functional: true, ..Default::default() };
+    let mut platform = Platform::new(cfg.clone(), opts);
+    let mut rng = Pcg32::seeded(11);
+    let mut a_op = vec![0i8; shape.m * shape.k];
+    let mut b_op = vec![0i8; shape.k * shape.n];
+    rng.fill_i8(&mut a_op);
+    rng.fill_i8(&mut b_op);
+    let mut cycles = 0u64;
+    let r = b.bench(&format!("functional/{label}"), || {
+        let res = platform.run_job(&job, Some(&a_op), Some(&b_op)).unwrap();
+        cycles = res.metrics.total_cycles;
+        black_box(res.c.as_ref().map(|c| c[0]));
+    });
+    let cps = r.throughput(cycles as f64);
+    println!(
+        "      -> {:.1} M functional simulated cycles/s ({} cycles/job)",
+        cps / 1e6,
+        cycles
+    );
+    FunctionalEntry { label: label.to_string(), simulated_cycles: cycles, cycles_per_sec: cps }
+}
+
+/// The seed's per-byte SPM tile read, kept in the bench as the baseline
+/// the bulk gather path is measured against.
+fn read_tile_per_byte(spm: &Spm, word_addrs: &[u64], out: &mut [i8]) {
+    for (i, &w) in word_addrs.iter().enumerate() {
+        for (j, v) in out[i * 8..(i + 1) * 8].iter_mut().enumerate() {
+            let addr = w * 8 + j as u64;
+            let word = spm.read_word(addr / 8);
+            *v = ((word >> ((addr % 8) * 8)) & 0xff) as u8 as i8;
+        }
+    }
+}
+
+/// Functional data-plane benchmark (the ISSUE 2 perf target): kernel and
+/// SPM-path speedups vs the seed's scalar implementations, plus
+/// end-to-end functional simulation throughput. Emitted as
+/// BENCH_dotprod_throughput.json at the repo root.
+fn bench_dotprod_throughput(b: &mut Bencher) -> Json {
+    // tile-MAC kernel: vectorized vs the seed's scalar branchy kernel
+    let core = GemmCoreParams::CASE_STUDY;
+    let mut acc = Accumulators::new(&core);
+    let mut rng = Pcg32::seeded(7);
+    let mut a = vec![0i8; core.mu * core.ku];
+    let mut bb = vec![0i8; core.ku * core.nu];
+    rng.fill_i8(&mut a);
+    rng.fill_i8(&mut bb);
+    let r_vec = b
+        .bench("kernel/tile_mac vectorized", || {
+            tile_mac(&mut acc, &core, black_box(&a), black_box(&bb));
+        })
+        .median_ns;
+    let r_ref = b
+        .bench("kernel/tile_mac seed-scalar", || {
+            tile_mac_reference(&mut acc, &core, black_box(&a), black_box(&bb));
+        })
+        .median_ns;
+    let kernel_speedup = r_ref / r_vec;
+    println!("      == tile_mac kernel speedup vs seed: {kernel_speedup:.2}x ==");
+
+    // SPM tile fetch: bulk word gather vs the seed's per-byte walk
+    let mut spm = Spm::new(PlatformConfig::case_study().mem);
+    let image: Vec<i8> = (0..2048).map(|i| (i % 249) as i8).collect();
+    spm.write_i8(0, &image);
+    let addrs: Vec<u64> = (0..8u64).map(|i| i * 9 + 3).collect();
+    let mut tile = vec![0i8; 64];
+    let r_bulk = b
+        .bench("spm/tile fetch bulk gather", || {
+            spm.read_ports_i8(black_box(&addrs), 8, &mut tile);
+            black_box(&tile);
+        })
+        .median_ns;
+    let r_pb = b
+        .bench("spm/tile fetch per-byte (seed)", || {
+            read_tile_per_byte(&spm, black_box(&addrs), &mut tile);
+            black_box(&tile);
+        })
+        .median_ns;
+    let spm_speedup = r_pb / r_bulk;
+    println!("      == SPM tile-fetch speedup vs seed: {spm_speedup:.2}x ==");
+
+    // end-to-end functional simulation throughput
+    let entries = vec![
+        measure_functional(
+            b,
+            "64x64x64 arch4",
+            GemmShape::new(64, 64, 64),
+            Layout::TiledInterleaved,
+            Mechanisms::ALL,
+            4,
+        ),
+        measure_functional(
+            b,
+            "128x128x128 arch4",
+            GemmShape::new(128, 128, 128),
+            Layout::TiledInterleaved,
+            Mechanisms::ALL,
+            2,
+        ),
+        measure_functional(
+            b,
+            "48x40x56 arch3 contiguous",
+            GemmShape::new(48, 40, 56),
+            Layout::TiledContiguous,
+            Mechanisms::CPL_BUF,
+            4,
+        ),
+        measure_functional(
+            b,
+            "32x256x32 arch1 row-major",
+            GemmShape::new(32, 256, 32),
+            Layout::RowMajor,
+            Mechanisms::BASELINE,
+            2,
+        ),
+    ];
+
+    let entry_docs: Vec<Json> = entries
+        .iter()
+        .map(|e| {
+            Json::obj(vec![
+                ("workload", Json::str(e.label.clone())),
+                ("simulated_cycles", Json::num(e.simulated_cycles as f64)),
+                ("functional_cycles_per_sec", Json::num(e.cycles_per_sec)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("bench", Json::str("dotprod_throughput")),
+        ("unit", Json::str("functional simulated cycles per host-second")),
+        ("kernel_speedup_vs_seed", Json::num(kernel_speedup)),
+        ("spm_tile_fetch_speedup_vs_seed", Json::num(spm_speedup)),
+        ("entries", Json::Arr(entry_docs)),
+    ])
+}
+
+fn write_json_artifact(name: &str, doc: &Json) {
     let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()
         .expect("package root has a parent")
-        .join("BENCH_sim_throughput.json");
+        .join(name);
     match std::fs::write(&out, doc.pretty()) {
         Ok(()) => println!("wrote {}", out.display()),
         Err(e) => eprintln!("could not write {}: {e}", out.display()),
     }
+}
+
+fn main() {
+    // --smoke: the CI bench lane's quick pass — same measurements,
+    // shorter warmup/samples, so the artifact tracks the perf
+    // trajectory per PR without burning CI minutes.
+    let smoke = std::env::args().any(|arg| arg == "--smoke");
+    let mut b = if smoke { Bencher::quick() } else { Bencher::default() };
+    println!("== simulator hot-path microbenchmarks ==");
+    bench_end_to_end(&mut b);
+    bench_components(&mut b);
+    println!("== functional data plane: vectorized kernel + bulk SPM I/O ==");
+    let dotprod_doc = bench_dotprod_throughput(&mut b);
+    write_json_artifact("BENCH_dotprod_throughput.json", &dotprod_doc);
+    println!("== simulation throughput: fast-forward vs lockstep ==");
+    let doc = bench_sim_throughput(&mut b);
+    write_json_artifact("BENCH_sim_throughput.json", &doc);
 }

@@ -18,6 +18,15 @@
 //! run-time CSR values; `pack_a`/`pack_b`/`unpack_c` are the functional
 //! (data-moving) counterparts used by functional simulation, standing in
 //! for the DMA/host writing the SPM image.
+//!
+//! The packers move whole rows/tiles through the SPM's bulk byte APIs
+//! ([`Spm::write_i8`] / [`Spm::read_i32`], which resolve the word
+//! mapping once per run, not per byte); every address they emit is
+//! word-aligned with word-multiple lengths (padded dims are `Mu/Nu/Ku`
+//! multiples), so each pack/unpack lowers to whole-word stores. They
+//! also uphold the tile-MAC vectorization contract
+//! (`gemm_core::dotprod`): all K-padding zeros land at the *tail* of an
+//! A' row, never interleaved.
 
 use crate::config::PlatformConfig;
 use crate::csr::{
@@ -172,7 +181,7 @@ pub fn pack_a(spm: &mut Spm, cfg: &PlatformConfig, p: &Placement, a: &[i8], m: u
         Layout::RowMajor => {
             let mut row = vec![0i8; kp];
             for i in 0..p.padded.m {
-                row.iter_mut().for_each(|v| *v = 0);
+                row.fill(0);
                 if i < m {
                     row[..k].copy_from_slice(&a[i * k..(i + 1) * k]);
                 }
@@ -185,7 +194,7 @@ pub fn pack_a(spm: &mut Spm, cfg: &PlatformConfig, p: &Placement, a: &[i8], m: u
             let mut tile = vec![0i8; mu * ku];
             for m1 in 0..p.bounds.mt as usize {
                 for k1 in 0..p.bounds.kt as usize {
-                    tile.iter_mut().for_each(|v| *v = 0);
+                    tile.fill(0);
                     for r in 0..mu {
                         let src_r = m1 * mu + r;
                         if src_r >= m {
@@ -216,7 +225,7 @@ pub fn pack_b(spm: &mut Spm, cfg: &PlatformConfig, p: &Placement, b: &[i8], k: u
         Layout::RowMajor => {
             let mut row = vec![0i8; np];
             for i in 0..p.padded.k {
-                row.iter_mut().for_each(|v| *v = 0);
+                row.fill(0);
                 if i < k {
                     row[..n].copy_from_slice(&b[i * n..(i + 1) * n]);
                 }
@@ -229,7 +238,7 @@ pub fn pack_b(spm: &mut Spm, cfg: &PlatformConfig, p: &Placement, b: &[i8], k: u
             let mut tile = vec![0i8; ku * nu];
             for k1 in 0..p.bounds.kt as usize {
                 for n1 in 0..p.bounds.nt as usize {
-                    tile.iter_mut().for_each(|v| *v = 0);
+                    tile.fill(0);
                     for r in 0..ku {
                         let src_r = k1 * ku + r;
                         if src_r >= k {

@@ -129,14 +129,19 @@ impl Coordinator {
             let csr_latency = self.csr_latency;
             let fast_forward = self.fast_forward;
             handles.push(std::thread::spawn(move || {
-                // one platform per worker, reconfigured per job
+                // One long-lived platform per worker, re-armed per job
+                // via `Platform::reset_for_job`: Fig. 5-scale sweeps
+                // (500 workloads x 7 variants) stop paying a fresh SPM
+                // + scratch allocation for every job.
+                let mut platform: Option<Platform> = None;
                 loop {
                     let item = {
                         let rx = work_rx.lock().unwrap();
                         rx.recv()
                     };
                     let Ok(WorkItem { index, request }) = item else { break };
-                    let outcome = run_one(&cfg, csr_latency, fast_forward, &request);
+                    let outcome =
+                        run_one(&mut platform, &cfg, csr_latency, fast_forward, &request);
                     {
                         let mut s = stats.lock().unwrap();
                         match &outcome {
@@ -166,13 +171,17 @@ impl Coordinator {
             .collect()
     }
 
-    /// Run a single request inline (no pool).
+    /// Run a single request inline (no pool, fresh platform).
     pub fn run_one(&self, request: &JobRequest) -> JobOutcome {
-        run_one(&self.cfg, self.csr_latency, self.fast_forward, request)
+        run_one(&mut None, &self.cfg, self.csr_latency, self.fast_forward, request)
     }
 }
 
+/// Run one request on a worker's long-lived platform slot: the first
+/// job builds the `Platform` (SPM allocation included), every later job
+/// re-arms it with [`Platform::reset_for_job`].
 fn run_one(
+    platform: &mut Option<Platform>,
     cfg: &PlatformConfig,
     csr_latency: u64,
     fast_forward: bool,
@@ -193,14 +202,15 @@ fn run_one(
         fast_forward,
         ..Default::default()
     };
-    let mut platform = Platform::new(cfg.clone(), opts);
+    if let Some(p) = platform.as_mut() {
+        p.reset_for_job(opts);
+    }
+    let p = platform.get_or_insert_with(|| Platform::new(cfg.clone(), opts));
     let (a, b) = match &request.operands {
         Some((a, b)) => (Some(a.as_slice()), Some(b.as_slice())),
         None => (None, None),
     };
-    platform
-        .run_job(&job, a, b)
-        .map_err(|e: SimError| e.to_string())
+    p.run_job(&job, a, b).map_err(|e: SimError| e.to_string())
 }
 
 #[cfg(test)]
@@ -283,6 +293,43 @@ mod tests {
             .run_one(&req)
             .unwrap();
         assert_eq!(ff.metrics, ls.metrics, "fast-forward must be bit-identical");
+    }
+
+    #[test]
+    fn worker_platform_reuse_is_transparent() {
+        // A single worker serves every job below on ONE reused platform
+        // (reset_for_job between jobs); results must be bit-identical to
+        // fresh-platform runs, across functional/timing and mechanism
+        // switches (no state may leak through the SPM or the arena).
+        let c = Coordinator::new(PlatformConfig::case_study()).with_workers(1);
+        let mut rng = Pcg32::seeded(77);
+        let mut reqs = Vec::new();
+        for i in 0..6usize {
+            let shape = GemmShape::new(8 + 8 * i, 16 + 8 * (i % 3), 24);
+            let mech = if i % 2 == 0 { Mechanisms::ALL } else { Mechanisms::BASELINE };
+            let operands = if i % 3 != 2 {
+                let mut a = vec![0i8; shape.m * shape.k];
+                let mut b = vec![0i8; shape.k * shape.n];
+                rng.fill_i8(&mut a);
+                rng.fill_i8(&mut b);
+                Some((a, b))
+            } else {
+                None
+            };
+            let layout = if mech.strided_layout {
+                Layout::TiledInterleaved
+            } else {
+                Layout::RowMajor
+            };
+            reqs.push(JobRequest { shape, layout, mechanisms: mech, repeats: 1, operands });
+        }
+        let batch = c.run_batch(reqs.clone());
+        for (req, got) in reqs.iter().zip(&batch) {
+            let got = got.as_ref().expect("batch job ok");
+            let fresh = c.run_one(req).expect("fresh job ok");
+            assert_eq!(got.metrics, fresh.metrics, "metrics leak for {:?}", req.shape);
+            assert_eq!(got.c, fresh.c, "functional result leak for {:?}", req.shape);
+        }
     }
 
     #[test]

@@ -5,6 +5,40 @@
 //! accumulates into the `(Mu x Nu)` int32 accumulator register file
 //! (output-stationary). Products and sums are two's-complement wrapping,
 //! like the RTL (no saturation on the accumulate path).
+//!
+//! ## Vectorization contract
+//!
+//! [`tile_mac`] is the hot loop of every functional simulation — the
+//! event engine (PR 1) removed the idle-cycle overhead, so one tile-MAC
+//! per *compute* cycle is what a functional run spends its time on. The
+//! kernel is written so LLVM's autovectorizer lifts the inner loop to
+//! 8-wide (or wider) i32 SIMD:
+//!
+//! - **Flat row-major slices.** `a` is `(Mu, Ku)` row-major, `b` is
+//!   `(Ku, Nu)` row-major, and each accumulator row is a contiguous
+//!   `Nu`-wide `&mut [i32]` — no strided or gathered element access
+//!   anywhere on the fast path.
+//! - **Branch-free inner loop.** The seed kernel skipped zero A operands
+//!   with a *per-element* branch, which blocks vectorization. The
+//!   layout packers ([`crate::compiler::layout`]) place all K-padding
+//!   zeros at the *tail* of each A' row, so the skip is now a per-row
+//!   `ku_nonzero` prefix computed once (`rposition` over the row); the
+//!   `j` loop over `Nu` accumulators is a pure
+//!   `acc[j] += a_ik * b[k][j]` multiply-add with no data-dependent
+//!   control flow.
+//! - **Wrapping arithmetic.** All products and sums use `wrapping_*`,
+//!   matching the RTL's two's-complement behaviour; this also keeps the
+//!   loop free of overflow panics the vectorizer would have to preserve.
+//!
+//! Zero A operands *inside* the nonzero prefix are multiplied normally
+//! (they contribute nothing); only the all-zero suffix is skipped, so
+//! the kernel is bit-identical to the naive triple loop for any input.
+//!
+//! An explicit `std::arch` path (AVX2 `_mm256_madd_epi16`-style) is a
+//! follow-up seam behind the `simd-arch` cargo feature: the dispatch
+//! point and signature are pinned by [`tile_mac`]'s private kernel
+//! split, and [`tile_mac_reference`] plus the `matches_naive_reference`
+//! property pin the semantics any intrinsic kernel must reproduce.
 
 use crate::config::GemmCoreParams;
 
@@ -28,15 +62,35 @@ impl Accumulators {
     /// Hardware "accumulator reset" issued by the loop controller at
     /// k1 == 0.
     pub fn reset(&mut self) {
-        self.acc.iter_mut().for_each(|v| *v = 0);
+        self.acc.fill(0);
+    }
+
+    /// Row `i` of the accumulator file as a contiguous `Nu`-wide slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[i32] {
+        &self.acc[i * self.nu..(i + 1) * self.nu]
+    }
+
+    /// Mutable row access (the tile-MAC kernel's accumulate target).
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [i32] {
+        &mut self.acc[i * self.nu..(i + 1) * self.nu]
     }
 
     #[inline]
     pub fn at(&self, i: usize, j: usize) -> i32 {
-        self.acc[i * self.nu + j]
+        self.row(i)[j]
     }
 
-    /// Snapshot the accumulators as an output tile payload.
+    /// Copy the accumulators into a reusable output-tile buffer — the
+    /// zero-copy staging path ([`crate::streamer::TileArena`] owns the
+    /// buffer; nothing is allocated per tile).
+    pub fn copy_into(&self, out: &mut [i32]) {
+        out.copy_from_slice(&self.acc);
+    }
+
+    /// Snapshot the accumulators as a fresh output tile payload
+    /// (allocating convenience; the simulator uses [`Self::copy_into`]).
     pub fn snapshot(&self) -> Box<[i32]> {
         self.acc.clone().into_boxed_slice()
     }
@@ -54,8 +108,66 @@ impl Accumulators {
 ///
 /// `a` is row-major `(Mu, Ku)`, `b` is row-major `(Ku, Nu)`. All `Ku`
 /// products per DotProd are combinationally summed, exactly one result
-/// update per accumulator per cycle.
+/// update per accumulator per cycle. See the module docs for the
+/// vectorization contract this entry point upholds.
 pub fn tile_mac(acc: &mut Accumulators, core: &GemmCoreParams, a: &[i8], b: &[i8]) {
+    let (mu, nu, ku) = (core.mu, core.nu, core.ku);
+    debug_assert_eq!(a.len(), mu * ku, "A' tile size");
+    debug_assert_eq!(b.len(), ku * nu, "B' tile size");
+    tile_mac_kernel(&mut acc.acc, a, b, mu, nu, ku);
+}
+
+/// Kernel dispatch: the portable autovectorized kernel today; the
+/// `simd-arch` feature routes through the `std::arch` seam instead.
+#[cfg(not(all(feature = "simd-arch", target_arch = "x86_64")))]
+#[inline]
+fn tile_mac_kernel(acc: &mut [i32], a: &[i8], b: &[i8], mu: usize, nu: usize, ku: usize) {
+    tile_mac_rows(acc, a, b, mu, nu, ku);
+}
+
+#[cfg(all(feature = "simd-arch", target_arch = "x86_64"))]
+#[inline]
+fn tile_mac_kernel(acc: &mut [i32], a: &[i8], b: &[i8], mu: usize, nu: usize, ku: usize) {
+    arch::tile_mac(acc, a, b, mu, nu, ku);
+}
+
+/// The portable fast path: per-row zero-suffix skip, branch-free i32
+/// multiply-accumulate over contiguous `Nu`-wide rows.
+#[inline]
+fn tile_mac_rows(acc: &mut [i32], a: &[i8], b: &[i8], mu: usize, nu: usize, ku: usize) {
+    for i in 0..mu {
+        let arow = &a[i * ku..(i + 1) * ku];
+        // K-padding zeros sit at the row tail (layout packer contract);
+        // skip the all-zero suffix once instead of branching per MAC.
+        let ku_nz = arow.iter().rposition(|&v| v != 0).map_or(0, |last| last + 1);
+        let accrow = &mut acc[i * nu..(i + 1) * nu];
+        for (k, &av) in arow[..ku_nz].iter().enumerate() {
+            let av = av as i32;
+            let brow = &b[k * nu..(k + 1) * nu];
+            for (c, &bv) in accrow.iter_mut().zip(brow.iter()) {
+                *c = c.wrapping_add(av.wrapping_mul(bv as i32));
+            }
+        }
+    }
+}
+
+/// Explicit-SIMD seam (`--features simd-arch`, x86_64 only). The
+/// intrinsic kernel is intentionally not written yet: this module pins
+/// the dispatch point so a `std::arch` implementation can land without
+/// touching any caller, and until then it must stay bit-identical to
+/// the portable kernel (delegation guarantees that trivially).
+#[cfg(all(feature = "simd-arch", target_arch = "x86_64"))]
+mod arch {
+    #[inline]
+    pub(super) fn tile_mac(acc: &mut [i32], a: &[i8], b: &[i8], mu: usize, nu: usize, ku: usize) {
+        super::tile_mac_rows(acc, a, b, mu, nu, ku);
+    }
+}
+
+/// The seed's scalar kernel (per-element zero branch, no row slicing),
+/// kept verbatim as the differential reference for the vectorized path
+/// and the `BENCH_dotprod_throughput` speedup baseline.
+pub fn tile_mac_reference(acc: &mut Accumulators, core: &GemmCoreParams, a: &[i8], b: &[i8]) {
     let (mu, nu, ku) = (core.mu, core.nu, core.ku);
     debug_assert_eq!(a.len(), mu * ku, "A' tile size");
     debug_assert_eq!(b.len(), ku * nu, "B' tile size");
@@ -80,6 +192,7 @@ mod tests {
     use super::*;
     use crate::config::GemmCoreParams;
     use crate::util::check::property;
+    use crate::util::rng::Pcg32;
 
     fn core() -> GemmCoreParams {
         GemmCoreParams::CASE_STUDY
@@ -164,6 +277,49 @@ mod tests {
     }
 
     #[test]
+    fn vectorized_matches_reference_kernel() {
+        // Differential proof of the rewrite: the vectorized kernel must
+        // be bit-identical to the seed's scalar kernel across random
+        // generator instances, random starting accumulators, and rows
+        // with zero suffixes (the K-padding pattern) and interior zeros.
+        property("tile_mac vectorized vs seed kernel", 60, |rng| {
+            let p = GemmCoreParams {
+                mu: rng.below(12) as usize + 1,
+                nu: rng.below(12) as usize + 1,
+                ku: rng.below(20) as usize + 1,
+                ..GemmCoreParams::CASE_STUDY
+            };
+            let mut a = vec![0i8; p.mu * p.ku];
+            let mut b = vec![0i8; p.ku * p.nu];
+            rng.fill_i8(&mut a);
+            rng.fill_i8(&mut b);
+            // zero out random row suffixes of A (padding pattern) and a
+            // few interior elements (must be multiplied, not skipped,
+            // identically in both kernels)
+            for i in 0..p.mu {
+                let keep = rng.below(p.ku as u32 + 1) as usize;
+                for v in &mut a[i * p.ku + keep..(i + 1) * p.ku] {
+                    *v = 0;
+                }
+            }
+            for _ in 0..4 {
+                a[rng.below((p.mu * p.ku) as u32) as usize] = 0;
+            }
+            let mut start = Accumulators::new(&p);
+            let mut seed_rng = Pcg32::seeded(rng.next_u64());
+            for v in start.acc.iter_mut() {
+                *v = seed_rng.next_u32() as i32;
+            }
+            let mut fast = start.clone();
+            let mut refr = start;
+            tile_mac(&mut fast, &p, &a, &b);
+            tile_mac_reference(&mut refr, &p, &a, &b);
+            crate::prop_assert_eq!(fast.acc, refr.acc, "kernel divergence for {p:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
     fn non_square_generator_instance() {
         let p = GemmCoreParams { mu: 4, nu: 2, ku: 16, ..GemmCoreParams::CASE_STUDY };
         let mut acc = Accumulators::new(&p);
@@ -171,5 +327,24 @@ mod tests {
         let b: Vec<i8> = (0..32).map(|i| (i % 7) as i8 - 3).collect();
         tile_mac(&mut acc, &p, &a, &b);
         assert_eq!(acc.acc, naive(&a, &b, 4, 2, 16));
+    }
+
+    #[test]
+    fn row_accessors_and_copy_into() {
+        let c = core();
+        let mut acc = Accumulators::new(&c);
+        let a = vec![1i8; 64];
+        let b: Vec<i8> = (0..64).map(|i| i as i8).collect();
+        tile_mac(&mut acc, &c, &a, &b);
+        // row view matches flat indexing
+        for i in 0..8 {
+            assert_eq!(acc.row(i), &acc.acc[i * 8..(i + 1) * 8]);
+        }
+        acc.row_mut(2)[3] = 77;
+        assert_eq!(acc.at(2, 3), 77);
+        let mut out = vec![0i32; 64];
+        acc.copy_into(&mut out);
+        assert_eq!(out, acc.acc);
+        assert_eq!(&*acc.snapshot(), out.as_slice());
     }
 }

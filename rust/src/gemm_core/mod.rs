@@ -7,11 +7,11 @@
 pub mod dotprod;
 pub mod loops;
 
-pub use dotprod::{tile_mac, Accumulators};
+pub use dotprod::{tile_mac, tile_mac_reference, Accumulators};
 pub use loops::{LoopController, LoopError, MAX_LOOP_BOUND};
 
 use crate::config::GemmCoreParams;
-use crate::streamer::{InputStreamer, LoopBounds, OutTile, OutputStreamer};
+use crate::streamer::{InputStreamer, LoopBounds, OutTile, OutputStreamer, TileArena};
 
 /// Why the array did not compute this cycle.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -142,12 +142,16 @@ impl GemmCore {
         }
     }
 
-    /// One core clock cycle.
+    /// One core clock cycle. `arena` is the platform's operand-staging
+    /// pool: consumed input-tile buffers are released back to it and
+    /// the emitted output tile draws its buffer from it (zero
+    /// steady-state allocation in functional mode).
     pub fn step(
         &mut self,
         a: &mut InputStreamer,
         b: &mut InputStreamer,
         out: &mut OutputStreamer,
+        arena: &mut TileArena,
     ) -> CoreEvent {
         let Some(lc) = self.lc.as_mut() else {
             return CoreEvent::Idle;
@@ -173,8 +177,8 @@ impl GemmCore {
         let at_first = lc.at_k_first();
         let at_last = lc.at_k_last();
 
-        let a_tile = a.pop().expect("checked above");
-        let b_tile = b.pop().expect("checked above");
+        let mut a_tile = a.pop().expect("checked above");
+        let mut b_tile = b.pop().expect("checked above");
         debug_assert_eq!(
             (a_tile.m1, a_tile.n1, a_tile.k1),
             (m1, n1, k1),
@@ -190,14 +194,21 @@ impl GemmCore {
             self.acc.reset();
         }
         if self.functional {
-            let a_data = a_tile.data.as_deref().expect("functional mode needs A data");
-            let b_data = b_tile.data.as_deref().expect("functional mode needs B data");
-            tile_mac(&mut self.acc, &self.params, a_data, b_data);
+            let a_data = a_tile.data.take().expect("functional mode needs A data");
+            let b_data = b_tile.data.take().expect("functional mode needs B data");
+            tile_mac(&mut self.acc, &self.params, &a_data, &b_data);
+            // operand buffers are consumed this cycle; recycle them
+            arena.release_i8(a_data);
+            arena.release_i8(b_data);
         }
 
         let mut emitted = false;
         if at_last {
-            let data = self.functional.then(|| self.acc.snapshot());
+            let data = self.functional.then(|| {
+                let mut buf = arena.acquire_i32(self.acc.acc.len());
+                self.acc.copy_into(&mut buf);
+                buf
+            });
             out.accept(OutTile { m1, n1, data });
             self.stats.output_tiles += 1;
             emitted = true;
@@ -240,21 +251,32 @@ mod tests {
     fn idle_until_started() {
         let bounds = LoopBounds { mt: 1, nt: 1, kt: 1 };
         let (mut a, mut b, mut o) = make_streamers(bounds, 2);
+        let mut arena = TileArena::new();
         let mut core = GemmCore::new(GemmCoreParams::CASE_STUDY, false);
-        assert_eq!(core.step(&mut a, &mut b, &mut o), CoreEvent::Idle);
+        assert_eq!(core.step(&mut a, &mut b, &mut o, &mut arena), CoreEvent::Idle);
     }
 
     #[test]
     fn stalls_without_operands() {
         let bounds = LoopBounds { mt: 1, nt: 1, kt: 2 };
         let (mut a, mut b, mut o) = make_streamers(bounds, 2);
+        let mut arena = TileArena::new();
         let mut core = GemmCore::new(GemmCoreParams::CASE_STUDY, false);
         core.start(bounds).unwrap();
-        assert_eq!(core.step(&mut a, &mut b, &mut o), CoreEvent::Stalled(StallReason::InputA));
+        assert_eq!(
+            core.step(&mut a, &mut b, &mut o, &mut arena),
+            CoreEvent::Stalled(StallReason::InputA)
+        );
         feed(&mut a);
-        assert_eq!(core.step(&mut a, &mut b, &mut o), CoreEvent::Stalled(StallReason::InputB));
+        assert_eq!(
+            core.step(&mut a, &mut b, &mut o, &mut arena),
+            CoreEvent::Stalled(StallReason::InputB)
+        );
         feed(&mut b);
-        assert!(matches!(core.step(&mut a, &mut b, &mut o), CoreEvent::Computed { .. }));
+        assert!(matches!(
+            core.step(&mut a, &mut b, &mut o, &mut arena),
+            CoreEvent::Computed { .. }
+        ));
         assert_eq!(core.stats.stall_input_a, 1);
         assert_eq!(core.stats.stall_input_b, 1);
     }
@@ -263,6 +285,7 @@ mod tests {
     fn full_run_produces_all_output_tiles() {
         let bounds = LoopBounds { mt: 2, nt: 3, kt: 4 };
         let (mut a, mut b, mut o) = make_streamers(bounds, 4);
+        let mut arena = TileArena::new();
         let mut core = GemmCore::new(GemmCoreParams::CASE_STUDY, false);
         core.start(bounds).unwrap();
         let mut outputs = 0;
@@ -277,7 +300,7 @@ mod tests {
                 o.commit_write(t, 0, 0);
                 o.deliver_ready(u64::MAX);
             }
-            match core.step(&mut a, &mut b, &mut o) {
+            match core.step(&mut a, &mut b, &mut o, &mut arena) {
                 CoreEvent::Computed { emitted_output, .. } => {
                     outputs += emitted_output as u64;
                     cycles += 1;
@@ -295,6 +318,7 @@ mod tests {
     fn output_backpressure_stalls_only_k_last() {
         let bounds = LoopBounds { mt: 1, nt: 1, kt: 3 };
         let (mut a, mut b, mut o) = make_streamers(bounds, 4);
+        let mut arena = TileArena::new();
         let mut core = GemmCore::new(GemmCoreParams::CASE_STUDY, false);
         core.start(bounds).unwrap();
         feed(&mut a);
@@ -304,10 +328,19 @@ mod tests {
             o.accept(OutTile { m1: 9, n1: 9, data: None });
         }
         // k=0,1 compute fine
-        assert!(matches!(core.step(&mut a, &mut b, &mut o), CoreEvent::Computed { .. }));
-        assert!(matches!(core.step(&mut a, &mut b, &mut o), CoreEvent::Computed { .. }));
+        assert!(matches!(
+            core.step(&mut a, &mut b, &mut o, &mut arena),
+            CoreEvent::Computed { .. }
+        ));
+        assert!(matches!(
+            core.step(&mut a, &mut b, &mut o, &mut arena),
+            CoreEvent::Computed { .. }
+        ));
         // k=2 (k_last) stalls on output
-        assert_eq!(core.step(&mut a, &mut b, &mut o), CoreEvent::Stalled(StallReason::Output));
+        assert_eq!(
+            core.step(&mut a, &mut b, &mut o, &mut arena),
+            CoreEvent::Stalled(StallReason::Output)
+        );
     }
 
     #[test]
@@ -319,6 +352,7 @@ mod tests {
         a.configure(AguConfig::linear(0, 1, 0), bounds);
         b.configure(AguConfig::linear(0, 1, 0), bounds);
         let mut o = OutputStreamer::new(2);
+        let mut arena = TileArena::new();
         let mut core = GemmCore::new(params, true);
         core.start(bounds).unwrap();
         let mut addrs = Vec::new();
@@ -330,8 +364,11 @@ mod tests {
             s.deliver_ready(u64::MAX);
         }
         while core.busy() {
-            core.step(&mut a, &mut b, &mut o);
+            core.step(&mut a, &mut b, &mut o, &mut arena);
         }
+        // the only arena allocation is the single C' output buffer; the
+        // consumed operand buffers were released back to the pool
+        assert_eq!(arena.allocs, 1);
         let mut w = Vec::new();
         let tile = o.begin_write(8, &mut w);
         let data = tile.data.clone().unwrap();
@@ -344,6 +381,7 @@ mod tests {
     fn pending_mirrors_step() {
         let bounds = LoopBounds { mt: 1, nt: 1, kt: 2 };
         let (mut a, mut b, mut o) = make_streamers(bounds, 2);
+        let mut arena = TileArena::new();
         let mut core = GemmCore::new(GemmCoreParams::CASE_STUDY, false);
         assert_eq!(core.pending(&a, &b, &o), CorePending::Idle);
         core.start(bounds).unwrap();
@@ -353,12 +391,18 @@ mod tests {
         feed(&mut b);
         assert_eq!(core.pending(&a, &b, &o), CorePending::Compute);
         // k_last with a full output buffer -> Output stall preview
-        assert!(matches!(core.step(&mut a, &mut b, &mut o), CoreEvent::Computed { .. }));
+        assert!(matches!(
+            core.step(&mut a, &mut b, &mut o, &mut arena),
+            CoreEvent::Computed { .. }
+        ));
         while o.can_accept() {
             o.accept(OutTile { m1: 0, n1: 0, data: None });
         }
         assert_eq!(core.pending(&a, &b, &o), CorePending::Stalled(StallReason::Output));
-        assert_eq!(core.step(&mut a, &mut b, &mut o), CoreEvent::Stalled(StallReason::Output));
+        assert_eq!(
+            core.step(&mut a, &mut b, &mut o, &mut arena),
+            CoreEvent::Stalled(StallReason::Output)
+        );
     }
 
     #[test]

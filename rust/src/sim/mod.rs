@@ -66,7 +66,7 @@ use crate::csr::{CsrError, CsrManager};
 use crate::gemm_core::{CoreEvent, CorePending, GemmCore};
 use crate::host::{Cpu, CsrBus, StepResult};
 use crate::spm::Spm;
-use crate::streamer::{InputStreamer, OutputStreamer};
+use crate::streamer::{InputStreamer, OutputStreamer, TileArena};
 
 /// Simulation options.
 #[derive(Debug, Clone, Copy)]
@@ -159,6 +159,11 @@ pub struct Platform {
     addr_a: Vec<u64>,
     addr_b: Vec<u64>,
     addr_c: Vec<u64>,
+    /// Operand-staging scratch: recycled tile buffers for the
+    /// functional data plane (see [`TileArena`]). Survives
+    /// [`Platform::reset_for_job`] so back-to-back jobs allocate
+    /// nothing.
+    arena: TileArena,
     pub metrics: SimMetrics,
     /// `cycle()` invocations actually executed this run — equals
     /// `metrics.total_cycles` in lockstep mode, (much) smaller with
@@ -250,6 +255,7 @@ impl Platform {
             addr_a: Vec::with_capacity(64),
             addr_b: Vec::with_capacity(64),
             addr_c: Vec::with_capacity(64),
+            arena: TileArena::new(),
             metrics: SimMetrics::default(),
             steps_executed: 0,
             cfg,
@@ -311,6 +317,19 @@ impl Platform {
         Ok(JobResult { metrics: self.metrics.clone(), report, c: job_state.c_out })
     }
 
+    /// Re-arm this platform for a new job with new options — the
+    /// Coordinator's per-worker reuse path. Equivalent to constructing
+    /// a fresh `Platform::new(cfg, opts)` except that the SPM storage,
+    /// the address scratch vectors, and the tile arena keep their
+    /// allocations; `run_job` rebuilds every piece of per-run state
+    /// (core, CSRs, streamers, metrics) regardless, and the layout
+    /// packers fully overwrite every SPM region a functional run reads.
+    pub fn reset_for_job(&mut self, opts: SimOptions) {
+        self.opts = opts;
+        self.host = None;
+        self.job = None;
+    }
+
     fn reset_run_state(&mut self) {
         let mech = self.opts.mechanisms;
         let depth = if mech.prefetch { self.cfg.mem.d_stream.max(2) } else { 1 };
@@ -354,7 +373,12 @@ impl Platform {
         self.issue_memory(now);
 
         // ---- 3. core cycle -------------------------------------------
-        match self.core.step(&mut self.a_stream, &mut self.b_stream, &mut self.c_stream) {
+        match self.core.step(
+            &mut self.a_stream,
+            &mut self.b_stream,
+            &mut self.c_stream,
+            &mut self.arena,
+        ) {
             CoreEvent::Idle => self.metrics.idle_cycles += 1,
             CoreEvent::Stalled(reason) => {
                 use crate::gemm_core::StallReason::*;
@@ -543,8 +567,8 @@ impl Platform {
                     for &w in &self.addr_a {
                         mask |= 1u64 << self.spm.bank_of(w);
                     }
-                    let data =
-                        functional.then(|| Self::read_tile(&self.spm, word, &self.addr_a));
+                    let data = functional
+                        .then(|| Self::read_tile(&self.spm, &mut self.arena, word, &self.addr_a));
                     (cost, mask, pos, data)
                 }
             };
@@ -568,8 +592,8 @@ impl Platform {
                     for &w in &self.addr_b {
                         mask |= 1u64 << self.spm.bank_of(w);
                     }
-                    let data =
-                        functional.then(|| Self::read_tile(&self.spm, word, &self.addr_b));
+                    let data = functional
+                        .then(|| Self::read_tile(&self.spm, &mut self.arena, word, &self.addr_b));
                     (cost, mask, pos, data)
                 }
             };
@@ -597,7 +621,8 @@ impl Platform {
         }
     }
 
-    /// Functional commit of a completed C' tile through the C AGU.
+    /// Functional commit of a completed C' tile through the C AGU; the
+    /// tile buffer returns to the arena afterwards.
     fn commit_output_tile(&mut self, tile: crate::streamer::OutTile) {
         let Some(data) = tile.data else { return };
         let word = self.cfg.mem.word_bytes() as u64;
@@ -611,14 +636,21 @@ impl Platform {
                 self.spm.write_i32(byte, &data[idx..end]);
             }
         }
+        self.arena.release_i32(data);
     }
 
-    fn read_tile(spm: &Spm, word: u64, word_addrs: &[u64]) -> Box<[i8]> {
-        let mut out = vec![0i8; word_addrs.len() * word as usize];
-        for (i, &w) in word_addrs.iter().enumerate() {
-            spm.read_i8(w * word, &mut out[i * word as usize..(i + 1) * word as usize]);
-        }
-        out.into_boxed_slice()
+    /// Bulk functional tile fetch: one gathered word read per port into
+    /// an arena-recycled buffer (the seed allocated a fresh `Box` and
+    /// resolved the word mapping per byte).
+    fn read_tile(
+        spm: &Spm,
+        arena: &mut TileArena,
+        word: u64,
+        word_addrs: &[u64],
+    ) -> Box<[i8]> {
+        let mut out = arena.acquire_i8(word_addrs.len() * word as usize);
+        spm.read_ports_i8(word_addrs, word as usize, &mut out);
+        out
     }
 
     fn launch(&mut self, regs: crate::csr::ConfigRegs) {

@@ -14,6 +14,34 @@
 //! - timing: [`Spm::epoch_cost`] computes how many cycles a batch of
 //!   simultaneous port requests takes (max per-bank load), and records
 //!   conflict statistics.
+//!
+//! ## Bulk tile I/O contract
+//!
+//! Functional storage is a flat array of 64-bit little-endian words
+//! (`word_addr` indexes it directly; byte address = `word_addr * 8`).
+//! The seed resolved that mapping *per byte* — every operand byte of
+//! every tile fetch paid a divide, a shift, and a bounds check. The
+//! bulk APIs resolve it once per run instead:
+//!
+//! - [`Spm::read_ports_i8`]: gather one word per port address into a
+//!   flat i8 tile buffer — this is what `Platform::read_tile` (the
+//!   functional tile-fetch path) runs on.
+//! - [`Spm::read_bytes`] / [`Spm::write_bytes`]: arbitrary byte runs,
+//!   split once into an unaligned head, a whole-word body
+//!   (`to_le_bytes`/`from_le_bytes` per 8-byte chunk, which LLVM lowers
+//!   to single moves), and a tail. [`Spm::read_i8`]/[`Spm::write_i8`]
+//!   and the i32 variants layer on top — the `compiler::layout`
+//!   pack/unpack helpers and the output-tile commit
+//!   (`Platform::commit_output_tile`) route through these.
+//! - [`Spm::read_words`] / [`Spm::write_words`]: word-granular
+//!   contiguous slice copies (one bounds check for the whole run) —
+//!   the primitive for word-addressed bulk movement, e.g. future
+//!   DMA-burst modeling (no data-plane caller yet).
+//!
+//! None of the functional-storage APIs touch [`SpmStats`]; all timing
+//! and bank-conflict accounting goes through [`Spm::epoch_cost`] /
+//! [`Spm::read_cost`] / [`Spm::write_cost`] exactly as before (pinned
+//! by the `bulk_spm_io_matches_per_word` differential property test).
 
 use crate::config::MemParams;
 
@@ -219,22 +247,94 @@ impl Spm {
         self.words[word_addr as usize] = value;
     }
 
-    /// Read a run of bytes (little-endian within words).
-    pub fn read_bytes(&self, byte_addr: u64, out: &mut [u8]) {
-        for (i, b) in out.iter_mut().enumerate() {
-            let addr = byte_addr + i as u64;
-            let word = self.words[(addr / 8) as usize];
-            *b = (word >> ((addr % 8) * 8)) as u8;
+    /// Bulk read of a contiguous word run (one bounds check and one
+    /// `memcpy` for the whole slice).
+    pub fn read_words(&self, word_addr: u64, out: &mut [u64]) {
+        let s = word_addr as usize;
+        out.copy_from_slice(&self.words[s..s + out.len()]);
+    }
+
+    /// Bulk write of a contiguous word run.
+    pub fn write_words(&mut self, word_addr: u64, data: &[u64]) {
+        let s = word_addr as usize;
+        self.words[s..s + data.len()].copy_from_slice(data);
+    }
+
+    /// Gather one SPM word per port address into a flat i8 tile buffer
+    /// (`out.len() == word_addrs.len() * word_bytes`) — the functional
+    /// tile-fetch path: the word mapping is resolved once per *port*,
+    /// never per byte.
+    pub fn read_ports_i8(&self, word_addrs: &[u64], word_bytes: usize, out: &mut [i8]) {
+        debug_assert_eq!(out.len(), word_addrs.len() * word_bytes);
+        if word_bytes == 8 {
+            for (chunk, &w) in out.chunks_exact_mut(8).zip(word_addrs) {
+                let bytes = self.words[w as usize].to_le_bytes();
+                for (d, s) in chunk.iter_mut().zip(bytes) {
+                    *d = s as i8;
+                }
+            }
+        } else {
+            // non-64-bit ports: fall back to the byte-run path per port
+            for (i, &w) in word_addrs.iter().enumerate() {
+                let span = &mut out[i * word_bytes..(i + 1) * word_bytes];
+                self.read_i8(w * word_bytes as u64, span);
+            }
         }
     }
 
-    /// Write a run of bytes (little-endian within words).
+    /// Read a run of bytes (little-endian within words). Split once
+    /// into head / whole-word body / tail; see the module docs.
+    pub fn read_bytes(&self, byte_addr: u64, out: &mut [u8]) {
+        if out.is_empty() {
+            return;
+        }
+        let off = (byte_addr & 7) as usize;
+        let head_len = if off == 0 { 0 } else { (8 - off).min(out.len()) };
+        let mut widx = (byte_addr >> 3) as usize;
+        if head_len > 0 {
+            let bytes = self.words[widx].to_le_bytes();
+            out[..head_len].copy_from_slice(&bytes[off..off + head_len]);
+            widx += 1;
+        }
+        let mut chunks = out[head_len..].chunks_exact_mut(8);
+        for chunk in chunks.by_ref() {
+            chunk.copy_from_slice(&self.words[widx].to_le_bytes());
+            widx += 1;
+        }
+        let tail = chunks.into_remainder();
+        if !tail.is_empty() {
+            let bytes = self.words[widx].to_le_bytes();
+            tail.copy_from_slice(&bytes[..tail.len()]);
+        }
+    }
+
+    /// Write a run of bytes (little-endian within words); word-aligned
+    /// interior words are stored whole, head/tail read-modify-write.
     pub fn write_bytes(&mut self, byte_addr: u64, data: &[u8]) {
-        for (i, &b) in data.iter().enumerate() {
-            let addr = byte_addr + i as u64;
-            let word = &mut self.words[(addr / 8) as usize];
-            let shift = (addr % 8) * 8;
-            *word = (*word & !(0xffu64 << shift)) | ((b as u64) << shift);
+        if data.is_empty() {
+            return;
+        }
+        let off = (byte_addr & 7) as usize;
+        let head_len = if off == 0 { 0 } else { (8 - off).min(data.len()) };
+        let mut widx = (byte_addr >> 3) as usize;
+        if head_len > 0 {
+            let word = &mut self.words[widx];
+            let mut bytes = word.to_le_bytes();
+            bytes[off..off + head_len].copy_from_slice(&data[..head_len]);
+            *word = u64::from_le_bytes(bytes);
+            widx += 1;
+        }
+        let mut chunks = data[head_len..].chunks_exact(8);
+        for chunk in chunks.by_ref() {
+            self.words[widx] = u64::from_le_bytes(chunk.try_into().unwrap());
+            widx += 1;
+        }
+        let tail = chunks.remainder();
+        if !tail.is_empty() {
+            let word = &mut self.words[widx];
+            let mut bytes = word.to_le_bytes();
+            bytes[..tail.len()].copy_from_slice(tail);
+            *word = u64::from_le_bytes(bytes);
         }
     }
 
@@ -256,6 +356,16 @@ impl Spm {
 
     /// Write a slice of i32 little-endian (C result tiles).
     pub fn write_i32(&mut self, byte_addr: u64, data: &[i32]) {
+        #[cfg(target_endian = "little")]
+        {
+            // Safety: on a little-endian host the in-memory i32 bytes
+            // are exactly the little-endian byte image the SPM stores.
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+            };
+            self.write_bytes(byte_addr, bytes);
+        }
+        #[cfg(target_endian = "big")]
         for (i, &v) in data.iter().enumerate() {
             self.write_bytes(byte_addr + 4 * i as u64, &v.to_le_bytes());
         }
@@ -263,10 +373,20 @@ impl Spm {
 
     /// Read a slice of i32.
     pub fn read_i32(&self, byte_addr: u64, out: &mut [i32]) {
-        let mut buf = [0u8; 4];
-        for (i, v) in out.iter_mut().enumerate() {
-            self.read_bytes(byte_addr + 4 * i as u64, &mut buf);
-            *v = i32::from_le_bytes(buf);
+        #[cfg(target_endian = "little")]
+        {
+            let bytes: &mut [u8] = unsafe {
+                std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, out.len() * 4)
+            };
+            self.read_bytes(byte_addr, bytes);
+        }
+        #[cfg(target_endian = "big")]
+        {
+            let mut buf = [0u8; 4];
+            for (i, v) in out.iter_mut().enumerate() {
+                self.read_bytes(byte_addr + 4 * i as u64, &mut buf);
+                *v = i32::from_le_bytes(buf);
+            }
         }
     }
 
@@ -381,5 +501,82 @@ mod tests {
     fn out_of_bounds_read_panics() {
         let s = spm();
         s.read_word(s.n_words());
+    }
+
+    /// The seed's per-byte storage path, kept as the semantic reference
+    /// for the bulk head/body/tail implementation.
+    fn read_byte_reference(s: &Spm, addr: u64) -> u8 {
+        (s.read_word(addr / 8) >> ((addr % 8) * 8)) as u8
+    }
+
+    fn write_byte_reference(s: &mut Spm, addr: u64, b: u8) {
+        let shift = (addr % 8) * 8;
+        let word = s.read_word(addr / 8);
+        s.write_word(addr / 8, (word & !(0xffu64 << shift)) | ((b as u64) << shift));
+    }
+
+    #[test]
+    fn bulk_byte_io_matches_per_byte_reference() {
+        use crate::util::check::property;
+        property("bulk bytes == per-byte reference", 40, |rng| {
+            let mut bulk = spm();
+            let mut scalar = spm();
+            for _ in 0..12 {
+                let len = rng.below(64) as usize + 1;
+                let addr = rng.below(4096 - 64) as u64;
+                let data: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+                bulk.write_bytes(addr, &data);
+                for (i, &b) in data.iter().enumerate() {
+                    write_byte_reference(&mut scalar, addr + i as u64, b);
+                }
+                let raddr = rng.below(4096 - 64) as u64;
+                let rlen = rng.below(64) as usize + 1;
+                let mut got = vec![0u8; rlen];
+                bulk.read_bytes(raddr, &mut got);
+                let want: Vec<u8> =
+                    (0..rlen).map(|i| read_byte_reference(&bulk, raddr + i as u64)).collect();
+                crate::prop_assert_eq!(got, want, "read divergence at {raddr}+{rlen}");
+            }
+            for w in 0..512u64 {
+                crate::prop_assert_eq!(
+                    bulk.read_word(w),
+                    scalar.read_word(w),
+                    "word {w} diverged"
+                );
+            }
+            // functional storage never touches timing statistics
+            crate::prop_assert_eq!(bulk.stats, SpmStats::default(), "stats perturbed");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn word_slice_io_roundtrip() {
+        let mut s = spm();
+        let data: Vec<u64> = (0..17).map(|i| i * 0x0101_0101_0101_0101).collect();
+        s.write_words(33, &data);
+        let mut got = vec![0u64; 17];
+        s.read_words(33, &mut got);
+        assert_eq!(got, data);
+        // agrees with the byte view
+        let mut bytes = vec![0u8; 8];
+        s.read_bytes(34 * 8, &mut bytes);
+        assert_eq!(bytes, data[1].to_le_bytes());
+    }
+
+    #[test]
+    fn read_ports_i8_matches_per_port_read_i8() {
+        let mut s = spm();
+        let image: Vec<i8> = (0..1024).map(|i| (i % 251) as i8 - 100).collect();
+        s.write_i8(0, &image);
+        // scattered, deliberately non-contiguous port addresses
+        let addrs: Vec<u64> = (0..8u64).map(|i| i * 13 + 2).collect();
+        let mut bulk = vec![0i8; 64];
+        s.read_ports_i8(&addrs, 8, &mut bulk);
+        let mut per_word = vec![0i8; 64];
+        for (i, &w) in addrs.iter().enumerate() {
+            s.read_i8(w * 8, &mut per_word[i * 8..(i + 1) * 8]);
+        }
+        assert_eq!(bulk, per_word);
     }
 }

@@ -37,6 +37,78 @@ impl LoopBounds {
     }
 }
 
+/// Reusable tile-buffer pool — the zero-copy operand-staging arena.
+///
+/// Functional simulation moves one A' + one B' tile into the core and
+/// one C' tile out of it per output tile; the seed allocated a fresh
+/// `Box` for every one of them. The platform owns one `TileArena`
+/// instead: tile fetches acquire a buffer here, the core releases the
+/// operand buffers right after the tile-MAC consumes them, and the
+/// output-commit path releases the C' buffer after the SPM write — so a
+/// steady-state run recycles a handful of buffers with zero allocator
+/// traffic.
+///
+/// Contract: buffers come back **dirty** (callers must fully overwrite
+/// them, which every producer in the data plane does), and a request
+/// whose length has no pooled match just falls through to a fresh
+/// allocation (platform reconfiguration between jobs).
+#[derive(Debug, Default)]
+pub struct TileArena {
+    i8_free: Vec<Box<[i8]>>,
+    i32_free: Vec<Box<[i32]>>,
+    /// Fresh heap allocations served (telemetry: plateaus per run).
+    pub allocs: u64,
+    /// Requests served from the free lists.
+    pub reuses: u64,
+}
+
+/// Free-list bound: beyond this, released buffers are simply dropped
+/// (a platform never has more than streamer-depth + in-flight tiles
+/// live, so the cap is generous).
+const ARENA_MAX_POOLED: usize = 64;
+
+impl TileArena {
+    pub fn new() -> TileArena {
+        TileArena::default()
+    }
+
+    /// Acquire an i8 tile buffer of exactly `len` (contents undefined).
+    pub fn acquire_i8(&mut self, len: usize) -> Box<[i8]> {
+        if let Some(pos) = self.i8_free.iter().rposition(|b| b.len() == len) {
+            self.reuses += 1;
+            self.i8_free.swap_remove(pos)
+        } else {
+            self.allocs += 1;
+            vec![0i8; len].into_boxed_slice()
+        }
+    }
+
+    /// Return an i8 buffer to the pool.
+    pub fn release_i8(&mut self, buf: Box<[i8]>) {
+        if self.i8_free.len() < ARENA_MAX_POOLED {
+            self.i8_free.push(buf);
+        }
+    }
+
+    /// Acquire an i32 tile buffer of exactly `len` (contents undefined).
+    pub fn acquire_i32(&mut self, len: usize) -> Box<[i32]> {
+        if let Some(pos) = self.i32_free.iter().rposition(|b| b.len() == len) {
+            self.reuses += 1;
+            self.i32_free.swap_remove(pos)
+        } else {
+            self.allocs += 1;
+            vec![0i32; len].into_boxed_slice()
+        }
+    }
+
+    /// Return an i32 buffer to the pool.
+    pub fn release_i32(&mut self, buf: Box<[i32]>) {
+        if self.i32_free.len() < ARENA_MAX_POOLED {
+            self.i32_free.push(buf);
+        }
+    }
+}
+
 /// An input tile in flight: its temporal position plus (in functional
 /// mode) the fetched bytes.
 #[derive(Debug, Clone)]
@@ -521,6 +593,28 @@ mod tests {
         o.commit_write(tile, 5, 4);
         assert_eq!(o.next_delivery(), Some(5));
         assert_eq!(o.next_issue(), None, "outstanding write blocks issue");
+    }
+
+    #[test]
+    fn arena_recycles_matching_sizes() {
+        let mut arena = TileArena::new();
+        let b0 = arena.acquire_i8(64);
+        let b1 = arena.acquire_i8(64);
+        assert_eq!(arena.allocs, 2);
+        arena.release_i8(b0);
+        arena.release_i8(b1);
+        let b2 = arena.acquire_i8(64);
+        assert_eq!(b2.len(), 64);
+        assert_eq!(arena.reuses, 1);
+        // size mismatch falls through to a fresh allocation
+        let b3 = arena.acquire_i8(128);
+        assert_eq!(b3.len(), 128);
+        assert_eq!(arena.allocs, 3);
+        let c0 = arena.acquire_i32(64);
+        arena.release_i32(c0);
+        let c1 = arena.acquire_i32(64);
+        assert_eq!(c1.len(), 64);
+        assert_eq!(arena.reuses, 2);
     }
 
     #[test]

@@ -2,12 +2,13 @@
 //! shapes, layouts and mechanism sets, checking functional correctness
 //! against a naive reference and cycle-level invariants.
 
-use opengemm::compiler::{compile_gemm, GemmShape, Layout};
+use opengemm::compiler::{compile_gemm, pack_a, pack_b, plan, GemmShape, Layout};
 use opengemm::config::{Mechanisms, PlatformConfig};
 use opengemm::coordinator::{Coordinator, JobRequest};
 use opengemm::prop_assert;
 use opengemm::prop_assert_eq;
 use opengemm::sim::{Platform, SimOptions};
+use opengemm::spm::{Spm, SpmStats};
 use opengemm::util::check::property;
 use opengemm::util::rng::Pcg32;
 
@@ -263,6 +264,150 @@ fn fast_forward_is_cycle_exact() {
             mech.label()
         );
         prop_assert_eq!(ff.c, ls.c, "functional results diverge for {shape:?} {layout:?}");
+        Ok(())
+    });
+}
+
+/// The seed's per-byte SPM access path, reimplemented on top of the
+/// word-granular primitives — the semantic reference the bulk I/O must
+/// reproduce bit-for-bit.
+fn read_byte_reference(spm: &Spm, addr: u64) -> u8 {
+    (spm.read_word(addr / 8) >> ((addr % 8) * 8)) as u8
+}
+
+fn write_bytes_reference(spm: &mut Spm, byte_addr: u64, data: &[u8]) {
+    for (i, &b) in data.iter().enumerate() {
+        let addr = byte_addr + i as u64;
+        let shift = (addr % 8) * 8;
+        let word = spm.read_word(addr / 8);
+        spm.write_word(addr / 8, (word & !(0xffu64 << shift)) | ((b as u64) << shift));
+    }
+}
+
+#[test]
+fn bulk_spm_io_matches_per_word() {
+    // The bulk data plane (whole-word pack writes, gathered tile reads,
+    // bulk i32 writeback) must be bit-identical to the seed's per-word/
+    // per-byte path across random shapes and all three layouts — and
+    // must leave the bank-conflict accounting exactly as the timing
+    // calls produce it (functional I/O never touches SpmStats).
+    let cfg = PlatformConfig::case_study();
+    property("bulk SPM IO == per-word", 12, |rng| {
+        let shape = rand_shape(rng, 40);
+        let layout = *rng.choose(&[
+            Layout::RowMajor,
+            Layout::TiledContiguous,
+            Layout::TiledInterleaved,
+        ]);
+        let p = plan(&cfg, &shape, layout);
+        let mut a = vec![0i8; shape.m * shape.k];
+        let mut b = vec![0i8; shape.k * shape.n];
+        rng.fill_i8(&mut a);
+        rng.fill_i8(&mut b);
+
+        // pack through the bulk path; mirror the same image per byte
+        let mut bulk = Spm::new(cfg.mem);
+        pack_a(&mut bulk, &cfg, &p, &a, shape.m, shape.k);
+        pack_b(&mut bulk, &cfg, &p, &b, shape.k, shape.n);
+        prop_assert_eq!(bulk.stats, SpmStats::default(), "functional pack touched stats");
+
+        // every tile read back two ways: bulk gather vs per-byte decode,
+        // with identical bank-conflict accounting on both cost queries
+        let regs = p.config_regs();
+        let a_agu = regs.a_agu(&cfg.core, 8);
+        let b_agu = regs.b_agu(&cfg.core, 8);
+        let mut scalar_cost = Spm::new(cfg.mem);
+        let mut addrs = Vec::new();
+        for pos in 0..p.bounds.total_tiles().min(48) {
+            let (m1, n1, k1) = p.bounds.decompose(pos);
+            for agu in [&a_agu, &b_agu] {
+                agu.tile_word_addrs(m1, n1, k1, 8, &mut addrs);
+                let mut fast = vec![0i8; addrs.len() * 8];
+                bulk.read_ports_i8(&addrs, 8, &mut fast);
+                let slow: Vec<i8> = (0..fast.len())
+                    .map(|i| read_byte_reference(&bulk, addrs[i / 8] * 8 + (i % 8) as u64) as i8)
+                    .collect();
+                prop_assert_eq!(fast, slow, "tile read diverges at {pos} ({layout:?})");
+                let c_bulk = bulk.read_cost(&addrs);
+                let c_ref = scalar_cost.read_cost(&addrs);
+                prop_assert_eq!(c_bulk, c_ref, "read cost diverges at {pos}");
+            }
+        }
+        prop_assert_eq!(
+            bulk.stats,
+            scalar_cost.stats,
+            "bank-conflict accounting diverges ({layout:?})"
+        );
+
+        // bulk i32 writeback vs per-byte reference on a second SPM
+        let mut scalar = bulk.clone();
+        let tile: Vec<i32> = (0..64).map(|i| (i * 2654435761u64 as i64) as i32).collect();
+        let c_addr = p.c_base;
+        bulk.write_i32(c_addr, &tile);
+        let bytes: Vec<u8> = tile.iter().flat_map(|v| v.to_le_bytes()).collect();
+        write_bytes_reference(&mut scalar, c_addr, &bytes);
+        for w in 0..bulk.n_words() {
+            prop_assert_eq!(
+                bulk.read_word(w),
+                scalar.read_word(w),
+                "word {w} diverges after writeback"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn platform_reuse_is_functionally_and_cycle_invariant() {
+    // The scratch-arena delivery path + reset_for_job reuse: one
+    // long-lived platform serving a random job mix must match a fresh
+    // platform bit-for-bit (metrics AND functional results), and a
+    // functional run must cost exactly the same simulated cycles as the
+    // timing-only run of the same job on the same reused platform.
+    let cfg = PlatformConfig::case_study();
+    let mut reused: Option<Platform> = None;
+    property("reused platform == fresh platform", 12, |rng| {
+        let shape = rand_shape(rng, 64);
+        let layout = *rng.choose(&[
+            Layout::RowMajor,
+            Layout::TiledContiguous,
+            Layout::TiledInterleaved,
+        ]);
+        let mech = *rng.choose(&[Mechanisms::BASELINE, Mechanisms::CPL_BUF, Mechanisms::ALL]);
+        let job = compile_gemm(&cfg, shape, layout, 2, mech.config_preloading)
+            .map_err(|e| e.to_string())?;
+        let mut a = vec![0i8; shape.m * shape.k];
+        let mut b = vec![0i8; shape.k * shape.n];
+        rng.fill_i8(&mut a);
+        rng.fill_i8(&mut b);
+
+        let func_opts =
+            SimOptions { mechanisms: mech, functional: true, ..Default::default() };
+        let mut fresh = Platform::new(cfg.clone(), func_opts);
+        let want = fresh.run_job(&job, Some(&a), Some(&b)).map_err(|e| e.to_string())?;
+
+        if let Some(p) = reused.as_mut() {
+            p.reset_for_job(func_opts);
+        }
+        let p = reused.get_or_insert_with(|| Platform::new(cfg.clone(), func_opts));
+        let got = p.run_job(&job, Some(&a), Some(&b)).map_err(|e| e.to_string())?;
+        prop_assert_eq!(got.metrics, want.metrics, "reused metrics diverge for {shape:?}");
+        prop_assert_eq!(got.c, want.c, "reused functional result diverges for {shape:?}");
+
+        // functional vs timing invariance on the SAME reused platform:
+        // the arena path must not perturb a single cycle
+        p.reset_for_job(SimOptions { mechanisms: mech, functional: false, ..Default::default() });
+        let timing = p.run_job(&job, None, None).map_err(|e| e.to_string())?;
+        prop_assert_eq!(
+            timing.metrics.total_cycles,
+            got.metrics.total_cycles,
+            "functional/timing cycle divergence for {shape:?} {layout:?}"
+        );
+        prop_assert_eq!(
+            timing.metrics.stall_cycles(),
+            got.metrics.stall_cycles(),
+            "functional/timing stall divergence for {shape:?} {layout:?}"
+        );
         Ok(())
     });
 }
