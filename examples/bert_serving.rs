@@ -32,7 +32,8 @@ fn main() -> opengemm::util::error::Result<()> {
     let args = Args::from_env()?;
     let n_requests = args.usize_or("requests", 32)?;
     let cfg = PlatformConfig::case_study();
-    let coord = Coordinator::new(cfg.clone());
+    let coord =
+        Coordinator::new(cfg.clone()).with_fast_forward(args.enabled_unless_no("fast-forward"));
     let mut rng = Pcg32::seeded(args.u64_or("seed", 1)?);
 
     // requests with mixed sequence lengths, like a real serving queue

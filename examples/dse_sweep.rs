@@ -4,12 +4,15 @@
 //! workflow the paper's Chisel design enables (Sec. 2.2: dot-product
 //! units to matrix-matrix accelerators from one generator).
 //!
-//! Run with:  cargo run --release --example dse_sweep
+//! Run with:  cargo run --release --example dse_sweep -- [--shards N]
+//!            [--workers N] [--no-fast-forward]
 
 use opengemm::compiler::GemmShape;
 use opengemm::config::{Mechanisms, PlatformConfig};
-use opengemm::coordinator::{Coordinator, JobRequest};
+use opengemm::coordinator::shard::{run_sweep, SweepOptions};
+use opengemm::coordinator::JobRequest;
 use opengemm::power::PowerModel;
+use opengemm::util::cli::Args;
 use opengemm::util::table::{fmt_f, Table};
 use opengemm::workloads::random_suite;
 
@@ -31,6 +34,16 @@ fn instance(mu: usize, nu: usize, ku: usize) -> Option<PlatformConfig> {
 }
 
 fn main() -> opengemm::util::error::Result<()> {
+    let args = Args::from_env()?;
+    // every per-instance batch goes through the sharded sweep engine —
+    // the same code path the `opengemm sweep` driver distributes over
+    // worker processes
+    let sweep_opts = SweepOptions {
+        shards: args.usize_or("shards", 1)?,
+        workers: args.usize_or("workers", 0)?,
+        fast_forward: args.enabled_unless_no("fast-forward"),
+        ..Default::default()
+    };
     // generator points: vector unit, outer-product-ish, square arrays
     let points = [
         (1usize, 1usize, 64usize), // big dot-product unit
@@ -53,12 +66,11 @@ fn main() -> opengemm::util::error::Result<()> {
             println!("skipping ({mu},{nu},{ku}): does not elaborate");
             continue;
         };
-        let coord = Coordinator::new(cfg.clone());
         let reqs: Vec<JobRequest> = workloads
             .iter()
             .map(|&s| JobRequest::timing(s, Mechanisms::ALL, 5))
             .collect();
-        let results = coord.run_batch(reqs);
+        let results = run_sweep(&cfg, reqs, sweep_opts).outcomes;
         let mut ou_sum = 0.0;
         let mut n = 0usize;
         for r in results.into_iter().flatten() {

@@ -7,7 +7,7 @@
 //! Reports per-layer and aggregate utilization (the Table 2 row) plus
 //! simulator wall-clock throughput.
 //!
-//! Run with:  cargo run --release --example resnet18_e2e
+//! Run with:  cargo run --release --example resnet18_e2e -- [--no-fast-forward]
 
 use std::time::Instant;
 
@@ -15,11 +15,13 @@ use opengemm::compiler::{GemmShape, Layout};
 use opengemm::config::{Mechanisms, PlatformConfig};
 use opengemm::coordinator::{Coordinator, JobRequest};
 use opengemm::runtime::Runtime;
+use opengemm::util::cli::Args;
 use opengemm::util::rng::Pcg32;
 use opengemm::util::table::{fmt_f, fmt_sci, Table};
 use opengemm::workloads::resnet18;
 
 fn main() -> opengemm::util::error::Result<()> {
+    let args = Args::from_env()?;
     let cfg = PlatformConfig::case_study();
     let model = resnet18();
     println!(
@@ -28,7 +30,8 @@ fn main() -> opengemm::util::error::Result<()> {
         model.total_macs() as f64 / 1e9
     );
 
-    let coord = Coordinator::new(cfg.clone());
+    let coord =
+        Coordinator::new(cfg.clone()).with_fast_forward(args.enabled_unless_no("fast-forward"));
     let t0 = Instant::now();
 
     // run every unique GeMM shape through the platform

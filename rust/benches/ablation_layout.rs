@@ -5,20 +5,23 @@
 //! with K) and reports the utilization distribution plus the SPM
 //! conflict statistics for each.
 //!
-//! Run with:  cargo bench --bench ablation_layout
+//! Run with:  cargo bench --bench ablation_layout -- [--no-fast-forward]
 
 use std::time::Instant;
 
 use opengemm::compiler::Layout;
 use opengemm::config::{Mechanisms, PlatformConfig};
 use opengemm::coordinator::{Coordinator, JobRequest};
+use opengemm::util::cli::Args;
 use opengemm::util::stats::BoxStats;
 use opengemm::util::table::Table;
 use opengemm::workloads::random_suite;
 
 fn main() {
+    let args = Args::from_env().expect("args");
     let cfg = PlatformConfig::case_study();
-    let coord = Coordinator::new(cfg.clone());
+    let coord =
+        Coordinator::new(cfg.clone()).with_fast_forward(args.enabled_unless_no("fast-forward"));
     let shapes = random_suite(99, 200);
     let t0 = Instant::now();
 

@@ -6,12 +6,12 @@
 use std::time::Instant;
 
 use opengemm::config::PlatformConfig;
-use opengemm::experiments::fig6_area_power;
+use opengemm::experiments::{fig6_area_power, Fig6Options};
 
 fn main() {
     let cfg = PlatformConfig::case_study();
     let t0 = Instant::now();
-    let res = fig6_area_power(&cfg);
+    let res = fig6_area_power(&cfg, Fig6Options::default());
     println!("{}", res.render());
     println!("bench fig6_area_power: {:.3}s wall", t0.elapsed().as_secs_f64());
 }

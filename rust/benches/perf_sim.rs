@@ -412,11 +412,42 @@ fn bench_dotprod_throughput(b: &mut Bencher) -> Json {
     ])
 }
 
-fn write_json_artifact(name: &str, doc: &Json) {
-    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+fn artifact_path(name: &str) -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()
         .expect("package root has a parent")
-        .join(name);
+        .join(name)
+}
+
+/// True when `name` holds the committed unmeasured placeholder (its
+/// `status` field says so) or does not exist — i.e. overwriting loses
+/// no measured data. Unparseable content counts as measured: when in
+/// doubt, keep the file.
+fn artifact_is_placeholder(name: &str) -> bool {
+    let path = artifact_path(name);
+    let Ok(text) = std::fs::read_to_string(&path) else { return true };
+    match opengemm::util::json::parse(&text) {
+        Ok(doc) => doc
+            .get("status")
+            .and_then(|s| s.as_str())
+            .map(|s| s.contains("placeholder"))
+            .unwrap_or(false),
+        Err(_) => false,
+    }
+}
+
+/// Write a tracked benchmark artifact. A smoke pass is quick and
+/// noisy: it may replace a committed placeholder, but never a measured
+/// artifact (full runs always write).
+fn write_json_artifact(name: &str, doc: &Json, smoke: bool) {
+    if smoke && !artifact_is_placeholder(name) {
+        println!(
+            "keeping measured {name} (smoke pass refuses to overwrite it; \
+             run without --smoke to re-measure)"
+        );
+        return;
+    }
+    let out = artifact_path(name);
     match std::fs::write(&out, doc.pretty()) {
         Ok(()) => println!("wrote {}", out.display()),
         Err(e) => eprintln!("could not write {}: {e}", out.display()),
@@ -434,8 +465,8 @@ fn main() {
     bench_components(&mut b);
     println!("== functional data plane: vectorized kernel + bulk SPM I/O ==");
     let dotprod_doc = bench_dotprod_throughput(&mut b);
-    write_json_artifact("BENCH_dotprod_throughput.json", &dotprod_doc);
+    write_json_artifact("BENCH_dotprod_throughput.json", &dotprod_doc, smoke);
     println!("== simulation throughput: fast-forward vs lockstep ==");
     let doc = bench_sim_throughput(&mut b);
-    write_json_artifact("BENCH_sim_throughput.json", &doc);
+    write_json_artifact("BENCH_sim_throughput.json", &doc, smoke);
 }

@@ -48,6 +48,26 @@ pub enum Layout {
     TiledInterleaved,
 }
 
+impl Layout {
+    /// Stable wire name (sharded-sweep job serialization).
+    pub fn name(self) -> &'static str {
+        match self {
+            Layout::RowMajor => "row-major",
+            Layout::TiledContiguous => "tiled-contiguous",
+            Layout::TiledInterleaved => "tiled-interleaved",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Layout> {
+        match name {
+            "row-major" => Some(Layout::RowMajor),
+            "tiled-contiguous" => Some(Layout::TiledContiguous),
+            "tiled-interleaved" => Some(Layout::TiledInterleaved),
+            _ => None,
+        }
+    }
+}
+
 /// A resolved call: padded shape, loop bounds, and the CSR programming
 /// image (the values the host must write).
 #[derive(Debug, Clone)]

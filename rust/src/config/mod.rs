@@ -12,6 +12,8 @@ pub use toml::{parse_toml, TomlValue};
 
 use std::fmt;
 
+use crate::util::json::{self, Json};
+
 /// GeMM accelerator generator parameters (paper Table 1, top half).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct GemmCoreParams {
@@ -99,6 +101,23 @@ impl Mechanisms {
             (true, true, true) => "Arch4 (+SMA)".into(),
             (c, p, s) => format!("custom(cpl={c},buf={p},sma={s})"),
         }
+    }
+
+    /// Wire encoding (sharded-sweep job serialization).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("config_preloading", Json::Bool(self.config_preloading)),
+            ("prefetch", Json::Bool(self.prefetch)),
+            ("strided_layout", Json::Bool(self.strided_layout)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Mechanisms, String> {
+        Ok(Mechanisms {
+            config_preloading: json::get_bool(v, "config_preloading")?,
+            prefetch: json::get_bool(v, "prefetch")?,
+            strided_layout: json::get_bool(v, "strided_layout")?,
+        })
     }
 }
 
@@ -271,6 +290,67 @@ impl PlatformConfig {
             ));
         }
         Ok(())
+    }
+
+    /// Wire encoding (sharded-sweep shard files): the worker process
+    /// reconstructs the exact elaborated instance the driver planned
+    /// with, so sharded and unsharded runs simulate identical hardware.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "core",
+                Json::obj(vec![
+                    ("mu", Json::num(self.core.mu as f64)),
+                    ("nu", Json::num(self.core.nu as f64)),
+                    ("ku", Json::num(self.core.ku as f64)),
+                    ("pa_bits", Json::num(self.core.pa_bits as f64)),
+                    ("pb_bits", Json::num(self.core.pb_bits as f64)),
+                    ("pc_bits", Json::num(self.core.pc_bits as f64)),
+                ]),
+            ),
+            (
+                "mem",
+                Json::obj(vec![
+                    ("d_stream", Json::num(self.mem.d_stream as f64)),
+                    ("r_mem", Json::num(self.mem.r_mem as f64)),
+                    ("w_mem", Json::num(self.mem.w_mem as f64)),
+                    ("p_word_bits", Json::num(self.mem.p_word_bits as f64)),
+                    ("n_bank", Json::num(self.mem.n_bank as f64)),
+                    ("d_mem", Json::num(self.mem.d_mem as f64)),
+                    ("read_latency", Json::num(self.mem.read_latency as f64)),
+                    ("write_latency", Json::num(self.mem.write_latency as f64)),
+                ]),
+            ),
+            ("freq_mhz", Json::num(self.freq_mhz as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<PlatformConfig, String> {
+        let core = json::get(v, "core")?;
+        let mem = json::get(v, "mem")?;
+        let cfg = PlatformConfig {
+            core: GemmCoreParams {
+                mu: json::get_usize(core, "mu")?,
+                nu: json::get_usize(core, "nu")?,
+                ku: json::get_usize(core, "ku")?,
+                pa_bits: json::get_usize(core, "pa_bits")?,
+                pb_bits: json::get_usize(core, "pb_bits")?,
+                pc_bits: json::get_usize(core, "pc_bits")?,
+            },
+            mem: MemParams {
+                d_stream: json::get_usize(mem, "d_stream")?,
+                r_mem: json::get_usize(mem, "r_mem")?,
+                w_mem: json::get_usize(mem, "w_mem")?,
+                p_word_bits: json::get_usize(mem, "p_word_bits")?,
+                n_bank: json::get_usize(mem, "n_bank")?,
+                d_mem: json::get_usize(mem, "d_mem")?,
+                read_latency: json::get_u64(mem, "read_latency")?,
+                write_latency: json::get_u64(mem, "write_latency")?,
+            },
+            freq_mhz: json::get_u64(v, "freq_mhz")?,
+        };
+        cfg.validate().map_err(|e| e.to_string())?;
+        Ok(cfg)
     }
 
     /// Load from a TOML-subset config file (see `config/toml.rs`).

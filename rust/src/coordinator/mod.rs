@@ -8,6 +8,8 @@
 //! the same architecture). Results come back over a bounded channel in
 //! submission order.
 
+pub mod shard;
+
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -15,9 +17,10 @@ use std::thread::JoinHandle;
 use crate::compiler::{compile_gemm, GemmShape, Layout, SplitError};
 use crate::config::{Mechanisms, PlatformConfig};
 use crate::sim::{JobResult, Platform, SimError, SimOptions};
+use crate::util::json::{self, Json};
 
 /// A simulation request.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct JobRequest {
     pub shape: GemmShape,
     pub layout: Layout,
@@ -40,10 +43,116 @@ impl JobRequest {
         };
         JobRequest { shape, layout, mechanisms, repeats, operands: None }
     }
+
+    /// Wire encoding (sharded-sweep shard files). Functional operands
+    /// are carried inline, so a worker process can run functional jobs
+    /// bit-identically to the in-process path.
+    pub fn to_json(&self) -> Json {
+        let operands = match &self.operands {
+            None => Json::Null,
+            Some((a, b)) => Json::obj(vec![
+                ("a", Json::Arr(a.iter().map(|&x| Json::num(x as f64)).collect())),
+                ("b", Json::Arr(b.iter().map(|&x| Json::num(x as f64)).collect())),
+            ]),
+        };
+        Json::obj(vec![
+            (
+                "shape",
+                Json::obj(vec![
+                    ("m", Json::num(self.shape.m as f64)),
+                    ("k", Json::num(self.shape.k as f64)),
+                    ("n", Json::num(self.shape.n as f64)),
+                ]),
+            ),
+            ("layout", Json::str(self.layout.name())),
+            ("mechanisms", self.mechanisms.to_json()),
+            ("repeats", Json::num(self.repeats as f64)),
+            ("operands", operands),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<JobRequest, String> {
+        let shape = json::get(v, "shape")?;
+        let (m, k, n) = (
+            json::get_usize(shape, "m")?,
+            json::get_usize(shape, "k")?,
+            json::get_usize(shape, "n")?,
+        );
+        if m == 0 || k == 0 || n == 0 {
+            return Err(format!("degenerate shape ({m},{k},{n})"));
+        }
+        let layout_name = json::get_str(v, "layout")?;
+        let layout = Layout::from_name(layout_name)
+            .ok_or_else(|| format!("unknown layout {layout_name:?}"))?;
+        let operands = match json::get(v, "operands")? {
+            Json::Null => None,
+            obj => {
+                let a = parse_i8_array(obj, "a")?;
+                let b = parse_i8_array(obj, "b")?;
+                // reject rather than panic later in a pool thread: the
+                // simulator asserts these sizes (checked_mul: shard
+                // files may come from other hosts, so even the
+                // validation arithmetic must not trust the shape)
+                let want = m
+                    .checked_mul(k)
+                    .zip(k.checked_mul(n))
+                    .ok_or_else(|| format!("shape ({m},{k},{n}) overflows operand sizes"))?;
+                if (a.len(), b.len()) != want {
+                    return Err(format!(
+                        "operand sizes {}/{} do not match shape ({m},{k},{n})",
+                        a.len(),
+                        b.len()
+                    ));
+                }
+                Some((a, b))
+            }
+        };
+        let repeats = json::get_u64(v, "repeats")?;
+        let repeats = u32::try_from(repeats)
+            .map_err(|_| format!("repeats {repeats} out of u32 range"))?;
+        Ok(JobRequest {
+            shape: GemmShape::new(m, k, n),
+            layout,
+            mechanisms: Mechanisms::from_json(json::get(v, "mechanisms")?)?,
+            repeats,
+            operands,
+        })
+    }
+}
+
+fn parse_i8_array(v: &Json, key: &str) -> Result<Vec<i8>, String> {
+    json::get_arr(v, key)?
+        .iter()
+        .map(|x| {
+            x.as_i64()
+                .and_then(|n| i8::try_from(n).ok())
+                .ok_or_else(|| format!("bad i8 in operand {key:?}"))
+        })
+        .collect()
 }
 
 /// Outcome of one request.
 pub type JobOutcome = Result<JobResult, String>;
+
+/// Wire encoding of a [`JobOutcome`] (sharded-sweep result files):
+/// success carries the full [`JobResult`], failure carries the error
+/// string — both merge transparently with in-process outcomes.
+pub fn outcome_to_json(outcome: &JobOutcome) -> Json {
+    match outcome {
+        Ok(r) => Json::obj(vec![("ok", r.to_json())]),
+        Err(e) => Json::obj(vec![("err", Json::str(e.clone()))]),
+    }
+}
+
+pub fn outcome_from_json(v: &Json) -> Result<JobOutcome, String> {
+    if let Some(r) = v.get("ok") {
+        return Ok(Ok(JobResult::from_json(r)?));
+    }
+    if let Some(e) = v.get("err") {
+        return Ok(Err(e.as_str().ok_or("field \"err\" is not a string")?.to_string()));
+    }
+    Err("outcome has neither \"ok\" nor \"err\"".into())
+}
 
 struct WorkItem {
     index: usize,
@@ -51,11 +160,38 @@ struct WorkItem {
 }
 
 /// Aggregated coordinator statistics.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct CoordinatorStats {
     pub jobs_completed: u64,
     pub jobs_failed: u64,
     pub simulated_cycles: u64,
+}
+
+impl CoordinatorStats {
+    /// Fold another coordinator's counters in (shard merging). Plain
+    /// u64 sums, so the merge is order-independent.
+    pub fn accumulate(&mut self, other: &CoordinatorStats) {
+        self.jobs_completed += other.jobs_completed;
+        self.jobs_failed += other.jobs_failed;
+        self.simulated_cycles += other.simulated_cycles;
+    }
+
+    /// Wire encoding (sharded-sweep result files).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("jobs_completed", Json::num(self.jobs_completed as f64)),
+            ("jobs_failed", Json::num(self.jobs_failed as f64)),
+            ("simulated_cycles", Json::num(self.simulated_cycles as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<CoordinatorStats, String> {
+        Ok(CoordinatorStats {
+            jobs_completed: json::get_u64(v, "jobs_completed")?,
+            jobs_failed: json::get_u64(v, "jobs_failed")?,
+            simulated_cycles: json::get_u64(v, "simulated_cycles")?,
+        })
+    }
 }
 
 /// The worker pool.
@@ -69,10 +205,21 @@ pub struct Coordinator {
 
 impl Coordinator {
     pub fn new(cfg: PlatformConfig) -> Coordinator {
-        let workers = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(4)
-            .clamp(1, 32);
+        // Worker-count policy: `OPENGEMM_WORKERS` overrides outright
+        // (no upper clamp — a sweep host with 96 cores may use them
+        // all); otherwise size to the machine, clamped to a pool that
+        // doesn't oversubscribe small jobs. `with_workers` overrides
+        // both.
+        let workers = match std::env::var("OPENGEMM_WORKERS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+        {
+            Some(n) if n > 0 => n,
+            _ => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+                .clamp(1, 32),
+        };
         Coordinator {
             cfg,
             csr_latency: SimOptions::default().csr_latency,

@@ -1,0 +1,520 @@
+//! Sharded sweep engine: plan, run and merge shard-parallel batches.
+//!
+//! The evaluation sweeps are embarrassingly parallel (Fig. 5 runs 500
+//! workloads x 6 architecture variants; the DSE grids are the same
+//! shape), and one process's worker pool is the scaling ceiling. This
+//! layer splits one request batch into [`Shard`]s that are
+//!
+//! - **deterministic**: [`SweepPlan::stride`] / [`SweepPlan::contiguous`]
+//!   depend only on the request count and shard count;
+//! - **self-contained**: a serialized shard carries the elaborated
+//!   [`PlatformConfig`], the simulation options and every job (operands
+//!   included), so any process — or, tomorrow, any host — can run it
+//!   with no other context;
+//! - **mergeable**: [`merge`] reassembles per-shard outcomes into
+//!   submission order and sums the per-shard [`CoordinatorStats`].
+//!
+//! ## Why `merge` equals the unsharded run
+//!
+//! Every job is a deterministic function of `(cfg, sim options,
+//! request)` alone — workers never share mutable state and job results
+//! never feed back into later jobs. A plan covers each submission index
+//! exactly once (enforced by `merge`), so reordering outcomes by index
+//! reproduces `Coordinator::run_batch`'s output element-for-element,
+//! and the stats counters are per-job sums, so summing them over any
+//! partition gives the unsharded totals. The
+//! `sharded_sweep_matches_unsharded` differential test (and the CI
+//! `sweep-smoke` lane, across real processes) pins this property.
+
+use std::path::Path;
+
+use crate::config::PlatformConfig;
+use crate::coordinator::{
+    outcome_from_json, outcome_to_json, Coordinator, CoordinatorStats, JobOutcome, JobRequest,
+};
+use crate::sim::SimOptions;
+use crate::util::json::{self, Json};
+
+/// Wire-format markers, so a worker fed the wrong file fails loudly.
+const SHARD_FORMAT: &str = "opengemm-shard-v1";
+const SHARD_RESULT_FORMAT: &str = "opengemm-shard-result-v1";
+
+/// How a sweep is split and simulated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SweepOptions {
+    /// Number of shards to split the batch into (0 or 1 = unsharded).
+    pub shards: usize,
+    /// Worker threads per shard coordinator (0 = auto-size).
+    pub workers: usize,
+    /// Event-driven cycle skipping (cycle-exact; off only for
+    /// differential checks).
+    pub fast_forward: bool,
+    /// Host-stall cycles per accelerator CSR access.
+    pub csr_latency: u64,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        SweepOptions {
+            shards: 1,
+            workers: 0,
+            fast_forward: SimOptions::default().fast_forward,
+            csr_latency: SimOptions::default().csr_latency,
+        }
+    }
+}
+
+impl SweepOptions {
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("workers", Json::num(self.workers as f64)),
+            ("fast_forward", Json::Bool(self.fast_forward)),
+            ("csr_latency", Json::num(self.csr_latency as f64)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<SweepOptions, String> {
+        Ok(SweepOptions {
+            // `shards` is a planning knob, not a per-shard property; a
+            // deserialized shard is always run as-is.
+            shards: 1,
+            workers: json::get_usize(v, "workers")?,
+            fast_forward: json::get_bool(v, "fast_forward")?,
+            csr_latency: json::get_u64(v, "csr_latency")?,
+        })
+    }
+}
+
+/// One self-contained slice of a sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Shard {
+    /// Position of this shard in its plan (0-based).
+    pub shard_index: usize,
+    /// Total shards in the plan this shard came from.
+    pub num_shards: usize,
+    /// The elaborated platform instance every job runs on.
+    pub cfg: PlatformConfig,
+    pub options: SweepOptions,
+    /// Original submission indices, parallel to `requests`.
+    pub indices: Vec<usize>,
+    pub requests: Vec<JobRequest>,
+}
+
+/// The outcome of running one shard.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardResult {
+    pub shard_index: usize,
+    /// Original submission indices, parallel to `outcomes`.
+    pub indices: Vec<usize>,
+    pub outcomes: Vec<JobOutcome>,
+    pub stats: CoordinatorStats,
+}
+
+/// A merged sweep: outcomes in submission order plus summed stats.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepResult {
+    pub outcomes: Vec<JobOutcome>,
+    pub stats: CoordinatorStats,
+}
+
+/// A deterministic partition of one request batch.
+#[derive(Debug, Clone)]
+pub struct SweepPlan {
+    pub total_jobs: usize,
+    pub shards: Vec<Shard>,
+}
+
+impl SweepPlan {
+    /// Stride (round-robin) partition: request `i` lands in shard
+    /// `i % shards`. Sweep generators emit workloads in size-correlated
+    /// order, so striding balances shard runtimes.
+    pub fn stride(
+        cfg: &PlatformConfig,
+        requests: Vec<JobRequest>,
+        opts: SweepOptions,
+    ) -> SweepPlan {
+        Self::partition(cfg, requests, opts, |i, _n, shards| i % shards)
+    }
+
+    /// Contiguous partition: the batch is cut into `shards` consecutive
+    /// runs. Less balanced than [`SweepPlan::stride`], but keeps
+    /// submission locality when jobs share staged operands.
+    pub fn contiguous(
+        cfg: &PlatformConfig,
+        requests: Vec<JobRequest>,
+        opts: SweepOptions,
+    ) -> SweepPlan {
+        Self::partition(cfg, requests, opts, |i, n, shards| {
+            // first `n % shards` shards take one extra job
+            let (base, extra) = (n / shards, n % shards);
+            let boundary = extra * (base + 1);
+            if i < boundary {
+                i / (base + 1)
+            } else {
+                extra + (i - boundary) / base
+            }
+        })
+    }
+
+    /// `assign(i, total_jobs, num_shards)` picks the shard of job `i`;
+    /// `num_shards` arrives pre-clamped to `1..=total_jobs.max(1)`.
+    fn partition(
+        cfg: &PlatformConfig,
+        requests: Vec<JobRequest>,
+        opts: SweepOptions,
+        assign: impl Fn(usize, usize, usize) -> usize,
+    ) -> SweepPlan {
+        let n = requests.len();
+        let num_shards = opts.shards.clamp(1, n.max(1));
+        // Each shard stores `shards: 1`: the split already happened, and
+        // a shard is always run as-is (this also keeps the shard-file
+        // round-trip lossless — the wire format carries no planning
+        // knobs).
+        let shard_options = SweepOptions { shards: 1, ..opts };
+        let mut shards: Vec<Shard> = (0..num_shards)
+            .map(|shard_index| Shard {
+                shard_index,
+                num_shards,
+                cfg: cfg.clone(),
+                options: shard_options,
+                indices: Vec::new(),
+                requests: Vec::new(),
+            })
+            .collect();
+        for (i, request) in requests.into_iter().enumerate() {
+            let s = assign(i, n, num_shards);
+            shards[s].indices.push(i);
+            shards[s].requests.push(request);
+        }
+        SweepPlan { total_jobs: n, shards }
+    }
+}
+
+impl Shard {
+    /// Run this shard on its own [`Coordinator`]. Consumes the shard:
+    /// the request batch (inline functional operands included) moves
+    /// straight into the coordinator instead of being cloned.
+    pub fn run(self) -> ShardResult {
+        let Shard { shard_index, cfg, options, indices, requests, .. } = self;
+        let mut coord = Coordinator::new(cfg)
+            .with_fast_forward(options.fast_forward)
+            .with_csr_latency(options.csr_latency);
+        if options.workers > 0 {
+            coord = coord.with_workers(options.workers);
+        }
+        let outcomes = coord.run_batch(requests);
+        ShardResult { shard_index, indices, outcomes, stats: coord.stats() }
+    }
+
+    /// Wire encoding: the complete context a worker process needs.
+    pub fn to_json(&self) -> Json {
+        let jobs: Vec<Json> = self
+            .indices
+            .iter()
+            .zip(&self.requests)
+            .map(|(&index, request)| {
+                Json::obj(vec![
+                    ("index", Json::num(index as f64)),
+                    ("request", request.to_json()),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("format", Json::str(SHARD_FORMAT)),
+            ("shard_index", Json::num(self.shard_index as f64)),
+            ("num_shards", Json::num(self.num_shards as f64)),
+            ("cfg", self.cfg.to_json()),
+            ("options", self.options.to_json()),
+            ("jobs", Json::Arr(jobs)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Shard, String> {
+        let format = json::get_str(v, "format")?;
+        if format != SHARD_FORMAT {
+            return Err(format!("not a shard file: format {format:?}, want {SHARD_FORMAT:?}"));
+        }
+        let mut indices = Vec::new();
+        let mut requests = Vec::new();
+        for job in json::get_arr(v, "jobs")? {
+            indices.push(json::get_usize(job, "index")?);
+            requests.push(JobRequest::from_json(json::get(job, "request")?)?);
+        }
+        Ok(Shard {
+            shard_index: json::get_usize(v, "shard_index")?,
+            num_shards: json::get_usize(v, "num_shards")?,
+            cfg: PlatformConfig::from_json(json::get(v, "cfg")?)?,
+            options: SweepOptions::from_json(json::get(v, "options")?)?,
+            indices,
+            requests,
+        })
+    }
+
+    pub fn write_file(&self, path: &Path) -> Result<(), String> {
+        std::fs::write(path, self.to_json().pretty())
+            .map_err(|e| format!("write shard {}: {e}", path.display()))
+    }
+
+    pub fn read_file(path: &Path) -> Result<Shard, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read shard {}: {e}", path.display()))?;
+        Shard::from_json(&json::parse(&text)?)
+    }
+}
+
+impl ShardResult {
+    /// Wire encoding (worker process -> driver).
+    pub fn to_json(&self) -> Json {
+        let jobs: Vec<Json> = self
+            .indices
+            .iter()
+            .zip(&self.outcomes)
+            .map(|(&index, outcome)| {
+                Json::obj(vec![
+                    ("index", Json::num(index as f64)),
+                    ("outcome", outcome_to_json(outcome)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("format", Json::str(SHARD_RESULT_FORMAT)),
+            ("shard_index", Json::num(self.shard_index as f64)),
+            ("jobs", Json::Arr(jobs)),
+            ("stats", self.stats.to_json()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ShardResult, String> {
+        let format = json::get_str(v, "format")?;
+        if format != SHARD_RESULT_FORMAT {
+            return Err(format!(
+                "not a shard result file: format {format:?}, want {SHARD_RESULT_FORMAT:?}"
+            ));
+        }
+        let mut indices = Vec::new();
+        let mut outcomes = Vec::new();
+        for job in json::get_arr(v, "jobs")? {
+            indices.push(json::get_usize(job, "index")?);
+            outcomes.push(outcome_from_json(json::get(job, "outcome")?)?);
+        }
+        Ok(ShardResult {
+            shard_index: json::get_usize(v, "shard_index")?,
+            indices,
+            outcomes,
+            stats: CoordinatorStats::from_json(json::get(v, "stats")?)?,
+        })
+    }
+
+    pub fn write_file(&self, path: &Path) -> Result<(), String> {
+        std::fs::write(path, self.to_json().pretty())
+            .map_err(|e| format!("write shard result {}: {e}", path.display()))
+    }
+
+    pub fn read_file(path: &Path) -> Result<ShardResult, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read shard result {}: {e}", path.display()))?;
+        ShardResult::from_json(&json::parse(&text)?)
+    }
+}
+
+impl SweepResult {
+    /// Wire encoding of a merged sweep. Deliberately free of
+    /// wall-clock, host or process-count fields: the bytes depend only
+    /// on the simulated work, so sharded and unsharded runs of the
+    /// same sweep serialize identically (the CI smoke lane diffs them).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "outcomes",
+                Json::Arr(self.outcomes.iter().map(outcome_to_json).collect()),
+            ),
+            ("stats", self.stats.to_json()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<SweepResult, String> {
+        let outcomes = json::get_arr(v, "outcomes")?
+            .iter()
+            .map(outcome_from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(SweepResult {
+            outcomes,
+            stats: CoordinatorStats::from_json(json::get(v, "stats")?)?,
+        })
+    }
+}
+
+/// Merge per-shard results back into submission order.
+///
+/// Fails (rather than guessing) if the shards do not form an exact
+/// cover of `0..total_jobs` — the property the equality proof in the
+/// module docs rests on.
+pub fn merge(total_jobs: usize, shard_results: Vec<ShardResult>) -> Result<SweepResult, String> {
+    let mut slots: Vec<Option<JobOutcome>> = (0..total_jobs).map(|_| None).collect();
+    let mut stats = CoordinatorStats::default();
+    for sr in shard_results {
+        let ShardResult { shard_index, indices, outcomes, stats: shard_stats } = sr;
+        if indices.len() != outcomes.len() {
+            return Err(format!(
+                "shard {shard_index}: {} indices vs {} outcomes",
+                indices.len(),
+                outcomes.len()
+            ));
+        }
+        stats.accumulate(&shard_stats);
+        for (index, outcome) in indices.into_iter().zip(outcomes) {
+            if index >= total_jobs {
+                return Err(format!(
+                    "shard {shard_index}: job index {index} out of range (total {total_jobs})"
+                ));
+            }
+            if slots[index].replace(outcome).is_some() {
+                return Err(format!("job {index} covered by more than one shard"));
+            }
+        }
+    }
+    let outcomes = slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, slot)| slot.ok_or_else(|| format!("job {i} not covered by any shard")))
+        .collect::<Result<Vec<_>, String>>()?;
+    Ok(SweepResult { outcomes, stats })
+}
+
+/// Run an already-built plan in-process: every shard on its own
+/// coordinator, sequentially (each shard already owns a worker pool;
+/// process-level parallelism lives in the `sweep` CLI driver), then
+/// merge.
+pub fn run_plan(plan: SweepPlan) -> SweepResult {
+    let SweepPlan { total_jobs, shards } = plan;
+    let results: Vec<ShardResult> = shards.into_iter().map(Shard::run).collect();
+    merge(total_jobs, results).expect("in-process plan is an exact cover")
+}
+
+/// Run a whole sweep in-process through the shard machinery: plan with
+/// a stride partition, run, merge.
+///
+/// With `opts.shards <= 1` this is exactly one `Coordinator::run_batch`
+/// behind the shard API — the single code path all experiment drivers
+/// now route through.
+pub fn run_sweep(
+    cfg: &PlatformConfig,
+    requests: Vec<JobRequest>,
+    opts: SweepOptions,
+) -> SweepResult {
+    run_plan(SweepPlan::stride(cfg, requests, opts))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::GemmShape;
+    use crate::config::Mechanisms;
+
+    fn requests(n: usize) -> Vec<JobRequest> {
+        (0..n)
+            .map(|i| {
+                JobRequest::timing(
+                    GemmShape::new(8 + 8 * (i % 4), 8 + 8 * (i % 3), 8 + 8 * (i % 5)),
+                    if i % 2 == 0 { Mechanisms::ALL } else { Mechanisms::CPL_BUF },
+                    1 + (i % 2) as u32,
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn stride_partition_is_an_exact_round_robin_cover() {
+        let cfg = PlatformConfig::case_study();
+        let opts = SweepOptions { shards: 3, ..Default::default() };
+        let plan = SweepPlan::stride(&cfg, requests(10), opts);
+        assert_eq!(plan.total_jobs, 10);
+        assert_eq!(plan.shards.len(), 3);
+        let mut seen = vec![false; 10];
+        for shard in &plan.shards {
+            assert_eq!(shard.indices.len(), shard.requests.len());
+            for &i in &shard.indices {
+                assert_eq!(i % 3, shard.shard_index, "stride assignment");
+                assert!(!seen[i], "index {i} assigned twice");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every index covered");
+    }
+
+    #[test]
+    fn contiguous_partition_is_an_exact_ordered_cover() {
+        let cfg = PlatformConfig::case_study();
+        let opts = SweepOptions { shards: 4, ..Default::default() };
+        let plan = SweepPlan::contiguous(&cfg, requests(10), opts);
+        // 10 jobs over 4 shards: 3, 3, 2, 2
+        let sizes: Vec<usize> = plan.shards.iter().map(|s| s.indices.len()).collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2]);
+        let flat: Vec<usize> =
+            plan.shards.iter().flat_map(|s| s.indices.iter().copied()).collect();
+        assert_eq!(flat, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn more_shards_than_jobs_collapses_to_job_count() {
+        let cfg = PlatformConfig::case_study();
+        let opts = SweepOptions { shards: 8, ..Default::default() };
+        let plan = SweepPlan::stride(&cfg, requests(3), opts);
+        assert_eq!(plan.shards.len(), 3);
+        let plan = SweepPlan::stride(&cfg, Vec::new(), opts);
+        assert_eq!(plan.shards.len(), 1);
+        assert_eq!(plan.total_jobs, 0);
+    }
+
+    #[test]
+    fn shard_file_roundtrip_is_lossless() {
+        let cfg = PlatformConfig::case_study();
+        let mut reqs = requests(5);
+        reqs[1].operands = Some((vec![1i8, -2, 127, -128], vec![0i8, 5]));
+        let opts = SweepOptions { shards: 2, workers: 3, ..Default::default() };
+        let plan = SweepPlan::stride(&cfg, reqs, opts);
+        for shard in &plan.shards {
+            let text = shard.to_json().pretty();
+            let back = Shard::from_json(&json::parse(&text).unwrap()).unwrap();
+            assert_eq!(&back, shard);
+        }
+    }
+
+    #[test]
+    fn merge_rejects_gaps_and_overlaps() {
+        let cfg = PlatformConfig::case_study();
+        let opts = SweepOptions { shards: 2, ..Default::default() };
+        let plan = SweepPlan::stride(&cfg, requests(4), opts);
+        let results: Vec<ShardResult> = plan.shards.iter().cloned().map(Shard::run).collect();
+
+        // exact cover merges
+        assert!(merge(4, results.clone()).is_ok());
+        // a missing shard is a gap
+        let err = merge(4, vec![results[0].clone()]).unwrap_err();
+        assert!(err.contains("not covered"), "{err}");
+        // a duplicated shard is an overlap
+        let err = merge(4, vec![results[0].clone(), results[0].clone(), results[1].clone()])
+            .unwrap_err();
+        assert!(err.contains("more than one shard"), "{err}");
+        // an out-of-range index is rejected
+        let err = merge(2, results.clone()).unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn sharded_sweep_matches_unsharded_batch() {
+        let cfg = PlatformConfig::case_study();
+        let reqs = requests(8);
+
+        let unsharded = Coordinator::new(cfg.clone()).with_workers(2);
+        let want = unsharded.run_batch(reqs.clone());
+        let want_stats = unsharded.stats();
+
+        for shards in [2usize, 3] {
+            let opts = SweepOptions { shards, workers: 2, ..Default::default() };
+            let got = run_sweep(&cfg, reqs.clone(), opts);
+            assert_eq!(got.outcomes, want, "{shards}-shard outcomes");
+            assert_eq!(got.stats, want_stats, "{shards}-shard stats");
+        }
+    }
+}

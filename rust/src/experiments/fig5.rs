@@ -12,7 +12,8 @@
 
 use crate::compiler::GemmShape;
 use crate::config::{Mechanisms, PlatformConfig};
-use crate::coordinator::{Coordinator, JobRequest};
+use crate::coordinator::shard::{run_sweep, SweepOptions};
+use crate::coordinator::JobRequest;
 use crate::util::stats::BoxStats;
 use crate::util::table::{ascii_box, fmt_f, Table};
 use crate::workloads::random_suite;
@@ -23,6 +24,9 @@ pub struct Fig5Options {
     pub workloads: usize,
     pub repeats: u32,
     pub workers: usize,
+    /// In-process shards per variant batch (0 or 1 = unsharded; the
+    /// multi-process path is the `sweep` CLI driver).
+    pub shards: usize,
     /// Event-driven cycle skipping (cycle-exact; off only for
     /// differential checks).
     pub fast_forward: bool,
@@ -30,7 +34,14 @@ pub struct Fig5Options {
 
 impl Default for Fig5Options {
     fn default() -> Self {
-        Fig5Options { seed: 2024, workloads: 500, repeats: 10, workers: 0, fast_forward: true }
+        Fig5Options {
+            seed: 2024,
+            workloads: 500,
+            repeats: 10,
+            workers: 0,
+            shards: 1,
+            fast_forward: true,
+        }
     }
 }
 
@@ -49,8 +60,10 @@ pub struct Fig5Result {
     pub shapes: Vec<GemmShape>,
 }
 
-/// The paper's variant ladder.
-fn variant_specs() -> Vec<(&'static str, Mechanisms, usize)> {
+/// The paper's variant ladder: `(label, mechanisms, buffer depth)`.
+/// Public because the `sweep` CLI plans its multi-process Fig. 5
+/// slices from the same ladder.
+pub fn variant_specs() -> Vec<(&'static str, Mechanisms, usize)> {
     vec![
         ("Arch1 baseline", Mechanisms::BASELINE, 2),
         ("Arch2 +CPL", Mechanisms::CPL, 2),
@@ -61,22 +74,31 @@ fn variant_specs() -> Vec<(&'static str, Mechanisms, usize)> {
     ]
 }
 
+/// The platform instance of one variant: base config at the variant's
+/// buffer depth.
+pub fn variant_config(base_cfg: &PlatformConfig, depth: usize) -> PlatformConfig {
+    let mut cfg = base_cfg.clone();
+    cfg.mem.d_stream = depth;
+    cfg
+}
+
 pub fn fig5_ablation(base_cfg: &PlatformConfig, opts: Fig5Options) -> Fig5Result {
     let shapes = random_suite(opts.seed, opts.workloads);
+    let sweep_opts = SweepOptions {
+        shards: opts.shards,
+        workers: opts.workers,
+        fast_forward: opts.fast_forward,
+        ..Default::default()
+    };
     let mut variants = Vec::new();
     for (label, mech, depth) in variant_specs() {
-        let mut cfg = base_cfg.clone();
-        cfg.mem.d_stream = depth;
-        let mut coord = Coordinator::new(cfg).with_fast_forward(opts.fast_forward);
-        if opts.workers > 0 {
-            coord = coord.with_workers(opts.workers);
-        }
+        let cfg = variant_config(base_cfg, depth);
         let requests: Vec<JobRequest> = shapes
             .iter()
             .map(|&shape| JobRequest::timing(shape, mech, opts.repeats))
             .collect();
-        let samples: Vec<f64> = coord
-            .run_batch(requests)
+        let samples: Vec<f64> = run_sweep(&cfg, requests, sweep_opts)
+            .outcomes
             .into_iter()
             .map(|r| r.expect("fig5 job failed").report.overall)
             .collect();
@@ -151,7 +173,7 @@ mod tests {
         let cfg = PlatformConfig::case_study();
         let res = fig5_ablation(
             &cfg,
-            Fig5Options { seed: 7, workloads: 40, repeats: 10, workers: 0, fast_forward: true },
+            Fig5Options { seed: 7, workloads: 40, repeats: 10, ..Default::default() },
         );
         let med: Vec<f64> = res.variants.iter().map(|v| v.stats.median).collect();
         // each mechanism must improve the median
@@ -172,7 +194,14 @@ mod tests {
         let cfg = PlatformConfig::case_study();
         let res = fig5_ablation(
             &cfg,
-            Fig5Options { seed: 3, workloads: 8, repeats: 2, workers: 2, fast_forward: true },
+            Fig5Options {
+                seed: 3,
+                workloads: 8,
+                repeats: 2,
+                workers: 2,
+                shards: 2,
+                ..Default::default()
+            },
         );
         let text = res.render();
         for v in &res.variants {

@@ -8,6 +8,20 @@ use crate::coordinator::{Coordinator, JobRequest};
 use crate::power::{Breakdown, PowerModel};
 use crate::util::table::{fmt_f, Table};
 
+#[derive(Debug, Clone, Copy)]
+pub struct Fig6Options {
+    /// Event-driven cycle skipping (cycle-exact; off only for
+    /// differential checks). The seed dropped this option here, so
+    /// `--no-fast-forward` never reached the power-workload simulation.
+    pub fast_forward: bool,
+}
+
+impl Default for Fig6Options {
+    fn default() -> Self {
+        Fig6Options { fast_forward: true }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct Fig6Result {
     pub area: Breakdown,
@@ -22,11 +36,11 @@ pub struct Fig6Result {
     pub workload_utilization: f64,
 }
 
-pub fn fig6_area_power(cfg: &PlatformConfig) -> Fig6Result {
+pub fn fig6_area_power(cfg: &PlatformConfig, opts: Fig6Options) -> Fig6Result {
     let model = PowerModel::default();
     // the paper's power workload: block GeMM of size (32,32,32),
     // steady-state (repeats amortize configuration)
-    let coord = Coordinator::new(cfg.clone());
+    let coord = Coordinator::new(cfg.clone()).with_fast_forward(opts.fast_forward);
     let req = JobRequest::timing(GemmShape::new(32, 32, 32), Mechanisms::ALL, 10);
     // kernel-window utilization: the power measurement's steady state
     // (configuration is programmed once and amortized)
@@ -91,7 +105,11 @@ mod tests {
     #[test]
     fn headline_numbers_match_paper() {
         let cfg = PlatformConfig::case_study();
-        let r = fig6_area_power(&cfg);
+        let r = fig6_area_power(&cfg, Fig6Options::default());
+        // the fast-forward toggle must not change the measured workload
+        // utilization (cycle-exactness through this driver)
+        let lockstep = fig6_area_power(&cfg, Fig6Options { fast_forward: false });
+        assert_eq!(r.workload_utilization, lockstep.workload_utilization);
         assert!((r.total_area_mm2 - 0.531).abs() < 1e-6);
         assert!((r.total_power_mw - 43.8).abs() < 1e-6);
         assert!((r.peak_gops - 204.8).abs() < 1e-9);
@@ -102,7 +120,7 @@ mod tests {
     #[test]
     fn breakdown_percentages_sum_to_100() {
         let cfg = PlatformConfig::case_study();
-        let r = fig6_area_power(&cfg);
+        let r = fig6_area_power(&cfg, Fig6Options::default());
         let sum_a: f64 = r.area.percentages().iter().map(|(_, p)| p).sum();
         let sum_p: f64 = r.power.percentages().iter().map(|(_, p)| p).sum();
         assert!((sum_a - 100.0).abs() < 1e-9);

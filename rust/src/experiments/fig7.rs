@@ -10,7 +10,8 @@
 use crate::baseline::{GemminiMode, GemminiModel};
 use crate::compiler::GemmShape;
 use crate::config::{Mechanisms, PlatformConfig};
-use crate::coordinator::{Coordinator, JobRequest};
+use crate::coordinator::shard::{run_sweep, SweepOptions};
+use crate::coordinator::JobRequest;
 use crate::power::PowerModel;
 use crate::util::table::{fmt_f, Table};
 
@@ -52,19 +53,16 @@ pub fn fig7_gemmini(cfg: &PlatformConfig, opts: Fig7Options) -> Fig7Result {
     let power = PowerModel::default();
     let area = power.layout_area(cfg);
     let gemmini = GemminiModel::default();
-    let coord = {
-        let c = Coordinator::new(cfg.clone()).with_fast_forward(opts.fast_forward);
-        if opts.workers > 0 {
-            c.with_workers(opts.workers)
-        } else {
-            c
-        }
+    let sweep_opts = SweepOptions {
+        workers: opts.workers,
+        fast_forward: opts.fast_forward,
+        ..Default::default()
     };
     let requests: Vec<JobRequest> = SIZES
         .iter()
         .map(|&d| JobRequest::timing(GemmShape::new(d, d, d), Mechanisms::ALL, opts.repeats))
         .collect();
-    let results = coord.run_batch(requests);
+    let results = run_sweep(cfg, requests, sweep_opts).outcomes;
 
     let points = SIZES
         .iter()

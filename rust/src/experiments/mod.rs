@@ -9,7 +9,7 @@ pub mod table2;
 pub mod table3;
 
 pub use fig5::{fig5_ablation, Fig5Options, Fig5Result};
-pub use fig6::{fig6_area_power, Fig6Result};
+pub use fig6::{fig6_area_power, Fig6Options, Fig6Result};
 pub use fig7::{fig7_gemmini, Fig7Options, Fig7Result};
 pub use table2::{table2_dnn, Table2Options, Table2Result};
 pub use table3::{table3_sota, Table3Result};

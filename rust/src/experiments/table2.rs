@@ -6,9 +6,10 @@
 //! shape's cycles by its count — the same aggregate the paper reports.
 
 use crate::compiler::GemmShape;
-use crate::config::PlatformConfig;
-use crate::coordinator::{Coordinator, JobRequest};
 use crate::config::Mechanisms;
+use crate::config::PlatformConfig;
+use crate::coordinator::shard::{run_sweep, SweepOptions};
+use crate::coordinator::JobRequest;
 use crate::util::table::{fmt_f, fmt_sci, Table};
 use crate::workloads::{bert_base, mobilenet_v2, mobilenet_v2_host_dw, resnet18, vit_b16, ModelWorkload};
 
@@ -45,13 +46,10 @@ pub struct Table2Result {
 }
 
 fn run_model(cfg: &PlatformConfig, model: &ModelWorkload, opts: &Table2Options) -> ModelRow {
-    let coord = {
-        let c = Coordinator::new(cfg.clone()).with_fast_forward(opts.fast_forward);
-        if opts.workers > 0 {
-            c.with_workers(opts.workers)
-        } else {
-            c
-        }
+    let sweep_opts = SweepOptions {
+        workers: opts.workers,
+        fast_forward: opts.fast_forward,
+        ..Default::default()
     };
     let unique = model.unique_shapes();
     let requests: Vec<JobRequest> = unique
@@ -61,7 +59,7 @@ fn run_model(cfg: &PlatformConfig, model: &ModelWorkload, opts: &Table2Options) 
             JobRequest::timing(shape, Mechanisms::ALL, repeats)
         })
         .collect();
-    let results = coord.run_batch(requests);
+    let results = run_sweep(cfg, requests, sweep_opts).outcomes;
 
     let mut total_cycles = 0f64;
     let mut compute_cycles = 0f64;

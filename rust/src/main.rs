@@ -11,24 +11,53 @@
 //! opengemm area-power                                              # Fig. 6
 //! opengemm sota                                                    # Table 3
 //! opengemm compare-gemmini [--repeats R]                           # Fig. 7
+//! opengemm sweep     [--processes P]        # sharded Fig. 5-style sweep
 //! opengemm verify    [--artifacts DIR]     # simulator vs PJRT golden model
 //! opengemm info      [--config FILE.toml]  # show an instance's parameters
 //! ```
+//!
+//! ## Distributed sweeps (`opengemm sweep`)
+//!
+//! One sweep can run in three ways, all producing byte-identical
+//! merged JSON (stdout, or `--out FILE`):
+//!
+//! ```text
+//! # single process, in-process shards
+//! opengemm sweep --workloads 40 --variants 2 --repeats 2 > a.json
+//!
+//! # multi-process driver: plans shard files, spawns 2 worker
+//! # processes of this same binary, merges their JSON outputs
+//! opengemm sweep --workloads 40 --variants 2 --repeats 2 --processes 2 > b.json
+//! diff a.json b.json   # empty: merge(shards) == unsharded run
+//!
+//! # explicit worker: run one serialized shard (what the driver spawns;
+//! # hand the file to another host for cross-machine sweeps)
+//! opengemm sweep --shard /tmp/v0_s0.shard.json --out /tmp/v0_s0.result.json
+//! ```
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
 
 use opengemm::util::error::Result;
 use opengemm::{anyhow, bail};
 
 use opengemm::compiler::{GemmShape, Layout};
 use opengemm::config::{Mechanisms, PlatformConfig};
+use opengemm::coordinator::shard::{
+    merge, run_plan, Shard, ShardResult, SweepOptions, SweepPlan, SweepResult,
+};
 use opengemm::coordinator::{Coordinator, JobRequest};
+use opengemm::experiments::fig5::{variant_config, variant_specs};
 use opengemm::experiments::{
     fig5_ablation, fig6_area_power, fig7_gemmini, table2_dnn, table3_sota, Fig5Options,
-    Fig7Options, Table2Options,
+    Fig6Options, Fig7Options, Table2Options,
 };
 use opengemm::power::PowerModel;
 use opengemm::runtime::Runtime;
 use opengemm::util::cli::Args;
+use opengemm::util::json::Json;
 use opengemm::util::rng::Pcg32;
+use opengemm::workloads::random_suite;
 
 const USAGE: &str = "\
 opengemm — cycle-accurate OpenGeMM platform (ASPDAC'25 reproduction)
@@ -48,6 +77,16 @@ SUBCOMMANDS:
   sota              Table 3: state-of-the-art comparison
   compare-gemmini   Fig. 7: normalized throughput vs Gemmini OS/WS
                     --repeats N
+  sweep             sharded Fig. 5-style sweep; merged JSON on stdout
+                    --workloads N  --seed S  --repeats N
+                    --variants V   (first V rungs of the Fig. 5 ladder)
+                    --processes P  (P>1: spawn P worker processes)
+                    --shards S     (shards per variant; default P)
+                    --workers N    (threads per shard coordinator)
+                    --out FILE     (write instead of stdout)
+                    --keep-shards DIR  (driver mode: leave shard/result
+                                        files in DIR for other hosts)
+                    worker mode: --shard FILE [--out FILE]
   verify            functional equivalence: simulator vs AOT artifacts
                     --artifacts DIR
   info              print platform instance parameters
@@ -57,6 +96,16 @@ GLOBAL FLAGS:
   --no-fast-forward run the simulator in per-cycle lockstep instead of
                     the event-driven cycle-skipping engine (slow; the
                     two are verified cycle-exact against each other)
+
+ENVIRONMENT:
+  OPENGEMM_WORKERS  override the coordinator's auto-sized worker pool
+                    (no upper clamp; `--workers` flags still win)
+
+EXAMPLE — a sweep sharded across 2 processes is byte-identical to the
+same sweep in one process:
+  opengemm sweep --workloads 40 --variants 2 --repeats 2              > a.json
+  opengemm sweep --workloads 40 --variants 2 --repeats 2 --processes 2 > b.json
+  diff a.json b.json
 ";
 
 fn mechanisms_for(arch: usize) -> Result<Mechanisms> {
@@ -153,6 +202,7 @@ fn cmd_ablation(args: &Args) -> Result<()> {
         workloads: args.usize_or("workloads", 500)?,
         repeats: args.usize_or("repeats", 10)? as u32,
         workers: args.usize_or("workers", 0)?,
+        shards: args.usize_or("shards", 1)?,
         fast_forward: args.enabled_unless_no("fast-forward"),
     };
     eprintln!(
@@ -179,7 +229,8 @@ fn cmd_dnn(args: &Args) -> Result<()> {
 
 fn cmd_area_power(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    let res = fig6_area_power(&cfg);
+    let opts = Fig6Options { fast_forward: args.enabled_unless_no("fast-forward") };
+    let res = fig6_area_power(&cfg, opts);
     println!("{}", res.render());
     maybe_write(args, "fig6", &res.render())
 }
@@ -201,6 +252,241 @@ fn cmd_compare_gemmini(args: &Args) -> Result<()> {
     let res = fig7_gemmini(&cfg, opts);
     println!("{}", res.render());
     maybe_write(args, "fig7", &res.render())
+}
+
+/// One variant's merged slice of a `sweep` run.
+struct SweepVariantOutcome {
+    label: &'static str,
+    depth: usize,
+    mechanisms: Mechanisms,
+    result: SweepResult,
+}
+
+/// The merged sweep document. Everything in here is a deterministic
+/// function of the simulated work (no wall-clock, hosts, or process
+/// counts), so driver-mode and single-process runs serialize
+/// byte-identically — the property the CI `sweep-smoke` lane diffs.
+fn sweep_doc(
+    seed: u64,
+    workloads: usize,
+    repeats: u32,
+    variants: &[SweepVariantOutcome],
+) -> Json {
+    let docs: Vec<Json> = variants
+        .iter()
+        .map(|v| {
+            Json::obj(vec![
+                ("label", Json::str(v.label)),
+                ("d_stream", Json::num(v.depth as f64)),
+                ("mechanisms", v.mechanisms.to_json()),
+                ("result", v.result.to_json()),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("sweep", Json::str("fig5")),
+        ("seed", Json::num(seed as f64)),
+        ("workloads", Json::num(workloads as f64)),
+        ("repeats", Json::num(repeats as f64)),
+        ("variants", Json::Arr(docs)),
+    ])
+}
+
+/// Worker mode: run one serialized shard, emit its result as JSON.
+fn sweep_worker(args: &Args, shard_path: &str) -> Result<()> {
+    let shard = Shard::read_file(Path::new(shard_path)).map_err(|e| anyhow!(e))?;
+    eprintln!(
+        "worker: shard {}/{} — {} jobs",
+        shard.shard_index + 1,
+        shard.num_shards,
+        shard.requests.len()
+    );
+    let result = shard.run();
+    let text = result.to_json().pretty();
+    match args.get("out") {
+        Some(out) => std::fs::write(out, text)?,
+        None => println!("{text}"),
+    }
+    Ok(())
+}
+
+/// Driver mode: serialize every shard to a file, spawn worker processes
+/// of this same binary (at most `processes` at a time), and merge their
+/// JSON outputs.
+fn sweep_driver(
+    plans: Vec<(usize, SweepPlan)>,
+    processes: usize,
+    keep_shards: Option<&str>,
+) -> Result<Vec<(usize, SweepResult)>> {
+    let exe = std::env::current_exe()?;
+    // `--keep-shards DIR` leaves the shard/result files behind — the
+    // hand-a-shard-to-another-host workflow needs the files to survive
+    // the run. Without it, a private temp dir is cleaned up at the end.
+    let (dir, ephemeral) = match keep_shards {
+        Some(dir) => (PathBuf::from(dir), false),
+        None => (
+            std::env::temp_dir().join(format!("opengemm-sweep-{}", std::process::id())),
+            true,
+        ),
+    };
+    std::fs::create_dir_all(&dir)?;
+
+    // (variant, total_jobs) bookkeeping + the flat shard queue
+    let mut totals: Vec<(usize, usize)> = Vec::new();
+    let mut queue: Vec<(usize, PathBuf, PathBuf)> = Vec::new();
+    for (variant, plan) in &plans {
+        totals.push((*variant, plan.total_jobs));
+        for shard in &plan.shards {
+            let stem = format!("v{variant}_s{}", shard.shard_index);
+            let shard_path = dir.join(format!("{stem}.shard.json"));
+            let result_path = dir.join(format!("{stem}.result.json"));
+            shard.write_file(&shard_path).map_err(|e| anyhow!(e))?;
+            queue.push((*variant, shard_path, result_path));
+        }
+    }
+    eprintln!(
+        "driver: {} shards over {} variants, {} worker processes, shard files in {}",
+        queue.len(),
+        plans.len(),
+        processes,
+        dir.display()
+    );
+
+    // Sliding window of child processes: keep up to `processes` workers
+    // alive, reaping whichever exits first.
+    let mut pending = queue.into_iter();
+    let mut running: Vec<(usize, PathBuf, std::process::Child)> = Vec::new();
+    let mut collected: Vec<(usize, ShardResult)> = Vec::new();
+    let outcome: Result<()> = (|| {
+        loop {
+            while running.len() < processes.max(1) {
+                let Some((variant, shard_path, result_path)) = pending.next() else { break };
+                let child = Command::new(&exe)
+                    .arg("sweep")
+                    .arg("--shard")
+                    .arg(&shard_path)
+                    .arg("--out")
+                    .arg(&result_path)
+                    .stdin(Stdio::null())
+                    .stdout(Stdio::null())
+                    .spawn()?;
+                running.push((variant, result_path, child));
+            }
+            if running.is_empty() {
+                return Ok(());
+            }
+            // wait for ANY worker, so a freed slot refills immediately
+            // even when shard runtimes are uneven
+            let (slot, status) = 'poll: loop {
+                for (i, (_, _, child)) in running.iter_mut().enumerate() {
+                    if let Some(status) = child.try_wait()? {
+                        break 'poll (i, status);
+                    }
+                }
+                std::thread::sleep(std::time::Duration::from_millis(15));
+            };
+            let (variant, result_path, _child) = running.remove(slot);
+            if !status.success() {
+                bail!("sweep worker for {} failed with {status}", result_path.display());
+            }
+            collected
+                .push((variant, ShardResult::read_file(&result_path).map_err(|e| anyhow!(e))?));
+        }
+    })();
+    // whether the loop succeeded or bailed: reap every remaining worker
+    // before deleting the shard directory out from under it
+    for (_, _, child) in running.iter_mut() {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+    if ephemeral {
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    outcome?;
+
+    // group results by variant (moving, not cloning — functional
+    // results can be large), then merge each back into submission order
+    let mut grouped: Vec<Vec<ShardResult>> = totals.iter().map(|_| Vec::new()).collect();
+    for (variant, result) in collected {
+        match totals.iter().position(|&(v, _)| v == variant) {
+            Some(pos) => grouped[pos].push(result),
+            None => bail!("worker returned a result for unknown variant {variant}"),
+        }
+    }
+    let mut merged = Vec::new();
+    for ((variant, total_jobs), shard_results) in totals.into_iter().zip(grouped) {
+        merged.push((variant, merge(total_jobs, shard_results).map_err(|e| anyhow!(e))?));
+    }
+    Ok(merged)
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    // worker mode: run one shard file and exit
+    if let Some(shard_path) = args.get("shard") {
+        return sweep_worker(args, shard_path);
+    }
+
+    let cfg = load_config(args)?;
+    let seed = args.u64_or("seed", 2024)?;
+    let workloads = args.usize_or("workloads", 500)?;
+    let repeats = args.u64_or("repeats", 10)?;
+    let repeats =
+        u32::try_from(repeats).map_err(|_| anyhow!("--repeats {repeats} out of u32 range"))?;
+    let processes = args.usize_or("processes", 1)?;
+    let ladder = variant_specs();
+    let n_variants = args.usize_or("variants", ladder.len())?.clamp(1, ladder.len());
+    let sweep_opts = SweepOptions {
+        shards: args.usize_or("shards", processes.max(1))?,
+        workers: args.usize_or("workers", 0)?,
+        fast_forward: args.enabled_unless_no("fast-forward"),
+        ..Default::default()
+    };
+
+    let shapes = random_suite(seed, workloads);
+    let ladder = &ladder[..n_variants];
+    eprintln!(
+        "sweep: {} workloads x {} variants, {} shard(s)/variant, {} process(es)",
+        workloads,
+        ladder.len(),
+        sweep_opts.shards.clamp(1, workloads.max(1)),
+        processes.max(1)
+    );
+
+    // One plan per variant, shared by both execution modes — the merged
+    // document can only differ between modes if the simulation does.
+    let plans: Vec<(usize, SweepPlan)> = ladder
+        .iter()
+        .enumerate()
+        .map(|(variant, &(_, mech, depth))| {
+            let requests: Vec<JobRequest> = shapes
+                .iter()
+                .map(|&shape| JobRequest::timing(shape, mech, repeats))
+                .collect();
+            (variant, SweepPlan::stride(&variant_config(&cfg, depth), requests, sweep_opts))
+        })
+        .collect();
+    let results: Vec<(usize, SweepResult)> = if processes > 1 {
+        sweep_driver(plans, processes, args.get("keep-shards"))?
+    } else {
+        plans.into_iter().map(|(variant, plan)| (variant, run_plan(plan))).collect()
+    };
+
+    let variants: Vec<SweepVariantOutcome> = results
+        .into_iter()
+        .map(|(variant, result)| {
+            let (label, mechanisms, depth) = ladder[variant];
+            SweepVariantOutcome { label, depth, mechanisms, result }
+        })
+        .collect();
+    let text = sweep_doc(seed, workloads, repeats, &variants).pretty();
+    match args.get("out") {
+        Some(out) => {
+            std::fs::write(out, text)?;
+            eprintln!("wrote {out}");
+        }
+        None => println!("{text}"),
+    }
+    Ok(())
 }
 
 fn cmd_verify(args: &Args) -> Result<()> {
@@ -293,6 +579,7 @@ fn main() {
         "area-power" => cmd_area_power(&args),
         "sota" => cmd_sota(&args),
         "compare-gemmini" => cmd_compare_gemmini(&args),
+        "sweep" => cmd_sweep(&args),
         "verify" => cmd_verify(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {

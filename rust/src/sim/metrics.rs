@@ -9,6 +9,7 @@
 
 use crate::gemm_core::StallReason;
 use crate::spm::SpmStats;
+use crate::util::json::{self, Json};
 
 /// Cycle-level counters accumulated by one simulation.
 #[derive(Debug, Default, Clone, PartialEq, Eq)]
@@ -85,6 +86,43 @@ impl SimMetrics {
         }
         self.compute_cycles as f64 / self.kernel_cycles as f64
     }
+
+    /// Wire encoding (sharded-sweep result files): every counter is
+    /// carried, so a deserialized result is indistinguishable from one
+    /// simulated in-process.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("total_cycles", Json::num(self.total_cycles as f64)),
+            ("compute_cycles", Json::num(self.compute_cycles as f64)),
+            ("stall_input_a", Json::num(self.stall_input_a as f64)),
+            ("stall_input_b", Json::num(self.stall_input_b as f64)),
+            ("stall_output", Json::num(self.stall_output as f64)),
+            ("idle_cycles", Json::num(self.idle_cycles as f64)),
+            ("starts", Json::num(self.starts as f64)),
+            ("runs_completed", Json::num(self.runs_completed as f64)),
+            ("kernel_cycles", Json::num(self.kernel_cycles as f64)),
+            ("host_instret", Json::num(self.host_instret as f64)),
+            ("host_csr_stall", Json::num(self.host_csr_stall as f64)),
+            ("spm", self.spm.to_json()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<SimMetrics, String> {
+        Ok(SimMetrics {
+            total_cycles: json::get_u64(v, "total_cycles")?,
+            compute_cycles: json::get_u64(v, "compute_cycles")?,
+            stall_input_a: json::get_u64(v, "stall_input_a")?,
+            stall_input_b: json::get_u64(v, "stall_input_b")?,
+            stall_output: json::get_u64(v, "stall_output")?,
+            idle_cycles: json::get_u64(v, "idle_cycles")?,
+            starts: json::get_u64(v, "starts")?,
+            runs_completed: json::get_u64(v, "runs_completed")?,
+            kernel_cycles: json::get_u64(v, "kernel_cycles")?,
+            host_instret: json::get_u64(v, "host_instret")?,
+            host_csr_stall: json::get_u64(v, "host_csr_stall")?,
+            spm: SpmStats::from_json(json::get(v, "spm")?)?,
+        })
+    }
 }
 
 /// Final per-job report.
@@ -115,6 +153,29 @@ impl UtilizationReport {
             return 0.0;
         }
         real_ops as f64 / self.total_cycles as f64 * freq_mhz as f64 * 1e6 / 1e9
+    }
+
+    /// Wire encoding. The derived `f64` ratios are carried verbatim
+    /// (not recomputed on decode) and round-trip bit-identically via
+    /// shortest-round-trip formatting.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("spatial", Json::num(self.spatial)),
+            ("temporal", Json::num(self.temporal)),
+            ("overall", Json::num(self.overall)),
+            ("total_cycles", Json::num(self.total_cycles as f64)),
+            ("compute_cycles", Json::num(self.compute_cycles as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<UtilizationReport, String> {
+        Ok(UtilizationReport {
+            spatial: json::get_f64(v, "spatial")?,
+            temporal: json::get_f64(v, "temporal")?,
+            overall: json::get_f64(v, "overall")?,
+            total_cycles: json::get_u64(v, "total_cycles")?,
+            compute_cycles: json::get_u64(v, "compute_cycles")?,
+        })
     }
 }
 

@@ -67,6 +67,7 @@ use crate::gemm_core::{CoreEvent, CorePending, GemmCore};
 use crate::host::{Cpu, CsrBus, StepResult};
 use crate::spm::Spm;
 use crate::streamer::{InputStreamer, OutputStreamer, TileArena};
+use crate::util::json::{self, Json};
 
 /// Simulation options.
 #[derive(Debug, Clone, Copy)]
@@ -97,12 +98,52 @@ impl Default for SimOptions {
 }
 
 /// Result of running one compiled job.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct JobResult {
     pub metrics: SimMetrics,
     pub report: UtilizationReport,
     /// Result matrix (row-major M x N), functional mode only.
     pub c: Option<Vec<i32>>,
+}
+
+impl JobResult {
+    /// Wire encoding (sharded-sweep result files): metrics, report and
+    /// the functional result matrix all survive the round-trip, so a
+    /// worker process's output merges transparently with in-process
+    /// runs.
+    pub fn to_json(&self) -> Json {
+        let c = match &self.c {
+            None => Json::Null,
+            Some(c) => Json::Arr(c.iter().map(|&x| Json::num(x as f64)).collect()),
+        };
+        Json::obj(vec![
+            ("metrics", self.metrics.to_json()),
+            ("report", self.report.to_json()),
+            ("c", c),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<JobResult, String> {
+        let c = match json::get(v, "c")? {
+            Json::Null => None,
+            Json::Arr(items) => Some(
+                items
+                    .iter()
+                    .map(|x| {
+                        x.as_i64()
+                            .and_then(|n| i32::try_from(n).ok())
+                            .ok_or_else(|| "bad i32 in result matrix".to_string())
+                    })
+                    .collect::<Result<Vec<i32>, String>>()?,
+            ),
+            _ => return Err("field \"c\" is neither null nor an array".into()),
+        };
+        Ok(JobResult {
+            metrics: SimMetrics::from_json(json::get(v, "metrics")?)?,
+            report: UtilizationReport::from_json(json::get(v, "report")?)?,
+            c,
+        })
+    }
 }
 
 /// Simulation failure.

@@ -44,6 +44,7 @@
 //! by the `bulk_spm_io_matches_per_word` differential property test).
 
 use crate::config::MemParams;
+use crate::util::json::{self, Json};
 
 /// Accumulated SPM traffic statistics.
 #[derive(Debug, Default, Clone, PartialEq, Eq)]
@@ -56,6 +57,27 @@ pub struct SpmStats {
     pub busy_cycles: u64,
     /// Extra cycles caused by bank conflicts.
     pub conflict_cycles: u64,
+}
+
+impl SpmStats {
+    /// Wire encoding (sharded-sweep result files).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("word_requests", Json::num(self.word_requests as f64)),
+            ("epochs", Json::num(self.epochs as f64)),
+            ("busy_cycles", Json::num(self.busy_cycles as f64)),
+            ("conflict_cycles", Json::num(self.conflict_cycles as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<SpmStats, String> {
+        Ok(SpmStats {
+            word_requests: json::get_u64(v, "word_requests")?,
+            epochs: json::get_u64(v, "epochs")?,
+            busy_cycles: json::get_u64(v, "busy_cycles")?,
+            conflict_cycles: json::get_u64(v, "conflict_cycles")?,
+        })
+    }
 }
 
 /// The scratchpad: word-interleaved banks of 64-bit words.

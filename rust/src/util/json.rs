@@ -1,9 +1,24 @@
 //! Minimal JSON reader/writer — serde is not available offline, and the
-//! only JSON we handle is our own: `artifacts/manifest.json` (read) and
-//! experiment result dumps (write).
+//! only JSON we handle is our own: `artifacts/manifest.json` (read),
+//! experiment result dumps (write), and the sharded-sweep wire format
+//! (read + write: serialized `JobRequest` shards and per-shard result
+//! files exchanged between the `sweep` driver and worker processes).
+//!
+//! Wire-format note: `f64` values round-trip bit-identically because
+//! the writer uses Rust's shortest round-trip `Display` formatting and
+//! the parser delegates to `str::parse::<f64>`; `u64`/`i64` values
+//! round-trip exactly as long as they stay below 2^53, where `f64`
+//! integers are exact (simulation counters are far below that).
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
+
+/// Largest integer accepted by the exact-integer wire contract
+/// (`as_u64`/`as_i64`): 2^53 - 1, JavaScript's MAX_SAFE_INTEGER. 2^53
+/// itself is representable but excluded — 2^53 + 1 rounds onto it
+/// during parsing, so accepting it would let a collision pass as
+/// "exact".
+const MAX_SAFE_INT: f64 = 9_007_199_254_740_991.0;
 
 /// A JSON value. BTreeMap keeps key order deterministic for diffs.
 #[derive(Debug, Clone, PartialEq)]
@@ -40,6 +55,32 @@ impl Json {
 
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|f| f as usize)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Exact unsigned integer, if the number is one (within the 2^53
+    /// range `f64` represents exactly).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= MAX_SAFE_INT => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
+    /// Exact signed integer, if the number is one.
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Json::Num(n) if n.fract() == 0.0 && n.abs() <= MAX_SAFE_INT => Some(*n as i64),
+            _ => None,
+        }
     }
 
     pub fn as_arr(&self) -> Option<&[Json]> {
@@ -117,6 +158,37 @@ impl Json {
             }
         }
     }
+}
+
+/// Typed field accessors for decoding our own wire formats: each
+/// returns a descriptive error naming the missing/mistyped key, so a
+/// corrupt shard or result file fails loudly instead of defaulting.
+pub fn get<'a>(v: &'a Json, key: &str) -> Result<&'a Json, String> {
+    v.get(key).ok_or_else(|| format!("missing field {key:?}"))
+}
+
+pub fn get_u64(v: &Json, key: &str) -> Result<u64, String> {
+    get(v, key)?.as_u64().ok_or_else(|| format!("field {key:?} is not an unsigned integer"))
+}
+
+pub fn get_usize(v: &Json, key: &str) -> Result<usize, String> {
+    get_u64(v, key).map(|n| n as usize)
+}
+
+pub fn get_f64(v: &Json, key: &str) -> Result<f64, String> {
+    get(v, key)?.as_f64().ok_or_else(|| format!("field {key:?} is not a number"))
+}
+
+pub fn get_bool(v: &Json, key: &str) -> Result<bool, String> {
+    get(v, key)?.as_bool().ok_or_else(|| format!("field {key:?} is not a bool"))
+}
+
+pub fn get_str<'a>(v: &'a Json, key: &str) -> Result<&'a str, String> {
+    get(v, key)?.as_str().ok_or_else(|| format!("field {key:?} is not a string"))
+}
+
+pub fn get_arr<'a>(v: &'a Json, key: &str) -> Result<&'a [Json], String> {
+    get(v, key)?.as_arr().ok_or_else(|| format!("field {key:?} is not an array"))
 }
 
 fn write_num(out: &mut String, n: f64) {
@@ -374,5 +446,40 @@ mod tests {
     fn unicode_string_roundtrip() {
         let v = parse(r#""héllo é""#).unwrap();
         assert_eq!(v.as_str(), Some("héllo é"));
+    }
+
+    #[test]
+    fn typed_accessors_and_errors() {
+        let v = parse(r#"{"n": 42, "x": 0.5, "b": true, "s": "hi", "a": [1]}"#).unwrap();
+        assert_eq!(get_u64(&v, "n").unwrap(), 42);
+        assert_eq!(get_f64(&v, "x").unwrap(), 0.5);
+        assert!(get_bool(&v, "b").unwrap());
+        assert_eq!(get_str(&v, "s").unwrap(), "hi");
+        assert_eq!(get_arr(&v, "a").unwrap().len(), 1);
+        assert!(get_u64(&v, "x").is_err(), "fractional is not u64");
+        assert!(get_u64(&v, "missing").unwrap_err().contains("missing"));
+        assert_eq!(Json::num(-3.0).as_i64(), Some(-3));
+        assert_eq!(Json::num(-3.0).as_u64(), None);
+        // the full exact-integer range up to 2^53 - 1 is accepted ...
+        let max = 9_007_199_254_740_991u64;
+        assert_eq!(Json::num(max as f64).as_u64(), Some(max));
+        assert_eq!(parse("9007199254740991").unwrap().as_u64(), Some(max));
+        // ... and 2^53 itself is rejected: "9007199254740993" parses to
+        // the same f64, so accepting it would pass off a collision as
+        // exact
+        assert_eq!(Json::num(9_007_199_254_740_992.0).as_u64(), None);
+        assert_eq!(
+            parse("9007199254740993").unwrap(),
+            parse("9007199254740992").unwrap(),
+            "the collision the exclusive bound guards against"
+        );
+    }
+
+    #[test]
+    fn f64_roundtrip_is_exact() {
+        for x in [0.123456789123456789f64, 1.0 / 3.0, 1234567890.0625, 1e-300] {
+            let text = Json::num(x).pretty();
+            assert_eq!(parse(&text).unwrap().as_f64(), Some(x), "value {x} must round-trip");
+        }
     }
 }

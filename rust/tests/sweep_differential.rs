@@ -1,0 +1,230 @@
+//! Sharded sweep engine: wire-format property tests and the
+//! sharded-vs-unsharded differential.
+//!
+//! Three layers of the same guarantee:
+//! 1. every wire type survives encode -> parse bit-identically
+//!    (property tests over randomized values);
+//! 2. an in-process 2- and 4-shard sweep merges to exactly the
+//!    unsharded `Coordinator::run_batch` output — outcomes, order,
+//!    and summed stats;
+//! 3. the multi-process `sweep --processes 2` driver emits merged JSON
+//!    byte-identical to the single-process run (the same check the CI
+//!    `sweep-smoke` lane performs with `diff`).
+
+use std::process::Command;
+
+use opengemm::compiler::{GemmShape, Layout};
+use opengemm::config::{Mechanisms, PlatformConfig};
+use opengemm::coordinator::shard::{run_sweep, SweepOptions};
+use opengemm::coordinator::{
+    outcome_from_json, outcome_to_json, Coordinator, CoordinatorStats, JobRequest,
+};
+use opengemm::sim::{JobResult, SimMetrics, UtilizationReport};
+use opengemm::spm::SpmStats;
+use opengemm::util::json;
+use opengemm::util::rng::Pcg32;
+
+const LAYOUTS: [Layout; 3] =
+    [Layout::RowMajor, Layout::TiledContiguous, Layout::TiledInterleaved];
+const MECHS: [Mechanisms; 4] =
+    [Mechanisms::BASELINE, Mechanisms::CPL, Mechanisms::CPL_BUF, Mechanisms::ALL];
+
+fn random_request(rng: &mut Pcg32) -> JobRequest {
+    let shape = GemmShape::new(
+        1 + rng.below(64) as usize,
+        1 + rng.below(64) as usize,
+        1 + rng.below(64) as usize,
+    );
+    let operands = if rng.below(3) == 0 {
+        let mut a = vec![0i8; shape.m * shape.k];
+        let mut b = vec![0i8; shape.k * shape.n];
+        rng.fill_i8(&mut a);
+        rng.fill_i8(&mut b);
+        Some((a, b))
+    } else {
+        None
+    };
+    JobRequest {
+        shape,
+        layout: *rng.choose(&LAYOUTS),
+        mechanisms: *rng.choose(&MECHS),
+        repeats: 1 + rng.below(10),
+        operands,
+    }
+}
+
+/// Counters stay within f64's exact-integer range (2^53); real
+/// simulations are far below it, and the wire format documents the
+/// bound.
+fn random_counter(rng: &mut Pcg32) -> u64 {
+    rng.next_u64() & ((1u64 << 48) - 1)
+}
+
+fn random_metrics(rng: &mut Pcg32) -> SimMetrics {
+    SimMetrics {
+        total_cycles: random_counter(rng),
+        compute_cycles: random_counter(rng),
+        stall_input_a: random_counter(rng),
+        stall_input_b: random_counter(rng),
+        stall_output: random_counter(rng),
+        idle_cycles: random_counter(rng),
+        starts: random_counter(rng),
+        runs_completed: random_counter(rng),
+        kernel_cycles: random_counter(rng),
+        host_instret: random_counter(rng),
+        host_csr_stall: random_counter(rng),
+        spm: SpmStats {
+            word_requests: random_counter(rng),
+            epochs: random_counter(rng),
+            busy_cycles: random_counter(rng),
+            conflict_cycles: random_counter(rng),
+        },
+    }
+}
+
+#[test]
+fn job_request_json_roundtrip_property() {
+    let mut rng = Pcg32::seeded(0xF1E5);
+    for i in 0..50 {
+        let request = random_request(&mut rng);
+        let text = request.to_json().pretty();
+        let back = JobRequest::from_json(&json::parse(&text).expect("parse"))
+            .unwrap_or_else(|e| panic!("case {i}: {e}"));
+        assert_eq!(back, request, "case {i} must round-trip bit-identically");
+        // the encoding itself is stable under a second pass
+        assert_eq!(back.to_json().pretty(), text, "case {i} re-encode");
+    }
+}
+
+#[test]
+fn job_result_json_roundtrip_property() {
+    let mut rng = Pcg32::seeded(0xBEEF);
+    for i in 0..50 {
+        let metrics = random_metrics(&mut rng);
+        let report = UtilizationReport::from_metrics(rng.unit_f64(), &metrics);
+        let c = if i % 2 == 0 {
+            let mut v = vec![0i8; 32];
+            rng.fill_i8(&mut v);
+            Some(v.iter().map(|&x| x as i32 * 65_537).collect())
+        } else {
+            None
+        };
+        let result = JobResult { metrics, report, c };
+        let text = result.to_json().pretty();
+        let back = JobResult::from_json(&json::parse(&text).expect("parse"))
+            .unwrap_or_else(|e| panic!("case {i}: {e}"));
+        assert_eq!(back, result, "case {i} must round-trip bit-identically");
+    }
+}
+
+#[test]
+fn coordinator_stats_json_roundtrip_property() {
+    let mut rng = Pcg32::seeded(0x57A75);
+    for i in 0..50 {
+        let stats = CoordinatorStats {
+            jobs_completed: random_counter(&mut rng),
+            jobs_failed: random_counter(&mut rng),
+            simulated_cycles: random_counter(&mut rng),
+        };
+        let text = stats.to_json().pretty();
+        let back = CoordinatorStats::from_json(&json::parse(&text).expect("parse"))
+            .unwrap_or_else(|e| panic!("case {i}: {e}"));
+        assert_eq!(back, stats, "case {i}");
+    }
+}
+
+#[test]
+fn failed_outcome_roundtrips_with_escapes() {
+    let outcome: Result<JobResult, String> =
+        Err("tile split failed:\n\t\"K too deep\" \\ at (8, 300000, 8)".into());
+    let text = outcome_to_json(&outcome).pretty();
+    let back = outcome_from_json(&json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back, outcome);
+}
+
+/// Mixed batch: timing and functional jobs, differing mechanisms, and
+/// one job that fails in the tiler.
+fn differential_requests() -> Vec<JobRequest> {
+    let mut rng = Pcg32::seeded(2025);
+    let mut reqs: Vec<JobRequest> = (0..9).map(|_| random_request(&mut rng)).collect();
+    // oversized K fails the split — failures must merge like successes
+    reqs.push(JobRequest::timing(GemmShape::new(8, 300_000, 8), Mechanisms::ALL, 1));
+    reqs
+}
+
+#[test]
+fn sharded_sweep_is_bit_identical_to_unsharded_run_batch() {
+    let cfg = PlatformConfig::case_study();
+    let reqs = differential_requests();
+
+    let unsharded = Coordinator::new(cfg.clone()).with_workers(2);
+    let want = unsharded.run_batch(reqs.clone());
+    let want_stats = unsharded.stats();
+
+    for shards in [2usize, 4] {
+        let opts = SweepOptions { shards, workers: 2, ..Default::default() };
+        let got = run_sweep(&cfg, reqs.clone(), opts);
+        assert_eq!(
+            got.outcomes.len(),
+            want.len(),
+            "{shards}-shard sweep must preserve batch size"
+        );
+        for (i, (g, w)) in got.outcomes.iter().zip(&want).enumerate() {
+            assert_eq!(g, w, "{shards}-shard sweep, job {i} (submission order)");
+        }
+        assert_eq!(got.stats, want_stats, "{shards}-shard summed stats");
+    }
+}
+
+#[test]
+fn multi_process_sweep_driver_matches_single_process() {
+    let exe = env!("CARGO_BIN_EXE_opengemm");
+    let base = [
+        "sweep",
+        "--workloads",
+        "4",
+        "--variants",
+        "2",
+        "--repeats",
+        "2",
+        "--seed",
+        "11",
+        "--workers",
+        "1",
+    ];
+
+    let single = Command::new(exe).args(base).output().expect("single-process sweep");
+    assert!(
+        single.status.success(),
+        "single-process sweep failed: {}",
+        String::from_utf8_lossy(&single.stderr)
+    );
+
+    let sharded = Command::new(exe)
+        .args(base)
+        .args(["--processes", "2"])
+        .output()
+        .expect("driver sweep");
+    assert!(
+        sharded.status.success(),
+        "driver sweep failed: {}",
+        String::from_utf8_lossy(&sharded.stderr)
+    );
+
+    assert_eq!(
+        String::from_utf8_lossy(&single.stdout),
+        String::from_utf8_lossy(&sharded.stdout),
+        "merged sweep JSON must be byte-identical across process counts"
+    );
+
+    // sanity: the merged document is our sweep format and complete
+    let doc = json::parse(std::str::from_utf8(&single.stdout).unwrap()).unwrap();
+    assert_eq!(doc.get("sweep").and_then(|s| s.as_str()), Some("fig5"));
+    let variants = doc.get("variants").and_then(|v| v.as_arr()).unwrap();
+    assert_eq!(variants.len(), 2);
+    for v in variants {
+        let result = v.get("result").unwrap();
+        let outcomes = result.get("outcomes").and_then(|o| o.as_arr()).unwrap();
+        assert_eq!(outcomes.len(), 4, "one outcome per workload");
+    }
+}
