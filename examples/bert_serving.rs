@@ -1,90 +1,68 @@
-//! Serving-style driver: push a batch of BERT-Base encoder "requests"
-//! through the coordinator (each request = the GeMM stream of one
-//! encoder layer at a given sequence length) and report latency and
-//! throughput percentiles — the platform acting as an edge inference
-//! service.
+//! Serving-style driver, now a thin front-end over the sustained-
+//! traffic harness (`opengemm::serve`): a seeded arrival process
+//! (open-loop Poisson by default) pushes BERT encoder-layer requests
+//! at mixed sequence lengths through the virtual-time queueing model,
+//! and the report carries p50/p90/p95/p99/max per-request latency —
+//! the platform acting as an edge inference service.
 //!
-//! Run with:  cargo run --release --example bert_serving [--requests N]
+//! The old one-shot loop in this example clamped the per-head repeat
+//! count to 12 (silently mismeasuring any model with more heads);
+//! the harness's service model honors true repeat counts — try
+//! `--workload bert-large` (16 heads) to exercise exactly that case.
+//!
+//! Run with:
+//!   cargo run --release --example bert_serving -- [--requests N]
+//!     [--workload bert|bert-large|resnet18|mixed] [--rate RPS]
+//!     [--arrival poisson|closed --clients N] [--seed S]
 
 use std::time::Instant;
 
-use opengemm::compiler::GemmShape;
-use opengemm::config::{Mechanisms, PlatformConfig};
-use opengemm::coordinator::{Coordinator, JobRequest};
+use opengemm::config::PlatformConfig;
+use opengemm::serve::{
+    ms_to_cycles, run_serve, ArrivalSpec, BatchPolicy, ServeOptions, WorkloadSpec,
+};
 use opengemm::util::cli::Args;
-use opengemm::util::rng::Pcg32;
-use opengemm::util::stats::BoxStats;
-
-/// The GeMMs of one BERT-Base encoder layer at sequence length `s`.
-fn encoder_layer_gemms(s: usize) -> Vec<(GemmShape, u64)> {
-    let (d, h, dh, ffn) = (768usize, 12u64, 64usize, 3072usize);
-    vec![
-        (GemmShape::new(s, d, 3 * d), 1),   // qkv projection
-        (GemmShape::new(s, dh, s), h),      // attention scores (per head)
-        (GemmShape::new(s, s, dh), h),      // attention context (per head)
-        (GemmShape::new(s, d, d), 1),       // output projection
-        (GemmShape::new(s, d, ffn), 1),     // ffn up
-        (GemmShape::new(s, ffn, d), 1),     // ffn down
-    ]
-}
+use opengemm::{anyhow, bail};
 
 fn main() -> opengemm::util::error::Result<()> {
     let args = Args::from_env()?;
-    let n_requests = args.usize_or("requests", 32)?;
     let cfg = PlatformConfig::case_study();
-    let coord =
-        Coordinator::new(cfg.clone()).with_fast_forward(args.enabled_unless_no("fast-forward"));
-    let mut rng = Pcg32::seeded(args.u64_or("seed", 1)?);
+    let workload_name = args.get_or("workload", "bert");
+    let workload = WorkloadSpec::from_name(workload_name, &WorkloadSpec::DEFAULT_SEQS)
+        .ok_or_else(|| anyhow!("unknown --workload {workload_name:?}"))?;
+    let arrival = match args.get_or("arrival", "poisson") {
+        "poisson" => ArrivalSpec::OpenPoisson { rate_rps: args.f64_or("rate", 200.0)? },
+        "closed" => ArrivalSpec::ClosedLoop {
+            clients: args.usize_or("clients", 4)?,
+            think_cycles: ms_to_cycles(args.f64_or("think-ms", 0.0)?, cfg.freq_mhz),
+        },
+        other => bail!("--arrival must be poisson|closed, got {other:?}"),
+    };
+    let opts = ServeOptions {
+        workload,
+        arrival,
+        batching: BatchPolicy::Immediate,
+        requests: args.usize_or("requests", 32)?,
+        seed: args.u64_or("seed", 1)?,
+        fast_forward: args.enabled_unless_no("fast-forward"),
+        ..Default::default()
+    };
 
-    // requests with mixed sequence lengths, like a real serving queue
-    let seq_choices = [64usize, 128, 256, 384, 512];
-    let requests: Vec<usize> =
-        (0..n_requests).map(|_| *rng.choose(&seq_choices)).collect();
-
-    println!("serving {n_requests} encoder-layer requests (seq in {seq_choices:?}) ...");
+    println!(
+        "serving {} {} requests ({} arrivals, seed {}) ...\n",
+        opts.requests,
+        workload_name,
+        opts.arrival.label(),
+        opts.seed
+    );
     let t0 = Instant::now();
-
-    // fan each request's GeMMs out over the worker pool
-    let mut latencies_ms = Vec::with_capacity(n_requests);
-    let mut total_macs = 0u64;
-    for &seq in &requests {
-        let gemms = encoder_layer_gemms(seq);
-        let repeats: Vec<u32> = gemms.iter().map(|&(_, c)| (c as u32).clamp(1, 12)).collect();
-        let jobs: Vec<JobRequest> = gemms
-            .iter()
-            .zip(&repeats)
-            .map(|(&(shape, _), &r)| JobRequest::timing(shape, Mechanisms::ALL, r))
-            .collect();
-        let results = coord.run_batch(jobs);
-        // request latency = sum of per-GeMM platform cycles (sequential
-        // on one device), at the platform clock
-        let mut cycles = 0f64;
-        for (((shape, count), outcome), reps) in gemms.iter().zip(results).zip(&repeats) {
-            let r = outcome.expect("job ok");
-            cycles += r.metrics.total_cycles as f64 / *reps as f64 * *count as f64;
-            total_macs += shape.macs() * count;
-        }
-        latencies_ms.push(cycles / (cfg.freq_mhz as f64 * 1e3));
-    }
+    let report = run_serve(&cfg, &opts).map_err(|e| anyhow!(e))?;
     let wall = t0.elapsed().as_secs_f64();
 
-    let stats = BoxStats::compute(&latencies_ms);
-    println!("\nper-request device latency (ms @ {} MHz):", cfg.freq_mhz);
+    println!("{}", report.render());
     println!(
-        "  p0 {:.2}  p25 {:.2}  p50 {:.2}  p75 {:.2}  p100 {:.2}",
-        stats.min, stats.q1, stats.median, stats.q3, stats.max
-    );
-    let device_time_s: f64 = latencies_ms.iter().sum::<f64>() / 1e3;
-    println!(
-        "device throughput: {:.1} req/s sequential, {:.1} GMAC/s effective ({:.1}% of peak)",
-        n_requests as f64 / device_time_s,
-        total_macs as f64 / device_time_s / 1e9,
-        100.0 * (total_macs as f64 / device_time_s)
-            / (cfg.peak_gops() / 2.0 * 1e9)
-    );
-    println!(
-        "simulation wall-clock: {wall:.1}s ({:.1} M simulated cycles/s across workers)",
-        coord.stats().simulated_cycles as f64 / wall / 1e6
+        "\nsimulation wall-clock: {wall:.2}s ({:.1} M simulated cycles/s)",
+        report.measurement.simulated_cycles as f64 / wall.max(1e-9) / 1e6
     );
     Ok(())
 }

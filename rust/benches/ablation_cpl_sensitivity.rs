@@ -30,7 +30,7 @@ fn median_utilization(cfg: &PlatformConfig, latency: u64, mech: Mechanisms) -> f
         .into_iter()
         .map(|r| r.expect("job").report.overall)
         .collect();
-    BoxStats::compute(&samples).median
+    BoxStats::compute(&samples).expect("nonempty sample set").median
 }
 
 fn main() {

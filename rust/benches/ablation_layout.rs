@@ -50,7 +50,7 @@ fn main() {
             conflicts += r.metrics.spm.conflict_cycles;
             n += 1;
         }
-        let stats = BoxStats::compute(&samples);
+        let stats = BoxStats::compute(&samples).expect("nonempty sample set");
         medians.push(stats.median);
         table.row(vec![
             format!("{layout:?}"),

@@ -203,22 +203,44 @@ pub struct Coordinator {
     stats: Arc<Mutex<CoordinatorStats>>,
 }
 
+/// Parse an `OPENGEMM_WORKERS` value. `None` input (variable unset)
+/// means "auto-size"; a set-but-invalid value (unparsable, or zero — a
+/// pool needs at least one worker) is a hard error rather than a silent
+/// fallback: an operator who set the variable meant it.
+pub fn parse_workers_env(value: Option<&str>) -> Result<Option<usize>, String> {
+    let Some(v) = value else { return Ok(None) };
+    match v.trim().parse::<usize>() {
+        Ok(0) => Err(format!(
+            "OPENGEMM_WORKERS={v:?}: worker count must be >= 1 (unset the \
+             variable for auto-sizing)"
+        )),
+        Ok(n) => Ok(Some(n)),
+        Err(_) => Err(format!(
+            "OPENGEMM_WORKERS={v:?} is not a positive integer (unset the \
+             variable for auto-sizing)"
+        )),
+    }
+}
+
 impl Coordinator {
+    /// Build a coordinator with the default worker-count policy:
+    /// `OPENGEMM_WORKERS` overrides outright (no upper clamp — a sweep
+    /// host with 96 cores may use them all); otherwise size to the
+    /// machine, clamped to a pool that doesn't oversubscribe small
+    /// jobs. `with_workers` overrides both.
+    ///
+    /// Panics on an invalid `OPENGEMM_WORKERS` value: misconfiguration
+    /// fails fast instead of silently auto-sizing (see
+    /// [`parse_workers_env`]).
     pub fn new(cfg: PlatformConfig) -> Coordinator {
-        // Worker-count policy: `OPENGEMM_WORKERS` overrides outright
-        // (no upper clamp — a sweep host with 96 cores may use them
-        // all); otherwise size to the machine, clamped to a pool that
-        // doesn't oversubscribe small jobs. `with_workers` overrides
-        // both.
-        let workers = match std::env::var("OPENGEMM_WORKERS")
-            .ok()
-            .and_then(|v| v.parse::<usize>().ok())
-        {
-            Some(n) if n > 0 => n,
-            _ => std::thread::available_parallelism()
+        let env = std::env::var("OPENGEMM_WORKERS").ok();
+        let workers = match parse_workers_env(env.as_deref()) {
+            Ok(Some(n)) => n,
+            Ok(None) => std::thread::available_parallelism()
                 .map(|n| n.get())
                 .unwrap_or(4)
                 .clamp(1, 32),
+            Err(e) => panic!("{e}"),
         };
         Coordinator {
             cfg,
@@ -477,6 +499,22 @@ mod tests {
             assert_eq!(got.metrics, fresh.metrics, "metrics leak for {:?}", req.shape);
             assert_eq!(got.c, fresh.c, "functional result leak for {:?}", req.shape);
         }
+    }
+
+    #[test]
+    fn workers_env_parsing_is_strict() {
+        // unset -> auto-size
+        assert_eq!(parse_workers_env(None), Ok(None));
+        // a set value is honored exactly (no clamp)
+        assert_eq!(parse_workers_env(Some("1")), Ok(Some(1)));
+        assert_eq!(parse_workers_env(Some("96")), Ok(Some(96)));
+        assert_eq!(parse_workers_env(Some(" 8 ")), Ok(Some(8)), "whitespace tolerated");
+        // 0 and garbage are hard errors, not silent auto-sizing
+        assert!(parse_workers_env(Some("0")).unwrap_err().contains(">= 1"));
+        assert!(parse_workers_env(Some("four")).unwrap_err().contains("not a positive"));
+        assert!(parse_workers_env(Some("")).is_err());
+        assert!(parse_workers_env(Some("-2")).is_err());
+        assert!(parse_workers_env(Some("2.5")).is_err());
     }
 
     #[test]

@@ -105,7 +105,8 @@ pub fn fig5_ablation(base_cfg: &PlatformConfig, opts: Fig5Options) -> Fig5Result
         variants.push(Fig5Variant {
             label: label.to_string(),
             buffer_depth: depth,
-            stats: BoxStats::compute(&samples),
+            stats: BoxStats::compute(&samples)
+                .expect("fig5 runs at least one workload per variant"),
             samples,
         });
     }

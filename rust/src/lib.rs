@@ -20,6 +20,7 @@ pub mod gemm_core;
 pub mod host;
 pub mod power;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod spm;
 pub mod streamer;

@@ -12,8 +12,24 @@
 //! opengemm sota                                                    # Table 3
 //! opengemm compare-gemmini [--repeats R]                           # Fig. 7
 //! opengemm sweep     [--processes P]        # sharded Fig. 5-style sweep
+//! opengemm serve     [--workload W]        # sustained-traffic serving harness
 //! opengemm verify    [--artifacts DIR]     # simulator vs PJRT golden model
 //! opengemm info      [--config FILE.toml]  # show an instance's parameters
+//! ```
+//!
+//! ## Serving harness (`opengemm serve`)
+//!
+//! Simulates the platform as an inference service: a seeded arrival
+//! process (open-loop Poisson or closed-loop clients) pushes BERT
+//! encoder-layer / ResNet-18 requests through a virtual-time queueing
+//! model with a pluggable batching policy, and the report carries
+//! p50/p90/p95/p99/max per-request latency. The JSON output is a pure
+//! function of (config, options, seed) — two runs with the same seed
+//! are byte-identical (the CI `serve-smoke` lane diffs them):
+//!
+//! ```text
+//! opengemm serve --workload bert --requests 64 --rate 500 --seed 7 --json
+//! opengemm serve --workload mixed --arrival closed --clients 8 --batching size --batch 4
 //! ```
 //!
 //! ## Distributed sweeps (`opengemm sweep`)
@@ -54,6 +70,9 @@ use opengemm::experiments::{
 };
 use opengemm::power::PowerModel;
 use opengemm::runtime::Runtime;
+use opengemm::serve::{
+    ms_to_cycles, run_serve, ArrivalSpec, BatchPolicy, ServeOptions, WorkloadSpec,
+};
 use opengemm::util::cli::Args;
 use opengemm::util::json::Json;
 use opengemm::util::rng::Pcg32;
@@ -87,6 +106,19 @@ SUBCOMMANDS:
                     --keep-shards DIR  (driver mode: leave shard/result
                                         files in DIR for other hosts)
                     worker mode: --shard FILE [--out FILE]
+  serve             sustained-traffic serving harness; latency percentiles
+                    --workload bert|bert-large|resnet18|mixed
+                    --requests N   --seed S
+                    --arrival poisson|closed
+                    --rate RPS     (poisson offered load, req/s)
+                    --clients N  --think-ms MS   (closed loop)
+                    --batching immediate|size|deadline
+                    --batch N  --deadline-ms MS
+                    --overhead-cycles C  (per-batch dispatch cost)
+                    --seqs 64,128,...    (BERT sequence-length mix)
+                    --repeat-cap R  --workers N
+                    --json         (JSON report on stdout, not the table)
+                    --out FILE     (also write the JSON report to FILE)
   verify            functional equivalence: simulator vs AOT artifacts
                     --artifacts DIR
   info              print platform instance parameters
@@ -99,7 +131,9 @@ GLOBAL FLAGS:
 
 ENVIRONMENT:
   OPENGEMM_WORKERS  override the coordinator's auto-sized worker pool
-                    (no upper clamp; `--workers` flags still win)
+                    (no upper clamp; `--workers` flags still win; an
+                    unparsable or zero value is a hard error, not a
+                    silent fallback to auto-sizing)
 
 EXAMPLE — a sweep sharded across 2 processes is byte-identical to the
 same sweep in one process:
@@ -489,6 +523,89 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--seqs 64,128,256` (BERT sequence-length mix).
+fn parse_seqs(args: &Args) -> Result<Vec<usize>> {
+    match args.get("seqs") {
+        None => Ok(WorkloadSpec::DEFAULT_SEQS.to_vec()),
+        Some(list) => {
+            let seqs: Vec<usize> = list
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse::<usize>()
+                        .map_err(|_| anyhow!("--seqs: bad sequence length {s:?}"))
+                })
+                .collect::<Result<_>>()?;
+            if seqs.is_empty() || seqs.contains(&0) {
+                bail!("--seqs needs a non-empty list of positive lengths");
+            }
+            Ok(seqs)
+        }
+    }
+}
+
+/// A millisecond CLI knob: finite and non-negative, or a hard error.
+fn nonneg_ms(args: &Args, key: &str, default: f64) -> Result<f64> {
+    let v = args.f64_or(key, default)?;
+    if !v.is_finite() || v < 0.0 {
+        bail!("--{key} must be a non-negative duration in ms, got {v}");
+    }
+    Ok(v)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let seqs = parse_seqs(args)?;
+    let workload_name = args.get_or("workload", "bert");
+    let workload = WorkloadSpec::from_name(workload_name, &seqs).ok_or_else(|| {
+        anyhow!("--workload must be bert|bert-large|resnet18|mixed, got {workload_name:?}")
+    })?;
+    if args.has("seqs") && workload == WorkloadSpec::Resnet18 {
+        // refuse rather than silently drop the operator's knob
+        bail!("--seqs only applies to BERT workloads, not --workload {workload_name}");
+    }
+    let arrival = match args.get_or("arrival", "poisson") {
+        "poisson" => ArrivalSpec::OpenPoisson { rate_rps: args.f64_or("rate", 200.0)? },
+        "closed" => ArrivalSpec::ClosedLoop {
+            clients: args.usize_or("clients", 4)?,
+            think_cycles: ms_to_cycles(nonneg_ms(args, "think-ms", 0.0)?, cfg.freq_mhz),
+        },
+        other => bail!("--arrival must be poisson|closed, got {other:?}"),
+    };
+    let batching = match args.get_or("batching", "immediate") {
+        "immediate" => BatchPolicy::Immediate,
+        "size" => BatchPolicy::Size(args.usize_or("batch", 4)?),
+        "deadline" => BatchPolicy::Deadline {
+            max_batch: args.usize_or("batch", 4)?,
+            max_wait_cycles: ms_to_cycles(nonneg_ms(args, "deadline-ms", 1.0)?, cfg.freq_mhz),
+        },
+        other => bail!("--batching must be immediate|size|deadline, got {other:?}"),
+    };
+    let opts = ServeOptions {
+        workload,
+        arrival,
+        batching,
+        requests: args.usize_or("requests", 64)?,
+        seed: args.u64_or("seed", 1)?,
+        workers: args.usize_or("workers", 0)?,
+        fast_forward: args.enabled_unless_no("fast-forward"),
+        repeat_cap: args.usize_or("repeat-cap", 16)? as u32,
+        dispatch_overhead_cycles: args.u64_or("overhead-cycles", 0)?,
+    };
+    let report = run_serve(&cfg, &opts).map_err(|e| anyhow!(e))?;
+    let json = report.to_json().pretty();
+    if args.has("json") {
+        println!("{json}");
+    } else {
+        println!("{}", report.render());
+    }
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, &json)?;
+        eprintln!("wrote {out}");
+    }
+    Ok(())
+}
+
 fn cmd_verify(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let dir = args
@@ -580,6 +697,7 @@ fn main() {
         "sota" => cmd_sota(&args),
         "compare-gemmini" => cmd_compare_gemmini(&args),
         "sweep" => cmd_sweep(&args),
+        "serve" => cmd_serve(&args),
         "verify" => cmd_verify(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {

@@ -1,0 +1,112 @@
+//! Request arrival processes for the serving harness.
+//!
+//! Two canonical serving-evaluation regimes:
+//!
+//! - **Open-loop Poisson**: requests arrive at an offered rate that
+//!   does not react to the system (the "traffic from millions of
+//!   users" model). Inter-arrival gaps are exponential, sampled by
+//!   inverse-CDF from the deterministic [`Pcg32`] stream, so the same
+//!   seed always produces the same arrival schedule.
+//! - **Closed-loop N clients**: each client issues one request, waits
+//!   for its completion, thinks for a fixed time, and re-issues — the
+//!   latency-limited regime (with 1 client and zero think time it
+//!   degenerates to the plain sequential loop, which the differential
+//!   test exploits).
+//!
+//! All times are **virtual device cycles** of the simulated platform;
+//! nothing here reads a wall clock.
+
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+
+/// How requests arrive at the serving queue.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalSpec {
+    /// Open loop: Poisson arrivals at `rate_rps` requests per second
+    /// (converted to cycles at the platform clock).
+    OpenPoisson { rate_rps: f64 },
+    /// Closed loop: `clients` clients, each re-issuing `think_cycles`
+    /// after its previous request completes.
+    ClosedLoop { clients: usize, think_cycles: u64 },
+}
+
+impl ArrivalSpec {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ArrivalSpec::OpenPoisson { .. } => "poisson",
+            ArrivalSpec::ClosedLoop { .. } => "closed",
+        }
+    }
+
+    /// Wire encoding (serving report header).
+    pub fn to_json(&self) -> Json {
+        match *self {
+            ArrivalSpec::OpenPoisson { rate_rps } => Json::obj(vec![
+                ("mode", Json::str("poisson")),
+                ("rate_rps", Json::num(rate_rps)),
+            ]),
+            ArrivalSpec::ClosedLoop { clients, think_cycles } => Json::obj(vec![
+                ("mode", Json::str("closed")),
+                ("clients", Json::num(clients as f64)),
+                ("think_cycles", Json::num(think_cycles as f64)),
+            ]),
+        }
+    }
+}
+
+/// `n` Poisson arrival times in device cycles at `rate_rps` requests
+/// per second on a `freq_mhz` clock. Monotone non-decreasing; the
+/// caller validates `rate_rps > 0`.
+pub fn poisson_arrival_cycles(
+    rate_rps: f64,
+    freq_mhz: u64,
+    n: usize,
+    rng: &mut Pcg32,
+) -> Vec<u64> {
+    // mean inter-arrival gap in cycles
+    let mean_gap = freq_mhz as f64 * 1e6 / rate_rps;
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        // inverse CDF of Exp(1): -ln(1 - u), u in [0, 1) so the
+        // argument stays in (0, 1] and the gap is finite and >= 0
+        let u = rng.unit_f64();
+        t += -(1.0 - u).ln() * mean_gap;
+        out.push(t.round() as u64);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_is_deterministic_and_monotone() {
+        let a = poisson_arrival_cycles(1000.0, 200, 500, &mut Pcg32::seeded(9));
+        let b = poisson_arrival_cycles(1000.0, 200, 500, &mut Pcg32::seeded(9));
+        assert_eq!(a, b, "same seed, same schedule");
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "arrivals sorted");
+    }
+
+    #[test]
+    fn poisson_mean_gap_matches_rate() {
+        // 1000 req/s at 200 MHz -> mean gap 200_000 cycles
+        let arr = poisson_arrival_cycles(1000.0, 200, 4000, &mut Pcg32::seeded(3));
+        let mean = *arr.last().unwrap() as f64 / arr.len() as f64;
+        assert!(
+            (mean - 200_000.0).abs() < 20_000.0,
+            "empirical mean gap {mean} vs expected 200000"
+        );
+    }
+
+    #[test]
+    fn spec_json_has_mode() {
+        let open = ArrivalSpec::OpenPoisson { rate_rps: 500.0 };
+        assert!(open.to_json().pretty().contains("poisson"));
+        let closed = ArrivalSpec::ClosedLoop { clients: 4, think_cycles: 100 };
+        let text = closed.to_json().pretty();
+        assert!(text.contains("closed") && text.contains("think_cycles"));
+        assert_eq!(closed.label(), "closed");
+    }
+}

@@ -1,0 +1,92 @@
+//! Batching policies: how queued requests are grouped into device
+//! dispatches.
+//!
+//! The queueing engine reduces every policy to two knobs — a maximum
+//! batch size and an optional deadline on the oldest queued request —
+//! plus one universal rule: when no future arrival can ever join the
+//! queue (open loop: schedule exhausted; closed loop: every
+//! outstanding request is already queued), the partial batch is
+//! flushed instead of waiting forever.
+
+use crate::util::json::Json;
+
+/// How queued requests are grouped into batches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchPolicy {
+    /// Every request dispatches alone, as soon as the device frees up.
+    Immediate,
+    /// Wait until `n` requests are queued (flushing a partial batch
+    /// only when no future arrival can complete it).
+    Size(usize),
+    /// Close a batch when `max_batch` requests are queued or the
+    /// oldest has waited `max_wait_cycles`, whichever comes first.
+    Deadline { max_batch: usize, max_wait_cycles: u64 },
+}
+
+impl BatchPolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            BatchPolicy::Immediate => "immediate",
+            BatchPolicy::Size(_) => "size",
+            BatchPolicy::Deadline { .. } => "deadline",
+        }
+    }
+
+    /// Largest number of requests one batch may carry.
+    pub fn max_batch(&self) -> usize {
+        match *self {
+            BatchPolicy::Immediate => 1,
+            BatchPolicy::Size(n) => n.max(1),
+            BatchPolicy::Deadline { max_batch, .. } => max_batch.max(1),
+        }
+    }
+
+    /// Longest the oldest queued request may wait before the batch is
+    /// closed regardless of fill (deadline policy only).
+    pub fn max_wait(&self) -> Option<u64> {
+        match *self {
+            BatchPolicy::Deadline { max_wait_cycles, .. } => Some(max_wait_cycles),
+            _ => None,
+        }
+    }
+
+    /// Wire encoding (serving report header).
+    pub fn to_json(&self) -> Json {
+        match *self {
+            BatchPolicy::Immediate => Json::obj(vec![("policy", Json::str("immediate"))]),
+            BatchPolicy::Size(n) => Json::obj(vec![
+                ("policy", Json::str("size")),
+                ("batch", Json::num(n as f64)),
+            ]),
+            BatchPolicy::Deadline { max_batch, max_wait_cycles } => Json::obj(vec![
+                ("policy", Json::str("deadline")),
+                ("batch", Json::num(max_batch as f64)),
+                ("max_wait_cycles", Json::num(max_wait_cycles as f64)),
+            ]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_knobs() {
+        assert_eq!(BatchPolicy::Immediate.max_batch(), 1);
+        assert_eq!(BatchPolicy::Immediate.max_wait(), None);
+        assert_eq!(BatchPolicy::Size(8).max_batch(), 8);
+        assert_eq!(BatchPolicy::Size(0).max_batch(), 1, "degenerate size clamps to 1");
+        let d = BatchPolicy::Deadline { max_batch: 4, max_wait_cycles: 1000 };
+        assert_eq!(d.max_batch(), 4);
+        assert_eq!(d.max_wait(), Some(1000));
+    }
+
+    #[test]
+    fn policy_json_carries_knobs() {
+        let d = BatchPolicy::Deadline { max_batch: 4, max_wait_cycles: 1000 };
+        let text = d.to_json().pretty();
+        assert!(text.contains("deadline") && text.contains("max_wait_cycles"));
+        assert!(BatchPolicy::Immediate.to_json().pretty().contains("immediate"));
+    }
+}

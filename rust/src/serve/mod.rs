@@ -1,0 +1,255 @@
+//! Sustained-traffic serving harness: the platform as an inference
+//! service under load, not just a per-kernel simulator.
+//!
+//! OpenGeMM's pitch is system-level efficiency under real DNN
+//! workloads (the paper evaluates full model streams, like its Gemmini
+//! baseline). This module turns the one-shot `bert_serving` example
+//! loop into a proper serving-systems harness:
+//!
+//! 1. **Request kinds** ([`workload`]): a request is a named GeMM
+//!    stream — a BERT encoder layer at a sampled sequence length, or a
+//!    full CNN (ResNet-18) inference.
+//! 2. **Service model** ([`service`]): each distinct `(shape,
+//!    repeats)` point is simulated once, cycle-accurately, through the
+//!    coordinator pool; repeat counts are honored exactly up to a cap
+//!    (no more silent 12-repeat clamping — BERT-Large's 16 heads are
+//!    measured as 16) and extrapolated by marginal cost beyond it.
+//! 3. **Arrival process** ([`arrival`]): open-loop Poisson or
+//!    closed-loop N-clients, seeded via [`Pcg32`].
+//! 4. **Queueing model** ([`queue`]): a virtual-time single-device
+//!    timeline under a pluggable [`BatchPolicy`] ([`batching`]),
+//!    yielding per-request queueing + service latency in device
+//!    cycles.
+//! 5. **Report** ([`report`]): p50/p90/p95/p99/max latency
+//!    percentiles as a table and as deterministic JSON (same seed =>
+//!    byte-identical bytes, enforced by tests and the `serve-smoke` CI
+//!    lane).
+//!
+//! Everything is a pure function of `(PlatformConfig, ServeOptions)`;
+//! no wall clock enters the report.
+
+pub mod arrival;
+pub mod batching;
+pub mod queue;
+pub mod report;
+pub mod service;
+pub mod workload;
+
+pub use arrival::ArrivalSpec;
+pub use batching::BatchPolicy;
+pub use report::{KindSummary, ServeReport, SERVE_REPORT_FORMAT};
+pub use service::ServiceModel;
+pub use workload::{RequestKind, WorkloadSpec};
+
+use crate::config::PlatformConfig;
+use crate::util::rng::Pcg32;
+use crate::util::stats::TailSummary;
+
+use arrival::poisson_arrival_cycles;
+use queue::{simulate_queue, ArrivalSource};
+
+/// RNG stream selectors (see [`Pcg32::new`]): arrival timing and
+/// request-kind sampling draw from independent deterministic streams
+/// of the same seed, so changing the request count perturbs neither.
+const ARRIVAL_STREAM: u64 = 0x5e7e_a221;
+const KIND_STREAM: u64 = 0x5e7e_71fe;
+
+/// Everything one serving run depends on (besides the platform).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeOptions {
+    pub workload: WorkloadSpec,
+    pub arrival: ArrivalSpec,
+    pub batching: BatchPolicy,
+    /// Requests to schedule (0 = an idle window, which must produce an
+    /// empty report rather than a panic).
+    pub requests: usize,
+    pub seed: u64,
+    /// Worker threads for the measurement coordinator (0 = auto).
+    pub workers: usize,
+    pub fast_forward: bool,
+    /// Service-model exact-measurement cap (see [`ServiceModel`]).
+    pub repeat_cap: u32,
+    /// Host dispatch cost paid once per batch, in device cycles —
+    /// what size/deadline batching amortizes.
+    pub dispatch_overhead_cycles: u64,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            workload: WorkloadSpec::BertBase {
+                seq_choices: WorkloadSpec::DEFAULT_SEQS.to_vec(),
+            },
+            arrival: ArrivalSpec::OpenPoisson { rate_rps: 200.0 },
+            batching: BatchPolicy::Immediate,
+            requests: 64,
+            seed: 1,
+            workers: 0,
+            fast_forward: true,
+            repeat_cap: 16,
+            dispatch_overhead_cycles: 0,
+        }
+    }
+}
+
+/// Milliseconds of virtual time to device cycles at `freq_mhz`.
+pub fn ms_to_cycles(ms: f64, freq_mhz: u64) -> u64 {
+    (ms * freq_mhz as f64 * 1e3).round() as u64
+}
+
+fn validate(opts: &ServeOptions) -> Result<(), String> {
+    match opts.arrival {
+        ArrivalSpec::OpenPoisson { rate_rps } => {
+            if !rate_rps.is_finite() || rate_rps <= 0.0 {
+                return Err(format!("arrival rate must be a positive rate, got {rate_rps}"));
+            }
+        }
+        ArrivalSpec::ClosedLoop { clients, .. } => {
+            if clients == 0 {
+                return Err("closed-loop arrival needs at least 1 client".into());
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Run the serving harness end to end.
+pub fn run_serve(cfg: &PlatformConfig, opts: &ServeOptions) -> Result<ServeReport, String> {
+    validate(opts)?;
+    let kinds = opts.workload.kinds();
+    if kinds.is_empty() {
+        return Err("workload has no request kinds".into());
+    }
+
+    // 1. measure service times (the only simulation work)
+    let mut model = ServiceModel::new(opts.repeat_cap);
+    let measurement = model.measure(cfg, opts.workers, opts.fast_forward, &kinds)?;
+    let service_by_kind: Vec<u64> = kinds
+        .iter()
+        .map(|k| model.stream_cycles(&k.stream))
+        .collect::<Result<_, _>>()?;
+
+    // 2. generate arrivals and run the virtual-time queueing model
+    let mut source = match opts.arrival {
+        ArrivalSpec::OpenPoisson { rate_rps } => {
+            let mut arrival_rng = Pcg32::new(opts.seed, ARRIVAL_STREAM);
+            let mut kind_rng = Pcg32::new(opts.seed, KIND_STREAM);
+            let times =
+                poisson_arrival_cycles(rate_rps, cfg.freq_mhz, opts.requests, &mut arrival_rng);
+            let arrivals: Vec<(u64, usize)> = times
+                .into_iter()
+                .map(|t| (t, kind_rng.below(kinds.len() as u32) as usize))
+                .collect();
+            ArrivalSource::open(arrivals)
+        }
+        ArrivalSpec::ClosedLoop { clients, think_cycles } => ArrivalSource::closed(
+            clients,
+            think_cycles,
+            opts.requests,
+            kinds.len(),
+            Pcg32::new(opts.seed, KIND_STREAM),
+        ),
+    };
+    let overhead = opts.dispatch_overhead_cycles;
+    let outcome = simulate_queue(&mut source, &service_by_kind, opts.batching, overhead);
+
+    // 3. aggregate into the report (virtual time only)
+    let to_ms = |c: u64| c as f64 / (cfg.freq_mhz as f64 * 1e3);
+    let n = outcome.records.len();
+    let mut latency = Vec::with_capacity(n);
+    let mut queueing = Vec::with_capacity(n);
+    let mut service = Vec::with_capacity(n);
+    let mut served_by_kind = vec![0usize; kinds.len()];
+    for r in &outcome.records {
+        latency.push(to_ms(r.completion - r.arrival));
+        queueing.push(to_ms(r.start - r.arrival));
+        service.push(to_ms(r.completion - r.start));
+        served_by_kind[r.kind] += 1;
+    }
+    let kind_summaries: Vec<KindSummary> = kinds
+        .iter()
+        .zip(&served_by_kind)
+        .zip(&service_by_kind)
+        .map(|((k, &served), &service_cycles)| KindSummary {
+            label: k.label.clone(),
+            served,
+            service_cycles,
+        })
+        .collect();
+
+    Ok(ServeReport {
+        workload: opts.workload.to_json(),
+        arrival: opts.arrival,
+        batching: opts.batching,
+        seed: opts.seed,
+        freq_mhz: cfg.freq_mhz,
+        requests: outcome.records.len(),
+        batches: outcome.batches.len(),
+        duration_cycles: outcome.records.iter().map(|r| r.completion).max().unwrap_or(0),
+        device_busy_cycles: outcome.batches.iter().map(|b| b.completion - b.start).sum(),
+        latency_ms: TailSummary::compute(&latency),
+        queueing_ms: TailSummary::compute(&queueing),
+        service_ms: TailSummary::compute(&service),
+        kinds: kind_summaries,
+        measurement,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_opts() -> ServeOptions {
+        ServeOptions {
+            workload: WorkloadSpec::BertBase { seq_choices: vec![64] },
+            arrival: ArrivalSpec::OpenPoisson { rate_rps: 2000.0 },
+            requests: 8,
+            seed: 11,
+            workers: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn serve_produces_percentiles() {
+        let cfg = PlatformConfig::case_study();
+        let report = run_serve(&cfg, &tiny_opts()).unwrap();
+        assert_eq!(report.requests, 8);
+        let lat = report.latency_ms.as_ref().expect("non-empty window");
+        assert!(lat.p50 > 0.0 && lat.p99 >= lat.p50 && lat.max >= lat.p99);
+        assert!(report.duration_cycles > 0);
+        assert!(report.device_utilization() > 0.0);
+    }
+
+    #[test]
+    fn idle_window_yields_empty_report() {
+        let cfg = PlatformConfig::case_study();
+        let idle = ServeOptions { requests: 0, ..tiny_opts() };
+        let report = run_serve(&cfg, &idle).unwrap();
+        assert_eq!(report.requests, 0);
+        assert_eq!(report.latency_ms, None);
+        assert_eq!(report.duration_cycles, 0);
+        assert!(report.to_json().pretty().contains("null"));
+    }
+
+    #[test]
+    fn invalid_options_are_rejected() {
+        let cfg = PlatformConfig::case_study();
+        let bad_rate = ServeOptions {
+            arrival: ArrivalSpec::OpenPoisson { rate_rps: 0.0 },
+            ..tiny_opts()
+        };
+        assert!(run_serve(&cfg, &bad_rate).is_err());
+        let no_clients = ServeOptions {
+            arrival: ArrivalSpec::ClosedLoop { clients: 0, think_cycles: 0 },
+            ..tiny_opts()
+        };
+        assert!(run_serve(&cfg, &no_clients).is_err());
+    }
+
+    #[test]
+    fn ms_to_cycles_at_200mhz() {
+        assert_eq!(ms_to_cycles(1.0, 200), 200_000);
+        assert_eq!(ms_to_cycles(0.0, 200), 0);
+    }
+}

@@ -1,0 +1,332 @@
+//! Virtual-time queueing model: map per-request service cycles onto a
+//! single-device serving timeline.
+//!
+//! The device serves one batch at a time, FIFO. Time is virtual device
+//! cycles; the engine is a pure function of (arrival source, per-kind
+//! service cycles, batching policy, per-batch overhead), so the same
+//! seed always reproduces the same timeline byte-for-byte.
+//!
+//! ## Batch semantics
+//!
+//! A batch *closes* per the [`BatchPolicy`] (full, deadline expiry, or
+//! the universal no-future-arrivals flush), *starts* when both closed
+//! and the device is free, and *completes* after the per-batch
+//! dispatch overhead plus the sum of its members' service cycles (the
+//! device still executes member streams sequentially — batching
+//! amortizes the dispatch overhead and trades queueing delay for it).
+//! Every member of a batch completes at the batch's completion cycle:
+//!
+//! - request latency   = completion - arrival
+//! - queueing latency  = start - arrival   (close wait + device wait)
+//! - service latency   = completion - start (the batch service window)
+//!
+//! ## Closed-loop arrivals
+//!
+//! Closed-loop clients re-issue `think` cycles after their previous
+//! request completes. Completion times are known at dispatch (the
+//! model is deterministic), so follow-up arrivals are scheduled
+//! eagerly when the batch is dispatched; "no future arrivals" is then
+//! simply an empty schedule, which makes the partial-batch flush rule
+//! exact and deadlock-free (a size-N batch can never wait on an
+//! arrival that itself waits on the batch).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::util::rng::Pcg32;
+
+use super::batching::BatchPolicy;
+
+/// One served request's timeline, all in device cycles.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RequestRecord {
+    /// Arrival order (0-based).
+    pub id: usize,
+    /// Index into the workload's request kinds.
+    pub kind: usize,
+    pub arrival: u64,
+    /// This request's own stream cost (not the batch window).
+    pub service_cycles: u64,
+    /// Cycle the containing batch began service.
+    pub start: u64,
+    /// Cycle the containing batch completed.
+    pub completion: u64,
+    /// Index of the containing batch.
+    pub batch: usize,
+}
+
+/// One dispatched batch.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchRecord {
+    pub close: u64,
+    pub start: u64,
+    pub completion: u64,
+    pub size: usize,
+}
+
+/// The full simulated timeline.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct QueueOutcome {
+    /// In arrival (= id) order.
+    pub records: Vec<RequestRecord>,
+    /// In dispatch order.
+    pub batches: Vec<BatchRecord>,
+}
+
+/// Where arrivals come from.
+pub enum ArrivalSource {
+    /// Precomputed `(cycle, kind)` schedule, sorted by cycle.
+    Open { arrivals: Vec<(u64, usize)>, next: usize },
+    /// Closed loop: re-issues are scheduled on batch dispatch.
+    Closed {
+        /// `(cycle, tie-break seq)` of not-yet-admitted arrivals.
+        schedule: BinaryHeap<Reverse<(u64, u64)>>,
+        seq: u64,
+        think: u64,
+        /// Requests not yet scheduled (the issue budget).
+        remaining: usize,
+        kind_rng: Pcg32,
+        n_kinds: u32,
+    },
+}
+
+impl ArrivalSource {
+    pub fn open(arrivals: Vec<(u64, usize)>) -> ArrivalSource {
+        debug_assert!(arrivals.windows(2).all(|w| w[0].0 <= w[1].0), "sorted schedule");
+        ArrivalSource::Open { arrivals, next: 0 }
+    }
+
+    pub fn closed(
+        clients: usize,
+        think: u64,
+        total_requests: usize,
+        n_kinds: usize,
+        kind_rng: Pcg32,
+    ) -> ArrivalSource {
+        let mut schedule = BinaryHeap::new();
+        let initial = clients.min(total_requests);
+        for seq in 0..initial as u64 {
+            schedule.push(Reverse((0u64, seq)));
+        }
+        ArrivalSource::Closed {
+            schedule,
+            seq: initial as u64,
+            think,
+            remaining: total_requests - initial,
+            kind_rng,
+            n_kinds: n_kinds as u32,
+        }
+    }
+
+    /// Cycle of the next arrival, if any can still occur.
+    fn peek(&self) -> Option<u64> {
+        match self {
+            ArrivalSource::Open { arrivals, next } => arrivals.get(*next).map(|a| a.0),
+            ArrivalSource::Closed { schedule, .. } => schedule.peek().map(|r| r.0 .0),
+        }
+    }
+
+    /// Admit the next arrival: `(cycle, kind)`.
+    fn pop(&mut self) -> Option<(u64, usize)> {
+        match self {
+            ArrivalSource::Open { arrivals, next } => {
+                let a = arrivals.get(*next).copied();
+                if a.is_some() {
+                    *next += 1;
+                }
+                a
+            }
+            ArrivalSource::Closed { schedule, kind_rng, n_kinds, .. } => {
+                let Reverse((cycle, _)) = schedule.pop()?;
+                Some((cycle, kind_rng.below(*n_kinds) as usize))
+            }
+        }
+    }
+
+    /// A batch of `size` members completed at `completion`: closed-loop
+    /// clients schedule their next issue.
+    fn on_batch_dispatched(&mut self, size: usize, completion: u64) {
+        if let ArrivalSource::Closed { schedule, seq, think, remaining, .. } = self {
+            let reissues = size.min(*remaining);
+            for _ in 0..reissues {
+                schedule.push(Reverse((completion + *think, *seq)));
+                *seq += 1;
+            }
+            *remaining -= reissues;
+        }
+    }
+}
+
+/// Run the queueing model to completion: every scheduled request is
+/// admitted, batched and served. `service_by_kind[kind]` is the stream
+/// cost of one request of that kind.
+pub fn simulate_queue(
+    source: &mut ArrivalSource,
+    service_by_kind: &[u64],
+    policy: BatchPolicy,
+    overhead_cycles: u64,
+) -> QueueOutcome {
+    let max_batch = policy.max_batch();
+    let max_wait = policy.max_wait();
+    // (id, kind, arrival)
+    let mut queue: VecDeque<(usize, usize, u64)> = VecDeque::new();
+    let mut device_free = 0u64;
+    let mut next_id = 0usize;
+    let mut out = QueueOutcome::default();
+
+    loop {
+        let next_arrival = source.peek();
+        // When does the queue close into a batch?
+        let close: Option<u64> = if queue.len() >= max_batch {
+            // full: closed the moment the max_batch-th member arrived
+            Some(queue[max_batch - 1].2)
+        } else if !queue.is_empty() && next_arrival.is_none() {
+            // flush: nothing can ever join this batch
+            Some(queue.back().unwrap().2)
+        } else if let (Some(wait), Some(front)) = (max_wait, queue.front()) {
+            // deadline: expiry wins only if no arrival precedes it
+            let expiry = front.2.saturating_add(wait);
+            match next_arrival {
+                Some(a) if a < expiry => None,
+                _ => Some(expiry),
+            }
+        } else {
+            None
+        };
+
+        if let Some(close_at) = close {
+            let size = queue.len().min(max_batch);
+            let members: Vec<(usize, usize, u64)> = queue.drain(..size).collect();
+            let start = device_free.max(close_at);
+            let service: u64 = members.iter().map(|&(_, k, _)| service_by_kind[k]).sum();
+            let completion = start + overhead_cycles + service;
+            device_free = completion;
+            let batch = out.batches.len();
+            for (id, kind, arrival) in members {
+                out.records.push(RequestRecord {
+                    id,
+                    kind,
+                    arrival,
+                    service_cycles: service_by_kind[kind],
+                    start,
+                    completion,
+                    batch,
+                });
+            }
+            out.batches.push(BatchRecord { close: close_at, start, completion, size });
+            source.on_batch_dispatched(size, completion);
+        } else if let Some((cycle, kind)) = source.pop() {
+            queue.push_back((next_id, kind, cycle));
+            next_id += 1;
+        } else {
+            debug_assert!(queue.is_empty());
+            break;
+        }
+    }
+    debug_assert!(out.records.windows(2).all(|w| w[0].id < w[1].id), "id order");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn open(arrivals: &[(u64, usize)]) -> ArrivalSource {
+        ArrivalSource::open(arrivals.to_vec())
+    }
+
+    #[test]
+    fn immediate_is_fifo_sequential() {
+        let mut src = open(&[(0, 0), (5, 0), (100, 0)]);
+        let out = simulate_queue(&mut src, &[10], BatchPolicy::Immediate, 0);
+        let c: Vec<u64> = out.records.iter().map(|r| r.completion).collect();
+        // req0 serves 0..10; req1 arrives at 5, waits, serves 10..20;
+        // req2 arrives at 100 on an idle device, serves 100..110
+        assert_eq!(c, vec![10, 20, 110]);
+        let lat: Vec<u64> = out.records.iter().map(|r| r.completion - r.arrival).collect();
+        assert_eq!(lat, vec![10, 15, 10]);
+        assert_eq!(out.batches.len(), 3);
+    }
+
+    #[test]
+    fn size_batches_fill_then_flush() {
+        let mut src = open(&[(0, 0), (1, 0), (2, 0), (3, 0), (4, 0)]);
+        let out = simulate_queue(&mut src, &[10], BatchPolicy::Size(2), 0);
+        let sizes: Vec<usize> = out.batches.iter().map(|b| b.size).collect();
+        assert_eq!(sizes, vec![2, 2, 1], "two full batches, flushed remainder");
+        // batch 0 closes when request 1 arrives (cycle 1)
+        assert_eq!(out.batches[0].close, 1);
+        assert_eq!(out.batches[0].completion, 21);
+        // all members of one batch share its completion
+        assert_eq!(out.records[0].completion, out.records[1].completion);
+    }
+
+    #[test]
+    fn deadline_expires_partial_batch() {
+        // one request at 0, the next only at 100; max_wait 10 closes a
+        // size-1 batch at cycle 10
+        let mut src = open(&[(0, 0), (100, 0)]);
+        let policy = BatchPolicy::Deadline { max_batch: 4, max_wait_cycles: 10 };
+        let out = simulate_queue(&mut src, &[5], policy, 0);
+        assert_eq!(out.batches[0].close, 10);
+        assert_eq!(out.batches[0].start, 10);
+        assert_eq!(out.batches[0].size, 1);
+        assert_eq!(out.records[0].completion - out.records[0].arrival, 15);
+    }
+
+    #[test]
+    fn deadline_full_batch_closes_early() {
+        let mut src = open(&[(0, 0), (1, 0), (50, 0)]);
+        let policy = BatchPolicy::Deadline { max_batch: 2, max_wait_cycles: 1000 };
+        let out = simulate_queue(&mut src, &[5], policy, 0);
+        assert_eq!(out.batches[0].close, 1, "full at second arrival, not at expiry");
+        assert_eq!(out.batches[0].size, 2);
+    }
+
+    #[test]
+    fn per_batch_overhead_is_paid_once() {
+        let mut src = open(&[(0, 0), (0, 0)]);
+        let out = simulate_queue(&mut src, &[10], BatchPolicy::Size(2), 7);
+        assert_eq!(out.batches[0].completion, 27, "overhead + 2 services");
+    }
+
+    #[test]
+    fn closed_loop_single_client_is_sequential_with_think() {
+        let mut src = ArrivalSource::closed(1, 5, 3, 1, Pcg32::seeded(1));
+        let out = simulate_queue(&mut src, &[10], BatchPolicy::Immediate, 0);
+        let a: Vec<u64> = out.records.iter().map(|r| r.arrival).collect();
+        let c: Vec<u64> = out.records.iter().map(|r| r.completion).collect();
+        assert_eq!(a, vec![0, 15, 30], "issue -> complete(10) -> think(5) -> reissue");
+        assert_eq!(c, vec![10, 25, 40]);
+    }
+
+    #[test]
+    fn closed_loop_partial_batch_flushes_not_deadlocks() {
+        // 2 clients but size-4 batching: the batch can never fill, so
+        // the flush rule must dispatch pairs
+        let mut src = ArrivalSource::closed(2, 0, 4, 1, Pcg32::seeded(1));
+        let out = simulate_queue(&mut src, &[10], BatchPolicy::Size(4), 0);
+        assert_eq!(out.records.len(), 4, "all requests served");
+        let sizes: Vec<usize> = out.batches.iter().map(|b| b.size).collect();
+        assert_eq!(sizes, vec![2, 2]);
+    }
+
+    #[test]
+    fn empty_schedule_serves_nothing() {
+        let mut src = open(&[]);
+        let out = simulate_queue(&mut src, &[10], BatchPolicy::Immediate, 0);
+        assert!(out.records.is_empty() && out.batches.is_empty());
+        let mut src = ArrivalSource::closed(4, 0, 0, 1, Pcg32::seeded(1));
+        let out = simulate_queue(&mut src, &[10], BatchPolicy::Size(2), 0);
+        assert!(out.records.is_empty());
+    }
+
+    #[test]
+    fn mixed_kinds_use_their_own_service_cost() {
+        let mut src = open(&[(0, 1), (0, 0)]);
+        let out = simulate_queue(&mut src, &[10, 100], BatchPolicy::Immediate, 0);
+        assert_eq!(out.records[0].service_cycles, 100);
+        assert_eq!(out.records[1].service_cycles, 10);
+        assert_eq!(out.records[1].completion, 110);
+    }
+}

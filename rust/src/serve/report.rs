@@ -1,0 +1,238 @@
+//! Serving report: percentile tables + JSON for trend tracking.
+//!
+//! Deliberately free of wall-clock, host or worker-count fields: every
+//! number is a deterministic function of (config, options, seed), so
+//! two runs with the same seed serialize **byte-identically** — the
+//! property the `serve-smoke` CI lane diffs, and what makes these
+//! reports usable as regression baselines. The JSON shares `util::json`
+//! with the sweep wire format, so trend tooling can ingest both.
+
+use crate::coordinator::CoordinatorStats;
+use crate::util::json::Json;
+use crate::util::stats::TailSummary;
+use crate::util::table::{fmt_f, Table};
+
+use super::arrival::ArrivalSpec;
+use super::batching::BatchPolicy;
+
+/// Wire-format marker, so downstream tooling fed the wrong file fails
+/// loudly.
+pub const SERVE_REPORT_FORMAT: &str = "opengemm-serve-report-v1";
+
+/// Per-request-kind serving outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KindSummary {
+    pub label: String,
+    /// Requests of this kind served.
+    pub served: usize,
+    /// Stream cost of one request of this kind, in device cycles.
+    pub service_cycles: u64,
+}
+
+/// The complete serving-harness result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeReport {
+    pub workload: Json,
+    pub arrival: ArrivalSpec,
+    pub batching: BatchPolicy,
+    pub seed: u64,
+    pub freq_mhz: u64,
+    /// Requests served (every scheduled request completes).
+    pub requests: usize,
+    pub batches: usize,
+    /// Makespan: cycle of the last batch completion (0 when idle).
+    pub duration_cycles: u64,
+    /// Cycles the device spent serving batches (overhead included).
+    pub device_busy_cycles: u64,
+    /// `None` when the window served no requests — an idle window is a
+    /// legitimate outcome, not a panic (see `util::stats`).
+    pub latency_ms: Option<TailSummary>,
+    pub queueing_ms: Option<TailSummary>,
+    pub service_ms: Option<TailSummary>,
+    pub kinds: Vec<KindSummary>,
+    /// Measurement-side simulation counters (deterministic: the set of
+    /// measured jobs and their cycle counts depend only on the
+    /// workload, not on pool size or timing).
+    pub measurement: CoordinatorStats,
+}
+
+impl ServeReport {
+    /// Completed requests per second of virtual device time.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.duration_cycles == 0 {
+            return 0.0;
+        }
+        self.requests as f64 * self.freq_mhz as f64 * 1e6 / self.duration_cycles as f64
+    }
+
+    /// Fraction of the makespan the device was serving.
+    pub fn device_utilization(&self) -> f64 {
+        if self.duration_cycles == 0 {
+            return 0.0;
+        }
+        self.device_busy_cycles as f64 / self.duration_cycles as f64
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.requests as f64 / self.batches as f64
+    }
+
+    /// Wire encoding.
+    pub fn to_json(&self) -> Json {
+        let tail = |t: &Option<TailSummary>| match t {
+            Some(t) => t.to_json(),
+            None => Json::Null,
+        };
+        let kinds: Vec<Json> = self
+            .kinds
+            .iter()
+            .map(|k| {
+                Json::obj(vec![
+                    ("label", Json::str(k.label.clone())),
+                    ("served", Json::num(k.served as f64)),
+                    ("service_cycles", Json::num(k.service_cycles as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("format", Json::str(SERVE_REPORT_FORMAT)),
+            ("workload", self.workload.clone()),
+            ("arrival", self.arrival.to_json()),
+            ("batching", self.batching.to_json()),
+            ("seed", Json::num(self.seed as f64)),
+            ("freq_mhz", Json::num(self.freq_mhz as f64)),
+            ("requests", Json::num(self.requests as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("duration_cycles", Json::num(self.duration_cycles as f64)),
+            ("device_busy_cycles", Json::num(self.device_busy_cycles as f64)),
+            ("throughput_rps", Json::num(self.throughput_rps())),
+            ("device_utilization", Json::num(self.device_utilization())),
+            ("latency_ms", tail(&self.latency_ms)),
+            ("queueing_ms", tail(&self.queueing_ms)),
+            ("service_ms", tail(&self.service_ms)),
+            ("kinds", Json::Arr(kinds)),
+            ("measurement", self.measurement.to_json()),
+        ])
+    }
+
+    /// Human-readable report: header lines + percentile table.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("## Serving report\n\n");
+        out.push_str(&format!(
+            "workload {}  arrival {}  batching {}  seed {}\n",
+            self.workload.get("name").and_then(|n| n.as_str()).unwrap_or("?"),
+            self.arrival.label(),
+            self.batching.label(),
+            self.seed
+        ));
+        out.push_str(&format!(
+            "{} requests in {} batches (mean size {:.2}), makespan {:.2} ms @ {} MHz\n",
+            self.requests,
+            self.batches,
+            self.mean_batch_size(),
+            self.duration_cycles as f64 / (self.freq_mhz as f64 * 1e3),
+            self.freq_mhz
+        ));
+        out.push_str(&format!(
+            "throughput {:.1} req/s, device utilization {:.1}%\n\n",
+            self.throughput_rps(),
+            100.0 * self.device_utilization()
+        ));
+        match (&self.latency_ms, &self.queueing_ms, &self.service_ms) {
+            (Some(lat), Some(que), Some(srv)) => {
+                let mut t =
+                    Table::new(&["latency (ms)", "p50", "p90", "p95", "p99", "max", "mean"]);
+                for (name, s) in [("end-to-end", lat), ("queueing", que), ("service", srv)] {
+                    t.row(vec![
+                        name.to_string(),
+                        fmt_f(s.p50, 3),
+                        fmt_f(s.p90, 3),
+                        fmt_f(s.p95, 3),
+                        fmt_f(s.p99, 3),
+                        fmt_f(s.max, 3),
+                        fmt_f(s.mean, 3),
+                    ]);
+                }
+                out.push_str(&t.markdown());
+            }
+            _ => out.push_str("(no requests served in this window)\n"),
+        }
+        if !self.kinds.is_empty() {
+            out.push('\n');
+            let mut t = Table::new(&["request kind", "served", "service ms/req"]);
+            for k in &self.kinds {
+                t.row(vec![
+                    k.label.clone(),
+                    k.served.to_string(),
+                    fmt_f(k.service_cycles as f64 / (self.freq_mhz as f64 * 1e3), 3),
+                ]);
+            }
+            out.push_str(&t.markdown());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn report(requests: usize) -> ServeReport {
+        let samples: Vec<f64> = (0..requests).map(|i| i as f64 + 1.0).collect();
+        let tail = TailSummary::compute(&samples);
+        ServeReport {
+            workload: Json::obj(vec![("name", Json::str("bert"))]),
+            arrival: ArrivalSpec::OpenPoisson { rate_rps: 100.0 },
+            batching: BatchPolicy::Immediate,
+            seed: 7,
+            freq_mhz: 200,
+            requests,
+            batches: requests,
+            duration_cycles: requests as u64 * 1000,
+            device_busy_cycles: requests as u64 * 900,
+            latency_ms: tail.clone(),
+            queueing_ms: tail.clone(),
+            service_ms: tail,
+            kinds: vec![KindSummary {
+                label: "bert-base-layer/seq64".into(),
+                served: requests,
+                service_cycles: 900,
+            }],
+            measurement: CoordinatorStats::default(),
+        }
+    }
+
+    #[test]
+    fn json_roundtrips_and_has_percentiles() {
+        let r = report(10);
+        let text = r.to_json().pretty();
+        let back = json::parse(&text).unwrap();
+        assert_eq!(back.pretty(), text, "stable serialization");
+        assert!(text.contains("\"p99\"") && text.contains(SERVE_REPORT_FORMAT));
+    }
+
+    #[test]
+    fn empty_window_is_null_not_panic() {
+        let r = report(0);
+        assert_eq!(r.latency_ms, None);
+        assert_eq!(r.throughput_rps(), 0.0);
+        assert_eq!(r.device_utilization(), 0.0);
+        assert_eq!(r.mean_batch_size(), 0.0);
+        let text = r.to_json().pretty();
+        assert!(text.contains("\"latency_ms\": null"));
+        assert!(r.render().contains("no requests served"));
+    }
+
+    #[test]
+    fn render_mentions_all_percentile_columns() {
+        let text = report(5).render();
+        for col in ["p50", "p90", "p95", "p99", "end-to-end", "queueing", "service"] {
+            assert!(text.contains(col), "missing {col}");
+        }
+    }
+}

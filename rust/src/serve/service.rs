@@ -1,0 +1,206 @@
+//! Service-time model: device cycles to serve one request.
+//!
+//! A request's stream repeats each GeMM shape `count` times
+//! (attention heads, stacked layers). Simulating every repetition of
+//! every request would be wasteful — identical repetitions cost
+//! identical cycles — so the model measures each distinct
+//! `(shape, repeats)` point once through the coordinator and reuses
+//! it.
+//!
+//! ## Honest amortization (the repeat-clamp fix)
+//!
+//! The old `bert_serving` example clamped the simulated repeat count
+//! to 12 and rescaled by `count`, i.e. it priced `count` runs at
+//! `count * T(12) / 12`. That bakes `1/12`th of the one-time
+//! configuration cost into *every* run, so any stream with more than
+//! 12 repetitions (BERT-Large has 16 heads) was silently mismeasured.
+//! This model is exact up to [`ServiceModel::cap`] repetitions —
+//! `count <= cap` streams are simulated with their true repeat count,
+//! no clamp — and beyond the cap extrapolates affinely from two
+//! measured points:
+//!
+//! ```text
+//! T(count) ~= T(cap) + (count - cap) * (T(cap) - T(1)) / (cap - 1)
+//! ```
+//!
+//! The first run pays the cold-start cost, every later run the
+//! steady-state marginal cost — exact when cycles are affine in the
+//! repeat count, which configuration pre-loading makes true once the
+//! pipeline reaches steady state (the `serving_harness` integration
+//! test checks the extrapolation against an exact simulation).
+
+use std::collections::BTreeMap;
+
+use crate::compiler::GemmShape;
+use crate::config::{Mechanisms, PlatformConfig};
+use crate::coordinator::{Coordinator, CoordinatorStats, JobRequest};
+
+use super::workload::RequestKind;
+
+type ShapeKey = (usize, usize, usize, u32);
+
+/// Cached per-`(shape, repeats)` cycle measurements.
+#[derive(Debug, Clone)]
+pub struct ServiceModel {
+    /// Largest repeat count measured exactly (>= 2: the extrapolation
+    /// needs two distinct measured points).
+    cap: u32,
+    cache: BTreeMap<ShapeKey, u64>,
+}
+
+fn key(shape: GemmShape, repeats: u32) -> ShapeKey {
+    (shape.m, shape.k, shape.n, repeats)
+}
+
+impl ServiceModel {
+    pub fn new(cap: u32) -> ServiceModel {
+        ServiceModel { cap: cap.max(2), cache: BTreeMap::new() }
+    }
+
+    pub fn cap(&self) -> u32 {
+        self.cap
+    }
+
+    /// The repeat counts that must be measured to price `count`
+    /// repetitions of one shape.
+    fn repeats_needed(&self, count: u64) -> Vec<u32> {
+        if count <= self.cap as u64 {
+            vec![count as u32]
+        } else {
+            vec![1, self.cap]
+        }
+    }
+
+    /// Measure every `(shape, repeats)` point the given request kinds
+    /// need, batching all simulations through one coordinator pool.
+    /// Returns the coordinator's (deterministic) simulation counters.
+    pub fn measure(
+        &mut self,
+        cfg: &PlatformConfig,
+        workers: usize,
+        fast_forward: bool,
+        kinds: &[RequestKind],
+    ) -> Result<CoordinatorStats, String> {
+        let mut wanted: Vec<ShapeKey> = Vec::new();
+        for kind in kinds {
+            for &(shape, count) in &kind.stream {
+                if count == 0 {
+                    continue;
+                }
+                for repeats in self.repeats_needed(count) {
+                    let k = key(shape, repeats);
+                    if !self.cache.contains_key(&k) && !wanted.contains(&k) {
+                        wanted.push(k);
+                    }
+                }
+            }
+        }
+        let mut coord = Coordinator::new(cfg.clone()).with_fast_forward(fast_forward);
+        if workers > 0 {
+            coord = coord.with_workers(workers);
+        }
+        let requests: Vec<JobRequest> = wanted
+            .iter()
+            .map(|&(m, k, n, repeats)| {
+                JobRequest::timing(GemmShape::new(m, k, n), Mechanisms::ALL, repeats)
+            })
+            .collect();
+        let outcomes = coord.run_batch(requests);
+        for (&(m, k, n, repeats), outcome) in wanted.iter().zip(outcomes) {
+            let result = outcome
+                .map_err(|e| format!("measuring ({m}, {k}, {n}) x{repeats}: {e}"))?;
+            self.cache.insert((m, k, n, repeats), result.metrics.total_cycles);
+        }
+        Ok(coord.stats())
+    }
+
+    fn lookup(&self, shape: GemmShape, repeats: u32) -> Result<u64, String> {
+        self.cache.get(&key(shape, repeats)).copied().ok_or_else(|| {
+            format!(
+                "({}, {}, {}) x{repeats} not measured — call measure() first",
+                shape.m, shape.k, shape.n
+            )
+        })
+    }
+
+    /// Device cycles for `count` back-to-back repetitions of one shape:
+    /// exact for `count <= cap`, affine extrapolation beyond.
+    pub fn shape_cycles(&self, shape: GemmShape, count: u64) -> Result<u64, String> {
+        if count == 0 {
+            return Ok(0);
+        }
+        if count <= self.cap as u64 {
+            return self.lookup(shape, count as u32);
+        }
+        let t1 = self.lookup(shape, 1)?;
+        let tc = self.lookup(shape, self.cap)?;
+        let marginal = tc.saturating_sub(t1) as f64 / (self.cap - 1) as f64;
+        Ok(tc + ((count - self.cap as u64) as f64 * marginal).round() as u64)
+    }
+
+    /// Device cycles to serve one request of this stream: the sum of
+    /// its per-shape costs (the GeMMs of one request run sequentially
+    /// on the single device).
+    pub fn stream_cycles(&self, stream: &[(GemmShape, u64)]) -> Result<u64, String> {
+        let mut total = 0u64;
+        for &(shape, count) in stream {
+            total += self.shape_cycles(shape, count)?;
+        }
+        Ok(total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_up_to_cap_no_clamp() {
+        // A 16-repeat stream on a cap-16 model must be priced from the
+        // exact T(16) measurement, not a clamped-and-rescaled one.
+        let cfg = PlatformConfig::case_study();
+        let mut model = ServiceModel::new(16);
+        let shape = GemmShape::new(24, 64, 24);
+        let kind = RequestKind { label: "t".into(), stream: vec![(shape, 16)] };
+        model.measure(&cfg, 2, true, std::slice::from_ref(&kind)).unwrap();
+        let got = model.stream_cycles(&kind.stream).unwrap();
+        let exact = Coordinator::new(cfg.clone())
+            .run_one(&JobRequest::timing(shape, Mechanisms::ALL, 16))
+            .unwrap()
+            .metrics
+            .total_cycles;
+        assert_eq!(got, exact, "16 repeats measured exactly, no 12-clamp");
+    }
+
+    #[test]
+    fn zero_count_items_cost_nothing() {
+        let model = ServiceModel::new(4);
+        assert_eq!(model.shape_cycles(GemmShape::new(8, 8, 8), 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn unmeasured_shape_is_an_error_not_a_panic() {
+        let model = ServiceModel::new(4);
+        let err = model.shape_cycles(GemmShape::new(8, 8, 8), 2).unwrap_err();
+        assert!(err.contains("not measured"), "{err}");
+    }
+
+    #[test]
+    fn cap_is_at_least_two() {
+        assert_eq!(ServiceModel::new(0).cap(), 2);
+        assert_eq!(ServiceModel::new(1).cap(), 2);
+        assert_eq!(ServiceModel::new(16).cap(), 16);
+    }
+
+    #[test]
+    fn extrapolation_uses_marginal_cost() {
+        // Synthetic affine cache: T(1) = 100, T(4) = 250 -> marginal 50.
+        let mut model = ServiceModel::new(4);
+        let shape = GemmShape::new(8, 8, 8);
+        model.cache.insert(key(shape, 1), 100);
+        model.cache.insert(key(shape, 4), 250);
+        // T(10) = 250 + 6 * 50 = 550 — NOT 10 * (250/4) = 625, which is
+        // what clamp-and-rescale would report
+        assert_eq!(model.shape_cycles(shape, 10).unwrap(), 550);
+    }
+}

@@ -1,0 +1,155 @@
+//! Serving request kinds: what one request *is*.
+//!
+//! A request kind is a named GeMM stream (shape + repeat count pairs,
+//! the `ModelWorkload::unique_shapes` form). The BERT kinds model one
+//! encoder layer at a given sequence length — the request unit the old
+//! `bert_serving` example used — while the CNN kind is the full
+//! ResNet-18 stream, so a mixed workload exercises both short
+//! transformer requests and long convolutional ones. Request kinds are
+//! sampled uniformly per request from the seeded RNG stream.
+
+use crate::compiler::GemmShape;
+use crate::util::json::Json;
+use crate::workloads::{encoder_layer, resnet18};
+
+/// One request class: a label plus the GeMM stream a request of this
+/// class pushes through the device.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestKind {
+    pub label: String,
+    /// `(shape, count)` pairs: the stream executes each shape `count`
+    /// times (attention heads, repeated layers, channel groups).
+    pub stream: Vec<(GemmShape, u64)>,
+}
+
+/// Which request mix the harness serves.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadSpec {
+    /// BERT-Base encoder layers (hidden 768, 12 heads); one request =
+    /// one layer at a sequence length sampled from `seq_choices`.
+    BertBase { seq_choices: Vec<usize> },
+    /// BERT-Large encoder layers (hidden 1024, 16 heads) — the
+    /// >12-head case the old example's repeat clamp mismeasured.
+    BertLarge { seq_choices: Vec<usize> },
+    /// One request = the full ResNet-18 GeMM stream (batch 1).
+    Resnet18,
+    /// Union of the BERT-Base kinds and the ResNet-18 stream.
+    Mixed { seq_choices: Vec<usize> },
+}
+
+impl WorkloadSpec {
+    /// The sequence lengths a BERT serving queue mixes by default.
+    pub const DEFAULT_SEQS: [usize; 5] = [64, 128, 256, 384, 512];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            WorkloadSpec::BertBase { .. } => "bert",
+            WorkloadSpec::BertLarge { .. } => "bert-large",
+            WorkloadSpec::Resnet18 => "resnet18",
+            WorkloadSpec::Mixed { .. } => "mixed",
+        }
+    }
+
+    /// CLI name -> spec, with the BERT kinds drawing from `seqs`.
+    pub fn from_name(name: &str, seqs: &[usize]) -> Option<WorkloadSpec> {
+        let seq_choices = seqs.to_vec();
+        match name {
+            "bert" | "bert-base" => Some(WorkloadSpec::BertBase { seq_choices }),
+            "bert-large" => Some(WorkloadSpec::BertLarge { seq_choices }),
+            "resnet18" | "resnet" => Some(WorkloadSpec::Resnet18),
+            "mixed" => Some(WorkloadSpec::Mixed { seq_choices }),
+            _ => None,
+        }
+    }
+
+    fn seq_choices(&self) -> &[usize] {
+        match self {
+            WorkloadSpec::BertBase { seq_choices }
+            | WorkloadSpec::BertLarge { seq_choices }
+            | WorkloadSpec::Mixed { seq_choices } => seq_choices,
+            WorkloadSpec::Resnet18 => &[],
+        }
+    }
+
+    /// Elaborate the request kinds this workload samples from.
+    pub fn kinds(&self) -> Vec<RequestKind> {
+        let bert = |family: &str, d: usize, h: u64, ffn: usize, seqs: &[usize]| {
+            seqs.iter()
+                .map(|&seq| RequestKind {
+                    label: format!("{family}-layer/seq{seq}"),
+                    stream: encoder_layer(family, seq, d, h, ffn).unique_shapes(),
+                })
+                .collect::<Vec<_>>()
+        };
+        let resnet = || RequestKind {
+            label: "resnet18".to_string(),
+            stream: resnet18().unique_shapes(),
+        };
+        match self {
+            WorkloadSpec::BertBase { seq_choices } => {
+                bert("bert-base", 768, 12, 3072, seq_choices)
+            }
+            WorkloadSpec::BertLarge { seq_choices } => {
+                bert("bert-large", 1024, 16, 4096, seq_choices)
+            }
+            WorkloadSpec::Resnet18 => vec![resnet()],
+            WorkloadSpec::Mixed { seq_choices } => {
+                let mut kinds = bert("bert-base", 768, 12, 3072, seq_choices);
+                kinds.push(resnet());
+                kinds
+            }
+        }
+    }
+
+    /// Wire encoding (serving report header).
+    pub fn to_json(&self) -> Json {
+        let seqs: Vec<Json> = self.seq_choices().iter().map(|&s| Json::num(s as f64)).collect();
+        Json::obj(vec![("name", Json::str(self.label())), ("seq_choices", Json::Arr(seqs))])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bert_kinds_one_per_seq() {
+        let spec = WorkloadSpec::BertBase { seq_choices: vec![64, 128] };
+        let kinds = spec.kinds();
+        assert_eq!(kinds.len(), 2);
+        assert!(kinds[0].label.contains("seq64"));
+        assert!(!kinds[0].stream.is_empty());
+    }
+
+    #[test]
+    fn bert_large_kind_carries_sixteen_heads() {
+        let spec = WorkloadSpec::BertLarge { seq_choices: vec![128] };
+        let kinds = spec.kinds();
+        // attention scores shape (seq, dh, seq) = (128, 64, 128) must
+        // repeat once per head — 16 for BERT-Large, unclamped
+        let (_, count) = kinds[0]
+            .stream
+            .iter()
+            .find(|(s, _)| *s == GemmShape::new(128, 64, 128))
+            .copied()
+            .expect("scores shape present");
+        assert_eq!(count, 16, "one scores GeMM per head");
+    }
+
+    #[test]
+    fn mixed_adds_resnet() {
+        let spec = WorkloadSpec::Mixed { seq_choices: vec![64] };
+        let kinds = spec.kinds();
+        assert_eq!(kinds.len(), 2);
+        assert_eq!(kinds[1].label, "resnet18");
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for name in ["bert", "bert-large", "resnet18", "mixed"] {
+            let spec = WorkloadSpec::from_name(name, &[64]).unwrap();
+            assert!(!spec.kinds().is_empty(), "{name}");
+        }
+        assert!(WorkloadSpec::from_name("gpt", &[64]).is_none());
+    }
+}

@@ -1,6 +1,14 @@
 //! Summary statistics for experiment reporting: the paper's Fig. 5 is a
 //! box plot over 500 utilization samples, so we need exact quantiles,
-//! whiskers and outlier fences.
+//! whiskers and outlier fences; the serving harness adds tail-latency
+//! percentiles (p90/p95/p99) over per-request latency samples.
+//!
+//! Every function here is **total**: empty (or otherwise degenerate)
+//! inputs return `None` instead of panicking. A serving window with no
+//! completed requests is a legitimate, reachable state — it must
+//! produce an empty report, not a crash in a reporting thread.
+
+use crate::util::json::Json;
 
 /// Five-number summary plus mean, matching a Tukey box plot.
 #[derive(Debug, Clone, PartialEq)]
@@ -19,28 +27,42 @@ pub struct BoxStats {
 }
 
 /// Linear-interpolated quantile (type 7, the numpy default) of a sorted
-/// slice.
-pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
-    assert!(!sorted.is_empty(), "quantile of empty slice");
-    assert!((0.0..=1.0).contains(&q), "q out of range: {q}");
+/// slice. `None` on an empty slice or `q` outside `[0, 1]`.
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> Option<f64> {
+    if sorted.is_empty() || !(0.0..=1.0).contains(&q) {
+        return None;
+    }
     if sorted.len() == 1 {
-        return sorted[0];
+        return Some(sorted[0]);
     }
     let pos = q * (sorted.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
     let frac = pos - lo as f64;
-    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+    Some(sorted[lo] + (sorted[hi] - sorted[lo]) * frac)
+}
+
+/// Sort a sample set for quantile extraction. `None` if any sample is
+/// NaN (a NaN would poison every order statistic downstream).
+fn sorted_finite(samples: &[f64]) -> Option<Vec<f64>> {
+    if samples.iter().any(|v| v.is_nan()) {
+        return None;
+    }
+    let mut sorted: Vec<f64> = samples.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    Some(sorted)
 }
 
 impl BoxStats {
-    pub fn compute(samples: &[f64]) -> BoxStats {
-        assert!(!samples.is_empty(), "BoxStats of empty sample set");
-        let mut sorted: Vec<f64> = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
-        let q1 = quantile_sorted(&sorted, 0.25);
-        let median = quantile_sorted(&sorted, 0.5);
-        let q3 = quantile_sorted(&sorted, 0.75);
+    /// `None` on an empty sample set or any NaN sample.
+    pub fn compute(samples: &[f64]) -> Option<BoxStats> {
+        let sorted = sorted_finite(samples)?;
+        if sorted.is_empty() {
+            return None;
+        }
+        let q1 = quantile_sorted(&sorted, 0.25)?;
+        let median = quantile_sorted(&sorted, 0.5)?;
+        let q3 = quantile_sorted(&sorted, 0.75)?;
         let iqr = q3 - q1;
         let lo_fence = q1 - 1.5 * iqr;
         let hi_fence = q3 + 1.5 * iqr;
@@ -59,7 +81,7 @@ impl BoxStats {
             .iter()
             .filter(|&&v| v < lo_fence || v > hi_fence)
             .count();
-        BoxStats {
+        Some(BoxStats {
             n: sorted.len(),
             min: sorted[0],
             q1,
@@ -70,27 +92,82 @@ impl BoxStats {
             whisker_lo,
             whisker_hi,
             outliers,
-        }
+        })
     }
 }
 
-/// Mean of a slice.
-pub fn mean(xs: &[f64]) -> f64 {
-    assert!(!xs.is_empty());
-    xs.iter().sum::<f64>() / xs.len() as f64
+/// Tail-latency summary: the percentiles a serving report quotes. The
+/// quantile definition matches [`quantile_sorted`] (type 7), so p50
+/// here equals the [`BoxStats`] median on the same samples.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TailSummary {
+    pub n: usize,
+    pub min: f64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
 }
 
-/// Population standard deviation.
-pub fn stddev(xs: &[f64]) -> f64 {
-    let m = mean(xs);
-    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+impl TailSummary {
+    /// `None` on an empty sample set or any NaN sample.
+    pub fn compute(samples: &[f64]) -> Option<TailSummary> {
+        let sorted = sorted_finite(samples)?;
+        if sorted.is_empty() {
+            return None;
+        }
+        Some(TailSummary {
+            n: sorted.len(),
+            min: sorted[0],
+            mean: sorted.iter().sum::<f64>() / sorted.len() as f64,
+            p50: quantile_sorted(&sorted, 0.50)?,
+            p90: quantile_sorted(&sorted, 0.90)?,
+            p95: quantile_sorted(&sorted, 0.95)?,
+            p99: quantile_sorted(&sorted, 0.99)?,
+            max: *sorted.last().unwrap(),
+        })
+    }
+
+    /// Wire encoding (serving reports). The `f64` percentiles round-trip
+    /// bit-identically through `util::json`'s shortest-Display writer,
+    /// which is what makes same-seed serve reports byte-identical.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::num(self.n as f64)),
+            ("min", Json::num(self.min)),
+            ("mean", Json::num(self.mean)),
+            ("p50", Json::num(self.p50)),
+            ("p90", Json::num(self.p90)),
+            ("p95", Json::num(self.p95)),
+            ("p99", Json::num(self.p99)),
+            ("max", Json::num(self.max)),
+        ])
+    }
+}
+
+/// Mean of a slice. `None` on empty input.
+pub fn mean(xs: &[f64]) -> Option<f64> {
+    if xs.is_empty() {
+        return None;
+    }
+    Some(xs.iter().sum::<f64>() / xs.len() as f64)
+}
+
+/// Population standard deviation. `None` on empty input.
+pub fn stddev(xs: &[f64]) -> Option<f64> {
+    let m = mean(xs)?;
+    Some((xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt())
 }
 
 /// Geometric mean (used for speedup aggregation across workloads).
-pub fn geomean(xs: &[f64]) -> f64 {
-    assert!(!xs.is_empty());
-    assert!(xs.iter().all(|&x| x > 0.0), "geomean needs positive values");
-    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+/// `None` on empty input or any non-positive value.
+pub fn geomean(xs: &[f64]) -> Option<f64> {
+    if xs.is_empty() || xs.iter().any(|&x| x.is_nan() || x <= 0.0) {
+        return None;
+    }
+    Some((xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp())
 }
 
 #[cfg(test)]
@@ -100,22 +177,30 @@ mod tests {
     #[test]
     fn quantiles_of_known_sequence() {
         let xs: Vec<f64> = (1..=5).map(|i| i as f64).collect();
-        assert_eq!(quantile_sorted(&xs, 0.0), 1.0);
-        assert_eq!(quantile_sorted(&xs, 0.5), 3.0);
-        assert_eq!(quantile_sorted(&xs, 1.0), 5.0);
-        assert_eq!(quantile_sorted(&xs, 0.25), 2.0);
+        assert_eq!(quantile_sorted(&xs, 0.0), Some(1.0));
+        assert_eq!(quantile_sorted(&xs, 0.5), Some(3.0));
+        assert_eq!(quantile_sorted(&xs, 1.0), Some(5.0));
+        assert_eq!(quantile_sorted(&xs, 0.25), Some(2.0));
     }
 
     #[test]
     fn quantile_interpolates() {
         let xs = [0.0, 10.0];
-        assert!((quantile_sorted(&xs, 0.3) - 3.0).abs() < 1e-12);
+        assert!((quantile_sorted(&xs, 0.3).unwrap() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_is_total() {
+        assert_eq!(quantile_sorted(&[], 0.5), None);
+        assert_eq!(quantile_sorted(&[1.0], 1.5), None);
+        assert_eq!(quantile_sorted(&[1.0], -0.1), None);
+        assert_eq!(quantile_sorted(&[7.0], 0.99), Some(7.0), "single sample");
     }
 
     #[test]
     fn box_stats_basic() {
         let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
-        let s = BoxStats::compute(&xs);
+        let s = BoxStats::compute(&xs).unwrap();
         assert_eq!(s.n, 100);
         assert_eq!(s.min, 0.0);
         assert_eq!(s.max, 99.0);
@@ -127,33 +212,82 @@ mod tests {
     fn box_stats_detects_outliers() {
         let mut xs: Vec<f64> = vec![10.0; 50];
         xs.push(1000.0);
-        let s = BoxStats::compute(&xs);
+        let s = BoxStats::compute(&xs).unwrap();
         assert_eq!(s.outliers, 1);
         assert_eq!(s.whisker_hi, 10.0);
     }
 
     #[test]
     fn geomean_of_powers() {
-        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
-        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+        assert!((geomean(&[1.0, 4.0]).unwrap() - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 8.0]).unwrap() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_is_total() {
+        assert_eq!(geomean(&[]), None);
+        assert_eq!(geomean(&[1.0, 0.0]), None);
+        assert_eq!(geomean(&[1.0, -2.0]), None);
     }
 
     #[test]
     fn stddev_constant_is_zero() {
-        assert_eq!(stddev(&[5.0, 5.0, 5.0]), 0.0);
+        assert_eq!(stddev(&[5.0, 5.0, 5.0]), Some(0.0));
     }
 
     #[test]
-    #[should_panic]
-    fn empty_samples_panic() {
-        BoxStats::compute(&[]);
+    fn empty_inputs_return_none_not_panic() {
+        assert_eq!(BoxStats::compute(&[]), None);
+        assert_eq!(TailSummary::compute(&[]), None);
+        assert_eq!(mean(&[]), None);
+        assert_eq!(stddev(&[]), None);
+    }
+
+    #[test]
+    fn nan_samples_return_none() {
+        assert_eq!(BoxStats::compute(&[1.0, f64::NAN]), None);
+        assert_eq!(TailSummary::compute(&[f64::NAN]), None);
     }
 
     #[test]
     fn single_sample() {
-        let s = BoxStats::compute(&[3.5]);
+        let s = BoxStats::compute(&[3.5]).unwrap();
         assert_eq!(s.median, 3.5);
         assert_eq!(s.q1, 3.5);
         assert_eq!(s.q3, 3.5);
+        let t = TailSummary::compute(&[3.5]).unwrap();
+        assert_eq!((t.p50, t.p90, t.p95, t.p99), (3.5, 3.5, 3.5, 3.5));
+        assert_eq!((t.min, t.max, t.mean, t.n), (3.5, 3.5, 3.5, 1));
+    }
+
+    #[test]
+    fn tail_percentiles_of_known_sequence() {
+        // 1..=100: type-7 pK = 1 + 0.K * 99
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let t = TailSummary::compute(&xs).unwrap();
+        assert!((t.p50 - 50.5).abs() < 1e-12);
+        assert!((t.p90 - 90.1).abs() < 1e-9);
+        assert!((t.p95 - 95.05).abs() < 1e-9);
+        assert!((t.p99 - 99.01).abs() < 1e-9);
+        assert_eq!(t.max, 100.0);
+        assert_eq!(t.min, 1.0);
+        assert!((t.mean - 50.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tail_p50_matches_box_median() {
+        let xs: Vec<f64> = (0..37).map(|i| (i * 7 % 23) as f64).collect();
+        let t = TailSummary::compute(&xs).unwrap();
+        let b = BoxStats::compute(&xs).unwrap();
+        assert_eq!(t.p50, b.median);
+        assert_eq!((t.min, t.max), (b.min, b.max));
+    }
+
+    #[test]
+    fn tail_summary_json_is_stable() {
+        let t = TailSummary::compute(&[1.0, 2.0, 4.0]).unwrap();
+        let text = t.to_json().pretty();
+        assert_eq!(crate::util::json::parse(&text).unwrap().pretty(), text);
+        assert!(text.contains("\"p99\""));
     }
 }

@@ -10,7 +10,9 @@
 pub mod models;
 pub mod random;
 
-pub use models::{bert_base, mobilenet_v2, mobilenet_v2_host_dw, resnet18, vit_b16};
+pub use models::{
+    bert_base, bert_large, encoder_layer, mobilenet_v2, mobilenet_v2_host_dw, resnet18, vit_b16,
+};
 pub use random::random_suite;
 
 use crate::compiler::GemmShape;

@@ -142,18 +142,54 @@ pub fn vit_b16() -> ModelWorkload {
     ModelWorkload { name: "ViT-B-16".into(), items }
 }
 
+/// The GeMM stream of ONE transformer encoder layer at sequence length
+/// `seq`: hidden size `d`, `h` attention heads (head dim `d / h`), FFN
+/// inner dim `ffn`. The serving harness uses this as its BERT request
+/// unit; the full BERT models below are stacked copies of it. The
+/// per-head attention GeMMs carry their true `h` repeat count — a
+/// 16-head model really repeats them 16 times (no clamping; the old
+/// `bert_serving` example clamped at 12 and silently mismeasured
+/// BERT-Large).
+pub fn encoder_layer(name: &str, seq: usize, d: usize, h: u64, ffn: usize) -> ModelWorkload {
+    let dh = d / h as usize;
+    let items = vec![
+        gemm_item("attn.qkv", seq, d, 3 * d, 1),
+        gemm_item("attn.scores", seq, dh, seq, h),
+        gemm_item("attn.context", seq, seq, dh, h),
+        gemm_item("attn.proj", seq, d, d, 1),
+        gemm_item("ffn.fc1", seq, d, ffn, 1),
+        gemm_item("ffn.fc2", seq, ffn, d, 1),
+    ];
+    ModelWorkload { name: name.to_string(), items }
+}
+
+/// Stack one encoder layer `layers` times (identical layers fold into
+/// repeat counts, preserving `unique_shapes` semantics).
+fn stacked(name: &str, layer: ModelWorkload, layers: u64) -> ModelWorkload {
+    ModelWorkload {
+        name: name.to_string(),
+        items: layer
+            .items
+            .into_iter()
+            .map(|mut item| {
+                item.count *= layers;
+                item
+            })
+            .collect(),
+    }
+}
+
 /// BERT-Base (sequence length `seq`, batch 1): hidden 768, 12 layers,
 /// 12 heads, FFN 3072 [31].
 pub fn bert_base(seq: usize) -> ModelWorkload {
-    let mut items = Vec::new();
-    let (d, h, dh, ffn, layers) = (768usize, 12u64, 64usize, 3072usize, 12u64);
-    items.push(gemm_item("attn.qkv", seq, d, 3 * d, layers));
-    items.push(gemm_item("attn.scores", seq, dh, seq, layers * h));
-    items.push(gemm_item("attn.context", seq, seq, dh, layers * h));
-    items.push(gemm_item("attn.proj", seq, d, d, layers));
-    items.push(gemm_item("ffn.fc1", seq, d, ffn, layers));
-    items.push(gemm_item("ffn.fc2", seq, ffn, d, layers));
-    ModelWorkload { name: "BERT-Base".into(), items }
+    stacked("BERT-Base", encoder_layer("BERT-Base layer", seq, 768, 12, 3072), 12)
+}
+
+/// BERT-Large (sequence length `seq`, batch 1): hidden 1024, 24 layers,
+/// 16 heads, FFN 4096 [31]. The 16-head attention is the case the old
+/// serving example's 12-repeat clamp silently mismeasured.
+pub fn bert_large(seq: usize) -> ModelWorkload {
+    stacked("BERT-Large", encoder_layer("BERT-Large layer", seq, 1024, 16, 4096), 24)
 }
 
 #[cfg(test)]
@@ -201,5 +237,29 @@ mod tests {
         let b128 = bert_base(128).total_macs();
         let b512 = bert_base(512).total_macs();
         assert!(b512 > 4 * b128, "attention is superlinear in seq");
+    }
+
+    #[test]
+    fn bert_base_is_twelve_stacked_layers() {
+        let layer = encoder_layer("l", 256, 768, 12, 3072);
+        let full = bert_base(256);
+        assert_eq!(layer.total_macs() * 12, full.total_macs());
+        let scores = full.items.iter().find(|i| i.name == "attn.scores").unwrap();
+        assert_eq!(scores.count, 12 * 12, "12 layers x 12 heads");
+        assert_eq!(scores.shape, GemmShape::new(256, 64, 256));
+    }
+
+    #[test]
+    fn bert_large_keeps_true_head_count() {
+        let full = bert_large(512);
+        let scores = full.items.iter().find(|i| i.name == "attn.scores").unwrap();
+        assert_eq!(scores.count, 24 * 16, "24 layers x 16 heads, unclamped");
+        assert_eq!(scores.shape, GemmShape::new(512, 64, 512), "head dim 1024/16");
+        let layer = encoder_layer("l", 512, 1024, 16, 4096);
+        let heads = layer.items.iter().find(|i| i.name == "attn.context").unwrap();
+        assert_eq!(heads.count, 16, "one encoder layer carries all 16 heads");
+        // ~170 GMACs at seq 512 (published model statistics ballpark)
+        let macs = full.total_macs() as f64;
+        assert!((1.4e11..2.0e11).contains(&macs), "BERT-Large(512) ~170 GMACs, got {macs:e}");
     }
 }

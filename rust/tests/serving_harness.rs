@@ -1,0 +1,213 @@
+//! Serving-harness integration tests: the three guarantees ISSUE 4
+//! pins down.
+//!
+//! 1. **Determinism**: the same `(config, options, seed)` produces a
+//!    byte-identical JSON report — the property the CI `serve-smoke`
+//!    lane re-checks across real process invocations.
+//! 2. **Closed-loop differential**: one client, zero think time,
+//!    immediate batching and no dispatch overhead degenerates to the
+//!    plain sequential loop — every request's latency equals its own
+//!    service time and the makespan is their sum.
+//! 3. **Honest amortization**: per-head repeat counts are simulated
+//!    exactly (BERT-Large's 16 heads — the case the old example's
+//!    12-repeat clamp silently mismeasured), and the beyond-cap
+//!    affine extrapolation tracks an exact simulation closely.
+
+use opengemm::compiler::GemmShape;
+use opengemm::config::{Mechanisms, PlatformConfig};
+use opengemm::coordinator::{Coordinator, JobRequest};
+use opengemm::serve::{
+    run_serve, ArrivalSpec, BatchPolicy, RequestKind, ServeOptions, ServiceModel, WorkloadSpec,
+};
+
+fn base_opts() -> ServeOptions {
+    ServeOptions {
+        workload: WorkloadSpec::BertBase { seq_choices: vec![64, 128] },
+        arrival: ArrivalSpec::OpenPoisson { rate_rps: 3000.0 },
+        requests: 16,
+        seed: 42,
+        workers: 2,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn same_seed_is_byte_identical() {
+    let cfg = PlatformConfig::case_study();
+    let opts = base_opts();
+    let a = run_serve(&cfg, &opts).unwrap().to_json().pretty();
+    let b = run_serve(&cfg, &opts).unwrap().to_json().pretty();
+    assert_eq!(a, b, "same seed must serialize byte-identically");
+    // and the report really carries the tail percentiles
+    for key in ["\"p50\"", "\"p95\"", "\"p99\"", "\"max\""] {
+        assert!(a.contains(key), "report missing {key}");
+    }
+    // a different seed must actually change the timeline
+    let reseeded = ServeOptions { seed: 43, ..opts };
+    let c = run_serve(&cfg, &reseeded).unwrap().to_json().pretty();
+    assert_ne!(a, c, "different seed, different schedule");
+}
+
+#[test]
+fn workers_do_not_change_the_report() {
+    // The measurement pool size is a throughput knob, not a semantic
+    // one: 1-worker and 4-worker runs must emit identical bytes.
+    let cfg = PlatformConfig::case_study();
+    let one = ServeOptions { requests: 8, workers: 1, ..base_opts() };
+    let four = ServeOptions { workers: 4, ..one.clone() };
+    let w1 = run_serve(&cfg, &one).unwrap();
+    let w4 = run_serve(&cfg, &four).unwrap();
+    assert_eq!(w1.to_json().pretty(), w4.to_json().pretty());
+}
+
+#[test]
+fn closed_loop_degenerates_to_sequential() {
+    let cfg = PlatformConfig::case_study();
+    let opts = ServeOptions {
+        workload: WorkloadSpec::BertBase { seq_choices: vec![64] },
+        arrival: ArrivalSpec::ClosedLoop { clients: 1, think_cycles: 0 },
+        batching: BatchPolicy::Immediate,
+        requests: 6,
+        seed: 9,
+        workers: 2,
+        dispatch_overhead_cycles: 0,
+        // at seq 64 the scores and context GeMMs fold onto one shape
+        // with 24 repeats; a cap above that keeps every point exact
+        repeat_cap: 32,
+        ..Default::default()
+    };
+    let report = run_serve(&cfg, &opts).unwrap();
+    assert_eq!(report.requests, 6);
+    assert_eq!(report.batches, 6, "immediate batching: one batch per request");
+
+    // single kind: its stream cost, measured independently by the
+    // plain sequential loop the harness replaced
+    let kinds = opts.workload.kinds();
+    let kind = &kinds[0];
+    let coord = Coordinator::new(cfg.clone()).with_workers(2);
+    let mut sequential_cycles = 0u64;
+    for &(shape, count) in &kind.stream {
+        let r = coord
+            .run_one(&JobRequest::timing(shape, Mechanisms::ALL, count as u32))
+            .unwrap();
+        sequential_cycles += r.metrics.total_cycles;
+    }
+    assert_eq!(report.kinds.len(), 1);
+    assert_eq!(
+        report.kinds[0].service_cycles, sequential_cycles,
+        "harness service time == plain sequential loop"
+    );
+    // back-to-back service: makespan = 6 sequential requests, and
+    // every request's latency is exactly one service time
+    assert_eq!(report.duration_cycles, 6 * sequential_cycles);
+    assert_eq!(report.device_busy_cycles, 6 * sequential_cycles);
+    let ms = sequential_cycles as f64 / (cfg.freq_mhz as f64 * 1e3);
+    let lat = report.latency_ms.as_ref().unwrap();
+    assert!((lat.p50 - ms).abs() < 1e-9, "p50 {} vs service {ms}", lat.p50);
+    assert!((lat.max - ms).abs() < 1e-9);
+    let queueing = report.queueing_ms.as_ref().unwrap();
+    assert_eq!(queueing.max, 0.0, "closed loop with 1 client never queues");
+}
+
+#[test]
+fn bert_large_heads_are_measured_unclamped() {
+    // BERT-Large: 16 attention heads. The old example simulated
+    // min(16, 12) repeats and rescaled; the harness must price the
+    // 16-repeat stream from an exact 16-repeat simulation.
+    let cfg = PlatformConfig::case_study();
+    let spec = WorkloadSpec::BertLarge { seq_choices: vec![128] };
+    let kinds = spec.kinds();
+    let kind = &kinds[0];
+    let heads = kind.stream.iter().find(|&&(_, c)| c == 16);
+    assert!(heads.is_some(), "per-head GeMMs carry count 16");
+
+    let mut model = ServiceModel::new(16);
+    model.measure(&cfg, 2, true, std::slice::from_ref(kind)).unwrap();
+    let got = model.stream_cycles(&kind.stream).unwrap();
+
+    let coord = Coordinator::new(cfg).with_workers(2);
+    let mut exact = 0u64;
+    for &(shape, count) in &kind.stream {
+        let r = coord
+            .run_one(&JobRequest::timing(shape, Mechanisms::ALL, count as u32))
+            .unwrap();
+        exact += r.metrics.total_cycles;
+    }
+    assert_eq!(got, exact, "16-head stream priced from exact 16-repeat runs");
+}
+
+#[test]
+fn beyond_cap_extrapolation_tracks_exact_simulation() {
+    // Cap the model at 4 repeats and price a 12-repeat stream; the
+    // marginal-cost extrapolation must track the exact 12-repeat
+    // simulation closely (config pre-loading makes repeat cost affine
+    // in steady state).
+    let cfg = PlatformConfig::case_study();
+    let shape = GemmShape::new(64, 96, 64);
+    let kind = RequestKind { label: "t".into(), stream: vec![(shape, 12)] };
+    let mut model = ServiceModel::new(4);
+    model.measure(&cfg, 2, true, std::slice::from_ref(&kind)).unwrap();
+    let extrapolated = model.stream_cycles(&kind.stream).unwrap();
+
+    let exact = Coordinator::new(cfg)
+        .run_one(&JobRequest::timing(shape, Mechanisms::ALL, 12))
+        .unwrap()
+        .metrics
+        .total_cycles;
+    let rel = (extrapolated as f64 - exact as f64).abs() / exact as f64;
+    assert!(
+        rel < 0.05,
+        "affine extrapolation {extrapolated} vs exact {exact} ({:.2}% off)",
+        rel * 100.0
+    );
+}
+
+#[test]
+fn batching_policies_reshape_the_timeline() {
+    let cfg = PlatformConfig::case_study();
+    let opts = ServeOptions {
+        requests: 10,
+        arrival: ArrivalSpec::OpenPoisson { rate_rps: 50_000.0 },
+        ..base_opts()
+    };
+    let immediate = run_serve(&cfg, &opts).unwrap();
+    assert_eq!(immediate.batches, 10);
+
+    let sized_opts = ServeOptions { batching: BatchPolicy::Size(4), ..opts.clone() };
+    let sized = run_serve(&cfg, &sized_opts).unwrap();
+    // 10 requests in batches of 4: 4 + 4 + flushed 2
+    assert_eq!(sized.batches, 3);
+    assert_eq!(sized.requests, 10, "flush serves the partial remainder");
+
+    let deadline_policy = BatchPolicy::Deadline { max_batch: 4, max_wait_cycles: 1 };
+    let deadline_opts = ServeOptions { batching: deadline_policy, ..opts };
+    let deadline = run_serve(&cfg, &deadline_opts).unwrap();
+    assert!(
+        deadline.batches >= 3,
+        "a 1-cycle deadline can only shrink batches: {}",
+        deadline.batches
+    );
+    assert_eq!(deadline.requests, 10);
+}
+
+#[test]
+fn overhead_amortization_favors_batching() {
+    // With a heavy per-batch dispatch cost, size-4 batching must beat
+    // immediate dispatch on makespan (that is the point of batching).
+    let cfg = PlatformConfig::case_study();
+    let opts = ServeOptions {
+        requests: 12,
+        arrival: ArrivalSpec::OpenPoisson { rate_rps: 100_000.0 },
+        dispatch_overhead_cycles: 100_000,
+        ..base_opts()
+    };
+    let immediate = run_serve(&cfg, &opts).unwrap();
+    let sized_opts = ServeOptions { batching: BatchPolicy::Size(4), ..opts };
+    let sized = run_serve(&cfg, &sized_opts).unwrap();
+    assert!(
+        sized.duration_cycles < immediate.duration_cycles,
+        "batched {} vs immediate {}",
+        sized.duration_cycles,
+        immediate.duration_cycles
+    );
+}
