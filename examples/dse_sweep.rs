@@ -35,9 +35,10 @@ fn instance(mu: usize, nu: usize, ku: usize) -> Option<PlatformConfig> {
 
 fn main() -> opengemm::util::error::Result<()> {
     let args = Args::from_env()?;
-    // every per-instance batch goes through the sharded sweep engine —
-    // the same code path the `opengemm sweep` driver distributes over
-    // worker processes
+    // every per-instance batch goes through the sharded sweep engine
+    // and its fault-tolerant dispatch scheduler — the same code path
+    // the `opengemm sweep` driver distributes over worker processes
+    // and spool-dir hosts
     let sweep_opts = SweepOptions {
         shards: args.usize_or("shards", 1)?,
         workers: args.usize_or("workers", 0)?,

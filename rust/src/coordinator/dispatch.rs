@@ -1,0 +1,1181 @@
+//! Fault-tolerant sweep dispatcher: drive a [`SweepPlan`] to completion
+//! over a pluggable [`Transport`], with bounded retry and straggler
+//! re-dispatch.
+//!
+//! The shard files from the sharded sweep engine are self-contained
+//! (config + options + jobs), so distributing a sweep across processes
+//! or hosts needs no new wire format — only transport and policy. This
+//! module supplies both:
+//!
+//! - **Transports** move one [`Shard`] to an executor and its
+//!   [`ShardResult`] back: [`InProcess`] (run on a local coordinator),
+//!   [`Subprocess`] (spawn a worker process of this binary — the old
+//!   `sweep --processes N` driver path), and [`SpoolDir`] (serialize
+//!   the shard into a watched directory and poll for the result file —
+//!   the cross-host primitive: any remote host running `opengemm sweep
+//!   --spool-serve DIR`, or plain `--shard FILE --out FILE`, against a
+//!   shared directory participates). [`FaultInjector`] wraps any
+//!   transport with deterministic transient failures for testing.
+//! - **Policy** ([`dispatch_plan`]) retries a failed shard up to
+//!   `max_retries` times (error provenance lands in the
+//!   [`DispatchReport`]), speculatively re-dispatches stragglers (a
+//!   shard exceeding `straggler_factor x` the median completed-shard
+//!   wall time gets a second in-flight copy; the first result wins and
+//!   duplicates are discarded by `shard_index`), and fails loudly with
+//!   the full per-attempt error chain once a shard exhausts its budget.
+//!
+//! ## Why retries and duplicates cannot change the answer
+//!
+//! Every shard is a deterministic function of its serialized bytes, so
+//! any two successful runs of the same shard return identical results;
+//! keeping the first and discarding duplicates is therefore a pure
+//! de-dup, not a choice of answer. The scheduler validates each result
+//! against the shard it dispatched (matching `shard_index` and index
+//! cover) before accepting it, and [`merge`] re-checks that accepted
+//! results form an exact cover of the submission order. The merged
+//! [`SweepResult`] is consequently byte-identical to the unsharded run
+//! regardless of retries, speculation, or arrival order — pinned by the
+//! `dispatch_fault_injection` integration tests and the CI
+//! `sched-smoke` lane.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::parse_workers_env;
+use crate::coordinator::shard::{
+    merge, resolve_worker_override, Shard, ShardResult, SweepPlan, SweepResult,
+};
+use crate::util::json::{self, Json};
+use crate::util::stats::quantile_sorted;
+
+/// Cooperative cancellation for in-flight dispatches. Set when the
+/// attempt's result can no longer matter (its shard already completed
+/// via another attempt, or the whole dispatch is over); transports that
+/// wait on external executors should poll it and bail out early.
+pub type CancelFlag = AtomicBool;
+
+/// Moves one shard to an executor and its result back.
+///
+/// `attempt` is 0-based and unique per shard within one dispatch, so
+/// file-based transports can name artifacts per attempt and a retry
+/// never reads a stale or half-written file from an earlier try.
+/// Implementations must be [`Sync`]: the scheduler calls `dispatch`
+/// from several threads at once.
+pub trait Transport: Sync {
+    fn dispatch(
+        &self,
+        shard: &Shard,
+        attempt: u32,
+        cancel: &CancelFlag,
+    ) -> Result<ShardResult, String>;
+
+    /// Short label for reports and error messages.
+    fn name(&self) -> &'static str;
+}
+
+impl<T: Transport + ?Sized> Transport for Box<T> {
+    fn dispatch(
+        &self,
+        shard: &Shard,
+        attempt: u32,
+        cancel: &CancelFlag,
+    ) -> Result<ShardResult, String> {
+        (**self).dispatch(shard, attempt, cancel)
+    }
+
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+}
+
+/// Run the shard on a coordinator inside this process.
+///
+/// Dispatch clones the shard: [`Shard::run`] consumes its input, but
+/// the scheduler must retain every shard until an attempt succeeds —
+/// the retry and straggler policies re-dispatch from the same shard.
+/// All experiment sweeps are timing-only (no inline operands), so the
+/// clone is a few hundred shapes, not operand payloads.
+pub struct InProcess;
+
+impl Transport for InProcess {
+    fn dispatch(
+        &self,
+        shard: &Shard,
+        _attempt: u32,
+        _cancel: &CancelFlag,
+    ) -> Result<ShardResult, String> {
+        Ok(shard.clone().run())
+    }
+
+    fn name(&self) -> &'static str {
+        "in-process"
+    }
+}
+
+/// Spawn a worker process of this binary per shard (`opengemm sweep
+/// --shard FILE --out FILE`) — the multi-process driver path.
+pub struct Subprocess {
+    exe: PathBuf,
+    dir: PathBuf,
+    /// File-name prefix, so several dispatches can share one directory.
+    prefix: String,
+    /// Leave shard/result files behind (the hand-a-shard-to-another-host
+    /// workflow needs them to survive the run).
+    keep_files: bool,
+    /// The driver's own `--workers` flag, forwarded to every child so
+    /// the documented precedence (CLI > `OPENGEMM_WORKERS` > shard
+    /// file) holds on the children too — driver and children share one
+    /// host, so the operator's explicit flag must beat the inherited
+    /// env variable.
+    cli_workers: Option<usize>,
+}
+
+impl Subprocess {
+    pub fn new(
+        dir: &Path,
+        prefix: &str,
+        keep_files: bool,
+        cli_workers: Option<usize>,
+    ) -> Result<Subprocess, String> {
+        let exe = std::env::current_exe()
+            .map_err(|e| format!("subprocess transport: current_exe: {e}"))?;
+        std::fs::create_dir_all(dir)
+            .map_err(|e| format!("subprocess transport: create {}: {e}", dir.display()))?;
+        Ok(Subprocess {
+            exe,
+            dir: dir.to_path_buf(),
+            prefix: prefix.to_string(),
+            keep_files,
+            cli_workers,
+        })
+    }
+}
+
+impl Transport for Subprocess {
+    fn dispatch(
+        &self,
+        shard: &Shard,
+        attempt: u32,
+        cancel: &CancelFlag,
+    ) -> Result<ShardResult, String> {
+        let stem = format!("{}s{}_a{}", self.prefix, shard.shard_index, attempt);
+        let shard_path = self.dir.join(format!("{stem}.shard.json"));
+        let result_path = self.dir.join(format!("{stem}.result.json"));
+        shard.write_file(&shard_path)?;
+        let mut command = Command::new(&self.exe);
+        command
+            .arg("sweep")
+            .arg("--shard")
+            .arg(&shard_path)
+            .arg("--out")
+            .arg(&result_path)
+            .stdin(Stdio::null())
+            .stdout(Stdio::null());
+        if let Some(workers) = self.cli_workers {
+            command.arg("--workers").arg(workers.to_string());
+        }
+        let mut child =
+            command.spawn().map_err(|e| format!("spawn worker for {stem}: {e}"))?;
+        // Poll rather than block in `wait`, so a cancelled duplicate
+        // releases its slot (and its child) promptly.
+        let status = loop {
+            match child.try_wait() {
+                Ok(Some(status)) => break status,
+                Ok(None) => {
+                    if cancel.load(Ordering::Relaxed) {
+                        let _ = child.kill();
+                        let _ = child.wait();
+                        return Err(format!("worker for {stem} cancelled"));
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => return Err(format!("wait on worker for {stem}: {e}")),
+            }
+        };
+        let outcome = if status.success() {
+            ShardResult::read_file(&result_path)
+        } else {
+            Err(format!("worker for {stem} failed with {status}"))
+        };
+        if !self.keep_files {
+            let _ = std::fs::remove_file(&shard_path);
+            let _ = std::fs::remove_file(&result_path);
+        }
+        outcome
+    }
+
+    fn name(&self) -> &'static str {
+        "subprocess"
+    }
+}
+
+/// Serialize the shard into a watched directory and poll for its result
+/// file — the cross-host primitive. Any executor that can see the
+/// directory (a shared filesystem, or an object store mounted/synced to
+/// one) participates by running `opengemm sweep --spool-serve DIR`, or
+/// by hand: `opengemm sweep --shard X.shard.json --out X.result.json`.
+///
+/// Protocol (all writes are temp-file + rename, so readers never see a
+/// partial file):
+/// - driver publishes `{stem}.shard.json`;
+/// - an executor claims it by renaming to `{stem}.shard.json.claimed`
+///   (atomic: exactly one claimant wins), runs it, publishes
+///   `{stem}.result.json`;
+/// - the driver polls for the result until `timeout`, then retracts the
+///   offer and reports a transport failure (which the retry/straggler
+///   policy may re-dispatch under a fresh attempt number).
+///
+/// Execution is at-least-once by design: if a timeout or cancellation
+/// races an executor that already claimed the offer, the executor
+/// still finishes and publishes a result nobody reads. Duplicated
+/// work is bounded by the retry budget, correctness is unaffected
+/// (results are deterministic and keyed by unique stems), but a
+/// long-lived spool directory accumulates orphan `*.result.json`
+/// files — operators should sweep old files periodically.
+pub struct SpoolDir {
+    dir: PathBuf,
+    prefix: String,
+    /// Unique per `SpoolDir` instance, embedded in every stem: a
+    /// persistent spool directory (the recommended cross-host setup)
+    /// may hold result files from earlier sweeps with the same variant
+    /// / shard / attempt numbering, and reading one of those as this
+    /// run's answer would merge stale data without any error.
+    run_token: String,
+    poll: Duration,
+    timeout: Duration,
+}
+
+/// Distinguishes `SpoolDir` instances created by the same process.
+static SPOOL_RUN_COUNTER: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+impl SpoolDir {
+    pub fn new(
+        dir: &Path,
+        prefix: &str,
+        poll: Duration,
+        timeout: Duration,
+    ) -> Result<SpoolDir, String> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| format!("spool transport: create {}: {e}", dir.display()))?;
+        // pid + boot-time nanos + counter: unique across runs AND
+        // across driver hosts sharing one spool directory (pids alone
+        // can collide between machines)
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos())
+            .unwrap_or(0);
+        let run_token = format!(
+            "r{}x{:x}x{}",
+            std::process::id(),
+            nanos,
+            SPOOL_RUN_COUNTER.fetch_add(1, Ordering::Relaxed)
+        );
+        Ok(SpoolDir {
+            dir: dir.to_path_buf(),
+            prefix: prefix.to_string(),
+            run_token,
+            poll: poll.max(Duration::from_millis(1)),
+            timeout,
+        })
+    }
+}
+
+impl Transport for SpoolDir {
+    fn dispatch(
+        &self,
+        shard: &Shard,
+        attempt: u32,
+        cancel: &CancelFlag,
+    ) -> Result<ShardResult, String> {
+        let stem =
+            format!("{}{}_s{}_a{}", self.prefix, self.run_token, shard.shard_index, attempt);
+        let shard_path = self.dir.join(format!("{stem}.shard.json"));
+        let result_path = self.dir.join(format!("{stem}.result.json"));
+        write_atomically(&shard_path, &shard.to_json().pretty())?;
+        let deadline = Instant::now() + self.timeout;
+        loop {
+            if result_path.exists() {
+                // the executor also publishes via rename, so an
+                // existing file is complete
+                return ShardResult::read_file(&result_path);
+            }
+            if cancel.load(Ordering::Relaxed) {
+                let _ = std::fs::remove_file(&shard_path);
+                return Err(format!("spool offer {stem} cancelled"));
+            }
+            if Instant::now() >= deadline {
+                // retract the offer so a dead executor's backlog does
+                // not pile up; a claimed shard is already renamed away
+                let _ = std::fs::remove_file(&shard_path);
+                return Err(format!(
+                    "spool result {} not produced within {:?} (is a worker \
+                     watching the spool directory?)",
+                    result_path.display(),
+                    self.timeout
+                ));
+            }
+            std::thread::sleep(self.poll);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "spool"
+    }
+}
+
+/// Write `text` to `path` via a temp file + rename, so concurrent
+/// readers (spool executors, the dispatch driver) never observe a
+/// partially-written JSON document.
+pub fn write_atomically(path: &Path, text: &str) -> Result<(), String> {
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, text).map_err(|e| format!("write {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| format!("rename {} -> {}: {e}", tmp.display(), path.display()))
+}
+
+/// Options for a spool-directory executor loop.
+#[derive(Debug, Clone)]
+pub struct SpoolWorkerOptions {
+    /// Directory scan period.
+    pub poll: Duration,
+    /// Stop after serving this many shards (0 = run until `stop` is
+    /// set or the process is killed).
+    pub max_shards: usize,
+    /// Worker-pool override from this host's command line (`None` =
+    /// flag absent); combined with `OPENGEMM_WORKERS` and the
+    /// shard-embedded value per [`resolve_worker_override`].
+    pub cli_workers: Option<usize>,
+}
+
+impl Default for SpoolWorkerOptions {
+    fn default() -> Self {
+        SpoolWorkerOptions { poll: Duration::from_millis(25), max_shards: 0, cli_workers: None }
+    }
+}
+
+/// Serve shards out of a spool directory until `stop` is set (or
+/// `max_shards` are done): claim each `*.shard.json` by renaming it,
+/// run it on a local coordinator, and publish the result file
+/// atomically. Returns the number of shards served.
+///
+/// This is the executor side of the [`SpoolDir`] transport; `opengemm
+/// sweep --spool-serve DIR` is a thin wrapper around it, and any number
+/// of hosts may run it against the same directory (the claim rename
+/// keeps them from double-running a shard).
+pub fn spool_worker_loop(
+    dir: &Path,
+    opts: &SpoolWorkerOptions,
+    stop: &AtomicBool,
+) -> Result<usize, String> {
+    let env = std::env::var("OPENGEMM_WORKERS").ok();
+    // Fail fast on a misconfigured host BEFORE claiming anything: a
+    // per-shard failure here would strand an already-claimed offer
+    // until the driver's spool timeout expires.
+    parse_workers_env(env.as_deref())?;
+    let mut served = 0usize;
+    while !stop.load(Ordering::Relaxed) && (opts.max_shards == 0 || served < opts.max_shards) {
+        let mut claimed: Option<(String, PathBuf, PathBuf)> = None;
+        let entries = std::fs::read_dir(dir)
+            .map_err(|e| format!("spool worker: read {}: {e}", dir.display()))?;
+        // Sibling paths are derived from the UTF-8 FILE NAME only (our
+        // stems are generated ASCII), never from a lossy conversion of
+        // the whole path: the spool DIRECTORY may contain non-UTF-8
+        // bytes (legal on POSIX) that a lossy round-trip would mangle
+        // into paths the driver never polls.
+        let mut offers: Vec<(String, PathBuf)> = entries
+            .filter_map(|e| e.ok())
+            .filter_map(|e| {
+                let name = e.file_name().into_string().ok()?;
+                name.ends_with(".shard.json").then(|| (name, e.path()))
+            })
+            .collect();
+        offers.sort(); // deterministic pickup order across scans
+        for (name, offer) in offers {
+            let claim = offer.with_file_name(format!("{name}.claimed"));
+            // atomic claim: exactly one worker wins the rename
+            if std::fs::rename(&offer, &claim).is_ok() {
+                claimed = Some((name, offer, claim));
+                break;
+            }
+        }
+        let Some((name, offer, claim)) = claimed else {
+            std::thread::sleep(opts.poll);
+            continue;
+        };
+        let mut shard = match Shard::read_file(&claim) {
+            Ok(shard) => shard,
+            Err(e) => {
+                // A corrupt or incompatible offer must not kill a
+                // long-lived executor that other drivers depend on:
+                // quarantine the file (evidence for the operator, and
+                // the rename stops rescan loops) and keep serving.
+                eprintln!("spool worker: rejecting {}: {e}", offer.display());
+                let rejected = offer.with_file_name(format!("{name}.rejected"));
+                let _ = std::fs::rename(&claim, rejected);
+                continue;
+            }
+        };
+        // a misconfigured host (bad OPENGEMM_WORKERS) is fatal on
+        // purpose: every shard it served would use the wrong pool
+        shard.options.workers = resolve_worker_override(
+            opts.cli_workers,
+            env.as_deref(),
+            shard.options.workers,
+        )?;
+        let result = shard.run();
+        // `X.shard.json` -> `X.result.json`
+        let stem = name.strip_suffix(".shard.json").expect("offer matched *.shard.json");
+        let result_path = offer.with_file_name(format!("{stem}.result.json"));
+        if let Err(e) = write_atomically(&result_path, &result.to_json().pretty()) {
+            // transient filesystem trouble: surrender the claim so the
+            // driver's retry can re-dispatch, and keep serving
+            eprintln!("spool worker: could not publish {}: {e}", result_path.display());
+            let _ = std::fs::remove_file(&claim);
+            continue;
+        }
+        let _ = std::fs::remove_file(&claim);
+        served += 1;
+    }
+    Ok(served)
+}
+
+/// Wrap a transport with deterministic transient failures: the first
+/// `fail_attempts` dispatches of each listed shard index return an
+/// error before reaching the inner transport. Used by the
+/// fault-injection tests and the `sweep --inject-fail` CLI knob the CI
+/// `sched-smoke` lane drives.
+pub struct FaultInjector<T> {
+    inner: T,
+    shard_indices: Vec<usize>,
+    fail_attempts: u32,
+    counts: Mutex<BTreeMap<usize, u32>>,
+}
+
+impl<T: Transport> FaultInjector<T> {
+    pub fn new(inner: T, shard_indices: Vec<usize>, fail_attempts: u32) -> FaultInjector<T> {
+        FaultInjector { inner, shard_indices, fail_attempts, counts: Mutex::new(BTreeMap::new()) }
+    }
+}
+
+impl<T: Transport> Transport for FaultInjector<T> {
+    fn dispatch(
+        &self,
+        shard: &Shard,
+        attempt: u32,
+        cancel: &CancelFlag,
+    ) -> Result<ShardResult, String> {
+        if self.shard_indices.contains(&shard.shard_index) {
+            let mut counts = self.counts.lock().unwrap();
+            let n = counts.entry(shard.shard_index).or_insert(0);
+            if *n < self.fail_attempts {
+                *n += 1;
+                return Err(format!(
+                    "injected transient fault (shard {}, injected failure {} of {})",
+                    shard.shard_index, *n, self.fail_attempts
+                ));
+            }
+        }
+        self.inner.dispatch(shard, attempt, cancel)
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+}
+
+/// Scheduler policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct DispatchOptions {
+    /// Extra dispatch attempts per shard after the first failure.
+    pub max_retries: u32,
+    /// Speculatively re-dispatch a shard once its in-flight time
+    /// exceeds this multiple of the median completed-shard wall time
+    /// (values <= 0 disable straggler re-dispatch).
+    pub straggler_factor: f64,
+    /// Concurrent dispatches (scheduler threads; for [`Subprocess`]
+    /// this is the worker-process cap). Clamped to >= 1.
+    pub concurrency: usize,
+    /// Straggler-check period while dispatches are in flight.
+    pub poll: Duration,
+}
+
+impl Default for DispatchOptions {
+    fn default() -> Self {
+        DispatchOptions {
+            max_retries: 1,
+            straggler_factor: 0.0,
+            concurrency: 1,
+            poll: Duration::from_millis(50),
+        }
+    }
+}
+
+impl DispatchOptions {
+    /// One shard at a time, no retries, no speculation — the in-process
+    /// experiment path, where a transport error is a bug rather than a
+    /// transient.
+    pub fn serial() -> DispatchOptions {
+        DispatchOptions { max_retries: 0, ..Default::default() }
+    }
+}
+
+/// Provenance of one dispatch attempt.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AttemptRecord {
+    pub shard_index: usize,
+    pub attempt: u32,
+    /// Launched by straggler re-dispatch rather than arrival/retry.
+    pub speculative: bool,
+    /// Wall time of the attempt (diagnostic; never part of merged
+    /// sweep output).
+    pub wall_ms: f64,
+    /// `None` = the attempt succeeded.
+    pub error: Option<String>,
+    /// The attempt succeeded, but another attempt of the same shard had
+    /// already won; its (identical) result was discarded.
+    pub discarded_duplicate: bool,
+}
+
+impl AttemptRecord {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shard_index", Json::num(self.shard_index as f64)),
+            ("attempt", Json::num(self.attempt as f64)),
+            ("speculative", Json::Bool(self.speculative)),
+            ("wall_ms", Json::num(self.wall_ms)),
+            (
+                "error",
+                match &self.error {
+                    Some(e) => Json::str(e.clone()),
+                    None => Json::Null,
+                },
+            ),
+            ("discarded_duplicate", Json::Bool(self.discarded_duplicate)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<AttemptRecord, String> {
+        Ok(AttemptRecord {
+            shard_index: json::get_usize(v, "shard_index")?,
+            attempt: json::get_u64(v, "attempt")? as u32,
+            speculative: json::get_bool(v, "speculative")?,
+            wall_ms: json::get_f64(v, "wall_ms")?,
+            error: json::get_opt_str(v, "error")?,
+            discarded_duplicate: json::get_bool(v, "discarded_duplicate")?,
+        })
+    }
+}
+
+/// What the scheduler did to complete one plan: every attempt with its
+/// outcome, plus summary counters. Diagnostics only — wall times and
+/// attempt ordering are nondeterministic, so this never feeds the
+/// merged sweep document (which stays byte-identical across runs).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct DispatchReport {
+    pub transport: String,
+    pub shards: usize,
+    /// Sorted by (shard_index, attempt).
+    pub attempts: Vec<AttemptRecord>,
+    pub retries: u64,
+    pub speculative_dispatches: u64,
+    pub duplicates_discarded: u64,
+}
+
+const DISPATCH_REPORT_FORMAT: &str = "opengemm-dispatch-report-v1";
+
+impl DispatchReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::str(DISPATCH_REPORT_FORMAT)),
+            ("transport", Json::str(self.transport.clone())),
+            ("shards", Json::num(self.shards as f64)),
+            ("attempts", Json::arr(self.attempts.iter().map(AttemptRecord::to_json).collect())),
+            ("retries", Json::num(self.retries as f64)),
+            ("speculative_dispatches", Json::num(self.speculative_dispatches as f64)),
+            ("duplicates_discarded", Json::num(self.duplicates_discarded as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<DispatchReport, String> {
+        let format = json::get_str(v, "format")?;
+        if format != DISPATCH_REPORT_FORMAT {
+            return Err(format!(
+                "not a dispatch report: format {format:?}, want {DISPATCH_REPORT_FORMAT:?}"
+            ));
+        }
+        Ok(DispatchReport {
+            transport: json::get_str(v, "transport")?.to_string(),
+            shards: json::get_usize(v, "shards")?,
+            attempts: json::get_arr(v, "attempts")?
+                .iter()
+                .map(AttemptRecord::from_json)
+                .collect::<Result<_, _>>()?,
+            retries: json::get_u64(v, "retries")?,
+            speculative_dispatches: json::get_u64(v, "speculative_dispatches")?,
+            duplicates_discarded: json::get_u64(v, "duplicates_discarded")?,
+        })
+    }
+
+    /// One-line summary for driver stderr.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} shard(s) over {} transport: {} attempt(s), {} retried, \
+             {} speculative, {} duplicate(s) discarded",
+            self.shards,
+            self.transport,
+            self.attempts.len(),
+            self.retries,
+            self.speculative_dispatches,
+            self.duplicates_discarded
+        )
+    }
+}
+
+/// A queued dispatch attempt.
+struct Task {
+    shard: Arc<Shard>,
+    /// Position in `plan.shards` (== `shard.shard_index` for plans from
+    /// `SweepPlan::partition`; kept separate so validation can catch a
+    /// transport echoing back the wrong shard).
+    slot: usize,
+    attempt: u32,
+    speculative: bool,
+    cancel: Arc<CancelFlag>,
+}
+
+enum Event {
+    Started {
+        slot: usize,
+        attempt: u32,
+        at: Instant,
+    },
+    Finished {
+        slot: usize,
+        attempt: u32,
+        speculative: bool,
+        wall: Duration,
+        result: Result<ShardResult, String>,
+    },
+}
+
+/// Scheduler-side view of one shard's progress.
+struct ShardState {
+    shard: Arc<Shard>,
+    /// Next attempt number (== attempts launched so far).
+    attempts_started: u32,
+    failures: u32,
+    /// Cancel flags of launched-but-unfinished attempts, by attempt.
+    in_flight: BTreeMap<u32, Arc<CancelFlag>>,
+    /// Dispatch start instants of in-flight attempts (straggler clock).
+    started: BTreeMap<u32, Instant>,
+    speculated: bool,
+    result: Option<ShardResult>,
+    errors: Vec<String>,
+}
+
+impl ShardState {
+    fn cancel_in_flight(&self) {
+        for cancel in self.in_flight.values() {
+            cancel.store(true, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Shared work queue: scheduler threads block on the condvar until a
+/// task (or shutdown) arrives.
+struct WorkQueue {
+    tasks: Mutex<VecDeque<Task>>,
+    ready: Condvar,
+    shutdown: AtomicBool,
+}
+
+impl WorkQueue {
+    fn push(&self, task: Task) {
+        self.tasks.lock().unwrap().push_back(task);
+        self.ready.notify_one();
+    }
+
+    fn pop(&self) -> Option<Task> {
+        let mut tasks = self.tasks.lock().unwrap();
+        loop {
+            if self.shutdown.load(Ordering::Relaxed) {
+                return None;
+            }
+            if let Some(task) = tasks.pop_front() {
+                return Some(task);
+            }
+            tasks = self.ready.wait(tasks).unwrap();
+        }
+    }
+
+    /// Stop the workers: drop queued-but-unstarted tasks (they can only
+    /// be duplicates or work for an aborted dispatch) and wake everyone.
+    fn close(&self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        self.tasks.lock().unwrap().clear();
+        self.ready.notify_all();
+    }
+}
+
+/// Check that a transport's result is the answer to the shard we asked
+/// about: matching shard index and the exact index cover we dispatched.
+/// A corrupt or mixed-up result is a transport failure (retryable), not
+/// silent data corruption in the merge.
+fn validate_result(shard: &Shard, result: &ShardResult) -> Result<(), String> {
+    if result.shard_index != shard.shard_index {
+        return Err(format!(
+            "transport returned shard {} for shard {}",
+            result.shard_index, shard.shard_index
+        ));
+    }
+    if result.indices != shard.indices {
+        return Err(format!(
+            "transport returned a result covering {} job(s) with mismatched indices \
+             (want the shard's {} submission indices)",
+            result.indices.len(),
+            shard.indices.len()
+        ));
+    }
+    if result.outcomes.len() != result.indices.len() {
+        return Err(format!(
+            "transport returned {} outcomes for {} indices",
+            result.outcomes.len(),
+            result.indices.len()
+        ));
+    }
+    Ok(())
+}
+
+fn median_secs(samples: &mut [f64]) -> f64 {
+    samples.sort_by(f64::total_cmp);
+    quantile_sorted(samples, 0.5).unwrap_or(0.0)
+}
+
+/// Drive a plan to completion over `transport` under the retry /
+/// straggler policy in `opts`. On success returns the merged
+/// [`SweepResult`] — byte-identical to the unsharded run — plus the
+/// [`DispatchReport`] provenance. On failure (a shard exhausted its
+/// retry budget, or the transport produced an unmergeable cover) the
+/// error carries the failing shard's full per-attempt error chain.
+pub fn dispatch_plan(
+    plan: SweepPlan,
+    transport: &dyn Transport,
+    opts: &DispatchOptions,
+) -> Result<(SweepResult, DispatchReport), String> {
+    let SweepPlan { total_jobs, shards } = plan;
+    let mut report = DispatchReport {
+        transport: transport.name().to_string(),
+        shards: shards.len(),
+        ..Default::default()
+    };
+    if shards.is_empty() {
+        let merged = merge(total_jobs, Vec::new())?;
+        return Ok((merged, report));
+    }
+
+    let queue = WorkQueue {
+        tasks: Mutex::new(VecDeque::new()),
+        ready: Condvar::new(),
+        shutdown: AtomicBool::new(false),
+    };
+    let (event_tx, event_rx) = mpsc::channel::<Event>();
+
+    let mut states: Vec<ShardState> = shards
+        .into_iter()
+        .map(|shard| ShardState {
+            shard: Arc::new(shard),
+            attempts_started: 0,
+            failures: 0,
+            in_flight: BTreeMap::new(),
+            started: BTreeMap::new(),
+            speculated: false,
+            result: None,
+            errors: Vec::new(),
+        })
+        .collect();
+
+    let outcome: Result<(), String> = std::thread::scope(|scope| {
+        for _ in 0..opts.concurrency.max(1) {
+            let queue = &queue;
+            let event_tx = event_tx.clone();
+            scope.spawn(move || {
+                while let Some(task) = queue.pop() {
+                    let started = Instant::now();
+                    let _ = event_tx.send(Event::Started {
+                        slot: task.slot,
+                        attempt: task.attempt,
+                        at: started,
+                    });
+                    let result = transport.dispatch(&task.shard, task.attempt, &task.cancel);
+                    let _ = event_tx.send(Event::Finished {
+                        slot: task.slot,
+                        attempt: task.attempt,
+                        speculative: task.speculative,
+                        wall: started.elapsed(),
+                        result,
+                    });
+                }
+            });
+        }
+        drop(event_tx);
+
+        let launch = |state: &mut ShardState, slot: usize, speculative: bool| {
+            let attempt = state.attempts_started;
+            let cancel = Arc::new(CancelFlag::new(false));
+            queue.push(Task {
+                shard: Arc::clone(&state.shard),
+                slot,
+                attempt,
+                speculative,
+                cancel: Arc::clone(&cancel),
+            });
+            state.attempts_started = attempt + 1;
+            state.in_flight.insert(attempt, cancel);
+        };
+        for (slot, state) in states.iter_mut().enumerate() {
+            launch(state, slot, false);
+        }
+
+        let mut remaining = states.len();
+        let mut completed_secs: Vec<f64> = Vec::new();
+        let scheduler_result = loop {
+            if remaining == 0 {
+                break Ok(());
+            }
+            let event = match event_rx.recv_timeout(opts.poll) {
+                Ok(event) => Some(event),
+                Err(mpsc::RecvTimeoutError::Timeout) => None,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    break Err("dispatch workers exited early".to_string());
+                }
+            };
+            match event {
+                Some(Event::Started { slot, attempt, at }) => {
+                    states[slot].started.insert(attempt, at);
+                }
+                Some(Event::Finished { slot, attempt, speculative, wall, result }) => {
+                    let state = &mut states[slot];
+                    state.in_flight.remove(&attempt);
+                    state.started.remove(&attempt);
+                    let wall_ms = wall.as_secs_f64() * 1e3;
+                    // a valid result for an already-done shard is a
+                    // discarded duplicate, not a failure
+                    let result =
+                        result.and_then(|r| validate_result(&state.shard, &r).map(|()| r));
+                    match result {
+                        Ok(r) => {
+                            let duplicate = state.result.is_some();
+                            report.attempts.push(AttemptRecord {
+                                shard_index: state.shard.shard_index,
+                                attempt,
+                                speculative,
+                                wall_ms,
+                                error: None,
+                                discarded_duplicate: duplicate,
+                            });
+                            if duplicate {
+                                report.duplicates_discarded += 1;
+                            } else {
+                                state.result = Some(r);
+                                remaining -= 1;
+                                completed_secs.push(wall.as_secs_f64());
+                                // in-flight duplicates can stop now
+                                state.cancel_in_flight();
+                            }
+                        }
+                        Err(e) => {
+                            report.attempts.push(AttemptRecord {
+                                shard_index: state.shard.shard_index,
+                                attempt,
+                                speculative,
+                                wall_ms,
+                                error: Some(e.clone()),
+                                discarded_duplicate: false,
+                            });
+                            if state.result.is_some() {
+                                // a late duplicate failing after the
+                                // shard already completed changes
+                                // nothing
+                                continue;
+                            }
+                            state.failures += 1;
+                            state.errors.push(format!("attempt {attempt}: {e}"));
+                            if state.failures <= opts.max_retries {
+                                report.retries += 1;
+                                launch(state, slot, false);
+                            } else if state.in_flight.is_empty() {
+                                break Err(format!(
+                                    "shard {} failed after {} attempt(s) over {} \
+                                     transport: {}",
+                                    state.shard.shard_index,
+                                    state.attempts_started,
+                                    transport.name(),
+                                    state.errors.join("; ")
+                                ));
+                            }
+                            // else: budget exhausted but a speculative
+                            // copy is still running — it may yet win
+                        }
+                    }
+                }
+                None => {} // poll tick: fall through to straggler check
+            }
+            // Straggler re-dispatch: one speculative copy per shard once
+            // its oldest in-flight attempt exceeds `factor x` the median
+            // completed wall time.
+            if opts.straggler_factor > 0.0 && !completed_secs.is_empty() {
+                let threshold = median_secs(&mut completed_secs) * opts.straggler_factor;
+                let now = Instant::now();
+                for (slot, state) in states.iter_mut().enumerate() {
+                    if state.result.is_some() || state.speculated || state.in_flight.is_empty() {
+                        continue;
+                    }
+                    let Some(oldest) = state.started.values().min().copied() else { continue };
+                    if now.duration_since(oldest).as_secs_f64() > threshold {
+                        state.speculated = true;
+                        report.speculative_dispatches += 1;
+                        launch(state, slot, true);
+                    }
+                }
+            }
+        };
+        // cancel whatever is still in flight, release the workers
+        for state in &states {
+            state.cancel_in_flight();
+        }
+        queue.close();
+        // Drain events from attempts that were already running when the
+        // scheduler finished, so late duplicates (a straggler's
+        // original completing after its speculative twin won) and late
+        // failures still land in the report. The scope join waits for
+        // those threads regardless; recording them costs nothing.
+        while let Ok(event) = event_rx.recv() {
+            let Event::Finished { slot, attempt, speculative, wall, result } = event else {
+                continue;
+            };
+            let state = &mut states[slot];
+            state.in_flight.remove(&attempt);
+            state.started.remove(&attempt);
+            let result = result.and_then(|r| validate_result(&state.shard, &r).map(|()| r));
+            let error = result.as_ref().err().cloned();
+            let duplicate = result.is_ok() && state.result.is_some();
+            report.attempts.push(AttemptRecord {
+                shard_index: state.shard.shard_index,
+                attempt,
+                speculative,
+                wall_ms: wall.as_secs_f64() * 1e3,
+                error,
+                discarded_duplicate: duplicate,
+            });
+            if duplicate {
+                report.duplicates_discarded += 1;
+            }
+        }
+        scheduler_result
+    });
+    outcome?;
+
+    report.attempts.sort_by_key(|a| (a.shard_index, a.attempt));
+    let results: Vec<ShardResult> = states
+        .into_iter()
+        .map(|s| s.result.expect("scheduler completed every shard"))
+        .collect();
+    let merged = merge(total_jobs, results)?;
+    Ok((merged, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::GemmShape;
+    use crate::config::{Mechanisms, PlatformConfig};
+    use crate::coordinator::shard::SweepOptions;
+    use crate::coordinator::{Coordinator, JobRequest};
+
+    fn requests(n: usize) -> Vec<JobRequest> {
+        (0..n)
+            .map(|i| {
+                JobRequest::timing(
+                    GemmShape::new(8 + 8 * (i % 3), 8 + 8 * (i % 2), 8 + 8 * (i % 4)),
+                    if i % 2 == 0 { Mechanisms::ALL } else { Mechanisms::CPL },
+                    1,
+                )
+            })
+            .collect()
+    }
+
+    fn plan(shards: usize, jobs: usize) -> SweepPlan {
+        let cfg = PlatformConfig::case_study();
+        let opts = SweepOptions { shards, workers: 1, ..Default::default() };
+        SweepPlan::stride(&cfg, requests(jobs), opts)
+    }
+
+    fn unsharded(jobs: usize) -> SweepResult {
+        let cfg = PlatformConfig::case_study();
+        let coord = Coordinator::new(cfg).with_workers(1);
+        let outcomes = coord.run_batch(requests(jobs));
+        SweepResult { outcomes, stats: coord.stats() }
+    }
+
+    #[test]
+    fn in_process_dispatch_matches_unsharded_run() {
+        let want = unsharded(7);
+        for concurrency in [1usize, 3] {
+            let opts = DispatchOptions { concurrency, ..Default::default() };
+            let (got, report) = dispatch_plan(plan(3, 7), &InProcess, &opts).unwrap();
+            assert_eq!(got.to_json().pretty(), want.to_json().pretty());
+            assert_eq!(report.shards, 3);
+            assert_eq!(report.attempts.len(), 3);
+            assert_eq!(report.retries, 0);
+            assert!(report.attempts.iter().all(|a| a.error.is_none()));
+        }
+    }
+
+    #[test]
+    fn transient_faults_are_retried_transparently() {
+        let want = unsharded(6);
+        let transport = FaultInjector::new(InProcess, vec![0, 2], 1);
+        let opts = DispatchOptions { max_retries: 1, concurrency: 2, ..Default::default() };
+        let (got, report) = dispatch_plan(plan(3, 6), &transport, &opts).unwrap();
+        assert_eq!(got.to_json().pretty(), want.to_json().pretty());
+        assert_eq!(report.retries, 2, "both injected faults retried");
+        let failed: Vec<usize> = report
+            .attempts
+            .iter()
+            .filter(|a| a.error.is_some())
+            .map(|a| a.shard_index)
+            .collect();
+        assert_eq!(failed, vec![0, 2]);
+    }
+
+    #[test]
+    fn exhausted_retries_carry_the_error_chain() {
+        struct AlwaysFails;
+        impl Transport for AlwaysFails {
+            fn dispatch(
+                &self,
+                shard: &Shard,
+                attempt: u32,
+                _cancel: &CancelFlag,
+            ) -> Result<ShardResult, String> {
+                Err(format!("boom shard={} attempt={attempt}", shard.shard_index))
+            }
+            fn name(&self) -> &'static str {
+                "always-fails"
+            }
+        }
+        let opts = DispatchOptions { max_retries: 2, ..Default::default() };
+        let err = dispatch_plan(plan(1, 2), &AlwaysFails, &opts).unwrap_err();
+        assert!(err.contains("shard 0 failed after 3 attempt(s)"), "{err}");
+        for attempt in 0..3 {
+            assert!(err.contains(&format!("boom shard=0 attempt={attempt}")), "{err}");
+        }
+        assert!(err.contains("always-fails"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_results_are_rejected_and_retried() {
+        /// Mangles the shard index on the first attempt of every shard.
+        struct CorruptsFirst;
+        impl Transport for CorruptsFirst {
+            fn dispatch(
+                &self,
+                shard: &Shard,
+                attempt: u32,
+                cancel: &CancelFlag,
+            ) -> Result<ShardResult, String> {
+                let mut result = InProcess.dispatch(shard, attempt, cancel)?;
+                if attempt == 0 {
+                    result.shard_index += 100;
+                }
+                Ok(result)
+            }
+            fn name(&self) -> &'static str {
+                "corrupts-first"
+            }
+        }
+        let want = unsharded(4);
+        let opts = DispatchOptions { max_retries: 1, concurrency: 2, ..Default::default() };
+        let (got, report) = dispatch_plan(plan(2, 4), &CorruptsFirst, &opts).unwrap();
+        assert_eq!(got.to_json().pretty(), want.to_json().pretty());
+        assert_eq!(report.retries, 2);
+        let first_attempts_rejected = report
+            .attempts
+            .iter()
+            .filter(|a| a.attempt == 0)
+            .all(|a| a.error.as_deref().is_some_and(|e| e.contains("returned shard")));
+        assert!(first_attempts_rejected, "corrupt first attempts must fail validation");
+    }
+
+    #[test]
+    fn empty_plan_dispatches_to_an_empty_merge() {
+        let cfg = PlatformConfig::case_study();
+        let plan = SweepPlan::stride(&cfg, Vec::new(), SweepOptions::default());
+        let (got, report) = dispatch_plan(plan, &InProcess, &DispatchOptions::serial()).unwrap();
+        assert!(got.outcomes.is_empty());
+        assert_eq!(report.attempts.len(), 1, "the one empty shard still runs");
+    }
+
+    #[test]
+    fn dispatch_report_json_roundtrip() {
+        let report = DispatchReport {
+            transport: "spool".into(),
+            shards: 3,
+            attempts: vec![
+                AttemptRecord {
+                    shard_index: 0,
+                    attempt: 0,
+                    speculative: false,
+                    wall_ms: 12.5,
+                    error: Some("timed out".into()),
+                    discarded_duplicate: false,
+                },
+                AttemptRecord {
+                    shard_index: 0,
+                    attempt: 1,
+                    speculative: true,
+                    wall_ms: 3.25,
+                    error: None,
+                    discarded_duplicate: true,
+                },
+            ],
+            retries: 1,
+            speculative_dispatches: 1,
+            duplicates_discarded: 1,
+        };
+        let text = report.to_json().pretty();
+        let back = DispatchReport::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, report);
+        assert!(report.summary().contains("1 duplicate(s) discarded"));
+        // a non-report document fails loudly
+        let err = DispatchReport::from_json(&json::parse("{\"format\": \"x\"}").unwrap())
+            .unwrap_err();
+        assert!(err.contains("not a dispatch report"), "{err}");
+    }
+
+    #[test]
+    fn fault_injector_counts_per_shard() {
+        let cfg = PlatformConfig::case_study();
+        let opts = SweepOptions { shards: 2, workers: 1, ..Default::default() };
+        let plan = SweepPlan::stride(&cfg, requests(2), opts);
+        let injector = FaultInjector::new(InProcess, vec![1], 2);
+        let cancel = CancelFlag::new(false);
+        let s0 = &plan.shards[0];
+        let s1 = &plan.shards[1];
+        assert!(injector.dispatch(s0, 0, &cancel).is_ok(), "unlisted shard unaffected");
+        assert!(injector.dispatch(s1, 0, &cancel).is_err());
+        assert!(injector.dispatch(s1, 1, &cancel).is_err());
+        assert!(injector.dispatch(s1, 2, &cancel).is_ok(), "injection budget spent");
+    }
+
+    #[test]
+    fn median_is_total_and_even_aware() {
+        assert_eq!(median_secs(&mut vec![3.0]), 3.0);
+        assert_eq!(median_secs(&mut vec![4.0, 1.0, 3.0]), 3.0);
+        assert_eq!(median_secs(&mut vec![4.0, 1.0, 3.0, 2.0]), 2.5);
+    }
+}

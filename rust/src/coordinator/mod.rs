@@ -8,6 +8,7 @@
 //! the same architecture). Results come back over a bounded channel in
 //! submission order.
 
+pub mod dispatch;
 pub mod shard;
 
 use std::sync::mpsc;

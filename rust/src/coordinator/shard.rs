@@ -29,8 +29,10 @@
 use std::path::Path;
 
 use crate::config::PlatformConfig;
+use crate::coordinator::dispatch::{dispatch_plan, DispatchOptions, InProcess};
 use crate::coordinator::{
-    outcome_from_json, outcome_to_json, Coordinator, CoordinatorStats, JobOutcome, JobRequest,
+    outcome_from_json, outcome_to_json, parse_workers_env, Coordinator, CoordinatorStats,
+    JobOutcome, JobRequest,
 };
 use crate::sim::SimOptions;
 use crate::util::json::{self, Json};
@@ -344,6 +346,33 @@ impl SweepResult {
     }
 }
 
+/// Resolve the worker-pool size a shard should run with on THIS host.
+///
+/// A serialized shard embeds the `workers` count its *origin* host
+/// planned with, which is wrong the moment the file ships to a machine
+/// with a different core count. Precedence, highest first:
+///
+/// 1. **CLI** — a `--workers` flag passed to the worker process;
+/// 2. **env** — this host's `OPENGEMM_WORKERS`;
+/// 3. **shard file** — the origin host's embedded value;
+/// 4. **auto** — `0`, deferring to the coordinator's host policy.
+///
+/// A resolved `0` (from an explicit `--workers 0` or an unconfigured
+/// host) means "this host's default policy": the coordinator then
+/// applies `OPENGEMM_WORKERS` if set, else machine auto-sizing — so
+/// `--workers 0` discards the shard-embedded value but does NOT
+/// suppress the env variable. A set-but-invalid `OPENGEMM_WORKERS` is
+/// always a hard error (even under a CLI override): misconfiguration
+/// fails fast, per [`parse_workers_env`].
+pub fn resolve_worker_override(
+    cli: Option<usize>,
+    env: Option<&str>,
+    shard_embedded: usize,
+) -> Result<usize, String> {
+    let env_workers = parse_workers_env(env)?;
+    Ok(cli.or(env_workers).unwrap_or(shard_embedded))
+}
+
 /// Merge per-shard results back into submission order.
 ///
 /// Fails (rather than guessing) if the shards do not form an exact
@@ -381,14 +410,15 @@ pub fn merge(total_jobs: usize, shard_results: Vec<ShardResult>) -> Result<Sweep
     Ok(SweepResult { outcomes, stats })
 }
 
-/// Run an already-built plan in-process: every shard on its own
-/// coordinator, sequentially (each shard already owns a worker pool;
-/// process-level parallelism lives in the `sweep` CLI driver), then
-/// merge.
+/// Run an already-built plan in-process through the fault-tolerant
+/// dispatcher ([`crate::coordinator::dispatch`]): every shard on its
+/// own coordinator, one at a time (each shard already owns a worker
+/// pool; process- and host-level parallelism come from the
+/// `Subprocess`/`SpoolDir` transports in the `sweep` CLI), then merge.
 pub fn run_plan(plan: SweepPlan) -> SweepResult {
-    let SweepPlan { total_jobs, shards } = plan;
-    let results: Vec<ShardResult> = shards.into_iter().map(Shard::run).collect();
-    merge(total_jobs, results).expect("in-process plan is an exact cover")
+    let (result, _report) = dispatch_plan(plan, &InProcess, &DispatchOptions::serial())
+        .expect("in-process dispatch of an exact cover cannot fail");
+    result
 }
 
 /// Run a whole sweep in-process through the shard machinery: plan with
@@ -499,6 +529,26 @@ mod tests {
         // an out-of-range index is rejected
         let err = merge(2, results.clone()).unwrap_err();
         assert!(err.contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn worker_override_precedence_is_cli_env_shard_auto() {
+        // CLI beats everything below it
+        assert_eq!(resolve_worker_override(Some(6), Some("4"), 2), Ok(6));
+        // --workers 0 resets to the HOST's default policy: it discards
+        // the shard-embedded value, and the coordinator then applies
+        // env (if set) or machine auto-sizing
+        assert_eq!(resolve_worker_override(Some(0), Some("4"), 2), Ok(0));
+        // env beats the shard-embedded origin-host value
+        assert_eq!(resolve_worker_override(None, Some("4"), 2), Ok(4));
+        // the shard file only applies when this host says nothing
+        assert_eq!(resolve_worker_override(None, None, 2), Ok(2));
+        // ... and auto-sizing (0) survives when nobody overrides
+        assert_eq!(resolve_worker_override(None, None, 0), Ok(0));
+        // a set-but-invalid env is a hard error even under a CLI
+        // override: misconfiguration never passes silently
+        assert!(resolve_worker_override(Some(6), Some("zero"), 2).is_err());
+        assert!(resolve_worker_override(None, Some("0"), 2).is_err());
     }
 
     #[test]

@@ -24,8 +24,9 @@ pub struct Fig5Options {
     pub workloads: usize,
     pub repeats: u32,
     pub workers: usize,
-    /// In-process shards per variant batch (0 or 1 = unsharded; the
-    /// multi-process path is the `sweep` CLI driver).
+    /// In-process shards per variant batch (0 or 1 = unsharded; each
+    /// batch runs through `coordinator::dispatch` — the multi-process
+    /// and cross-host transports are the `sweep` CLI's).
     pub shards: usize,
     /// Event-driven cycle skipping (cycle-exact; off only for
     /// differential checks).

@@ -34,33 +34,45 @@
 //!
 //! ## Distributed sweeps (`opengemm sweep`)
 //!
-//! One sweep can run in three ways, all producing byte-identical
-//! merged JSON (stdout, or `--out FILE`):
+//! Every sweep runs through the fault-tolerant dispatch scheduler
+//! (`coordinator::dispatch`): a pluggable transport moves shards to
+//! executors, and retry / straggler policy sits on top. All transports
+//! produce byte-identical merged JSON (stdout, or `--out FILE`):
 //!
 //! ```text
-//! # single process, in-process shards
+//! # in-process transport (default)
 //! opengemm sweep --workloads 40 --variants 2 --repeats 2 > a.json
 //!
-//! # multi-process driver: plans shard files, spawns 2 worker
-//! # processes of this same binary, merges their JSON outputs
+//! # subprocess transport: shard files + 2 worker processes of this
+//! # same binary, scheduled with retry (--retries) and straggler
+//! # re-dispatch (--straggler-factor)
 //! opengemm sweep --workloads 40 --variants 2 --repeats 2 --processes 2 > b.json
 //! diff a.json b.json   # empty: merge(shards) == unsharded run
 //!
-//! # explicit worker: run one serialized shard (what the driver spawns;
-//! # hand the file to another host for cross-machine sweeps)
+//! # spool-dir transport: shards are published into a shared directory;
+//! # any host watching it executes them (the cross-host primitive)
+//! opengemm sweep --spool-serve /mnt/spool            # on each worker host
+//! opengemm sweep --workloads 40 --transport spool --spool /mnt/spool
+//!
+//! # explicit worker: run one serialized shard by hand
 //! opengemm sweep --shard /tmp/v0_s0.shard.json --out /tmp/v0_s0.result.json
 //! ```
 
 use std::path::{Path, PathBuf};
-use std::process::{Command, Stdio};
+use std::sync::atomic::AtomicBool;
+use std::time::Duration;
 
 use opengemm::util::error::Result;
 use opengemm::{anyhow, bail};
 
 use opengemm::compiler::{GemmShape, Layout};
 use opengemm::config::{Mechanisms, PlatformConfig};
+use opengemm::coordinator::dispatch::{
+    dispatch_plan, spool_worker_loop, write_atomically, DispatchOptions, DispatchReport,
+    FaultInjector, InProcess, SpoolDir, SpoolWorkerOptions, Subprocess, Transport,
+};
 use opengemm::coordinator::shard::{
-    merge, run_plan, Shard, ShardResult, SweepOptions, SweepPlan, SweepResult,
+    resolve_worker_override, Shard, SweepOptions, SweepPlan, SweepResult,
 };
 use opengemm::coordinator::{Coordinator, JobRequest};
 use opengemm::experiments::fig5::{variant_config, variant_specs};
@@ -96,16 +108,33 @@ SUBCOMMANDS:
   sota              Table 3: state-of-the-art comparison
   compare-gemmini   Fig. 7: normalized throughput vs Gemmini OS/WS
                     --repeats N
-  sweep             sharded Fig. 5-style sweep; merged JSON on stdout
+  sweep             sharded Fig. 5-style sweep under the fault-tolerant
+                    dispatch scheduler; merged JSON on stdout
                     --workloads N  --seed S  --repeats N
                     --variants V   (first V rungs of the Fig. 5 ladder)
-                    --processes P  (P>1: spawn P worker processes)
-                    --shards S     (shards per variant; default P)
+                    --shards S     (shards per variant; default P,
+                                    or 8 under the spool transport)
                     --workers N    (threads per shard coordinator)
+                    --transport inprocess|subprocess|spool
+                    --processes P  (P>1 implies subprocess: P workers;
+                                    shards default to P, or 8 for spool)
+                    --spool DIR    (implies spool: publish shards into a
+                                    shared dir served by other hosts)
+                    --retries N    (per-shard retry budget; default 1)
+                    --straggler-factor F (speculatively re-dispatch a
+                                    shard running longer than F x the
+                                    median shard wall time; 0 = off)
+                    --spool-timeout-secs S  --spool-poll-ms MS
+                    --report FILE  (dispatch provenance JSON: attempts,
+                                    retries, stragglers, duplicates)
+                    --inject-fail IDX  (testing: fail the first dispatch
+                                        of shard IDX once)
                     --out FILE     (write instead of stdout)
-                    --keep-shards DIR  (driver mode: leave shard/result
+                    --keep-shards DIR  (subprocess: leave shard/result
                                         files in DIR for other hosts)
-                    worker mode: --shard FILE [--out FILE]
+                    worker mode: --shard FILE [--out FILE] [--workers N]
+                    spool executor mode: --spool-serve DIR [--workers N]
+                                         [--max-shards N] [--poll-ms MS]
   serve             sustained-traffic serving harness; latency percentiles
                     --workload bert|bert-large|resnet18|mixed
                     --requests N   --seed S
@@ -133,7 +162,9 @@ ENVIRONMENT:
   OPENGEMM_WORKERS  override the coordinator's auto-sized worker pool
                     (no upper clamp; `--workers` flags still win; an
                     unparsable or zero value is a hard error, not a
-                    silent fallback to auto-sizing)
+                    silent fallback to auto-sizing). Worker-pool
+                    precedence on a sweep worker host:
+                    --workers > OPENGEMM_WORKERS > shard file > auto
 
 EXAMPLE — a sweep sharded across 2 processes is byte-identical to the
 same sweep in one process:
@@ -326,138 +357,99 @@ fn sweep_doc(
     ])
 }
 
+/// The worker host's `--workers` flag, if present. Feeds
+/// [`resolve_worker_override`]'s CLI slot; `Some(0)` resets to the
+/// host's default policy (`OPENGEMM_WORKERS`, else machine-sized)
+/// instead of the shard-embedded value.
+fn cli_workers(args: &Args) -> Result<Option<usize>> {
+    match args.get("workers") {
+        Some(_) => Ok(Some(args.usize_or("workers", 0)?)),
+        None => Ok(None),
+    }
+}
+
 /// Worker mode: run one serialized shard, emit its result as JSON.
+/// The worker pool is sized for THIS host: CLI `--workers` >
+/// `OPENGEMM_WORKERS` > the shard-embedded origin-host value > auto.
 fn sweep_worker(args: &Args, shard_path: &str) -> Result<()> {
-    let shard = Shard::read_file(Path::new(shard_path)).map_err(|e| anyhow!(e))?;
+    let mut shard = Shard::read_file(Path::new(shard_path)).map_err(|e| anyhow!(e))?;
+    let env = std::env::var("OPENGEMM_WORKERS").ok();
+    shard.options.workers =
+        resolve_worker_override(cli_workers(args)?, env.as_deref(), shard.options.workers)
+            .map_err(|e| anyhow!(e))?;
+    let pool = match shard.options.workers {
+        0 => "auto".to_string(),
+        n => n.to_string(),
+    };
     eprintln!(
-        "worker: shard {}/{} — {} jobs",
+        "worker: shard {}/{} — {} jobs, {} worker thread(s)",
         shard.shard_index + 1,
         shard.num_shards,
-        shard.requests.len()
+        shard.requests.len(),
+        pool
     );
     let result = shard.run();
     let text = result.to_json().pretty();
     match args.get("out") {
-        Some(out) => std::fs::write(out, text)?,
+        // temp-file + rename: a spool driver polling for this file must
+        // never observe a partial write
+        Some(out) => write_atomically(Path::new(out), &text).map_err(|e| anyhow!(e))?,
         None => println!("{text}"),
     }
     Ok(())
 }
 
-/// Driver mode: serialize every shard to a file, spawn worker processes
-/// of this same binary (at most `processes` at a time), and merge their
-/// JSON outputs.
-fn sweep_driver(
-    plans: Vec<(usize, SweepPlan)>,
-    processes: usize,
-    keep_shards: Option<&str>,
-) -> Result<Vec<(usize, SweepResult)>> {
-    let exe = std::env::current_exe()?;
-    // `--keep-shards DIR` leaves the shard/result files behind — the
-    // hand-a-shard-to-another-host workflow needs the files to survive
-    // the run. Without it, a private temp dir is cleaned up at the end.
-    let (dir, ephemeral) = match keep_shards {
-        Some(dir) => (PathBuf::from(dir), false),
-        None => (
-            std::env::temp_dir().join(format!("opengemm-sweep-{}", std::process::id())),
-            true,
-        ),
+/// Spool executor mode: watch a shared directory, claim and run every
+/// shard published into it, publish the result files. Runs until
+/// killed (or `--max-shards N`); any number of hosts may serve the
+/// same directory.
+fn sweep_spool_serve(args: &Args, dir: &str) -> Result<()> {
+    let opts = SpoolWorkerOptions {
+        poll: Duration::from_millis(args.u64_or("poll-ms", 25)?.max(1)),
+        max_shards: args.usize_or("max-shards", 0)?,
+        cli_workers: cli_workers(args)?,
     };
-    std::fs::create_dir_all(&dir)?;
-
-    // (variant, total_jobs) bookkeeping + the flat shard queue
-    let mut totals: Vec<(usize, usize)> = Vec::new();
-    let mut queue: Vec<(usize, PathBuf, PathBuf)> = Vec::new();
-    for (variant, plan) in &plans {
-        totals.push((*variant, plan.total_jobs));
-        for shard in &plan.shards {
-            let stem = format!("v{variant}_s{}", shard.shard_index);
-            let shard_path = dir.join(format!("{stem}.shard.json"));
-            let result_path = dir.join(format!("{stem}.result.json"));
-            shard.write_file(&shard_path).map_err(|e| anyhow!(e))?;
-            queue.push((*variant, shard_path, result_path));
-        }
-    }
     eprintln!(
-        "driver: {} shards over {} variants, {} worker processes, shard files in {}",
-        queue.len(),
-        plans.len(),
-        processes,
-        dir.display()
+        "spool worker: watching {dir} ({}; stop with Ctrl-C)",
+        match opts.max_shards {
+            0 => "until killed".to_string(),
+            n => format!("up to {n} shard(s)"),
+        }
     );
+    let stop = AtomicBool::new(false);
+    let served = spool_worker_loop(Path::new(dir), &opts, &stop).map_err(|e| anyhow!(e))?;
+    eprintln!("spool worker: served {served} shard(s)");
+    Ok(())
+}
 
-    // Sliding window of child processes: keep up to `processes` workers
-    // alive, reaping whichever exits first.
-    let mut pending = queue.into_iter();
-    let mut running: Vec<(usize, PathBuf, std::process::Child)> = Vec::new();
-    let mut collected: Vec<(usize, ShardResult)> = Vec::new();
-    let outcome: Result<()> = (|| {
-        loop {
-            while running.len() < processes.max(1) {
-                let Some((variant, shard_path, result_path)) = pending.next() else { break };
-                let child = Command::new(&exe)
-                    .arg("sweep")
-                    .arg("--shard")
-                    .arg(&shard_path)
-                    .arg("--out")
-                    .arg(&result_path)
-                    .stdin(Stdio::null())
-                    .stdout(Stdio::null())
-                    .spawn()?;
-                running.push((variant, result_path, child));
-            }
-            if running.is_empty() {
-                return Ok(());
-            }
-            // wait for ANY worker, so a freed slot refills immediately
-            // even when shard runtimes are uneven
-            let (slot, status) = 'poll: loop {
-                for (i, (_, _, child)) in running.iter_mut().enumerate() {
-                    if let Some(status) = child.try_wait()? {
-                        break 'poll (i, status);
-                    }
-                }
-                std::thread::sleep(std::time::Duration::from_millis(15));
-            };
-            let (variant, result_path, _child) = running.remove(slot);
-            if !status.success() {
-                bail!("sweep worker for {} failed with {status}", result_path.display());
-            }
-            collected
-                .push((variant, ShardResult::read_file(&result_path).map_err(|e| anyhow!(e))?));
-        }
-    })();
-    // whether the loop succeeded or bailed: reap every remaining worker
-    // before deleting the shard directory out from under it
-    for (_, _, child) in running.iter_mut() {
-        let _ = child.kill();
-        let _ = child.wait();
+/// Which transport a sweep uses: explicit `--transport` wins, else
+/// `--spool DIR` implies the spool transport, `--processes P > 1` the
+/// subprocess transport, and everything else runs in-process.
+fn transport_name(args: &Args, processes: usize) -> Result<&'static str> {
+    let implied = if args.has("spool") {
+        "spool"
+    } else if processes > 1 {
+        "subprocess"
+    } else {
+        "inprocess"
+    };
+    match args.get("transport") {
+        None => Ok(implied),
+        Some("inprocess") => Ok("inprocess"),
+        Some("subprocess") => Ok("subprocess"),
+        Some("spool") => Ok("spool"),
+        Some(other) => bail!("--transport must be inprocess|subprocess|spool, got {other:?}"),
     }
-    if ephemeral {
-        let _ = std::fs::remove_dir_all(&dir);
-    }
-    outcome?;
-
-    // group results by variant (moving, not cloning — functional
-    // results can be large), then merge each back into submission order
-    let mut grouped: Vec<Vec<ShardResult>> = totals.iter().map(|_| Vec::new()).collect();
-    for (variant, result) in collected {
-        match totals.iter().position(|&(v, _)| v == variant) {
-            Some(pos) => grouped[pos].push(result),
-            None => bail!("worker returned a result for unknown variant {variant}"),
-        }
-    }
-    let mut merged = Vec::new();
-    for ((variant, total_jobs), shard_results) in totals.into_iter().zip(grouped) {
-        merged.push((variant, merge(total_jobs, shard_results).map_err(|e| anyhow!(e))?));
-    }
-    Ok(merged)
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
     // worker mode: run one shard file and exit
     if let Some(shard_path) = args.get("shard") {
         return sweep_worker(args, shard_path);
+    }
+    // spool executor mode: serve a shared spool directory
+    if let Some(dir) = args.get("spool-serve") {
+        return sweep_spool_serve(args, dir);
     }
 
     let cfg = load_config(args)?;
@@ -469,25 +461,66 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let processes = args.usize_or("processes", 1)?;
     let ladder = variant_specs();
     let n_variants = args.usize_or("variants", ladder.len())?.clamp(1, ladder.len());
+    let transport = transport_name(args, processes)?;
+    // Spool sweeps distribute across an unknown number of executor
+    // hosts, and retry/straggler granularity is per shard — a
+    // single-shard spool sweep would serialize onto one executor and
+    // make every fault re-run the whole variant. Default to a real
+    // split there; elsewhere one shard per worker process.
+    let default_shards = match transport {
+        "spool" => 8,
+        _ => processes.max(1),
+    };
     let sweep_opts = SweepOptions {
-        shards: args.usize_or("shards", processes.max(1))?,
+        shards: args.usize_or("shards", default_shards)?,
         workers: args.usize_or("workers", 0)?,
         fast_forward: args.enabled_unless_no("fast-forward"),
         ..Default::default()
     };
 
+    // scheduler policy
+    let retries = args.u64_or("retries", 1)?;
+    let retries =
+        u32::try_from(retries).map_err(|_| anyhow!("--retries {retries} out of u32 range"))?;
+    let straggler_factor = args.f64_or("straggler-factor", 0.0)?;
+    if !straggler_factor.is_finite() || straggler_factor < 0.0 {
+        bail!("--straggler-factor must be a finite non-negative number, got {straggler_factor}");
+    }
+    let inject_fail = match args.get("inject-fail") {
+        Some(_) => Some(args.usize_or("inject-fail", 0)?),
+        None => None,
+    };
+    let spool_poll = Duration::from_millis(args.u64_or("spool-poll-ms", 25)?.max(1));
+    let spool_timeout = Duration::from_secs(args.u64_or("spool-timeout-secs", 600)?.max(1));
+
+    // `--keep-shards DIR` leaves the subprocess transport's shard and
+    // result files behind — the hand-a-shard-to-another-host workflow
+    // needs them to survive the run. Without it, a private temp dir is
+    // cleaned up at the end.
+    let (work_dir, ephemeral) = match args.get("keep-shards") {
+        Some(dir) => (PathBuf::from(dir), false),
+        None => (
+            std::env::temp_dir().join(format!("opengemm-sweep-{}", std::process::id())),
+            true,
+        ),
+    };
+
     let shapes = random_suite(seed, workloads);
     let ladder = &ladder[..n_variants];
     eprintln!(
-        "sweep: {} workloads x {} variants, {} shard(s)/variant, {} process(es)",
+        "sweep: {} workloads x {} variants, {} shard(s)/variant, {} transport, \
+         {} retr{} per shard",
         workloads,
         ladder.len(),
         sweep_opts.shards.clamp(1, workloads.max(1)),
-        processes.max(1)
+        transport,
+        retries,
+        if retries == 1 { "y" } else { "ies" },
     );
 
-    // One plan per variant, shared by both execution modes — the merged
-    // document can only differ between modes if the simulation does.
+    // One plan per variant, shared by every transport — the merged
+    // document can only differ between transports if the simulation
+    // does.
     let plans: Vec<(usize, SweepPlan)> = ladder
         .iter()
         .enumerate()
@@ -499,11 +532,87 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             (variant, SweepPlan::stride(&variant_config(&cfg, depth), requests, sweep_opts))
         })
         .collect();
-    let results: Vec<(usize, SweepResult)> = if processes > 1 {
-        sweep_driver(plans, processes, args.get("keep-shards"))?
-    } else {
-        plans.into_iter().map(|(variant, plan)| (variant, run_plan(plan))).collect()
-    };
+
+    let mut results: Vec<(usize, SweepResult)> = Vec::new();
+    let mut reports: Vec<(usize, DispatchReport)> = Vec::new();
+    // Variants are dispatched one plan at a time: retry/straggler
+    // accounting and the dispatch report are per-plan, and per-variant
+    // stats must stay separate for the merged document. The cost is a
+    // capacity tail at each variant boundary (a slow last shard can
+    // idle the other worker slots); the default shards-per-variant ==
+    // processes plus stride partitioning keeps that tail one balanced
+    // shard wide.
+    let outcome: Result<()> = (|| {
+        for (variant, plan) in plans {
+            let prefix = format!("v{variant}_");
+            let base: Box<dyn Transport> = match transport {
+                "inprocess" => Box::new(InProcess),
+                "subprocess" => Box::new(
+                    Subprocess::new(&work_dir, &prefix, !ephemeral, cli_workers(args)?)
+                        .map_err(|e| anyhow!(e))?,
+                ),
+                "spool" => {
+                    let dir = args.get("spool").ok_or_else(|| {
+                        anyhow!("--transport spool needs --spool DIR (a shared spool directory)")
+                    })?;
+                    Box::new(
+                        SpoolDir::new(Path::new(dir), &prefix, spool_poll, spool_timeout)
+                            .map_err(|e| anyhow!(e))?,
+                    )
+                }
+                other => bail!("unreachable transport {other:?}"),
+            };
+            // fault injection for the sched-smoke lane and manual retry
+            // drills: fail the first dispatch of one shard of the first
+            // variant, then behave normally
+            let dispatchable: Box<dyn Transport> = match inject_fail {
+                Some(idx) if variant == 0 => Box::new(FaultInjector::new(base, vec![idx], 1)),
+                _ => base,
+            };
+            let dispatch_opts = DispatchOptions {
+                max_retries: retries,
+                straggler_factor,
+                concurrency: match transport {
+                    // every offer visible to remote executors at once
+                    "spool" => plan.shards.len().max(1),
+                    // the worker-process cap
+                    "subprocess" => processes.max(1),
+                    // in-process shards each own a thread pool already
+                    _ => 1,
+                },
+                ..Default::default()
+            };
+            let (result, report) = dispatch_plan(plan, &*dispatchable, &dispatch_opts)
+                .map_err(|e| anyhow!(e))?;
+            eprintln!("variant {variant}: {}", report.summary());
+            results.push((variant, result));
+            reports.push((variant, report));
+        }
+        Ok(())
+    })();
+    if ephemeral && transport == "subprocess" {
+        let _ = std::fs::remove_dir_all(&work_dir);
+    }
+    // Provenance is most valuable when the sweep FAILED, so the report
+    // is written before the error propagates. It covers the variants
+    // that completed; the failing variant's attempt chain travels in
+    // the error message itself.
+    if let Some(report_path) = args.get("report") {
+        let doc = Json::Arr(
+            reports
+                .iter()
+                .map(|(variant, report)| {
+                    Json::obj(vec![
+                        ("variant", Json::num(*variant as f64)),
+                        ("dispatch", report.to_json()),
+                    ])
+                })
+                .collect(),
+        );
+        std::fs::write(report_path, doc.pretty())?;
+        eprintln!("wrote dispatch report {report_path}");
+    }
+    outcome?;
 
     let variants: Vec<SweepVariantOutcome> = results
         .into_iter()

@@ -14,6 +14,11 @@
 //! dispatch overhead plus the sum of its members' service cycles (the
 //! device still executes member streams sequentially — batching
 //! amortizes the dispatch overhead and trades queueing delay for it).
+//! Deadline tie-break: an arrival landing *exactly on* the expiry
+//! cycle is admitted before the batch closes (up to `max_batch`) — the
+//! batch closes at `expiry` either way, so the rider costs the batch
+//! no extra wait while saving itself a full batch window. Only
+//! arrivals strictly after the expiry cycle start the next batch.
 //! Every member of a batch completes at the batch's completion cycle:
 //!
 //! - request latency   = completion - arrival
@@ -184,10 +189,13 @@ pub fn simulate_queue(
             // flush: nothing can ever join this batch
             Some(queue.back().unwrap().2)
         } else if let (Some(wait), Some(front)) = (max_wait, queue.front()) {
-            // deadline: expiry wins only if no arrival precedes it
+            // deadline: expiry closes the batch only once no arrival at
+            // or before the expiry cycle remains — an arrival landing
+            // exactly on the expiry cycle still joins (admit-at-expiry;
+            // see the module docs for the tie-break rationale)
             let expiry = front.2.saturating_add(wait);
             match next_arrival {
-                Some(a) if a < expiry => None,
+                Some(a) if a <= expiry => None,
                 _ => Some(expiry),
             }
         } else {
@@ -272,6 +280,24 @@ mod tests {
         assert_eq!(out.batches[0].start, 10);
         assert_eq!(out.batches[0].size, 1);
         assert_eq!(out.records[0].completion - out.records[0].arrival, 15);
+    }
+
+    #[test]
+    fn deadline_boundary_admits_at_expiry_excludes_after() {
+        // first request at 0, wait 10 -> expiry 10. An arrival exactly
+        // at cycle 10 joins the closing batch ...
+        let policy = BatchPolicy::Deadline { max_batch: 4, max_wait_cycles: 10 };
+        let mut src = open(&[(0, 0), (10, 0), (100, 0)]);
+        let out = simulate_queue(&mut src, &[5], policy, 0);
+        assert_eq!(out.batches[0].close, 10, "batch still closes at its expiry");
+        assert_eq!(out.batches[0].size, 2, "the at-expiry arrival rides along");
+        // ... but one cycle past the expiry starts the next batch
+        let mut src = open(&[(0, 0), (11, 0), (100, 0)]);
+        let out = simulate_queue(&mut src, &[5], policy, 0);
+        let sizes: Vec<usize> = out.batches.iter().map(|b| b.size).collect();
+        assert_eq!(sizes, vec![1, 1, 1]);
+        assert_eq!(out.batches[0].close, 10);
+        assert_eq!(out.batches[1].close, 21, "second batch expires 10 after its own front");
     }
 
     #[test]

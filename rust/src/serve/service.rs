@@ -29,7 +29,7 @@
 //! pipeline reaches steady state (the `serving_harness` integration
 //! test checks the extrapolation against an exact simulation).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::compiler::GemmShape;
 use crate::config::{Mechanisms, PlatformConfig};
@@ -74,6 +74,11 @@ impl ServiceModel {
     /// Measure every `(shape, repeats)` point the given request kinds
     /// need, batching all simulations through one coordinator pool.
     /// Returns the coordinator's (deterministic) simulation counters.
+    ///
+    /// The cache commit is all-or-nothing: if any job in the batch
+    /// fails, no measurement from the batch is cached and the model is
+    /// exactly as it was — a retry after fixing the workload re-measures
+    /// from a clean slate instead of trusting a half-populated batch.
     pub fn measure(
         &mut self,
         cfg: &PlatformConfig,
@@ -81,7 +86,11 @@ impl ServiceModel {
         fast_forward: bool,
         kinds: &[RequestKind],
     ) -> Result<CoordinatorStats, String> {
-        let mut wanted: Vec<ShapeKey> = Vec::new();
+        // BTreeSet dedup: a large mixed workload repeats the same
+        // (shape, repeats) point across kinds, and `Vec::contains` made
+        // this scan O(n^2). Sorted iteration keeps the batch order (and
+        // so the coordinator's deterministic counters) reproducible.
+        let mut wanted: BTreeSet<ShapeKey> = BTreeSet::new();
         for kind in kinds {
             for &(shape, count) in &kind.stream {
                 if count == 0 {
@@ -89,8 +98,8 @@ impl ServiceModel {
                 }
                 for repeats in self.repeats_needed(count) {
                     let k = key(shape, repeats);
-                    if !self.cache.contains_key(&k) && !wanted.contains(&k) {
-                        wanted.push(k);
+                    if !self.cache.contains_key(&k) {
+                        wanted.insert(k);
                     }
                 }
             }
@@ -106,10 +115,15 @@ impl ServiceModel {
             })
             .collect();
         let outcomes = coord.run_batch(requests);
+        let mut measured: Vec<(ShapeKey, u64)> = Vec::with_capacity(wanted.len());
         for (&(m, k, n, repeats), outcome) in wanted.iter().zip(outcomes) {
             let result = outcome
                 .map_err(|e| format!("measuring ({m}, {k}, {n}) x{repeats}: {e}"))?;
-            self.cache.insert((m, k, n, repeats), result.metrics.total_cycles);
+            measured.push(((m, k, n, repeats), result.metrics.total_cycles));
+        }
+        // every job succeeded: commit the whole batch
+        for (k, cycles) in measured {
+            self.cache.insert(k, cycles);
         }
         Ok(coord.stats())
     }
@@ -190,6 +204,46 @@ mod tests {
         assert_eq!(ServiceModel::new(0).cap(), 2);
         assert_eq!(ServiceModel::new(1).cap(), 2);
         assert_eq!(ServiceModel::new(16).cap(), 16);
+    }
+
+    #[test]
+    fn failed_measure_commits_nothing_and_retry_recovers() {
+        let cfg = PlatformConfig::case_study();
+        let mut model = ServiceModel::new(4);
+        let good = GemmShape::new(16, 16, 16);
+        let bad = GemmShape::new(8, 300_000, 8); // oversized K fails the tiler
+        let kinds = vec![
+            RequestKind { label: "good".into(), stream: vec![(good, 2)] },
+            RequestKind { label: "bad".into(), stream: vec![(bad, 1)] },
+        ];
+        let err = model.measure(&cfg, 2, true, &kinds).unwrap_err();
+        assert!(err.contains("300000"), "{err}");
+        // all-or-nothing: the good shape ran in the same batch but must
+        // NOT have been cached alongside the failure
+        let err = model.shape_cycles(good, 2).unwrap_err();
+        assert!(err.contains("not measured"), "{err}");
+
+        // retry with the bad kind dropped: measures from a clean slate
+        // and prices the good shape identically to a fresh model
+        model.measure(&cfg, 2, true, &kinds[..1]).unwrap();
+        let got = model.shape_cycles(good, 2).unwrap();
+        let mut fresh = ServiceModel::new(4);
+        fresh.measure(&cfg, 2, true, &kinds[..1]).unwrap();
+        assert_eq!(got, fresh.shape_cycles(good, 2).unwrap());
+    }
+
+    #[test]
+    fn duplicate_points_across_kinds_are_measured_once() {
+        let cfg = PlatformConfig::case_study();
+        let mut model = ServiceModel::new(4);
+        let shape = GemmShape::new(16, 16, 16);
+        // the same (shape, repeats) point appears in many kinds (the
+        // O(n^2) Vec::contains hot spot); the batch must dedup it
+        let kinds: Vec<RequestKind> = (0..6)
+            .map(|i| RequestKind { label: format!("k{i}"), stream: vec![(shape, 2)] })
+            .collect();
+        let stats = model.measure(&cfg, 2, true, &kinds).unwrap();
+        assert_eq!(stats.jobs_completed, 1, "one measurement for six kinds");
     }
 
     #[test]

@@ -105,6 +105,10 @@ impl Json {
         Json::Num(n)
     }
 
+    pub fn arr(items: Vec<Json>) -> Json {
+        Json::Arr(items)
+    }
+
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
@@ -189,6 +193,17 @@ pub fn get_str<'a>(v: &'a Json, key: &str) -> Result<&'a str, String> {
 
 pub fn get_arr<'a>(v: &'a Json, key: &str) -> Result<&'a [Json], String> {
     get(v, key)?.as_arr().ok_or_else(|| format!("field {key:?} is not an array"))
+}
+
+/// Optional string field: `null` decodes to `None` (dispatch-report
+/// attempt records encode "no error" as `null`). The key itself must
+/// still be present — an absent key stays a loud decode error.
+pub fn get_opt_str(v: &Json, key: &str) -> Result<Option<String>, String> {
+    match get(v, key)? {
+        Json::Null => Ok(None),
+        Json::Str(s) => Ok(Some(s.clone())),
+        _ => Err(format!("field {key:?} is neither a string nor null")),
+    }
 }
 
 fn write_num(out: &mut String, n: f64) {
@@ -473,6 +488,16 @@ mod tests {
             parse("9007199254740992").unwrap(),
             "the collision the exclusive bound guards against"
         );
+    }
+
+    #[test]
+    fn optional_string_fields() {
+        let v = parse(r#"{"e": null, "s": "boom", "n": 3}"#).unwrap();
+        assert_eq!(get_opt_str(&v, "e").unwrap(), None);
+        assert_eq!(get_opt_str(&v, "s").unwrap(), Some("boom".into()));
+        assert!(get_opt_str(&v, "n").is_err(), "a number is neither string nor null");
+        assert!(get_opt_str(&v, "missing").unwrap_err().contains("missing"));
+        assert_eq!(Json::arr(vec![Json::num(1.0)]).pretty(), "[\n  1\n]");
     }
 
     #[test]

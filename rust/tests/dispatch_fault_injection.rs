@@ -1,0 +1,278 @@
+//! Fault-injection coverage for the cross-host sweep scheduler: a
+//! `FlakyTransport` that drops, delays, duplicates (via straggler
+//! speculation) and corrupts shard results must still yield a merged
+//! sweep byte-identical to the unsharded `Coordinator::run_batch`, and
+//! exhausted retries must fail loudly with the failing shard's full
+//! error chain. A spool-directory round trip (driver + executor loop
+//! over a shared directory, one injected transient failure) pins the
+//! same guarantee for the cross-host transport.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use opengemm::compiler::GemmShape;
+use opengemm::config::{Mechanisms, PlatformConfig};
+use opengemm::coordinator::dispatch::{
+    dispatch_plan, spool_worker_loop, CancelFlag, DispatchOptions, FaultInjector, InProcess,
+    SpoolDir, SpoolWorkerOptions, Transport,
+};
+use opengemm::coordinator::shard::{Shard, ShardResult, SweepOptions, SweepPlan, SweepResult};
+use opengemm::coordinator::{Coordinator, JobRequest};
+use opengemm::util::rng::Pcg32;
+
+fn requests(n: usize) -> Vec<JobRequest> {
+    let mut rng = Pcg32::seeded(0xD15);
+    (0..n)
+        .map(|i| {
+            let shape = GemmShape::new(8 + 8 * (i % 4), 8 + 8 * (i % 3), 8 + 8 * (i % 2));
+            let mech = if i % 2 == 0 { Mechanisms::ALL } else { Mechanisms::CPL_BUF };
+            let operands = if i % 3 == 0 {
+                let mut a = vec![0i8; shape.m * shape.k];
+                let mut b = vec![0i8; shape.k * shape.n];
+                rng.fill_i8(&mut a);
+                rng.fill_i8(&mut b);
+                Some((a, b))
+            } else {
+                None
+            };
+            let layout = if mech.strided_layout {
+                opengemm::compiler::Layout::TiledInterleaved
+            } else {
+                opengemm::compiler::Layout::TiledContiguous
+            };
+            JobRequest { shape, layout, mechanisms: mech, repeats: 1 + (i % 2) as u32, operands }
+        })
+        .collect()
+}
+
+fn plan(shards: usize, jobs: usize) -> SweepPlan {
+    let cfg = PlatformConfig::case_study();
+    let opts = SweepOptions { shards, workers: 1, ..Default::default() };
+    SweepPlan::stride(&cfg, requests(jobs), opts)
+}
+
+/// The ground truth every dispatch must reproduce byte-for-byte.
+fn unsharded_json(jobs: usize) -> String {
+    let cfg = PlatformConfig::case_study();
+    let coord = Coordinator::new(cfg).with_workers(1);
+    let outcomes = coord.run_batch(requests(jobs));
+    SweepResult { outcomes, stats: coord.stats() }.to_json().pretty()
+}
+
+/// What the flaky transport does to one (shard, attempt) dispatch.
+#[derive(Clone, Copy, PartialEq)]
+enum Fault {
+    /// Return a transport error without producing a result.
+    Drop,
+    /// Sleep before answering (straggler bait).
+    DelayMs(u64),
+    /// Return a structurally corrupt result (wrong shard index).
+    CorruptIndex,
+    /// Return a result whose index cover does not match the shard.
+    CorruptCover,
+}
+
+/// Deterministically misbehaving transport: a scripted fault per
+/// (shard_index, attempt); unscripted dispatches run in-process.
+struct FlakyTransport {
+    script: Mutex<Vec<(usize, u32, Fault)>>,
+}
+
+impl FlakyTransport {
+    fn new(script: Vec<(usize, u32, Fault)>) -> FlakyTransport {
+        FlakyTransport { script: Mutex::new(script) }
+    }
+}
+
+impl Transport for FlakyTransport {
+    fn dispatch(
+        &self,
+        shard: &Shard,
+        attempt: u32,
+        cancel: &CancelFlag,
+    ) -> Result<ShardResult, String> {
+        let fault = {
+            let script = self.script.lock().unwrap();
+            script
+                .iter()
+                .find(|&&(s, a, _)| s == shard.shard_index && a == attempt)
+                .map(|&(_, _, f)| f)
+        };
+        match fault {
+            Some(Fault::Drop) => {
+                Err(format!("flaky: dropped shard {} attempt {attempt}", shard.shard_index))
+            }
+            Some(Fault::DelayMs(ms)) => {
+                std::thread::sleep(Duration::from_millis(ms));
+                InProcess.dispatch(shard, attempt, cancel)
+            }
+            Some(Fault::CorruptIndex) => {
+                let mut result = InProcess.dispatch(shard, attempt, cancel)?;
+                result.shard_index = result.shard_index.wrapping_add(7);
+                Ok(result)
+            }
+            Some(Fault::CorruptCover) => {
+                let mut result = InProcess.dispatch(shard, attempt, cancel)?;
+                result.indices.reverse();
+                Ok(result)
+            }
+            None => InProcess.dispatch(shard, attempt, cancel),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "flaky"
+    }
+}
+
+#[test]
+fn flaky_transport_still_merges_byte_identical() {
+    const JOBS: usize = 10;
+    let want = unsharded_json(JOBS);
+    // shard 0: dropped twice, succeeds on the 3rd try;
+    // shard 1: corrupt index once, then clean;
+    // shard 2: corrupt cover once, then clean;
+    // shard 3: clean from the start.
+    let transport = FlakyTransport::new(vec![
+        (0, 0, Fault::Drop),
+        (0, 1, Fault::Drop),
+        (1, 0, Fault::CorruptIndex),
+        (2, 0, Fault::CorruptCover),
+    ]);
+    let opts = DispatchOptions { max_retries: 2, concurrency: 4, ..Default::default() };
+    let (got, report) = dispatch_plan(plan(4, JOBS), &transport, &opts).unwrap();
+    assert_eq!(got.to_json().pretty(), want, "merged JSON byte-identical under faults");
+    assert_eq!(report.retries, 4, "2 drops + 2 corruptions all retried");
+    let corrupt_errors = report
+        .attempts
+        .iter()
+        .filter(|a| {
+            a.error.as_deref().is_some_and(|e| {
+                e.contains("returned shard") || e.contains("mismatched indices")
+            })
+        })
+        .count();
+    assert_eq!(corrupt_errors, 2, "both corruptions surfaced as validation failures");
+}
+
+#[test]
+fn straggler_is_redispatched_and_duplicate_discarded() {
+    const JOBS: usize = 8;
+    let want = unsharded_json(JOBS);
+    // Shard 0's first attempt sleeps for 2s — far beyond any multiple
+    // of the other shards' wall times — so the scheduler speculates a
+    // second copy; the fast copy wins and the sleeper's (identical)
+    // result is discarded by shard_index.
+    let transport = FlakyTransport::new(vec![(0, 0, Fault::DelayMs(2000))]);
+    let opts = DispatchOptions {
+        max_retries: 0,
+        straggler_factor: 3.0,
+        concurrency: 4,
+        poll: Duration::from_millis(5),
+    };
+    let (got, report) = dispatch_plan(plan(4, JOBS), &transport, &opts).unwrap();
+    assert_eq!(got.to_json().pretty(), want, "speculation must not change the bytes");
+    assert_eq!(report.speculative_dispatches, 1, "exactly one straggler speculated");
+    assert_eq!(report.duplicates_discarded, 1, "the slow twin's result was discarded");
+    let spec = report
+        .attempts
+        .iter()
+        .find(|a| a.speculative)
+        .expect("a speculative attempt is on record");
+    assert_eq!(spec.shard_index, 0);
+}
+
+#[test]
+fn exhausted_retries_fail_loudly_with_the_error_chain() {
+    let transport = FlakyTransport::new(vec![
+        (1, 0, Fault::Drop),
+        (1, 1, Fault::CorruptIndex),
+        (1, 2, Fault::Drop),
+    ]);
+    let opts = DispatchOptions { max_retries: 2, concurrency: 2, ..Default::default() };
+    let err = dispatch_plan(plan(3, 9), &transport, &opts).unwrap_err();
+    assert!(err.contains("shard 1 failed after 3 attempt(s)"), "{err}");
+    assert!(err.contains("attempt 0: flaky: dropped shard 1 attempt 0"), "{err}");
+    assert!(err.contains("attempt 1: transport returned shard 8 for shard 1"), "{err}");
+    assert!(err.contains("attempt 2: flaky: dropped shard 1 attempt 2"), "{err}");
+}
+
+#[test]
+fn spool_roundtrip_with_transient_failure_is_byte_identical() {
+    const JOBS: usize = 6;
+    let want = unsharded_json(JOBS);
+    let dir = std::env::temp_dir().join(format!("opengemm-spool-test-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let stop = AtomicBool::new(false);
+    let got_json = std::thread::scope(|scope| {
+        // executor side: the same loop `opengemm sweep --spool-serve`
+        // runs, here on a thread instead of another host
+        let worker = scope.spawn(|| {
+            let opts = SpoolWorkerOptions { poll: Duration::from_millis(5), ..Default::default() };
+            spool_worker_loop(&dir, &opts, &stop).unwrap()
+        });
+        // driver side: spool transport with one injected transient
+        // failure, healed by a single retry
+        let poll = Duration::from_millis(5);
+        let spool = SpoolDir::new(&dir, "t_", poll, Duration::from_secs(60)).unwrap();
+        let transport = FaultInjector::new(spool, vec![1], 1);
+        let opts = DispatchOptions { max_retries: 1, concurrency: 3, ..Default::default() };
+        let (got, report) = dispatch_plan(plan(3, JOBS), &transport, &opts).unwrap();
+        assert_eq!(report.retries, 1, "the injected fault burned exactly one retry");
+        stop.store(true, Ordering::Relaxed);
+        let served = worker.join().unwrap();
+        assert_eq!(served, 3, "every shard ran through the spool directory");
+        got.to_json().pretty()
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+    assert_eq!(got_json, want, "spool-dispatched sweep byte-identical to unsharded run");
+}
+
+/// A shard file round-trips through the spool protocol's file names:
+/// `X.shard.json` offers, `X.shard.json.claimed` claims,
+/// `X.result.json` answers. Pin the executor's name derivation so a
+/// rename in one place cannot silently strand the other.
+#[test]
+fn spool_worker_ignores_foreign_files_and_serves_offers() {
+    let dir = std::env::temp_dir().join(format!("opengemm-spool-names-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // foreign files the worker must leave alone
+    std::fs::write(dir.join("README.txt"), "not a shard").unwrap();
+    std::fs::write(dir.join("x.result.json"), "{}").unwrap();
+    // a corrupt offer (sorts before the real one, so it is claimed
+    // first) must be quarantined, not kill the executor loop
+    std::fs::write(dir.join("aaa_bad.shard.json"), "{ not json").unwrap();
+
+    let cfg = PlatformConfig::case_study();
+    let opts = SweepOptions { shards: 1, workers: 1, ..Default::default() };
+    let plan = SweepPlan::stride(&cfg, requests(2), opts);
+    let shard = &plan.shards[0];
+    shard.write_file(&dir.join("job_s0_a0.shard.json")).unwrap();
+
+    let stop = AtomicBool::new(false);
+    let opts = SpoolWorkerOptions {
+        poll: Duration::from_millis(5),
+        max_shards: 1,
+        ..Default::default()
+    };
+    let served = spool_worker_loop(&dir, &opts, &stop).unwrap();
+    assert_eq!(served, 1);
+    let result_path: PathBuf = dir.join("job_s0_a0.result.json");
+    let result = ShardResult::read_file(&result_path).unwrap();
+    assert_eq!(result.shard_index, 0);
+    assert_eq!(result.outcomes.len(), 2);
+    assert!(!dir.join("job_s0_a0.shard.json").exists(), "offer consumed");
+    assert!(!dir.join("job_s0_a0.shard.json.claimed").exists(), "claim cleaned up");
+    assert!(dir.join("README.txt").exists(), "foreign files untouched");
+    assert!(
+        dir.join("aaa_bad.shard.json.rejected").exists(),
+        "corrupt offer quarantined instead of crashing the executor"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
