@@ -6,11 +6,19 @@
 //!
 //! Run with:  cargo run --release --example dse_sweep -- [--shards N]
 //!            [--workers N] [--no-fast-forward]
+//!            [--prefilter analytical [--confirm-top K]]
+//!
+//! `--prefilter analytical` prices every generator point with the
+//! closed-form cost model and simulates only the top-K instances by
+//! predicted efficiency; pruned rows are marked `*` and keep their
+//! predicted utilization.
 
+use opengemm::bail;
 use opengemm::compiler::GemmShape;
 use opengemm::config::{Mechanisms, PlatformConfig};
 use opengemm::coordinator::shard::{run_sweep, SweepOptions};
 use opengemm::coordinator::JobRequest;
+use opengemm::model::prefilter;
 use opengemm::power::PowerModel;
 use opengemm::util::cli::Args;
 use opengemm::util::table::{fmt_f, Table};
@@ -54,6 +62,12 @@ fn main() -> opengemm::util::error::Result<()> {
         (8, 8, 16),                // deeper DotProds
         (16, 16, 16),              // large array
     ];
+    let prefilter_on = match args.get("prefilter") {
+        None | Some("none") => false,
+        Some("analytical") => true,
+        Some(other) => bail!("--prefilter must be none|analytical, got {other:?}"),
+    };
+    let confirm_top = args.usize_or("confirm-top", 2)?;
     let workloads = random_suite(77, 40);
     let model = PowerModel::default();
 
@@ -62,28 +76,67 @@ fn main() -> opengemm::util::error::Result<()> {
         "TOPS/W", "GOPS/mm^2",
     ]);
 
+    // elaborate every generator point first: the prefilter ranks the
+    // whole grid of viable instances before anything is simulated
+    let mut grid: Vec<prefilter::GridVariant> = Vec::new();
+    let mut geometry: Vec<(usize, usize, usize)> = Vec::new();
     for &(mu, nu, ku) in &points {
         let Some(cfg) = instance(mu, nu, ku) else {
             println!("skipping ({mu},{nu},{ku}): does not elaborate");
             continue;
         };
-        let reqs: Vec<JobRequest> = workloads
-            .iter()
-            .map(|&s| JobRequest::timing(s, Mechanisms::ALL, 5))
-            .collect();
-        let results = run_sweep(&cfg, reqs, sweep_opts).outcomes;
-        let mut ou_sum = 0.0;
-        let mut n = 0usize;
-        for r in results.into_iter().flatten() {
-            ou_sum += r.report.overall;
-            n += 1;
+        grid.push(prefilter::GridVariant {
+            label: format!("({mu},{nu},{ku})"),
+            cfg,
+            requests: workloads
+                .iter()
+                .map(|&s| JobRequest::timing(s, Mechanisms::ALL, 5))
+                .collect(),
+        });
+        geometry.push((mu, nu, ku));
+    }
+    let (ranked, confirmed) = if prefilter_on {
+        let ranked = prefilter::rank(&grid, sweep_opts.csr_latency);
+        let keep = prefilter::frontier(&ranked, confirm_top);
+        let labels: Vec<&str> = keep.iter().map(|&i| grid[i].label.as_str()).collect();
+        println!(
+            "prefilter: simulating {}/{} instances: {}",
+            keep.len(),
+            grid.len(),
+            labels.join(", ")
+        );
+        let mut mask = vec![false; grid.len()];
+        for &i in &keep {
+            mask[i] = true;
         }
-        let mean_ou = ou_sum / n as f64;
+        (Some(ranked), mask)
+    } else {
+        (None, vec![true; grid.len()])
+    };
+
+    for (i, gv) in grid.iter().enumerate() {
+        let (mu, nu, ku) = geometry[i];
+        let cfg = &gv.cfg;
+        let (mean_ou, simulated) = if confirmed[i] {
+            let results = run_sweep(cfg, gv.requests.clone(), sweep_opts).outcomes;
+            let mut ou_sum = 0.0;
+            let mut n = 0usize;
+            for r in results.into_iter().flatten() {
+                ou_sum += r.report.overall;
+                n += 1;
+            }
+            (ou_sum / n as f64, true)
+        } else {
+            let ranked = ranked.as_ref().expect("pruned instances imply a ranking");
+            let ps = &ranked[i].predictions;
+            let mean = ps.iter().map(|p| p.overall_utilization).sum::<f64>() / ps.len() as f64;
+            (mean, false)
+        };
         let peak = cfg.peak_gops();
-        let area = model.total_area(&cfg);
-        let power = model.total_power(&cfg, mean_ou);
+        let area = model.total_area(cfg);
+        let power = model.total_power(cfg, mean_ou);
         table.row(vec![
-            format!("({mu},{nu},{ku})"),
+            format!("({mu},{nu},{ku}){}", if simulated { "" } else { " *" }),
             fmt_f(peak, 1),
             fmt_f(mean_ou, 3),
             fmt_f(peak * mean_ou, 1),
@@ -94,6 +147,9 @@ fn main() -> opengemm::util::error::Result<()> {
         ]);
     }
     println!("{}", table.markdown());
+    if prefilter_on {
+        println!("* predicted by the analytical cost model (not simulated)");
+    }
     println!(
         "note: larger arrays raise peak GOPS but lose utilization on the random\n\
          workload mix (more padding waste) — the paper's rationale for choosing\n\

@@ -1,0 +1,129 @@
+//! Bench: wall-clock speedup of the analytical DSE prefilter over full
+//! simulation on the pinned model-smoke grid (the first four Fig. 5
+//! ladder rungs x a seeded workload suite).
+//!
+//! Emits BENCH_analytical_prefilter.json at the repo root: grid size,
+//! fraction simulated, per-prediction cost, and the measured wall-clock
+//! speedup of `--prefilter analytical --confirm-top 1` vs simulating
+//! everything.
+//!
+//! Run with:  cargo bench --bench prefilter_speedup [-- --smoke]
+
+use std::time::Instant;
+
+use opengemm::config::PlatformConfig;
+use opengemm::coordinator::shard::{run_sweep, SweepOptions, SweepResult};
+use opengemm::coordinator::JobRequest;
+use opengemm::experiments::fig5::{variant_config, variant_specs};
+use opengemm::model::prefilter;
+use opengemm::util::json::Json;
+use opengemm::workloads::random_suite;
+
+fn median_overall(result: &SweepResult) -> f64 {
+    let mut overall: Vec<f64> = result
+        .outcomes
+        .iter()
+        .filter_map(|o| o.as_ref().ok().map(|r| r.report.overall))
+        .collect();
+    overall.sort_by(f64::total_cmp);
+    prefilter::percentile(&overall, 0.5)
+}
+
+fn artifact_path(name: &str) -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("package root has a parent")
+        .join(name)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|arg| arg == "--smoke");
+    let workloads = if smoke { 12 } else { 60 };
+    let repeats: u32 = if smoke { 2 } else { 5 };
+    let sweep_opts = SweepOptions::default();
+    let base = PlatformConfig::case_study();
+    let shapes = random_suite(13, workloads);
+    let grid: Vec<prefilter::GridVariant> = variant_specs()
+        .into_iter()
+        .take(4)
+        .map(|(label, mech, depth)| prefilter::GridVariant {
+            label: label.to_string(),
+            cfg: variant_config(&base, depth),
+            requests: shapes.iter().map(|&s| JobRequest::timing(s, mech, repeats)).collect(),
+        })
+        .collect();
+    let grid_jobs: usize = grid.iter().map(|g| g.requests.len()).sum();
+    eprintln!(
+        "prefilter bench: {} variants x {} workloads ({} jobs, {} repeats)",
+        grid.len(),
+        workloads,
+        grid_jobs,
+        repeats
+    );
+
+    // Baseline: simulate every variant of the grid.
+    let t0 = Instant::now();
+    let full: Vec<SweepResult> = grid
+        .iter()
+        .map(|gv| run_sweep(&gv.cfg, gv.requests.clone(), sweep_opts))
+        .collect();
+    let full_s = t0.elapsed().as_secs_f64();
+
+    // Prefiltered: rank the whole grid analytically, simulate only the
+    // top-1 variant.
+    let t1 = Instant::now();
+    let ranked = prefilter::rank(&grid, sweep_opts.csr_latency);
+    let rank_s = t1.elapsed().as_secs_f64();
+    let keep = prefilter::frontier(&ranked, 1);
+    let confirmed: Vec<SweepResult> = keep
+        .iter()
+        .map(|&i| run_sweep(&grid[i].cfg, grid[i].requests.clone(), sweep_opts))
+        .collect();
+    let prefilter_s = t1.elapsed().as_secs_f64();
+
+    let simulated_jobs: usize = confirmed.iter().map(|r| r.outcomes.len()).sum();
+    let fraction = simulated_jobs as f64 / grid_jobs as f64;
+    let speedup = full_s / prefilter_s.max(1e-9);
+    let us_per_prediction = rank_s * 1e6 / grid_jobs as f64;
+    let sim_best = (0..grid.len())
+        .max_by(|&a, &b| median_overall(&full[a]).total_cmp(&median_overall(&full[b])))
+        .expect("grid is non-empty");
+    let top1_matches = keep[0] == sim_best;
+    let frontier_identical = keep
+        .iter()
+        .zip(&confirmed)
+        .all(|(&i, c)| c.to_json().pretty() == full[i].to_json().pretty());
+
+    eprintln!(
+        "  full sweep {full_s:.3}s | prefilter {prefilter_s:.3}s \
+         (ranking {:.1}us/job) -> {speedup:.2}x, {:.1}% simulated",
+        us_per_prediction,
+        fraction * 100.0
+    );
+    eprintln!(
+        "  top-1 {} unfiltered winner; frontier bytes {}",
+        if top1_matches { "matches" } else { "MISSES" },
+        if frontier_identical { "identical" } else { "DIVERGED" }
+    );
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("analytical_prefilter")),
+        ("unit", Json::str("wall-clock seconds; speedup = full simulation / prefiltered")),
+        ("grid_variants", Json::num(grid.len() as f64)),
+        ("grid_jobs", Json::num(grid_jobs as f64)),
+        ("confirm_top", Json::num(keep.len() as f64)),
+        ("simulated_jobs", Json::num(simulated_jobs as f64)),
+        ("fraction_simulated", Json::num(fraction)),
+        ("full_sweep_seconds", Json::num(full_s)),
+        ("prefiltered_seconds", Json::num(prefilter_s)),
+        ("ranking_us_per_job", Json::num(us_per_prediction)),
+        ("wall_clock_speedup", Json::num(speedup)),
+        ("top1_matches_unfiltered", Json::Bool(top1_matches)),
+        ("frontier_byte_identical", Json::Bool(frontier_identical)),
+    ]);
+    let out = artifact_path("BENCH_analytical_prefilter.json");
+    match std::fs::write(&out, doc.pretty()) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+}

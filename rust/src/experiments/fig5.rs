@@ -14,6 +14,7 @@ use crate::compiler::GemmShape;
 use crate::config::{Mechanisms, PlatformConfig};
 use crate::coordinator::shard::{run_sweep, SweepOptions};
 use crate::coordinator::JobRequest;
+use crate::model::prefilter;
 use crate::util::stats::BoxStats;
 use crate::util::table::{ascii_box, fmt_f, Table};
 use crate::workloads::random_suite;
@@ -31,6 +32,11 @@ pub struct Fig5Options {
     /// Event-driven cycle skipping (cycle-exact; off only for
     /// differential checks).
     pub fast_forward: bool,
+    /// `Some(k)`: rank the ladder with the analytical cost model and
+    /// simulate only the top-k variants; pruned rungs keep their
+    /// predicted utilization distribution (marked in the rendering).
+    /// `None` simulates every rung.
+    pub prefilter_confirm_top: Option<usize>,
 }
 
 impl Default for Fig5Options {
@@ -42,6 +48,7 @@ impl Default for Fig5Options {
             workers: 0,
             shards: 1,
             fast_forward: true,
+            prefilter_confirm_top: None,
         }
     }
 }
@@ -53,6 +60,9 @@ pub struct Fig5Variant {
     pub buffer_depth: usize,
     pub stats: BoxStats,
     pub samples: Vec<f64>,
+    /// True when the prefilter pruned this rung: `samples`/`stats`
+    /// come from the closed-form model, not from simulation.
+    pub predicted_only: bool,
 }
 
 #[derive(Debug, Clone)]
@@ -91,24 +101,58 @@ pub fn fig5_ablation(base_cfg: &PlatformConfig, opts: Fig5Options) -> Fig5Result
         fast_forward: opts.fast_forward,
         ..Default::default()
     };
-    let mut variants = Vec::new();
-    for (label, mech, depth) in variant_specs() {
-        let cfg = variant_config(base_cfg, depth);
-        let requests: Vec<JobRequest> = shapes
-            .iter()
-            .map(|&shape| JobRequest::timing(shape, mech, opts.repeats))
-            .collect();
-        let samples: Vec<f64> = run_sweep(&cfg, requests, sweep_opts)
-            .outcomes
-            .into_iter()
-            .map(|r| r.expect("fig5 job failed").report.overall)
-            .collect();
-        variants.push(Fig5Variant {
+    let grid: Vec<prefilter::GridVariant> = variant_specs()
+        .into_iter()
+        .map(|(label, mech, depth)| prefilter::GridVariant {
             label: label.to_string(),
+            cfg: variant_config(base_cfg, depth),
+            requests: shapes
+                .iter()
+                .map(|&shape| JobRequest::timing(shape, mech, opts.repeats))
+                .collect(),
+        })
+        .collect();
+    // With a prefilter budget, rank the ladder analytically and mark
+    // everything outside the frontier as predicted-only.
+    let (ranked, confirmed) = match opts.prefilter_confirm_top {
+        None => (None, vec![true; grid.len()]),
+        Some(k) => {
+            let ranked = prefilter::rank(&grid, sweep_opts.csr_latency);
+            let k = prefilter::confirm_count(grid.len(), Some(k), None);
+            let keep = prefilter::frontier(&ranked, k);
+            let mut mask = vec![false; grid.len()];
+            for &i in &keep {
+                mask[i] = true;
+            }
+            (Some(ranked), mask)
+        }
+    };
+    let mut variants = Vec::new();
+    for (variant, gv) in grid.iter().enumerate() {
+        let depth = gv.cfg.mem.d_stream;
+        let (samples, predicted_only): (Vec<f64>, bool) = if confirmed[variant] {
+            let simulated = run_sweep(&gv.cfg, gv.requests.clone(), sweep_opts)
+                .outcomes
+                .into_iter()
+                .map(|r| r.expect("fig5 job failed").report.overall)
+                .collect();
+            (simulated, false)
+        } else {
+            let ranked = ranked.as_ref().expect("pruned variants imply a ranking");
+            let predicted = ranked[variant]
+                .predictions
+                .iter()
+                .map(|p| p.overall_utilization)
+                .collect();
+            (predicted, true)
+        };
+        variants.push(Fig5Variant {
+            label: gv.label.clone(),
             buffer_depth: depth,
             stats: BoxStats::compute(&samples)
                 .expect("fig5 runs at least one workload per variant"),
             samples,
+            predicted_only,
         });
     }
     Fig5Result { variants, shapes }
@@ -132,8 +176,13 @@ impl Fig5Result {
         let mut t = Table::new(&["variant", "min", "q1", "median", "q3", "max", "mean"]);
         for v in &self.variants {
             let s = &v.stats;
+            let label = if v.predicted_only {
+                format!("{} [predicted]", v.label)
+            } else {
+                v.label.clone()
+            };
             t.row(vec![
-                v.label.clone(),
+                label,
                 fmt_f(s.min, 4),
                 fmt_f(s.q1, 4),
                 fmt_f(s.median, 4),
@@ -189,6 +238,38 @@ mod tests {
         assert!(iqr(5) <= iqr(3) + 1e-9, "depth 4 IQR {} vs d2 {}", iqr(5), iqr(3));
         // overall improvement is substantial (paper: 2.78x)
         assert!(med[3] / med[0] > 1.5, "overall {}x", med[3] / med[0]);
+    }
+
+    /// The prefiltered ablation simulates only the confirmed frontier,
+    /// marks everything else predicted-only, and still lands on the
+    /// same winning rung as the full run.
+    #[test]
+    fn prefilter_simulates_only_the_frontier() {
+        let cfg = PlatformConfig::case_study();
+        let opts = Fig5Options { seed: 11, workloads: 12, repeats: 2, ..Default::default() };
+        let full = fig5_ablation(&cfg, opts);
+        let pruned = fig5_ablation(&cfg, Fig5Options { prefilter_confirm_top: Some(2), ..opts });
+        let simulated: Vec<usize> = (0..pruned.variants.len())
+            .filter(|&i| !pruned.variants[i].predicted_only)
+            .collect();
+        assert_eq!(simulated.len(), 2, "confirm-top 2 must simulate exactly 2 rungs");
+        // The simulated rungs are byte-for-byte the full run's samples.
+        for &i in &simulated {
+            assert_eq!(pruned.variants[i].samples, full.variants[i].samples);
+        }
+        // The confirmed frontier carries the full run's best median (the
+        // top Arch4 rungs differ only in buffer depth and sit within a
+        // few percent of each other, so the check is on utility, not on
+        // an exact index).
+        let best_full = full.variants.iter().map(|v| v.stats.median).fold(0.0, f64::max);
+        let best_kept = simulated
+            .iter()
+            .map(|&i| pruned.variants[i].stats.median)
+            .fold(0.0, f64::max);
+        assert!(
+            best_kept >= 0.95 * best_full,
+            "frontier best {best_kept} is not within 5% of the full run's best {best_full}"
+        );
     }
 
     #[test]

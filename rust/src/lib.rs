@@ -18,6 +18,7 @@ pub mod csr;
 pub mod experiments;
 pub mod gemm_core;
 pub mod host;
+pub mod model;
 pub mod power;
 pub mod runtime;
 pub mod serve;

@@ -80,6 +80,7 @@ use opengemm::experiments::{
     fig5_ablation, fig6_area_power, fig7_gemmini, table2_dnn, table3_sota, Fig5Options,
     Fig6Options, Fig7Options, Table2Options,
 };
+use opengemm::model::prefilter;
 use opengemm::power::PowerModel;
 use opengemm::runtime::Runtime;
 use opengemm::serve::{
@@ -102,6 +103,10 @@ SUBCOMMANDS:
                     --layout row|tiled|interleaved  --functional
   ablation          Fig. 5: mechanism ablation over random workloads
                     --workloads N  --seed S  --repeats N  --workers N
+                    --prefilter analytical [--confirm-top K]
+                                   (simulate only the top-K variants of
+                                    the closed-form analytical ranking;
+                                    pruned rows report predicted stats)
   dnn               Table 2: DNN benchmark (MobileNetV2/ResNet18/ViT/BERT)
                     --bert-seq N  --workers N
   area-power        Fig. 6: area & power breakdown, TOPS/W
@@ -132,6 +137,22 @@ SUBCOMMANDS:
                     --out FILE     (write instead of stdout)
                     --keep-shards DIR  (subprocess: leave shard/result
                                         files in DIR for other hosts)
+                    --prefilter analytical|none  (rank the whole job
+                                    grid with the closed-form cost
+                                    model in the driver and dispatch
+                                    only the frontier variants; the
+                                    merged JSON carries predicted stats
+                                    for every variant, simulated stats
+                                    + per-job prediction error for the
+                                    confirmed ones, and a `prefilter`
+                                    header with fraction_simulated and
+                                    the analytical ranking)
+                    --confirm-top K   (frontier size in variants;
+                                       default 1)
+                    --confirm-frac F  (frontier as a fraction of the
+                                       variant grid, rounded up;
+                                       mutually exclusive with
+                                       --confirm-top)
                     worker mode: --shard FILE [--out FILE] [--workers N]
                     spool executor mode: --spool-serve DIR [--workers N]
                                          [--max-shards N] [--poll-ms MS]
@@ -269,6 +290,11 @@ fn cmd_ablation(args: &Args) -> Result<()> {
         workers: args.usize_or("workers", 0)?,
         shards: args.usize_or("shards", 1)?,
         fast_forward: args.enabled_unless_no("fast-forward"),
+        prefilter_confirm_top: if prefilter_enabled(args)? {
+            Some(args.usize_or("confirm-top", 1)?)
+        } else {
+            None
+        },
     };
     eprintln!(
         "running {} workloads x 10 repeats x 6 variants ...",
@@ -344,6 +370,7 @@ fn sweep_doc(
                 ("label", Json::str(v.label)),
                 ("d_stream", Json::num(v.depth as f64)),
                 ("mechanisms", v.mechanisms.to_json()),
+                ("median_overall", Json::num(median_overall_of(&v.result))),
                 ("result", v.result.to_json()),
             ])
         })
@@ -353,6 +380,106 @@ fn sweep_doc(
         ("seed", Json::num(seed as f64)),
         ("workloads", Json::num(workloads as f64)),
         ("repeats", Json::num(repeats as f64)),
+        ("variants", Json::Arr(docs)),
+    ])
+}
+
+/// Median simulated overall utilization of one variant's outcomes —
+/// the statistic both the Fig. 5 table and the analytical ranking use,
+/// so the prefiltered and unfiltered documents are comparable on the
+/// same key.
+fn median_overall_of(result: &SweepResult) -> f64 {
+    let mut overall: Vec<f64> = result
+        .outcomes
+        .iter()
+        .filter_map(|o| o.as_ref().ok().map(|r| r.report.overall))
+        .collect();
+    overall.sort_by(f64::total_cmp);
+    prefilter::percentile(&overall, 0.5)
+}
+
+/// The merged document of a prefiltered sweep: predicted stats for
+/// every ladder rung, simulated result + per-job prediction error for
+/// the confirmed frontier, and a `prefilter` header carrying the
+/// analytical ranking and the simulated fraction of the grid. Like
+/// [`sweep_doc`], a deterministic function of the simulated work.
+fn sweep_doc_prefiltered(
+    seed: u64,
+    workloads: usize,
+    repeats: u32,
+    ladder: &[(&'static str, Mechanisms, usize)],
+    ranked: &[prefilter::VariantPrediction],
+    results: &[(usize, SweepResult)],
+) -> Json {
+    let grid_jobs = workloads * ladder.len();
+    let simulated_jobs: usize = results.iter().map(|(_, r)| r.outcomes.len()).sum();
+    let mut best: Option<(f64, &'static str)> = None;
+    let mut docs: Vec<Json> = Vec::with_capacity(ladder.len());
+    for (variant, &(label, mechanisms, depth)) in ladder.iter().enumerate() {
+        let mut fields = vec![
+            ("label", Json::str(label)),
+            ("d_stream", Json::num(depth as f64)),
+            ("mechanisms", mechanisms.to_json()),
+            ("predicted", ranked[variant].stats_json()),
+        ];
+        match results.iter().find(|(v, _)| *v == variant) {
+            Some((_, result)) => {
+                let median = median_overall_of(result);
+                let better = match best {
+                    None => true,
+                    Some((b, _)) => median > b,
+                };
+                if better {
+                    best = Some((median, label));
+                }
+                let errors = prefilter::job_errors(&ranked[variant].predictions, result);
+                let error_docs: Vec<Json> = errors
+                    .iter()
+                    .map(|e| match e {
+                        Some(x) => Json::num(*x),
+                        None => Json::Null,
+                    })
+                    .collect();
+                fields.push(("median_overall", Json::num(median)));
+                fields.push(("result", result.to_json()));
+                fields.push((
+                    "prediction_error",
+                    match prefilter::ErrorSummary::from_errors(&errors) {
+                        Some(s) => s.to_json(),
+                        None => Json::Null,
+                    },
+                ));
+                fields.push(("cycle_errors", Json::arr(error_docs)));
+            }
+            None => fields.push(("result", Json::Null)),
+        }
+        docs.push(Json::obj(fields));
+    }
+    let order = prefilter::frontier(ranked, ranked.len());
+    let fraction = simulated_jobs as f64 / grid_jobs.max(1) as f64;
+    let ranking: Vec<Json> = order.iter().map(|&i| Json::str(ladder[i].0)).collect();
+    Json::obj(vec![
+        ("sweep", Json::str("fig5")),
+        ("seed", Json::num(seed as f64)),
+        ("workloads", Json::num(workloads as f64)),
+        ("repeats", Json::num(repeats as f64)),
+        (
+            "prefilter",
+            Json::obj(vec![
+                ("mode", Json::str("analytical")),
+                ("grid_jobs", Json::num(grid_jobs as f64)),
+                ("simulated_jobs", Json::num(simulated_jobs as f64)),
+                ("fraction_simulated", Json::num(fraction)),
+                ("ranking", Json::arr(ranking)),
+                (
+                    "top1_simulated",
+                    match best {
+                        Some((_, label)) => Json::str(label),
+                        None => Json::Null,
+                    },
+                ),
+            ]),
+        ),
         ("variants", Json::Arr(docs)),
     ])
 }
@@ -442,7 +569,53 @@ fn transport_name(args: &Args, processes: usize) -> Result<&'static str> {
     }
 }
 
+/// Whether `--prefilter` asks for the analytical DSE prefilter.
+/// Unknown names are a hard error with the valid set listed — same
+/// policy as `--transport` and `OPENGEMM_WORKERS`.
+fn prefilter_enabled(args: &Args) -> Result<bool> {
+    match args.get("prefilter") {
+        None | Some("none") => Ok(false),
+        Some("analytical") => Ok(true),
+        Some(other) => bail!("--prefilter must be none|analytical, got {other:?}"),
+    }
+}
+
+/// Parse the frontier-size knobs. Both are validated here even when the
+/// prefilter is off, so a typo'd flag never silently degrades to a full
+/// simulation of the grid.
+fn confirm_knobs(args: &Args) -> Result<(Option<usize>, Option<f64>)> {
+    let top = match args.get("confirm-top") {
+        Some(_) => Some(args.usize_or("confirm-top", 1)?),
+        None => None,
+    };
+    let frac = match args.get("confirm-frac") {
+        Some(_) => Some(args.f64_or("confirm-frac", 0.0)?),
+        None => None,
+    };
+    if let Some(f) = frac {
+        if !f.is_finite() || f <= 0.0 || f > 1.0 {
+            bail!("--confirm-frac must be in (0, 1], got {f}");
+        }
+    }
+    if top.is_some() && frac.is_some() {
+        bail!("--confirm-top and --confirm-frac are mutually exclusive");
+    }
+    Ok((top, frac))
+}
+
 fn cmd_sweep(args: &Args) -> Result<()> {
+    // Name-valued flags are validated before any mode dispatch: a
+    // worker or spool-executor invocation with a mistyped --transport
+    // or --prefilter must fail loudly instead of running with the flag
+    // silently ignored.
+    let processes = args.usize_or("processes", 1)?;
+    let transport = transport_name(args, processes)?;
+    let prefilter_on = prefilter_enabled(args)?;
+    let (confirm_top, confirm_frac) = confirm_knobs(args)?;
+    if !prefilter_on && (confirm_top.is_some() || confirm_frac.is_some()) {
+        bail!("--confirm-top/--confirm-frac need --prefilter analytical");
+    }
+
     // worker mode: run one shard file and exit
     if let Some(shard_path) = args.get("shard") {
         return sweep_worker(args, shard_path);
@@ -458,10 +631,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let repeats = args.u64_or("repeats", 10)?;
     let repeats =
         u32::try_from(repeats).map_err(|_| anyhow!("--repeats {repeats} out of u32 range"))?;
-    let processes = args.usize_or("processes", 1)?;
     let ladder = variant_specs();
     let n_variants = args.usize_or("variants", ladder.len())?.clamp(1, ladder.len());
-    let transport = transport_name(args, processes)?;
     // Spool sweeps distribute across an unknown number of executor
     // hosts, and retry/straggler granularity is per shard — a
     // single-shard spool sweep would serialize onto one executor and
@@ -518,20 +689,49 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         if retries == 1 { "y" } else { "ies" },
     );
 
-    // One plan per variant, shared by every transport — the merged
-    // document can only differ between transports if the simulation
-    // does.
-    let plans: Vec<(usize, SweepPlan)> = ladder
+    // The full job grid, one variant per ladder rung. With the
+    // analytical prefilter, this is also what gets ranked.
+    let grid: Vec<prefilter::GridVariant> = ladder
         .iter()
-        .enumerate()
-        .map(|(variant, &(_, mech, depth))| {
-            let requests: Vec<JobRequest> = shapes
-                .iter()
-                .map(|&shape| JobRequest::timing(shape, mech, repeats))
-                .collect();
-            (variant, SweepPlan::stride(&variant_config(&cfg, depth), requests, sweep_opts))
+        .map(|&(label, mech, depth)| prefilter::GridVariant {
+            label: label.to_string(),
+            cfg: variant_config(&cfg, depth),
+            requests: shapes.iter().map(|&s| JobRequest::timing(s, mech, repeats)).collect(),
         })
         .collect();
+
+    // Analytical prefilter: price every job of every variant in closed
+    // form (microseconds per point), keep only the predicted frontier
+    // for simulation. Pruned variants still appear in the merged
+    // document with their predicted stats.
+    let (ranked, confirmed) = if prefilter_on {
+        let ranked = prefilter::rank(&grid, sweep_opts.csr_latency);
+        let k = prefilter::confirm_count(grid.len(), confirm_top, confirm_frac);
+        let keep = prefilter::frontier(&ranked, k);
+        let mut mask = vec![false; grid.len()];
+        for &i in &keep {
+            mask[i] = true;
+        }
+        eprintln!(
+            "prefilter: analytical ranking confirms {}/{} variants: {}",
+            keep.len(),
+            grid.len(),
+            keep.iter().map(|&i| grid[i].label.as_str()).collect::<Vec<_>>().join(", ")
+        );
+        (Some(ranked), mask)
+    } else {
+        (None, vec![true; grid.len()])
+    };
+
+    // One plan per confirmed variant, shared by every transport — the
+    // merged document can only differ between transports if the
+    // simulation does.
+    let mut plans: Vec<(usize, SweepPlan)> = Vec::new();
+    for (variant, gv) in grid.iter().enumerate() {
+        if confirmed[variant] {
+            plans.push((variant, SweepPlan::stride(&gv.cfg, gv.requests.clone(), sweep_opts)));
+        }
+    }
 
     let mut results: Vec<(usize, SweepResult)> = Vec::new();
     let mut reports: Vec<(usize, DispatchReport)> = Vec::new();
@@ -614,14 +814,21 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     }
     outcome?;
 
-    let variants: Vec<SweepVariantOutcome> = results
-        .into_iter()
-        .map(|(variant, result)| {
-            let (label, mechanisms, depth) = ladder[variant];
-            SweepVariantOutcome { label, depth, mechanisms, result }
-        })
-        .collect();
-    let text = sweep_doc(seed, workloads, repeats, &variants).pretty();
+    let text = match &ranked {
+        Some(ranked) => {
+            sweep_doc_prefiltered(seed, workloads, repeats, ladder, ranked, &results).pretty()
+        }
+        None => {
+            let variants: Vec<SweepVariantOutcome> = results
+                .into_iter()
+                .map(|(variant, result)| {
+                    let (label, mechanisms, depth) = ladder[variant];
+                    SweepVariantOutcome { label, depth, mechanisms, result }
+                })
+                .collect();
+            sweep_doc(seed, workloads, repeats, &variants).pretty()
+        }
+    };
     match args.get("out") {
         Some(out) => {
             std::fs::write(out, text)?;

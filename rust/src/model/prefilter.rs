@@ -1,0 +1,241 @@
+//! DSE prefilter: rank the full sweep grid analytically, simulate only
+//! the frontier.
+//!
+//! A Fig. 5-scale grid is `variants x workloads` jobs; pricing every
+//! job with [`super::predict`] costs microseconds per point, so the
+//! driver can rank all candidate accelerator variants before a single
+//! shard is built, dispatch only the most promising variants through
+//! the unchanged `coordinator::shard`/`dispatch` machinery, and report
+//! predicted numbers (plus per-job prediction error) for everything it
+//! did simulate. The pruned variants keep their analytical stats in
+//! the report, so nothing disappears — it just isn't re-derived by
+//! stepping cycles.
+//!
+//! The frontier is chosen at variant granularity (the DSE question is
+//! "which configuration wins", not "which workload"), which also keeps
+//! the confirmation runs byte-identical to the same variants of an
+//! unfiltered sweep — pinned by `tests/model_accuracy.rs`.
+
+use super::{predict_with, Prediction};
+use crate::config::PlatformConfig;
+use crate::coordinator::shard::SweepResult;
+use crate::coordinator::JobRequest;
+use crate::util::json::Json;
+
+/// One candidate of a prefilterable DSE grid: a platform instance and
+/// mechanism variant with its workload jobs.
+#[derive(Debug, Clone)]
+pub struct GridVariant {
+    pub label: String,
+    pub cfg: PlatformConfig,
+    pub requests: Vec<JobRequest>,
+}
+
+/// Analytical pricing of one grid variant.
+#[derive(Debug, Clone)]
+pub struct VariantPrediction {
+    pub label: String,
+    /// Per-job predictions, in request order.
+    pub predictions: Vec<Prediction>,
+    /// Median predicted overall utilization — the ranking key (the
+    /// paper's Fig. 5 reports the same statistic of the simulated runs).
+    pub median_overall: f64,
+    pub mean_cycles: f64,
+}
+
+impl VariantPrediction {
+    pub fn stats_json(&self) -> Json {
+        let overall: Vec<Json> = self
+            .predictions
+            .iter()
+            .map(|p| Json::num(p.overall_utilization))
+            .collect();
+        Json::obj(vec![
+            ("median_overall_utilization", Json::num(self.median_overall)),
+            ("mean_cycles", Json::num(self.mean_cycles)),
+            ("overall_utilization", Json::arr(overall)),
+        ])
+    }
+}
+
+/// Price every job of every variant analytically, in grid order.
+pub fn rank(variants: &[GridVariant], csr_latency: u64) -> Vec<VariantPrediction> {
+    variants
+        .iter()
+        .map(|v| {
+            let predictions: Vec<Prediction> = v
+                .requests
+                .iter()
+                .map(|r| {
+                    predict_with(&v.cfg, r, csr_latency)
+                        .unwrap_or_else(|_| Prediction::unschedulable())
+                })
+                .collect();
+            let mut ou: Vec<f64> = predictions.iter().map(|p| p.overall_utilization).collect();
+            ou.sort_by(f64::total_cmp);
+            let median_overall = percentile(&ou, 0.5);
+            let n = predictions.len().max(1) as f64;
+            let mean_cycles = predictions.iter().map(|p| p.cycles as f64).sum::<f64>() / n;
+            VariantPrediction { label: v.label.clone(), predictions, median_overall, mean_cycles }
+        })
+        .collect()
+}
+
+/// Indices of the `confirm_top` best-predicted variants, best first.
+/// Ties break toward the earlier grid position, so the frontier is
+/// deterministic for identical predictions.
+pub fn frontier(ranked: &[VariantPrediction], confirm_top: usize) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..ranked.len()).collect();
+    order.sort_by(|&a, &b| {
+        ranked[b].median_overall.total_cmp(&ranked[a].median_overall).then(a.cmp(&b))
+    });
+    order.truncate(confirm_top.clamp(1, ranked.len().max(1)));
+    order
+}
+
+/// Resolve the `--confirm-top K` / `--confirm-frac F` knobs into a
+/// variant count (K wins if both are somehow present; F rounds up so a
+/// positive fraction always confirms at least one variant).
+pub fn confirm_count(
+    n_variants: usize,
+    confirm_top: Option<usize>,
+    confirm_frac: Option<f64>,
+) -> usize {
+    let k = match (confirm_top, confirm_frac) {
+        (Some(k), _) => k,
+        (None, Some(f)) => (f * n_variants as f64).ceil() as usize,
+        (None, None) => 1,
+    };
+    k.clamp(1, n_variants.max(1))
+}
+
+/// Signed per-job prediction errors against a simulated result
+/// (`None` where the job failed), in request order.
+pub fn job_errors(predictions: &[Prediction], result: &SweepResult) -> Vec<Option<f64>> {
+    predictions
+        .iter()
+        .zip(result.outcomes.iter())
+        .map(|(p, outcome)| {
+            outcome
+                .as_ref()
+                .ok()
+                .map(|r| p.cycle_error(r.metrics.total_cycles))
+        })
+        .collect()
+}
+
+/// |error| summary of a confirmed variant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ErrorSummary {
+    pub median_abs: f64,
+    pub p95_abs: f64,
+    pub max_abs: f64,
+}
+
+impl ErrorSummary {
+    pub fn from_errors(errors: &[Option<f64>]) -> Option<ErrorSummary> {
+        let mut abs: Vec<f64> = errors.iter().flatten().map(|e| e.abs()).collect();
+        if abs.is_empty() {
+            return None;
+        }
+        abs.sort_by(f64::total_cmp);
+        Some(ErrorSummary {
+            median_abs: percentile(&abs, 0.5),
+            p95_abs: percentile(&abs, 0.95),
+            max_abs: *abs.last().unwrap(),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("median_abs", Json::num(self.median_abs)),
+            ("p95_abs", Json::num(self.p95_abs)),
+            ("max_abs", Json::num(self.max_abs)),
+        ])
+    }
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample (`p` in
+/// [0, 1]); the same convention the property test pins the error
+/// bounds with.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((sorted.len() as f64 * p).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::GemmShape;
+    use crate::config::Mechanisms;
+
+    fn grid(labels: &[&str]) -> Vec<GridVariant> {
+        labels
+            .iter()
+            .map(|l| GridVariant {
+                label: l.to_string(),
+                cfg: PlatformConfig::case_study(),
+                requests: vec![JobRequest::timing(
+                    GemmShape::new(32, 32, 32),
+                    Mechanisms::ALL,
+                    1,
+                )],
+            })
+            .collect()
+    }
+
+    #[test]
+    fn frontier_orders_by_predicted_utilization() {
+        let variants = grid(&["a", "b", "c"]);
+        let mut ranked = rank(&variants, 8);
+        // Force a known ordering.
+        ranked[0].median_overall = 0.2;
+        ranked[1].median_overall = 0.9;
+        ranked[2].median_overall = 0.5;
+        assert_eq!(frontier(&ranked, 2), vec![1, 2]);
+        assert_eq!(frontier(&ranked, 1), vec![1]);
+        // Oversized K clamps to the grid.
+        assert_eq!(frontier(&ranked, 10), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn frontier_breaks_ties_deterministically() {
+        let variants = grid(&["a", "b"]);
+        let ranked = rank(&variants, 8);
+        assert_eq!(ranked[0].median_overall, ranked[1].median_overall);
+        assert_eq!(frontier(&ranked, 1), vec![0]);
+    }
+
+    #[test]
+    fn confirm_count_resolution() {
+        assert_eq!(confirm_count(6, None, None), 1);
+        assert_eq!(confirm_count(6, Some(2), None), 2);
+        assert_eq!(confirm_count(6, Some(0), None), 1);
+        assert_eq!(confirm_count(6, Some(99), None), 6);
+        assert_eq!(confirm_count(6, None, Some(0.25)), 2);
+        assert_eq!(confirm_count(6, None, Some(1.0)), 6);
+        assert_eq!(confirm_count(6, Some(3), Some(0.9)), 3);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.5), 2.0);
+        assert_eq!(percentile(&xs, 0.95), 4.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        let one = [7.0];
+        assert_eq!(percentile(&one, 0.5), 7.0);
+    }
+
+    #[test]
+    fn error_summary_skips_failed_jobs() {
+        let errors = vec![Some(0.01), None, Some(-0.03), Some(0.02)];
+        let s = ErrorSummary::from_errors(&errors).unwrap();
+        assert_eq!(s.median_abs, 0.02);
+        assert_eq!(s.max_abs, 0.03);
+        assert!(ErrorSummary::from_errors(&[None]).is_none());
+    }
+}

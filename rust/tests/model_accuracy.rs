@@ -1,0 +1,179 @@
+//! The analytical cost model's accuracy contract, pinned as a
+//! regression oracle for both tiers:
+//!
+//! 1. A seeded randomized grid — GeMM shapes x mechanism/layout
+//!    regimes x (Mu, Nu, Ku) core instances — where predicted
+//!    total-cycle error against the cycle-accurate engine must hold
+//!    median |err| <= 5% and p95 |err| <= 15%. A change to the event
+//!    engine that silently shifts cycle counts trips this bound just as
+//!    surely as a regression in the model itself.
+//! 2. The prefilter differential: the variants a
+//!    `--prefilter analytical --confirm-top K` sweep confirms must be
+//!    byte-identical (wire JSON included) to the same variants of an
+//!    unfiltered sweep — pruning may only remove work, never perturb it.
+
+use opengemm::compiler::Layout;
+use opengemm::config::{Mechanisms, PlatformConfig};
+use opengemm::coordinator::shard::{run_sweep, SweepOptions};
+use opengemm::coordinator::{Coordinator, JobRequest};
+use opengemm::experiments::fig5::{variant_config, variant_specs};
+use opengemm::model::{predict_with, prefilter};
+use opengemm::workloads::random_suite;
+
+/// A generator point, scaled like `examples/dse_sweep.rs`: memory
+/// ports grow with the array so the instance still elaborates.
+fn instance(mu: usize, nu: usize, ku: usize) -> PlatformConfig {
+    let mut cfg = PlatformConfig::case_study();
+    cfg.core.mu = mu;
+    cfg.core.nu = nu;
+    cfg.core.ku = ku;
+    let need_read = cfg.core.a_tile_bytes() + cfg.core.b_tile_bytes();
+    cfg.mem.r_mem = need_read.div_ceil(cfg.mem.word_bytes()).next_power_of_two();
+    cfg.mem.w_mem = (cfg.core.c_tile_bytes().div_ceil(cfg.mem.word_bytes()))
+        .next_power_of_two()
+        .max(4);
+    cfg.mem.n_bank = cfg.mem.n_bank.max(cfg.mem.r_mem.next_power_of_two());
+    cfg.validate().expect("generator point elaborates");
+    cfg
+}
+
+/// The mechanism ladder paired with every layout the compiler accepts
+/// for it (`JobRequest::timing` picks one canonical layout; the model
+/// must hold on the rest too).
+fn regimes() -> Vec<(Mechanisms, Layout)> {
+    vec![
+        (Mechanisms::BASELINE, Layout::RowMajor),
+        (Mechanisms::BASELINE, Layout::TiledContiguous),
+        (Mechanisms::CPL, Layout::TiledContiguous),
+        (Mechanisms::CPL_BUF, Layout::TiledContiguous),
+        (Mechanisms::CPL_BUF, Layout::TiledInterleaved),
+        (Mechanisms::ALL, Layout::TiledInterleaved),
+    ]
+}
+
+#[test]
+fn predicted_cycles_track_simulated_cycles() {
+    let csr_latency = SweepOptions::default().csr_latency;
+    let instances = [instance(8, 8, 8), instance(4, 4, 8), instance(8, 8, 16)];
+    let shapes = random_suite(99, 6);
+    let mut errors: Vec<f64> = Vec::new();
+    let mut worst: (f64, String) = (0.0, String::new());
+    for cfg in &instances {
+        let coordinator = Coordinator::new(cfg.clone()).with_workers(2);
+        for &shape in &shapes {
+            for &(mechanisms, layout) in &regimes() {
+                let req = JobRequest { shape, layout, mechanisms, repeats: 2, operands: None };
+                let ctx = format!(
+                    "({},{},{}) {shape:?} {} {layout:?}",
+                    cfg.core.mu,
+                    cfg.core.nu,
+                    cfg.core.ku,
+                    mechanisms.label(),
+                );
+                let pred = predict_with(cfg, &req, csr_latency)
+                    .unwrap_or_else(|e| panic!("{ctx}: does not compile: {e}"));
+                let sim = coordinator
+                    .run_one(&req)
+                    .unwrap_or_else(|e| panic!("{ctx}: simulation failed: {e}"));
+                // Exact sub-accountings first: these are bookkeeping,
+                // not modeling, and must never drift.
+                assert_eq!(
+                    pred.compute_cycles, sim.metrics.compute_cycles,
+                    "{ctx}: ideal-compute accounting"
+                );
+                assert_eq!(
+                    pred.spm_traffic_words, sim.metrics.spm.word_requests,
+                    "{ctx}: SPM traffic accounting"
+                );
+                let err = pred.cycle_error(sim.metrics.total_cycles).abs();
+                if err > worst.0 {
+                    worst = (err, ctx);
+                }
+                errors.push(err);
+            }
+        }
+    }
+    errors.sort_by(f64::total_cmp);
+    let median = prefilter::percentile(&errors, 0.5);
+    let p95 = prefilter::percentile(&errors, 0.95);
+    assert!(
+        median <= 0.05,
+        "median |cycle error| {median:.4} > 5% over {} points (worst {:.4} at {})",
+        errors.len(),
+        worst.0,
+        worst.1
+    );
+    assert!(
+        p95 <= 0.15,
+        "p95 |cycle error| {p95:.4} > 15% over {} points (worst {:.4} at {})",
+        errors.len(),
+        worst.0,
+        worst.1
+    );
+}
+
+/// Build the pinned small grid the CI `model-smoke` lane also runs:
+/// the first four Fig. 5 ladder rungs (each a distinct mechanism, so
+/// medians are well-separated) over a seeded workload suite.
+fn pinned_grid(repeats: u32) -> Vec<prefilter::GridVariant> {
+    let base = PlatformConfig::case_study();
+    let shapes = random_suite(13, 10);
+    variant_specs()
+        .into_iter()
+        .take(4)
+        .map(|(label, mech, depth)| prefilter::GridVariant {
+            label: label.to_string(),
+            cfg: variant_config(&base, depth),
+            requests: shapes.iter().map(|&s| JobRequest::timing(s, mech, repeats)).collect(),
+        })
+        .collect()
+}
+
+#[test]
+fn prefilter_frontier_is_byte_identical_to_the_unfiltered_run() {
+    let sweep_opts = SweepOptions { workers: 2, ..Default::default() };
+    let grid = pinned_grid(2);
+    // Unfiltered: simulate every variant.
+    let full: Vec<_> = grid
+        .iter()
+        .map(|gv| run_sweep(&gv.cfg, gv.requests.clone(), sweep_opts))
+        .collect();
+    // Prefiltered: rank analytically, confirm only the frontier.
+    let ranked = prefilter::rank(&grid, sweep_opts.csr_latency);
+    let keep = prefilter::frontier(&ranked, prefilter::confirm_count(grid.len(), Some(1), None));
+    assert_eq!(keep.len(), 1);
+    // fraction_simulated on the pinned grid: 1 of 4 variants = 25%,
+    // the model-smoke ceiling.
+    assert!(keep.len() as f64 <= 0.25 * grid.len() as f64);
+    for &i in &keep {
+        let confirmed = run_sweep(&grid[i].cfg, grid[i].requests.clone(), sweep_opts);
+        // The confirmation run is the unfiltered run's slice, down to
+        // the serialized wire bytes the sweep documents carry.
+        assert_eq!(
+            confirmed.to_json().pretty(),
+            full[i].to_json().pretty(),
+            "variant {i} ({}) diverged under the prefilter",
+            grid[i].label
+        );
+    }
+    // With distinct mechanisms per rung the ranking is unambiguous:
+    // the predicted winner IS the simulated winner.
+    let sim_best = (0..grid.len())
+        .max_by(|&a, &b| median_overall(&full[a]).total_cmp(&median_overall(&full[b])))
+        .unwrap();
+    assert_eq!(
+        keep[0], sim_best,
+        "prefilter confirmed {} but the unfiltered winner is {}",
+        grid[keep[0]].label, grid[sim_best].label
+    );
+}
+
+fn median_overall(result: &opengemm::coordinator::shard::SweepResult) -> f64 {
+    let mut overall: Vec<f64> = result
+        .outcomes
+        .iter()
+        .filter_map(|o| o.as_ref().ok().map(|r| r.report.overall))
+        .collect();
+    overall.sort_by(f64::total_cmp);
+    prefilter::percentile(&overall, 0.5)
+}
