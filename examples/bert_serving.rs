@@ -14,12 +14,13 @@
 //!   cargo run --release --example bert_serving -- [--requests N]
 //!     [--workload bert|bert-large|resnet18|mixed] [--rate RPS]
 //!     [--arrival poisson|closed --clients N] [--seed S]
+//!     [--devices N --placement round-robin|least-work|affinity]
 
 use std::time::Instant;
 
 use opengemm::config::PlatformConfig;
 use opengemm::serve::{
-    ms_to_cycles, run_serve, ArrivalSpec, BatchPolicy, ServeOptions, WorkloadSpec,
+    ms_to_cycles, run_serve, ArrivalSpec, BatchPolicy, PlacementPolicy, ServeOptions, WorkloadSpec,
 };
 use opengemm::util::cli::Args;
 use opengemm::{anyhow, bail};
@@ -28,8 +29,10 @@ fn main() -> opengemm::util::error::Result<()> {
     let args = Args::from_env()?;
     let cfg = PlatformConfig::case_study();
     let workload_name = args.get_or("workload", "bert");
-    let workload = WorkloadSpec::from_name(workload_name, &WorkloadSpec::DEFAULT_SEQS)
-        .ok_or_else(|| anyhow!("unknown --workload {workload_name:?}"))?;
+    let workload =
+        WorkloadSpec::from_name(workload_name, &WorkloadSpec::DEFAULT_SEQS).ok_or_else(|| {
+            anyhow!("--workload must be bert|bert-large|resnet18|mixed, got {workload_name:?}")
+        })?;
     let arrival = match args.get_or("arrival", "poisson") {
         "poisson" => ArrivalSpec::OpenPoisson { rate_rps: args.f64_or("rate", 200.0)? },
         "closed" => ArrivalSpec::ClosedLoop {
@@ -38,6 +41,10 @@ fn main() -> opengemm::util::error::Result<()> {
         },
         other => bail!("--arrival must be poisson|closed, got {other:?}"),
     };
+    let placement_name = args.get_or("placement", "round-robin");
+    let placement = PlacementPolicy::from_name(placement_name).ok_or_else(|| {
+        anyhow!("--placement must be {}, got {placement_name:?}", PlacementPolicy::VALID_NAMES)
+    })?;
     let opts = ServeOptions {
         workload,
         arrival,
@@ -45,6 +52,8 @@ fn main() -> opengemm::util::error::Result<()> {
         requests: args.usize_or("requests", 32)?,
         seed: args.u64_or("seed", 1)?,
         fast_forward: args.enabled_unless_no("fast-forward"),
+        devices: args.usize_or("devices", 1)?,
+        placement,
         ..Default::default()
     };
 

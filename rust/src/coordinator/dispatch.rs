@@ -413,9 +413,12 @@ pub fn spool_worker_loop(
                 // long-lived executor that other drivers depend on:
                 // quarantine the file (evidence for the operator, and
                 // the rename stops rescan loops) and keep serving.
-                eprintln!("spool worker: rejecting {}: {e}", offer.display());
-                let rejected = offer.with_file_name(format!("{name}.rejected"));
-                let _ = std::fs::rename(&claim, rejected);
+                eprintln!(
+                    "spool worker: quarantining poison shard {}: parse error: {e}",
+                    offer.display()
+                );
+                let poison = offer.with_file_name(format!("{name}.poison"));
+                let _ = std::fs::rename(&claim, poison);
                 continue;
             }
         };

@@ -23,13 +23,18 @@
 //! process (open-loop Poisson or closed-loop clients) pushes BERT
 //! encoder-layer / ResNet-18 requests through a virtual-time queueing
 //! model with a pluggable batching policy, and the report carries
-//! p50/p90/p95/p99/max per-request latency. The JSON output is a pure
-//! function of (config, options, seed) — two runs with the same seed
-//! are byte-identical (the CI `serve-smoke` lane diffs them):
+//! p50/p90/p95/p99/max per-request latency. With `--devices N` the
+//! harness simulates a fleet behind a placement policy, with
+//! deterministic fault injection, timeout failover, hedging and SLO
+//! load shedding. The JSON output is a pure function of (config,
+//! options, seed) — two runs with the same seed are byte-identical,
+//! faults included (the CI `serve-smoke` and `fleet-smoke` lanes diff
+//! them):
 //!
 //! ```text
 //! opengemm serve --workload bert --requests 64 --rate 500 --seed 7 --json
 //! opengemm serve --workload mixed --arrival closed --clients 8 --batching size --batch 4
+//! opengemm serve --devices 4 --placement least-work --fail-device 2@50000 --json
 //! ```
 //!
 //! ## Distributed sweeps (`opengemm sweep`)
@@ -84,7 +89,8 @@ use opengemm::model::prefilter;
 use opengemm::power::PowerModel;
 use opengemm::runtime::Runtime;
 use opengemm::serve::{
-    ms_to_cycles, run_serve, ArrivalSpec, BatchPolicy, ServeOptions, WorkloadSpec,
+    ms_to_cycles, run_serve, ArrivalSpec, BatchPolicy, FaultSpec, PlacementPolicy, ServeOptions,
+    WorkloadSpec,
 };
 use opengemm::util::cli::Args;
 use opengemm::util::json::Json;
@@ -167,6 +173,20 @@ SUBCOMMANDS:
                     --overhead-cycles C  (per-batch dispatch cost)
                     --seqs 64,128,...    (BERT sequence-length mix)
                     --repeat-cap R  --workers N
+                    --devices N    (simulated devices behind the router)
+                    --placement round-robin|least-work|affinity
+                    --fail-device IDX@CYCLE      (fail-stop injection;
+                                    comma-separate for several)
+                    --degrade-device IDX@CYCLE:FACTOR  (slow-down
+                                    injection, FACTOR >= 1)
+                    --slo-ms MS    (shed arrivals whose predicted wait
+                                    exceeds the SLO; reported, never
+                                    silent)
+                    --hedge        (hedged re-issue past the p99 window;
+                                    first completion wins, loser's
+                                    cycles counted as waste)
+                    --retries N    (failover re-dispatch budget per
+                                    batch; default 2)
                     --json         (JSON report on stdout, not the table)
                     --out FILE     (also write the JSON report to FILE)
   verify            functional equivalence: simulator vs AOT artifacts
@@ -860,6 +880,22 @@ fn parse_seqs(args: &Args) -> Result<Vec<usize>> {
     }
 }
 
+/// Parse a comma-separated fault-injection flag (`--fail-device
+/// 2@50000,3@90000`) through the given per-item parser.
+fn parse_faults(
+    args: &Args,
+    key: &str,
+    parse: fn(&str) -> std::result::Result<FaultSpec, String>,
+) -> Result<Vec<FaultSpec>> {
+    match args.get(key) {
+        None => Ok(Vec::new()),
+        Some(list) => list
+            .split(',')
+            .map(|item| parse(item.trim()).map_err(|e| anyhow!(e)))
+            .collect(),
+    }
+}
+
 /// A millisecond CLI knob: finite and non-negative, or a hard error.
 fn nonneg_ms(args: &Args, key: &str, default: f64) -> Result<f64> {
     let v = args.f64_or(key, default)?;
@@ -897,6 +933,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
         other => bail!("--batching must be immediate|size|deadline, got {other:?}"),
     };
+    let placement_name = args.get_or("placement", "round-robin");
+    let placement = PlacementPolicy::from_name(placement_name).ok_or_else(|| {
+        anyhow!("--placement must be {}, got {placement_name:?}", PlacementPolicy::VALID_NAMES)
+    })?;
+    let devices = args.usize_or("devices", 1)?;
+    if devices == 0 {
+        bail!("--devices needs at least 1 device");
+    }
+    let mut faults = parse_faults(args, "fail-device", FaultSpec::parse_fail)?;
+    faults.extend(parse_faults(args, "degrade-device", FaultSpec::parse_degrade)?);
+    let slo_ms = match args.get("slo-ms") {
+        Some(_) => Some(nonneg_ms(args, "slo-ms", 0.0)?),
+        None => None,
+    };
     let opts = ServeOptions {
         workload,
         arrival,
@@ -907,6 +957,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         fast_forward: args.enabled_unless_no("fast-forward"),
         repeat_cap: args.usize_or("repeat-cap", 16)? as u32,
         dispatch_overhead_cycles: args.u64_or("overhead-cycles", 0)?,
+        devices,
+        placement,
+        faults,
+        slo_ms,
+        hedge: args.has("hedge"),
+        retries: args.usize_or("retries", 2)?,
     };
     let report = run_serve(&cfg, &opts).map_err(|e| anyhow!(e))?;
     let json = report.to_json().pretty();

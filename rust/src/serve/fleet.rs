@@ -1,0 +1,869 @@
+//! Fleet simulator: N virtual devices behind a router, with
+//! deterministic fault injection, failover, hedging and SLO admission
+//! control — the single-device engine of [`super::queue`] generalized
+//! to the "how many devices do I need and what happens when one dies"
+//! question.
+//!
+//! One virtual-time event loop drives everything, and every mechanism
+//! is a pure function of `(arrival source, service table, batching
+//! policy, FleetSpec)` — a same-seed trace replays byte-identically,
+//! faults included (the CI `fleet-smoke` lane diffs two real process
+//! invocations). With one device and no faults the timeline is
+//! *identical* to [`super::queue::simulate_queue`] — the differential
+//! the tests pin.
+//!
+//! ## Mechanisms
+//!
+//! - **Fault injection** ([`FaultSpec`]): a device **fail-stops** at a
+//!   chosen virtual cycle (it silently stops executing, mid-batch work
+//!   is lost), or **slow-degrades** (cycles executed after the fault
+//!   cycle take `factor`× as long — a thermally throttled or
+//!   contended device).
+//! - **Timeout failure detection + failover**: the router never sees
+//!   the fault schedule. It learns a device died when the expected
+//!   completion of an in-flight batch passes without a result — the
+//!   expected completion *is* the timeout — and then re-dispatches the
+//!   batch to a surviving device, bounded by the per-batch
+//!   [`FleetSpec::retries`] budget. Cycles the dead device burned
+//!   before dying are accounted as waste. Batches queued behind a
+//!   doomed attempt re-route at the detection cycle without paying
+//!   another timeout.
+//! - **Hedging** ([`FleetSpec::hedge`]): once enough batch windows
+//!   have completed, an attempt expected to run longer than the p99 of
+//!   observed windows gets a duplicate issued on another device after
+//!   that p99 delay. First completion wins; the loser is cancelled at
+//!   the winner's completion and every cycle it burned is waste.
+//! - **SLO admission control** ([`FleetSpec::slo_cycles`]): an arrival
+//!   whose predicted queueing delay (earliest believed device
+//!   availability) exceeds the SLO is shed at admission — counted and
+//!   reported, never silently dropped. Closed-loop clients treat the
+//!   rejection as an instant completion and re-issue after thinking.
+//!
+//! Detection knowledge is cycle-stamped: a dead-but-undetected device
+//! still looks healthy (and busy until its doomed batch's timeout) to
+//! both placement and the SLO predictor.
+
+use std::collections::VecDeque;
+
+use crate::util::stats::quantile_sorted;
+
+use super::batching::BatchPolicy;
+use super::queue::{ArrivalSource, RequestRecord};
+use super::router::{DeviceView, PlacementPolicy, Router};
+
+/// Completed batch windows needed before the p99 hedge delay is
+/// considered meaningful.
+const HEDGE_MIN_SAMPLES: usize = 4;
+
+/// What a deterministic device fault does.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The device stops executing at the fault cycle and never
+    /// recovers; in-flight work is lost.
+    FailStop,
+    /// Cycles executed after the fault cycle take `factor`× as long.
+    Degrade { factor: f64 },
+}
+
+/// One injected device fault, scheduled in virtual cycles.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    pub device: usize,
+    pub at_cycle: u64,
+    pub kind: FaultKind,
+}
+
+impl FaultSpec {
+    /// Parse a `--fail-device` item: `IDX@CYCLE`, e.g. `2@50000`.
+    pub fn parse_fail(s: &str) -> Result<FaultSpec, String> {
+        let (d, c) = s
+            .split_once('@')
+            .ok_or_else(|| format!("--fail-device expects IDX@CYCLE, got {s:?}"))?;
+        Ok(FaultSpec {
+            device: parse_num(d, "--fail-device", "device index")?,
+            at_cycle: parse_num(c, "--fail-device", "cycle")?,
+            kind: FaultKind::FailStop,
+        })
+    }
+
+    /// Parse a `--degrade-device` item: `IDX@CYCLE:FACTOR`, e.g.
+    /// `1@50000:8`.
+    pub fn parse_degrade(s: &str) -> Result<FaultSpec, String> {
+        let usage = || format!("--degrade-device expects IDX@CYCLE:FACTOR, got {s:?}");
+        let (d, rest) = s.split_once('@').ok_or_else(usage)?;
+        let (c, f) = rest.split_once(':').ok_or_else(usage)?;
+        let factor: f64 = f
+            .trim()
+            .parse()
+            .map_err(|_| format!("--degrade-device: bad slow-down factor {f:?}"))?;
+        if !factor.is_finite() || factor < 1.0 {
+            return Err(format!(
+                "--degrade-device: factor must be a finite slow-down >= 1, got {factor}"
+            ));
+        }
+        Ok(FaultSpec {
+            device: parse_num(d, "--degrade-device", "device index")?,
+            at_cycle: parse_num(c, "--degrade-device", "cycle")?,
+            kind: FaultKind::Degrade { factor },
+        })
+    }
+}
+
+fn parse_num<T: std::str::FromStr>(s: &str, flag: &str, what: &str) -> Result<T, String> {
+    s.trim().parse().map_err(|_| format!("{flag}: bad {what} {s:?}"))
+}
+
+/// Fleet-level serving knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSpec {
+    pub devices: usize,
+    pub placement: PlacementPolicy,
+    pub faults: Vec<FaultSpec>,
+    /// Shed an arrival when its predicted queueing delay exceeds this.
+    pub slo_cycles: Option<u64>,
+    /// Hedged re-issue after a p99-derived delay.
+    pub hedge: bool,
+    /// Failover re-dispatch budget per batch.
+    pub retries: usize,
+}
+
+impl Default for FleetSpec {
+    fn default() -> Self {
+        FleetSpec {
+            devices: 1,
+            placement: PlacementPolicy::RoundRobin,
+            faults: Vec::new(),
+            slo_cycles: None,
+            hedge: false,
+            retries: 2,
+        }
+    }
+}
+
+/// Why a device attempt at a batch ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttemptOutcome {
+    /// Completed and its result was used.
+    Won,
+    /// A hedge duplicate (or hedged primary) cancelled when the other
+    /// attempt completed first.
+    Cancelled,
+    /// The device fail-stopped during the attempt.
+    Failed,
+}
+
+/// One device's occupancy window for one batch attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AttemptRecord {
+    pub batch: usize,
+    pub device: usize,
+    pub start: u64,
+    /// Cycle the device stopped working on this attempt (completion,
+    /// cancellation, or death).
+    pub end: u64,
+    pub outcome: AttemptOutcome,
+}
+
+/// One dispatched batch, with its winning attempt's timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FleetBatchRecord {
+    pub close: u64,
+    pub start: u64,
+    pub completion: u64,
+    pub size: usize,
+    /// Device whose attempt won.
+    pub device: usize,
+    /// Device attempts this batch needed (1 = clean dispatch).
+    pub attempts: usize,
+}
+
+/// An arrival rejected by SLO admission control.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShedRecord {
+    pub id: usize,
+    pub kind: usize,
+    pub arrival: u64,
+}
+
+/// One device's totals over the run.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct DeviceOutcome {
+    /// Cycles spent executing attempts (won, cancelled or failed).
+    pub busy_cycles: u64,
+    /// Batches whose winning attempt ran here.
+    pub batches_won: usize,
+    /// The injected fail-stop cycle, if any.
+    pub failed_at: Option<u64>,
+    /// The injected `(cycle, factor)` degradation, if any.
+    pub degraded: Option<(u64, f64)>,
+}
+
+/// Robustness counters — every one reported, none silently dropped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FleetCounters {
+    /// Batch-level failover re-dispatches after a failure detection.
+    pub failovers: usize,
+    /// Request-level re-dispatches (members of failed-over batches).
+    pub retries: usize,
+    /// Hedged duplicates issued.
+    pub hedges: usize,
+    /// Arrivals shed by SLO admission control.
+    pub sheds: usize,
+    /// Device cycles burned by attempts whose result was not used
+    /// (died mid-batch, or lost a hedge race).
+    pub wasted_cycles: u64,
+}
+
+/// The full simulated fleet timeline.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FleetOutcome {
+    /// Served requests, in arrival (= id) order.
+    pub records: Vec<RequestRecord>,
+    /// In dispatch order.
+    pub batches: Vec<FleetBatchRecord>,
+    /// Every device occupancy window, in resolution order.
+    pub attempts: Vec<AttemptRecord>,
+    /// Arrivals rejected at admission, in arrival order.
+    pub shed: Vec<ShedRecord>,
+    pub devices: Vec<DeviceOutcome>,
+    pub counters: FleetCounters,
+    /// Total arrivals offered (= served + shed).
+    pub offered: usize,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Device {
+    free_at: u64,
+    busy_cycles: u64,
+    batches_won: usize,
+    fail_at: Option<u64>,
+    degrade: Option<(u64, f64)>,
+    /// Cycle the router detected the fail-stop (the missed timeout).
+    fail_detected_at: Option<u64>,
+}
+
+impl Device {
+    fn schedulable_at(&self, now: u64) -> bool {
+        self.fail_detected_at.is_none_or(|t| t > now)
+    }
+
+    /// Degrade-aware completion of `work` cycles starting at `start`.
+    fn finish(&self, start: u64, work: u64) -> u64 {
+        match self.degrade {
+            None => start + work,
+            Some((at, factor)) => {
+                let scale = |c: u64| (c as f64 * factor).round() as u64;
+                if start >= at {
+                    start + scale(work)
+                } else {
+                    let fast = at - start;
+                    if work <= fast {
+                        start + work
+                    } else {
+                        at + scale(work - fast)
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn views_at(devs: &[Device], now: u64) -> Vec<DeviceView> {
+    devs.iter()
+        .map(|d| DeviceView { free_at: d.free_at, schedulable: d.schedulable_at(now) })
+        .collect()
+}
+
+/// Earliest believed device availability relative to `now` — the
+/// admission controller's queueing-delay prediction. `u64::MAX` when
+/// every device's failure has been detected.
+fn predicted_wait(devs: &[Device], now: u64) -> u64 {
+    devs.iter()
+        .filter(|d| d.schedulable_at(now))
+        .map(|d| d.free_at.saturating_sub(now))
+        .min()
+        .unwrap_or(u64::MAX)
+}
+
+/// p99 of completed batch windows, the hedge trigger/delay. `None`
+/// until hedging can act (enabled, a device to hedge onto, history).
+fn hedge_delay(spec: &FleetSpec, windows: &[f64]) -> Option<u64> {
+    if !spec.hedge || spec.devices < 2 || windows.len() < HEDGE_MIN_SAMPLES {
+        return None;
+    }
+    let mut sorted = windows.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    quantile_sorted(&sorted, 0.99).map(|p| p.ceil().max(1.0) as u64)
+}
+
+fn validate(spec: &FleetSpec) -> Result<(), String> {
+    if spec.devices == 0 {
+        return Err("fleet needs at least 1 device".into());
+    }
+    let mut seen = vec![(false, false); spec.devices]; // (fail, degrade)
+    for f in &spec.faults {
+        if f.device >= spec.devices {
+            return Err(format!(
+                "fault targets device {} but the fleet has devices 0..{}",
+                f.device,
+                spec.devices - 1
+            ));
+        }
+        let slot = &mut seen[f.device];
+        match f.kind {
+            FaultKind::FailStop => {
+                if slot.0 {
+                    return Err(format!("device {} has two fail-stop faults", f.device));
+                }
+                slot.0 = true;
+            }
+            FaultKind::Degrade { factor } => {
+                if !factor.is_finite() || factor < 1.0 {
+                    return Err(format!(
+                        "degrade factor must be a finite slow-down >= 1, got {factor}"
+                    ));
+                }
+                if slot.1 {
+                    return Err(format!("device {} has two degrade faults", f.device));
+                }
+                slot.1 = true;
+            }
+        }
+    }
+    Ok(())
+}
+
+struct Resolved {
+    device: usize,
+    start: u64,
+    completion: u64,
+    attempts: usize,
+}
+
+/// Run the fleet queueing model to completion. Batching semantics are
+/// exactly [`super::queue::simulate_queue`]'s; each closed batch is
+/// placed by the router and resolved through failover/hedging. Errors
+/// when a batch exhausts its failover budget or outlives the fleet.
+pub fn simulate_fleet(
+    source: &mut ArrivalSource,
+    service_by_kind: &[u64],
+    policy: BatchPolicy,
+    overhead_cycles: u64,
+    spec: &FleetSpec,
+) -> Result<FleetOutcome, String> {
+    validate(spec)?;
+    let mut devs: Vec<Device> = vec![Device::default(); spec.devices];
+    for f in &spec.faults {
+        match f.kind {
+            FaultKind::FailStop => devs[f.device].fail_at = Some(f.at_cycle),
+            FaultKind::Degrade { factor } => devs[f.device].degrade = Some((f.at_cycle, factor)),
+        }
+    }
+    let mut router = Router::new(spec.placement);
+    let max_batch = policy.max_batch();
+    let max_wait = policy.max_wait();
+    // (id, kind, arrival)
+    let mut queue: VecDeque<(usize, usize, u64)> = VecDeque::new();
+    let mut next_id = 0usize;
+    let mut out = FleetOutcome::default();
+    // completed (winning) batch windows, feeding the p99 hedge delay
+    let mut windows: Vec<f64> = Vec::new();
+
+    loop {
+        let next_arrival = source.peek();
+        // batch-close rules, identical to simulate_queue
+        let close: Option<u64> = if queue.len() >= max_batch {
+            Some(queue[max_batch - 1].2)
+        } else if !queue.is_empty() && next_arrival.is_none() {
+            Some(queue.back().unwrap().2)
+        } else if let (Some(wait), Some(front)) = (max_wait, queue.front()) {
+            let expiry = front.2.saturating_add(wait);
+            match next_arrival {
+                Some(a) if a <= expiry => None,
+                _ => Some(expiry),
+            }
+        } else {
+            None
+        };
+
+        if let Some(close_at) = close {
+            let size = queue.len().min(max_batch);
+            let members: Vec<(usize, usize, u64)> = queue.drain(..size).collect();
+            let service: u64 = members.iter().map(|&(_, k, _)| service_by_kind[k]).sum();
+            let work = overhead_cycles + service;
+            let lead_kind = members[0].1;
+            let delay = hedge_delay(spec, &windows);
+            let batch_idx = out.batches.len();
+            let r = dispatch_batch(
+                &mut devs,
+                &mut router,
+                close_at,
+                work,
+                lead_kind,
+                size,
+                spec,
+                delay,
+                batch_idx,
+                &mut out,
+            )?;
+            for (id, kind, arrival) in members {
+                out.records.push(RequestRecord {
+                    id,
+                    kind,
+                    arrival,
+                    service_cycles: service_by_kind[kind],
+                    start: r.start,
+                    completion: r.completion,
+                    batch: batch_idx,
+                });
+            }
+            windows.push((r.completion - r.start) as f64);
+            out.batches.push(FleetBatchRecord {
+                close: close_at,
+                start: r.start,
+                completion: r.completion,
+                size,
+                device: r.device,
+                attempts: r.attempts,
+            });
+            source.on_batch_dispatched(size, r.completion);
+        } else if let Some((cycle, kind)) = source.pop() {
+            let id = next_id;
+            next_id += 1;
+            if let Some(slo) = spec.slo_cycles {
+                if predicted_wait(&devs, cycle) > slo {
+                    out.counters.sheds += 1;
+                    out.shed.push(ShedRecord { id, kind, arrival: cycle });
+                    // the rejection is an instant completion from the
+                    // client's point of view: closed-loop clients
+                    // re-issue after their think time
+                    source.on_batch_dispatched(1, cycle);
+                    continue;
+                }
+            }
+            queue.push_back((id, kind, cycle));
+        } else {
+            debug_assert!(queue.is_empty());
+            break;
+        }
+    }
+    out.offered = next_id;
+    out.devices = devs
+        .iter()
+        .map(|d| DeviceOutcome {
+            busy_cycles: d.busy_cycles,
+            batches_won: d.batches_won,
+            failed_at: d.fail_at,
+            degraded: d.degrade,
+        })
+        .collect();
+    debug_assert_eq!(out.records.len() + out.shed.len(), out.offered);
+    Ok(out)
+}
+
+/// Place one closed batch and resolve it to a winning attempt,
+/// walking failovers and at most one hedge duplicate.
+#[allow(clippy::too_many_arguments)]
+fn dispatch_batch(
+    devs: &mut [Device],
+    router: &mut Router,
+    close_at: u64,
+    work: u64,
+    lead_kind: usize,
+    size: usize,
+    spec: &FleetSpec,
+    hedge_delay: Option<u64>,
+    batch_idx: usize,
+    out: &mut FleetOutcome,
+) -> Result<Resolved, String> {
+    let mut ready = close_at;
+    let mut redispatches = 0usize;
+    let mut attempts = 0usize;
+    let budget = |redispatches: &mut usize| -> Result<(), String> {
+        *redispatches += 1;
+        if *redispatches > spec.retries {
+            return Err(format!(
+                "batch {batch_idx}: failover budget exhausted after {} re-dispatches \
+                 (raise --retries or keep more devices alive)",
+                spec.retries
+            ));
+        }
+        Ok(())
+    };
+    loop {
+        let views = views_at(devs, ready);
+        let Some(d) = router.pick(&views, lead_kind, None) else {
+            return Err(format!(
+                "batch {batch_idx}: no live device remains (all {} failed)",
+                devs.len()
+            ));
+        };
+        let start = devs[d].free_at.max(ready);
+        if let Some(t) = devs[d].fail_detected_at {
+            // assigned behind a doomed attempt: by the time this batch
+            // would start, the failure is already detected — re-route
+            // at the detection cycle without another timeout window
+            debug_assert!(t <= start);
+            out.counters.failovers += 1;
+            out.counters.retries += size;
+            budget(&mut redispatches)?;
+            ready = ready.max(t);
+            continue;
+        }
+        attempts += 1;
+        let completion = devs[d].finish(start, work);
+        if let Some(fail_at) = devs[d].fail_at {
+            if fail_at < completion {
+                // the device dies mid-attempt; the router only learns
+                // when the expected completion passes without a result
+                let worked_until = fail_at.clamp(start, completion);
+                let did = worked_until - start;
+                devs[d].busy_cycles += did;
+                devs[d].free_at = completion;
+                devs[d].fail_detected_at = Some(completion);
+                out.counters.wasted_cycles += did;
+                out.counters.failovers += 1;
+                out.counters.retries += size;
+                out.attempts.push(AttemptRecord {
+                    batch: batch_idx,
+                    device: d,
+                    start,
+                    end: worked_until,
+                    outcome: AttemptOutcome::Failed,
+                });
+                budget(&mut redispatches)?;
+                ready = completion;
+                continue;
+            }
+        }
+        // this attempt will complete; optionally race a hedge duplicate
+        if let Some(delay) = hedge_delay {
+            if completion - start > delay {
+                let issue = start.saturating_add(delay);
+                let views = views_at(devs, issue);
+                if let Some(alt) = router.pick(&views, lead_kind, Some(d)) {
+                    out.counters.hedges += 1;
+                    attempts += 1;
+                    let alt_start = devs[alt].free_at.max(issue);
+                    let alt_completion = devs[alt].finish(alt_start, work);
+                    let alt_dies = devs[alt].fail_at.is_some_and(|f| f < alt_completion);
+                    if !alt_dies && alt_completion < completion {
+                        // duplicate wins: the primary is cancelled at the
+                        // winner's completion, its cycles are waste
+                        devs[d].busy_cycles += alt_completion - start;
+                        devs[d].free_at = alt_completion;
+                        out.counters.wasted_cycles += alt_completion - start;
+                        out.attempts.push(AttemptRecord {
+                            batch: batch_idx,
+                            device: d,
+                            start,
+                            end: alt_completion,
+                            outcome: AttemptOutcome::Cancelled,
+                        });
+                        devs[alt].busy_cycles += alt_completion - alt_start;
+                        devs[alt].free_at = alt_completion;
+                        devs[alt].batches_won += 1;
+                        out.attempts.push(AttemptRecord {
+                            batch: batch_idx,
+                            device: alt,
+                            start: alt_start,
+                            end: alt_completion,
+                            outcome: AttemptOutcome::Won,
+                        });
+                        return Ok(Resolved {
+                            device: alt,
+                            start: alt_start,
+                            completion: alt_completion,
+                            attempts,
+                        });
+                    }
+                    // primary wins: cancel the duplicate at the primary's
+                    // completion (or the duplicate device's death, if
+                    // sooner); cycles it burned are waste
+                    if alt_start < completion {
+                        let alt_end = match devs[alt].fail_at {
+                            Some(f) if f < completion => f.max(alt_start),
+                            _ => completion,
+                        };
+                        if alt_end > alt_start {
+                            devs[alt].busy_cycles += alt_end - alt_start;
+                            devs[alt].free_at = alt_end;
+                            out.counters.wasted_cycles += alt_end - alt_start;
+                            out.attempts.push(AttemptRecord {
+                                batch: batch_idx,
+                                device: alt,
+                                start: alt_start,
+                                end: alt_end,
+                                outcome: AttemptOutcome::Cancelled,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        devs[d].busy_cycles += completion - start;
+        devs[d].free_at = completion;
+        devs[d].batches_won += 1;
+        out.attempts.push(AttemptRecord {
+            batch: batch_idx,
+            device: d,
+            start,
+            end: completion,
+            outcome: AttemptOutcome::Won,
+        });
+        return Ok(Resolved { device: d, start, completion, attempts });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn open(arrivals: &[(u64, usize)]) -> ArrivalSource {
+        ArrivalSource::open(arrivals.to_vec())
+    }
+
+    fn fleet(devices: usize, placement: PlacementPolicy) -> FleetSpec {
+        FleetSpec { devices, placement, ..FleetSpec::default() }
+    }
+
+    #[test]
+    fn one_device_no_faults_matches_simulate_queue() {
+        use super::super::queue::simulate_queue;
+        // a mixed schedule exercising full, flush and deadline closes
+        let policies = [
+            BatchPolicy::Immediate,
+            BatchPolicy::Size(3),
+            BatchPolicy::Deadline { max_batch: 4, max_wait_cycles: 40 },
+        ];
+        let arrivals: Vec<(u64, usize)> =
+            vec![(0, 0), (5, 1), (9, 0), (9, 1), (70, 0), (71, 1), (400, 0)];
+        for policy in policies {
+            for overhead in [0u64, 13] {
+                let q = simulate_queue(&mut open(&arrivals), &[50, 90], policy, overhead);
+                let f = simulate_fleet(
+                    &mut open(&arrivals),
+                    &[50, 90],
+                    policy,
+                    overhead,
+                    &FleetSpec::default(),
+                )
+                .unwrap();
+                assert_eq!(q.records, f.records, "records differ under {policy:?}");
+                assert_eq!(q.batches.len(), f.batches.len());
+                for (a, b) in q.batches.iter().zip(&f.batches) {
+                    assert_eq!(
+                        (a.close, a.start, a.completion, a.size),
+                        (b.close, b.start, b.completion, b.size)
+                    );
+                    assert_eq!((b.device, b.attempts), (0, 1));
+                }
+                assert_eq!(f.offered, f.records.len());
+                assert_eq!(f.counters, FleetCounters::default());
+            }
+        }
+    }
+
+    #[test]
+    fn two_devices_overlap_batches() {
+        // two long requests arriving back to back: one device serializes
+        // them, two devices serve them concurrently
+        let arrivals = [(0, 0), (1, 0)];
+        let single =
+            simulate_fleet(&mut open(&arrivals), &[1000], BatchPolicy::Immediate, 0, &fleet(1, PlacementPolicy::RoundRobin))
+                .unwrap();
+        let dual =
+            simulate_fleet(&mut open(&arrivals), &[1000], BatchPolicy::Immediate, 0, &fleet(2, PlacementPolicy::LeastWork))
+                .unwrap();
+        assert_eq!(single.records[1].completion, 2000);
+        assert_eq!(dual.records[1].completion, 1001, "second device starts immediately");
+        assert_eq!(dual.batches[0].device, 0);
+        assert_eq!(dual.batches[1].device, 1);
+    }
+
+    #[test]
+    fn fail_stop_fails_over_with_waste_and_timeout_detection() {
+        let mut spec = fleet(2, PlacementPolicy::LeastWork);
+        spec.faults.push(FaultSpec { device: 0, at_cycle: 400, kind: FaultKind::FailStop });
+        // one request at cycle 0, service 1000: device 0 runs 0..400 and
+        // dies; the timeout fires at the expected completion (1000) and
+        // the batch re-runs on device 1 from there
+        let out =
+            simulate_fleet(&mut open(&[(0, 0)]), &[1000], BatchPolicy::Immediate, 0, &spec)
+                .unwrap();
+        assert_eq!(out.counters.failovers, 1);
+        assert_eq!(out.counters.retries, 1);
+        assert_eq!(out.counters.wasted_cycles, 400, "work burned before dying");
+        let r = &out.records[0];
+        assert_eq!((r.start, r.completion), (1000, 2000), "timeout then full re-run");
+        assert_eq!(out.batches[0].device, 1);
+        assert_eq!(out.batches[0].attempts, 2);
+        assert_eq!(out.devices[0].busy_cycles, 400);
+        assert_eq!(out.devices[1].busy_cycles, 1000);
+        assert_eq!(
+            out.attempts[0],
+            AttemptRecord {
+                batch: 0,
+                device: 0,
+                start: 0,
+                end: 400,
+                outcome: AttemptOutcome::Failed
+            }
+        );
+    }
+
+    #[test]
+    fn batches_behind_a_doomed_attempt_reroute_at_detection() {
+        let mut spec = fleet(2, PlacementPolicy::RoundRobin);
+        spec.faults.push(FaultSpec { device: 0, at_cycle: 100, kind: FaultKind::FailStop });
+        // round-robin sends batch 0 -> dev0 (dies), batch 1 -> dev1,
+        // batch 2 -> dev0 again (not yet detected at close 2): it would
+        // start at the doomed batch's timeout (1000), where the failure
+        // is known, so it re-routes without a second timeout
+        let out = simulate_fleet(
+            &mut open(&[(0, 0), (1, 0), (2, 0)]),
+            &[1000],
+            BatchPolicy::Immediate,
+            0,
+            &spec,
+        )
+        .unwrap();
+        // batch 0 failed over to dev1, after dev1's own batch
+        assert!(out.counters.failovers >= 2, "mid-flight + queued-behind failovers");
+        assert!(out.records.iter().all(|r| r.completion <= 4000));
+        // every surviving record ran on device 1
+        assert!(out.batches.iter().all(|b| b.device == 1));
+    }
+
+    #[test]
+    fn degrade_stretches_only_post_fault_cycles() {
+        let mut spec = fleet(1, PlacementPolicy::RoundRobin);
+        spec.faults.push(FaultSpec {
+            device: 0,
+            at_cycle: 600,
+            kind: FaultKind::Degrade { factor: 3.0 },
+        });
+        // service 1000 starting at 0: 600 fast cycles, remaining 400 at
+        // 3x -> completes at 600 + 1200 = 1800
+        let out =
+            simulate_fleet(&mut open(&[(0, 0)]), &[1000], BatchPolicy::Immediate, 0, &spec)
+                .unwrap();
+        assert_eq!(out.records[0].completion, 1800);
+        assert_eq!(out.counters, FleetCounters::default(), "degradation is not a failure");
+    }
+
+    #[test]
+    fn hedge_races_a_degraded_primary_and_first_completion_wins() {
+        let mut spec = fleet(2, PlacementPolicy::RoundRobin);
+        spec.hedge = true;
+        spec.faults.push(FaultSpec {
+            device: 0,
+            at_cycle: 50_000,
+            kind: FaultKind::Degrade { factor: 10.0 },
+        });
+        // round-robin alternates devices; every pre-degradation batch is
+        // fast and builds a p99 history of ~1000-cycle windows. Once
+        // device 0 degrades 10x, its windows blow past that p99 and get
+        // hedged onto the healthy device, whose duplicate finishes first.
+        let arrivals: Vec<(u64, usize)> = (0..12).map(|i| (i * 12_000, 0)).collect();
+        let out =
+            simulate_fleet(&mut open(&arrivals), &[1000], BatchPolicy::Immediate, 0, &spec)
+                .unwrap();
+        assert!(out.counters.hedges > 0, "degraded windows exceed the fleet p99");
+        assert!(out.counters.wasted_cycles > 0, "the cancelled loser burned cycles");
+        assert_eq!(out.counters.failovers, 0, "no device died");
+        // hedged batches were won by the healthy device
+        let hedged: Vec<_> = out.batches.iter().filter(|b| b.attempts > 1).collect();
+        assert!(!hedged.is_empty());
+        assert!(hedged.iter().all(|b| b.device == 1));
+        // the winning window is the fast one
+        for b in hedged {
+            assert_eq!(b.completion - b.start, 1000);
+        }
+    }
+
+    #[test]
+    fn slo_sheds_arrivals_and_conserves_offered() {
+        let mut spec = fleet(1, PlacementPolicy::RoundRobin);
+        spec.slo_cycles = Some(500);
+        // service 1000, arrivals every 100 cycles: the queue builds and
+        // later arrivals see predicted waits beyond the SLO
+        let arrivals: Vec<(u64, usize)> = (0..10).map(|i| (i * 100, 0)).collect();
+        let out =
+            simulate_fleet(&mut open(&arrivals), &[1000], BatchPolicy::Immediate, 0, &spec)
+                .unwrap();
+        assert!(out.counters.sheds > 0, "admission control engaged");
+        assert_eq!(out.records.len() + out.shed.len(), 10, "shed + served == offered");
+        assert_eq!(out.offered, 10);
+        // every admitted request met the SLO on queueing delay
+        for r in &out.records {
+            assert!(r.start - r.arrival <= 500 + 1000, "waited at most slo + one window");
+        }
+        // shed arrivals are recorded, not silently dropped
+        assert_eq!(out.counters.sheds, out.shed.len());
+    }
+
+    #[test]
+    fn all_devices_dead_is_a_loud_error() {
+        let mut spec = fleet(1, PlacementPolicy::RoundRobin);
+        spec.faults.push(FaultSpec { device: 0, at_cycle: 10, kind: FaultKind::FailStop });
+        let err = simulate_fleet(&mut open(&[(0, 0)]), &[1000], BatchPolicy::Immediate, 0, &spec)
+            .unwrap_err();
+        assert!(err.contains("no live device"), "{err}");
+    }
+
+    #[test]
+    fn failover_budget_is_enforced() {
+        let mut spec = fleet(2, PlacementPolicy::LeastWork);
+        spec.retries = 0;
+        spec.faults.push(FaultSpec { device: 0, at_cycle: 10, kind: FaultKind::FailStop });
+        let err = simulate_fleet(&mut open(&[(0, 0)]), &[1000], BatchPolicy::Immediate, 0, &spec)
+            .unwrap_err();
+        assert!(err.contains("failover budget"), "{err}");
+    }
+
+    #[test]
+    fn fleet_replay_is_deterministic_with_faults() {
+        let mut spec = fleet(3, PlacementPolicy::LeastWork);
+        spec.hedge = true;
+        spec.slo_cycles = Some(5_000);
+        spec.faults.push(FaultSpec { device: 1, at_cycle: 3_000, kind: FaultKind::FailStop });
+        spec.faults.push(FaultSpec {
+            device: 2,
+            at_cycle: 0,
+            kind: FaultKind::Degrade { factor: 4.0 },
+        });
+        let run = |seed: u64| {
+            let mut src = ArrivalSource::closed(4, 50, 40, 2, Pcg32::seeded(seed));
+            simulate_fleet(&mut src, &[700, 900], BatchPolicy::Size(2), 11, &spec).unwrap()
+        };
+        assert_eq!(run(9), run(9), "same seed, same faulted timeline");
+        assert_ne!(run(9).records, run(10).records, "different seed, different timeline");
+    }
+
+    #[test]
+    fn fault_specs_parse_and_validate() {
+        let f = FaultSpec::parse_fail("2@50000").unwrap();
+        assert_eq!((f.device, f.at_cycle, f.kind), (2, 50_000, FaultKind::FailStop));
+        let d = FaultSpec::parse_degrade("1@9:2.5").unwrap();
+        assert_eq!(d.kind, FaultKind::Degrade { factor: 2.5 });
+        assert!(FaultSpec::parse_fail("nope").is_err());
+        assert!(FaultSpec::parse_degrade("1@9").is_err());
+        assert!(FaultSpec::parse_degrade("1@9:0.5").is_err(), "speed-ups are not faults");
+
+        let bad = FleetSpec {
+            devices: 2,
+            faults: vec![FaultSpec { device: 7, at_cycle: 0, kind: FaultKind::FailStop }],
+            ..FleetSpec::default()
+        };
+        assert!(simulate_fleet(
+            &mut open(&[]),
+            &[1],
+            BatchPolicy::Immediate,
+            0,
+            &bad
+        )
+        .is_err());
+    }
+}

@@ -20,24 +20,37 @@
 //!    timeline under a pluggable [`BatchPolicy`] ([`batching`]),
 //!    yielding per-request queueing + service latency in device
 //!    cycles.
-//! 5. **Report** ([`report`]): p50/p90/p95/p99/max latency
-//!    percentiles as a table and as deterministic JSON (same seed =>
-//!    byte-identical bytes, enforced by tests and the `serve-smoke` CI
-//!    lane).
+//! 5. **Fleet** ([`fleet`] + [`router`]): N simulated devices behind a
+//!    placement policy, with deterministic fault injection, timeout
+//!    failover, hedged re-issue and SLO load shedding. One device and
+//!    no faults reproduces the [`queue`] timeline exactly.
+//! 6. **Report** ([`report`]): p50/p90/p95/p99/max latency
+//!    percentiles plus per-device utilization and robustness counters,
+//!    as a table and as deterministic JSON (same seed =>
+//!    byte-identical bytes, enforced by tests and the `serve-smoke` /
+//!    `fleet-smoke` CI lanes).
 //!
 //! Everything is a pure function of `(PlatformConfig, ServeOptions)`;
 //! no wall clock enters the report.
 
 pub mod arrival;
 pub mod batching;
+pub mod fleet;
 pub mod queue;
 pub mod report;
+pub mod router;
 pub mod service;
 pub mod workload;
 
 pub use arrival::ArrivalSpec;
 pub use batching::BatchPolicy;
-pub use report::{KindSummary, ServeReport, SERVE_REPORT_FORMAT};
+pub use fleet::{
+    simulate_fleet, AttemptOutcome, AttemptRecord, FaultKind, FaultSpec, FleetCounters,
+    FleetOutcome, FleetSpec,
+};
+pub use queue::{simulate_queue, ArrivalSource, RequestRecord};
+pub use report::{DeviceReport, FleetStats, KindSummary, ServeReport, SERVE_REPORT_FORMAT};
+pub use router::PlacementPolicy;
 pub use service::ServiceModel;
 pub use workload::{RequestKind, WorkloadSpec};
 
@@ -46,7 +59,6 @@ use crate::util::rng::Pcg32;
 use crate::util::stats::TailSummary;
 
 use arrival::poisson_arrival_cycles;
-use queue::{simulate_queue, ArrivalSource};
 
 /// RNG stream selectors (see [`Pcg32::new`]): arrival timing and
 /// request-kind sampling draw from independent deterministic streams
@@ -72,6 +84,19 @@ pub struct ServeOptions {
     /// Host dispatch cost paid once per batch, in device cycles —
     /// what size/deadline batching amortizes.
     pub dispatch_overhead_cycles: u64,
+    /// Simulated devices behind the router (1 = the classic
+    /// single-device timeline).
+    pub devices: usize,
+    /// How the router maps batches onto devices.
+    pub placement: PlacementPolicy,
+    /// Deterministic device faults, in virtual cycles.
+    pub faults: Vec<FaultSpec>,
+    /// Shed arrivals whose predicted queueing delay exceeds this SLO.
+    pub slo_ms: Option<f64>,
+    /// Hedged re-issue after a p99-derived delay.
+    pub hedge: bool,
+    /// Failover re-dispatch budget per batch.
+    pub retries: usize,
 }
 
 impl Default for ServeOptions {
@@ -88,6 +113,12 @@ impl Default for ServeOptions {
             fast_forward: true,
             repeat_cap: 16,
             dispatch_overhead_cycles: 0,
+            devices: 1,
+            placement: PlacementPolicy::RoundRobin,
+            faults: Vec::new(),
+            slo_ms: None,
+            hedge: false,
+            retries: 2,
         }
     }
 }
@@ -108,6 +139,11 @@ fn validate(opts: &ServeOptions) -> Result<(), String> {
             if clients == 0 {
                 return Err("closed-loop arrival needs at least 1 client".into());
             }
+        }
+    }
+    if let Some(slo) = opts.slo_ms {
+        if !slo.is_finite() || slo < 0.0 {
+            return Err(format!("--slo-ms must be a finite non-negative latency, got {slo}"));
         }
     }
     Ok(())
@@ -151,7 +187,15 @@ pub fn run_serve(cfg: &PlatformConfig, opts: &ServeOptions) -> Result<ServeRepor
         ),
     };
     let overhead = opts.dispatch_overhead_cycles;
-    let outcome = simulate_queue(&mut source, &service_by_kind, opts.batching, overhead);
+    let fleet_spec = FleetSpec {
+        devices: opts.devices,
+        placement: opts.placement,
+        faults: opts.faults.clone(),
+        slo_cycles: opts.slo_ms.map(|ms| ms_to_cycles(ms, cfg.freq_mhz)),
+        hedge: opts.hedge,
+        retries: opts.retries,
+    };
+    let outcome = simulate_fleet(&mut source, &service_by_kind, opts.batching, overhead, &fleet_spec)?;
 
     // 3. aggregate into the report (virtual time only)
     let to_ms = |c: u64| c as f64 / (cfg.freq_mhz as f64 * 1e3);
@@ -177,6 +221,31 @@ pub fn run_serve(cfg: &PlatformConfig, opts: &ServeOptions) -> Result<ServeRepor
         })
         .collect();
 
+    let device_reports: Vec<DeviceReport> = outcome
+        .devices
+        .iter()
+        .enumerate()
+        .map(|(i, d)| DeviceReport {
+            device: i,
+            busy_cycles: d.busy_cycles,
+            batches: d.batches_won,
+            failed_at_cycle: d.failed_at,
+            degraded: d.degraded,
+        })
+        .collect();
+    let fleet_stats = FleetStats {
+        devices: opts.devices,
+        placement: opts.placement.label().to_string(),
+        offered: outcome.offered,
+        shed: outcome.shed.len(),
+        failovers: outcome.counters.failovers,
+        retries: outcome.counters.retries,
+        hedges: outcome.counters.hedges,
+        wasted_cycles: outcome.counters.wasted_cycles,
+        slo_cycles: fleet_spec.slo_cycles,
+        hedge: opts.hedge,
+    };
+
     Ok(ServeReport {
         workload: opts.workload.to_json(),
         arrival: opts.arrival,
@@ -185,12 +254,16 @@ pub fn run_serve(cfg: &PlatformConfig, opts: &ServeOptions) -> Result<ServeRepor
         freq_mhz: cfg.freq_mhz,
         requests: outcome.records.len(),
         batches: outcome.batches.len(),
+        // attempts never outlive the winning completion, so the last
+        // served completion is the fleet makespan
         duration_cycles: outcome.records.iter().map(|r| r.completion).max().unwrap_or(0),
-        device_busy_cycles: outcome.batches.iter().map(|b| b.completion - b.start).sum(),
+        device_busy_cycles: outcome.devices.iter().map(|d| d.busy_cycles).sum(),
         latency_ms: TailSummary::compute(&latency),
         queueing_ms: TailSummary::compute(&queueing),
         service_ms: TailSummary::compute(&service),
         kinds: kind_summaries,
+        devices: device_reports,
+        fleet: fleet_stats,
         measurement,
     })
 }
@@ -245,6 +318,32 @@ mod tests {
             ..tiny_opts()
         };
         assert!(run_serve(&cfg, &no_clients).is_err());
+        let bad_slo = ServeOptions { slo_ms: Some(f64::NAN), ..tiny_opts() };
+        assert!(run_serve(&cfg, &bad_slo).is_err());
+        let no_devices = ServeOptions { devices: 0, ..tiny_opts() };
+        assert!(run_serve(&cfg, &no_devices).is_err());
+        let bad_fault = ServeOptions {
+            devices: 2,
+            faults: vec![FaultSpec { device: 5, at_cycle: 0, kind: FaultKind::FailStop }],
+            ..tiny_opts()
+        };
+        assert!(run_serve(&cfg, &bad_fault).is_err());
+    }
+
+    #[test]
+    fn fleet_report_carries_devices_and_counters() {
+        let cfg = PlatformConfig::case_study();
+        let opts = ServeOptions { devices: 2, placement: PlacementPolicy::LeastWork, ..tiny_opts() };
+        let report = run_serve(&cfg, &opts).unwrap();
+        assert_eq!(report.devices.len(), 2);
+        assert_eq!(report.fleet.devices, 2);
+        assert_eq!(report.fleet.placement, "least-work");
+        assert_eq!(report.fleet.offered, report.requests + report.fleet.shed);
+        assert_eq!(report.fleet.shed, 0);
+        assert_eq!(
+            report.device_busy_cycles,
+            report.devices.iter().map(|d| d.busy_cycles).sum::<u64>()
+        );
     }
 
     #[test]

@@ -6,6 +6,11 @@
 //! service cycles, batching policy, per-batch overhead), so the same
 //! seed always reproduces the same timeline byte-for-byte.
 //!
+//! The multi-device generalization lives in [`super::fleet`]; with one
+//! device and no faults injected its timeline is *identical* to this
+//! engine — a differential the tests pin, which is why the batch-close
+//! rules below are the single source of truth for both.
+//!
 //! ## Batch semantics
 //!
 //! A batch *closes* per the [`BatchPolicy`] (full, deadline expiry, or
@@ -124,7 +129,7 @@ impl ArrivalSource {
     }
 
     /// Cycle of the next arrival, if any can still occur.
-    fn peek(&self) -> Option<u64> {
+    pub(super) fn peek(&self) -> Option<u64> {
         match self {
             ArrivalSource::Open { arrivals, next } => arrivals.get(*next).map(|a| a.0),
             ArrivalSource::Closed { schedule, .. } => schedule.peek().map(|r| r.0 .0),
@@ -132,7 +137,7 @@ impl ArrivalSource {
     }
 
     /// Admit the next arrival: `(cycle, kind)`.
-    fn pop(&mut self) -> Option<(u64, usize)> {
+    pub(super) fn pop(&mut self) -> Option<(u64, usize)> {
         match self {
             ArrivalSource::Open { arrivals, next } => {
                 let a = arrivals.get(*next).copied();
@@ -149,8 +154,10 @@ impl ArrivalSource {
     }
 
     /// A batch of `size` members completed at `completion`: closed-loop
-    /// clients schedule their next issue.
-    fn on_batch_dispatched(&mut self, size: usize, completion: u64) {
+    /// clients schedule their next issue. The fleet engine also calls
+    /// this with `size == 1` when it sheds an arrival — the rejection
+    /// is an instant completion from the client's point of view.
+    pub(super) fn on_batch_dispatched(&mut self, size: usize, completion: u64) {
         if let ArrivalSource::Closed { schedule, seq, think, remaining, .. } = self {
             let reissues = size.min(*remaining);
             for _ in 0..reissues {

@@ -3,9 +3,57 @@
 //! Deliberately free of wall-clock, host or worker-count fields: every
 //! number is a deterministic function of (config, options, seed), so
 //! two runs with the same seed serialize **byte-identically** — the
-//! property the `serve-smoke` CI lane diffs, and what makes these
-//! reports usable as regression baselines. The JSON shares `util::json`
-//! with the sweep wire format, so trend tooling can ingest both.
+//! property the `serve-smoke` and `fleet-smoke` CI lanes diff, and
+//! what makes these reports usable as regression baselines. The JSON
+//! shares `util::json` with the sweep wire format, so trend tooling
+//! can ingest both.
+//!
+//! ## `opengemm-serve-report-v2` schema
+//!
+//! Top-level object (keys serialize alphabetically — `util::json`
+//! uses a BTreeMap — so diffs are stable):
+//!
+//! | key                  | meaning                                          |
+//! |----------------------|--------------------------------------------------|
+//! | `format`             | [`SERVE_REPORT_FORMAT`] marker                   |
+//! | `workload`           | workload spec (name + knobs)                     |
+//! | `arrival`            | arrival spec (poisson rate / closed-loop)        |
+//! | `batching`           | batching policy + knobs                          |
+//! | `seed`               | RNG seed the whole timeline derives from         |
+//! | `freq_mhz`           | platform clock, for cycle⇄ms conversion          |
+//! | `requests`           | requests **served** (shed arrivals excluded)     |
+//! | `batches`            | batches dispatched                               |
+//! | `duration_cycles`    | makespan (last completion cycle)                 |
+//! | `device_busy_cycles` | busy cycles summed across **all** devices,       |
+//! |                      | wasted attempts included                         |
+//! | `throughput_rps`     | served requests per second of virtual time       |
+//! | `device_utilization` | busy / (makespan × device count)                 |
+//! | `latency_ms`         | end-to-end tails (`null` when nothing served)    |
+//! | `queueing_ms`        | queueing-delay tails                             |
+//! | `service_ms`         | batch-window tails                               |
+//! | `kinds`              | per-request-kind served counts + stream cost     |
+//! | `devices`            | per-device array: `busy_cycles`, `batches`,      |
+//! |                      | `utilization`, injected fault cycles (or `null`) |
+//! | `fleet`              | router + robustness counters: `placement`,       |
+//! |                      | `offered`, `shed`, `goodput_rps`, `failovers`,   |
+//! |                      | `retries`, `hedges`, `wasted_cycles`,            |
+//! |                      | `slo_cycles`, `hedge`                            |
+//! | `measurement`        | measurement-side simulation counters             |
+//!
+//! ### v1 → v2 changelog
+//!
+//! - `format` bumped to `opengemm-serve-report-v2`.
+//! - Every v1 field is kept with its meaning unchanged; a 1-device
+//!   no-fault run carries the same values v1 did on the same seed
+//!   (the differential `serving_harness` pins).
+//! - New `devices` array: per-device utilization, batches won and the
+//!   injected fault schedule.
+//! - New `fleet` object: placement policy, offered-vs-shed load
+//!   accounting (`goodput_rps` vs `throughput_rps` over offered), and
+//!   the robustness counters (`failovers`, `retries`, `hedges`,
+//!   `wasted_cycles`) — all driven by deterministic fault injection.
+//! - `device_busy_cycles` / `device_utilization` now aggregate across
+//!   the fleet (identical to v1 when there is one device).
 
 use crate::coordinator::CoordinatorStats;
 use crate::util::json::Json;
@@ -17,7 +65,7 @@ use super::batching::BatchPolicy;
 
 /// Wire-format marker, so downstream tooling fed the wrong file fails
 /// loudly.
-pub const SERVE_REPORT_FORMAT: &str = "opengemm-serve-report-v1";
+pub const SERVE_REPORT_FORMAT: &str = "opengemm-serve-report-v2";
 
 /// Per-request-kind serving outcome.
 #[derive(Debug, Clone, PartialEq)]
@@ -29,6 +77,60 @@ pub struct KindSummary {
     pub service_cycles: u64,
 }
 
+/// Per-device serving outcome (v2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceReport {
+    pub device: usize,
+    /// Cycles spent executing attempts, wasted ones included.
+    pub busy_cycles: u64,
+    /// Batches whose winning attempt ran here.
+    pub batches: usize,
+    /// Injected fail-stop cycle, if any.
+    pub failed_at_cycle: Option<u64>,
+    /// Injected `(cycle, factor)` degradation, if any.
+    pub degraded: Option<(u64, f64)>,
+}
+
+/// Router configuration + robustness counters (v2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetStats {
+    pub devices: usize,
+    pub placement: String,
+    /// Arrivals offered (= served + shed).
+    pub offered: usize,
+    /// Arrivals rejected by SLO admission control.
+    pub shed: usize,
+    /// Batch-level failover re-dispatches.
+    pub failovers: usize,
+    /// Request-level re-dispatches (members of failed-over batches).
+    pub retries: usize,
+    /// Hedged duplicates issued.
+    pub hedges: usize,
+    /// Device cycles burned by attempts whose result was unused.
+    pub wasted_cycles: u64,
+    /// Admission-control SLO in device cycles, if set.
+    pub slo_cycles: Option<u64>,
+    /// Whether hedged re-issue was enabled.
+    pub hedge: bool,
+}
+
+impl Default for FleetStats {
+    fn default() -> Self {
+        FleetStats {
+            devices: 1,
+            placement: "round-robin".into(),
+            offered: 0,
+            shed: 0,
+            failovers: 0,
+            retries: 0,
+            hedges: 0,
+            wasted_cycles: 0,
+            slo_cycles: None,
+            hedge: false,
+        }
+    }
+}
+
 /// The complete serving-harness result.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServeReport {
@@ -37,12 +139,13 @@ pub struct ServeReport {
     pub batching: BatchPolicy,
     pub seed: u64,
     pub freq_mhz: u64,
-    /// Requests served (every scheduled request completes).
+    /// Requests served (shed arrivals are counted in `fleet`, not here).
     pub requests: usize,
     pub batches: usize,
     /// Makespan: cycle of the last batch completion (0 when idle).
     pub duration_cycles: u64,
-    /// Cycles the device spent serving batches (overhead included).
+    /// Cycles spent serving batches across all devices, wasted
+    /// attempts included.
     pub device_busy_cycles: u64,
     /// `None` when the window served no requests — an idle window is a
     /// legitimate outcome, not a panic (see `util::stats`).
@@ -50,6 +153,10 @@ pub struct ServeReport {
     pub queueing_ms: Option<TailSummary>,
     pub service_ms: Option<TailSummary>,
     pub kinds: Vec<KindSummary>,
+    /// Per-device utilization (v2; one entry per simulated device).
+    pub devices: Vec<DeviceReport>,
+    /// Router + robustness counters (v2).
+    pub fleet: FleetStats,
     /// Measurement-side simulation counters (deterministic: the set of
     /// measured jobs and their cycle counts depend only on the
     /// workload, not on pool size or timing).
@@ -65,12 +172,22 @@ impl ServeReport {
         self.requests as f64 * self.freq_mhz as f64 * 1e6 / self.duration_cycles as f64
     }
 
-    /// Fraction of the makespan the device was serving.
+    /// Fraction of the fleet's makespan capacity spent serving:
+    /// busy / (makespan × device count).
     pub fn device_utilization(&self) -> f64 {
+        let n = self.fleet.devices.max(1);
         if self.duration_cycles == 0 {
             return 0.0;
         }
-        self.device_busy_cycles as f64 / self.duration_cycles as f64
+        self.device_busy_cycles as f64 / (self.duration_cycles as f64 * n as f64)
+    }
+
+    /// One device's fraction of the makespan spent busy.
+    fn one_device_utilization(&self, d: &DeviceReport) -> f64 {
+        if self.duration_cycles == 0 {
+            return 0.0;
+        }
+        d.busy_cycles as f64 / self.duration_cycles as f64
     }
 
     pub fn mean_batch_size(&self) -> f64 {
@@ -86,6 +203,10 @@ impl ServeReport {
             Some(t) => t.to_json(),
             None => Json::Null,
         };
+        let opt_num = |v: Option<u64>| match v {
+            Some(v) => Json::num(v as f64),
+            None => Json::Null,
+        };
         let kinds: Vec<Json> = self
             .kinds
             .iter()
@@ -97,6 +218,40 @@ impl ServeReport {
                 ])
             })
             .collect();
+        let devices: Vec<Json> = self
+            .devices
+            .iter()
+            .map(|d| {
+                Json::obj(vec![
+                    ("device", Json::num(d.device as f64)),
+                    ("busy_cycles", Json::num(d.busy_cycles as f64)),
+                    ("batches", Json::num(d.batches as f64)),
+                    ("utilization", Json::num(self.one_device_utilization(d))),
+                    ("failed_at_cycle", opt_num(d.failed_at_cycle)),
+                    ("degraded_at_cycle", opt_num(d.degraded.map(|(c, _)| c))),
+                    (
+                        "degrade_factor",
+                        match d.degraded {
+                            Some((_, f)) => Json::num(f),
+                            None => Json::Null,
+                        },
+                    ),
+                ])
+            })
+            .collect();
+        let fleet = Json::obj(vec![
+            ("devices", Json::num(self.fleet.devices as f64)),
+            ("placement", Json::str(self.fleet.placement.clone())),
+            ("offered", Json::num(self.fleet.offered as f64)),
+            ("shed", Json::num(self.fleet.shed as f64)),
+            ("goodput_rps", Json::num(self.throughput_rps())),
+            ("failovers", Json::num(self.fleet.failovers as f64)),
+            ("retries", Json::num(self.fleet.retries as f64)),
+            ("hedges", Json::num(self.fleet.hedges as f64)),
+            ("wasted_cycles", Json::num(self.fleet.wasted_cycles as f64)),
+            ("slo_cycles", opt_num(self.fleet.slo_cycles)),
+            ("hedge", Json::Bool(self.fleet.hedge)),
+        ]);
         Json::obj(vec![
             ("format", Json::str(SERVE_REPORT_FORMAT)),
             ("workload", self.workload.clone()),
@@ -114,6 +269,8 @@ impl ServeReport {
             ("queueing_ms", tail(&self.queueing_ms)),
             ("service_ms", tail(&self.service_ms)),
             ("kinds", Json::Arr(kinds)),
+            ("devices", Json::Arr(devices)),
+            ("fleet", fleet),
             ("measurement", self.measurement.to_json()),
         ])
     }
@@ -130,6 +287,18 @@ impl ServeReport {
             self.seed
         ));
         out.push_str(&format!(
+            "fleet: {} device(s), placement {} | offered {}, shed {}, \
+             failovers {}, retries {}, hedges {}, wasted {} cycles\n",
+            self.fleet.devices,
+            self.fleet.placement,
+            self.fleet.offered,
+            self.fleet.shed,
+            self.fleet.failovers,
+            self.fleet.retries,
+            self.fleet.hedges,
+            self.fleet.wasted_cycles
+        ));
+        out.push_str(&format!(
             "{} requests in {} batches (mean size {:.2}), makespan {:.2} ms @ {} MHz\n",
             self.requests,
             self.batches,
@@ -138,7 +307,7 @@ impl ServeReport {
             self.freq_mhz
         ));
         out.push_str(&format!(
-            "throughput {:.1} req/s, device utilization {:.1}%\n\n",
+            "goodput {:.1} req/s, fleet utilization {:.1}%\n\n",
             self.throughput_rps(),
             100.0 * self.device_utilization()
         ));
@@ -160,6 +329,25 @@ impl ServeReport {
                 out.push_str(&t.markdown());
             }
             _ => out.push_str("(no requests served in this window)\n"),
+        }
+        if self.devices.len() > 1 {
+            out.push('\n');
+            let mut t = Table::new(&["device", "batches", "busy cycles", "utilization", "fault"]);
+            for d in &self.devices {
+                let fault = match (d.failed_at_cycle, d.degraded) {
+                    (Some(c), _) => format!("fail-stop @ {c}"),
+                    (None, Some((c, f))) => format!("degrade {f}x @ {c}"),
+                    (None, None) => "-".into(),
+                };
+                t.row(vec![
+                    d.device.to_string(),
+                    d.batches.to_string(),
+                    d.busy_cycles.to_string(),
+                    format!("{:.1}%", 100.0 * self.one_device_utilization(d)),
+                    fault,
+                ]);
+            }
+            out.push_str(&t.markdown());
         }
         if !self.kinds.is_empty() {
             out.push('\n');
@@ -203,6 +391,14 @@ mod tests {
                 served: requests,
                 service_cycles: 900,
             }],
+            devices: vec![DeviceReport {
+                device: 0,
+                busy_cycles: requests as u64 * 900,
+                batches: requests,
+                failed_at_cycle: None,
+                degraded: None,
+            }],
+            fleet: FleetStats { offered: requests, ..FleetStats::default() },
             measurement: CoordinatorStats::default(),
         }
     }
@@ -214,6 +410,46 @@ mod tests {
         let back = json::parse(&text).unwrap();
         assert_eq!(back.pretty(), text, "stable serialization");
         assert!(text.contains("\"p99\"") && text.contains(SERVE_REPORT_FORMAT));
+    }
+
+    #[test]
+    fn v2_carries_every_robustness_counter_and_device_entries() {
+        let mut r = report(10);
+        r.fleet = FleetStats {
+            devices: 2,
+            placement: "least-work".into(),
+            offered: 13,
+            shed: 3,
+            failovers: 1,
+            retries: 4,
+            hedges: 2,
+            wasted_cycles: 777,
+            slo_cycles: Some(5000),
+            hedge: true,
+        };
+        r.devices.push(DeviceReport {
+            device: 1,
+            busy_cycles: 100,
+            batches: 1,
+            failed_at_cycle: Some(50_000),
+            degraded: Some((10, 2.5)),
+        });
+        let text = r.to_json().pretty();
+        for key in
+            ["\"failovers\"", "\"retries\"", "\"hedges\"", "\"shed\"", "\"wasted_cycles\""]
+        {
+            assert!(text.contains(key), "v2 report missing {key}");
+        }
+        assert!(text.contains("\"utilization\""), "per-device utilization present");
+        assert!(text.contains("\"failed_at_cycle\": 50000"));
+        assert!(text.contains("\"goodput_rps\""));
+        let back = json::parse(&text).unwrap();
+        assert_eq!(back.get("fleet").and_then(|f| f.get("shed")).unwrap(), &Json::Num(3.0));
+        assert_eq!(back.get("devices").map(|d| d.as_arr().unwrap().len()), Some(2));
+        // render mentions the fleet line and the per-device table
+        let rendered = r.render();
+        assert!(rendered.contains("failovers 1"));
+        assert!(rendered.contains("fail-stop @ 50000"));
     }
 
     #[test]

@@ -1,0 +1,181 @@
+//! Placement policies: which device a closed batch is dispatched to.
+//!
+//! The router sees the fleet exactly as a real load balancer would —
+//! through its *beliefs* ([`DeviceView`]): the cycle each device is
+//! expected to free up, and whether a failure has already been
+//! detected. It never peeks at the fault schedule; a device that is
+//! doomed but not yet detected looks healthy and busy, which is what
+//! makes the failover path in `serve::fleet` honest.
+//!
+//! Three policies:
+//!
+//! - **round-robin**: rotate over schedulable devices; the baseline.
+//! - **least-work**: the device expected to free up first (ties break
+//!   to the lowest index, keeping the choice deterministic).
+//! - **affinity** (shape affinity): the first batch of each request
+//!   kind pins that kind to the least-loaded device, and later batches
+//!   of the kind stick to it — so a device keeps receiving the shapes
+//!   it has already been serving (re-pinned elsewhere only when the
+//!   pinned device's failure has been detected).
+
+/// The router's belief about one device at a decision cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeviceView {
+    /// Cycle the device is expected to become free.
+    pub free_at: u64,
+    /// False once the router has detected this device's failure.
+    pub schedulable: bool,
+}
+
+/// How the router maps batches onto devices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    RoundRobin,
+    LeastWork,
+    ShapeAffinity,
+}
+
+impl PlacementPolicy {
+    /// The `--placement` names, for CLI error messages.
+    pub const VALID_NAMES: &'static str = "round-robin|least-work|affinity";
+
+    pub fn from_name(name: &str) -> Option<PlacementPolicy> {
+        match name {
+            "round-robin" | "rr" => Some(PlacementPolicy::RoundRobin),
+            "least-work" => Some(PlacementPolicy::LeastWork),
+            "affinity" | "shape-affinity" => Some(PlacementPolicy::ShapeAffinity),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PlacementPolicy::RoundRobin => "round-robin",
+            PlacementPolicy::LeastWork => "least-work",
+            PlacementPolicy::ShapeAffinity => "affinity",
+        }
+    }
+}
+
+/// Deterministic placement state (rotation cursor, affinity pins).
+#[derive(Debug, Clone)]
+pub struct Router {
+    policy: PlacementPolicy,
+    rr_next: usize,
+    /// kind -> pinned device (affinity policy only), grown on demand.
+    affinity: Vec<Option<usize>>,
+}
+
+impl Router {
+    pub fn new(policy: PlacementPolicy) -> Router {
+        Router { policy, rr_next: 0, affinity: Vec::new() }
+    }
+
+    /// Pick a device for a batch whose first member is `kind`.
+    /// `exclude` bars one device (the hedge primary). `None` when no
+    /// schedulable device remains.
+    pub fn pick(
+        &mut self,
+        devices: &[DeviceView],
+        kind: usize,
+        exclude: Option<usize>,
+    ) -> Option<usize> {
+        let ok = |i: usize| devices[i].schedulable && Some(i) != exclude;
+        match self.policy {
+            PlacementPolicy::RoundRobin => {
+                let n = devices.len();
+                (0..n).map(|s| (self.rr_next + s) % n).find(|&i| ok(i)).inspect(|&i| {
+                    self.rr_next = (i + 1) % n;
+                })
+            }
+            PlacementPolicy::LeastWork => least_work(devices, &ok),
+            PlacementPolicy::ShapeAffinity => {
+                if kind >= self.affinity.len() {
+                    self.affinity.resize(kind + 1, None);
+                }
+                if let Some(d) = self.affinity[kind] {
+                    if ok(d) {
+                        return Some(d);
+                    }
+                }
+                let pick = least_work(devices, &ok)?;
+                self.affinity[kind] = Some(pick);
+                Some(pick)
+            }
+        }
+    }
+}
+
+/// Schedulable device expected to free up first; ties break to the
+/// lowest index.
+fn least_work(devices: &[DeviceView], ok: &dyn Fn(usize) -> bool) -> Option<usize> {
+    devices
+        .iter()
+        .enumerate()
+        .filter(|&(i, _)| ok(i))
+        .min_by_key(|&(i, v)| (v.free_at, i))
+        .map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn views(free: &[u64]) -> Vec<DeviceView> {
+        free.iter().map(|&f| DeviceView { free_at: f, schedulable: true }).collect()
+    }
+
+    #[test]
+    fn round_robin_rotates_and_skips_dead() {
+        let mut r = Router::new(PlacementPolicy::RoundRobin);
+        let mut v = views(&[0, 0, 0]);
+        assert_eq!(r.pick(&v, 0, None), Some(0));
+        assert_eq!(r.pick(&v, 0, None), Some(1));
+        assert_eq!(r.pick(&v, 0, None), Some(2));
+        assert_eq!(r.pick(&v, 0, None), Some(0), "wraps around");
+        v[1].schedulable = false;
+        assert_eq!(r.pick(&v, 0, None), Some(2), "skips the dead device");
+        assert_eq!(r.pick(&v, 0, None), Some(0));
+    }
+
+    #[test]
+    fn least_work_prefers_earliest_free_lowest_index() {
+        let mut r = Router::new(PlacementPolicy::LeastWork);
+        assert_eq!(r.pick(&views(&[50, 10, 10]), 0, None), Some(1), "tie -> lowest index");
+        assert_eq!(r.pick(&views(&[50, 10, 5]), 0, None), Some(2));
+        assert_eq!(r.pick(&views(&[50, 10, 5]), 0, Some(2)), Some(1), "exclusion honored");
+    }
+
+    #[test]
+    fn affinity_pins_then_repins_on_death() {
+        let mut r = Router::new(PlacementPolicy::ShapeAffinity);
+        let mut v = views(&[100, 0]);
+        assert_eq!(r.pick(&v, 3, None), Some(1), "first pin is least-work");
+        v[1].free_at = 1_000_000;
+        assert_eq!(r.pick(&v, 3, None), Some(1), "sticks even when loaded");
+        assert_eq!(r.pick(&v, 0, None), Some(0), "other kind pins elsewhere");
+        v[1].schedulable = false;
+        assert_eq!(r.pick(&v, 3, None), Some(0), "re-pins off a detected failure");
+        v[1].schedulable = true;
+        assert_eq!(r.pick(&v, 3, None), Some(0), "the new pin is sticky too");
+    }
+
+    #[test]
+    fn no_schedulable_device_is_none() {
+        let mut r = Router::new(PlacementPolicy::RoundRobin);
+        let mut v = views(&[0]);
+        v[0].schedulable = false;
+        assert_eq!(r.pick(&v, 0, None), None);
+        let mut r = Router::new(PlacementPolicy::LeastWork);
+        assert_eq!(r.pick(&views(&[0]), 0, Some(0)), None, "exclusion can empty the fleet");
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for name in ["round-robin", "least-work", "affinity"] {
+            assert_eq!(PlacementPolicy::from_name(name).unwrap().label(), name);
+        }
+        assert_eq!(PlacementPolicy::from_name("bogus"), None);
+        assert!(PlacementPolicy::VALID_NAMES.contains("least-work"));
+    }
+}

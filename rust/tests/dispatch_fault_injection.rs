@@ -271,8 +271,56 @@ fn spool_worker_ignores_foreign_files_and_serves_offers() {
     assert!(!dir.join("job_s0_a0.shard.json.claimed").exists(), "claim cleaned up");
     assert!(dir.join("README.txt").exists(), "foreign files untouched");
     assert!(
-        dir.join("aaa_bad.shard.json.rejected").exists(),
+        dir.join("aaa_bad.shard.json.poison").exists(),
         "corrupt offer quarantined instead of crashing the executor"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Poison-shard quarantine: malformed AND truncated offers are renamed
+/// to `.poison` (with the parse error logged) and the loop keeps
+/// serving — a bad producer must not strand claims or kill a long-
+/// lived executor another driver depends on.
+#[test]
+fn spool_worker_quarantines_poison_shards_and_keeps_serving() {
+    let dir = std::env::temp_dir().join(format!("opengemm-spool-poison-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let cfg = PlatformConfig::case_study();
+    let opts = SweepOptions { shards: 1, workers: 1, ..Default::default() };
+    let plan = SweepPlan::stride(&cfg, requests(2), opts);
+    let shard = &plan.shards[0];
+
+    // a syntactically-broken offer and a truncated-mid-write one, both
+    // sorting before the valid offer so they are claimed first
+    std::fs::write(dir.join("aa_malformed.shard.json"), "{ not json at all").unwrap();
+    let full = {
+        let path = dir.join("tmp_full.json");
+        shard.write_file(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        text
+    };
+    std::fs::write(dir.join("ab_truncated.shard.json"), &full[..full.len() / 2]).unwrap();
+    shard.write_file(&dir.join("zz_good.shard.json")).unwrap();
+
+    let stop = AtomicBool::new(false);
+    let opts = SpoolWorkerOptions {
+        poll: Duration::from_millis(5),
+        max_shards: 1,
+        ..Default::default()
+    };
+    let served = spool_worker_loop(&dir, &opts, &stop).unwrap();
+    assert_eq!(served, 1, "the valid offer behind two poison ones is still served");
+    assert!(dir.join("aa_malformed.shard.json.poison").exists(), "malformed quarantined");
+    assert!(dir.join("ab_truncated.shard.json.poison").exists(), "truncated quarantined");
+    assert!(!dir.join("aa_malformed.shard.json").exists(), "offer renamed, not copied");
+    assert!(!dir.join("aa_malformed.shard.json.claimed").exists(), "no stranded claim");
+    assert!(!dir.join("ab_truncated.shard.json.claimed").exists(), "no stranded claim");
+    assert!(
+        ShardResult::read_file(&dir.join("zz_good.result.json")).is_ok(),
+        "the valid shard's result was published"
     );
     let _ = std::fs::remove_dir_all(&dir);
 }

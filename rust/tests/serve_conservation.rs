@@ -1,0 +1,223 @@
+//! Randomized conservation properties for the serving engines.
+//!
+//! Rather than pinning one timeline, these tests throw seeded random
+//! workloads (arrival schedules, service tables, batching policies,
+//! fleet shapes, fault schedules) at both the single-device queue
+//! engine and the fleet engine and check the invariants no correct
+//! schedule may violate:
+//!
+//! - every admitted request is served **exactly once** (ids partition
+//!   into served + shed, with no duplicates and no gaps);
+//! - `arrival <= start <= completion` for every served request;
+//! - no device executes two attempts in overlapping windows;
+//! - `shed + served == offered`;
+//! - a device's reported busy cycles equal the sum of its attempt
+//!   windows (no phantom or unaccounted occupancy).
+
+use std::collections::BTreeMap;
+
+use opengemm::serve::{
+    simulate_fleet, simulate_queue, ArrivalSource, BatchPolicy, FaultKind, FaultSpec, FleetSpec,
+    PlacementPolicy, RequestRecord,
+};
+use opengemm::util::rng::Pcg32;
+
+/// A seeded random open-arrival schedule: `n` requests over `kinds`
+/// request kinds, bursty inter-arrival gaps.
+fn random_arrivals(rng: &mut Pcg32, n: usize, kinds: usize) -> Vec<(u64, usize)> {
+    let mut t = 0u64;
+    (0..n)
+        .map(|_| {
+            // mix tight bursts with long gaps so batches of every size
+            // and idle flushes all occur
+            t += match rng.below(4) {
+                0 => rng.below(10) as u64,
+                1 => rng.below(300) as u64,
+                _ => rng.below(2000) as u64,
+            };
+            (t, rng.below(kinds as u32) as usize)
+        })
+        .collect()
+}
+
+fn random_policy(rng: &mut Pcg32) -> BatchPolicy {
+    match rng.below(3) {
+        0 => BatchPolicy::Immediate,
+        1 => BatchPolicy::Size(1 + rng.below(4) as usize),
+        _ => BatchPolicy::Deadline {
+            max_batch: 1 + rng.below(4) as usize,
+            max_wait_cycles: rng.below(800) as u64,
+        },
+    }
+}
+
+fn check_served_exactly_once(records: &[RequestRecord], shed_ids: &[usize], offered: usize) {
+    let mut seen = vec![0usize; offered];
+    for r in records {
+        assert!(r.id < offered, "record id {} out of range {offered}", r.id);
+        seen[r.id] += 1;
+    }
+    for &id in shed_ids {
+        assert!(id < offered, "shed id {id} out of range {offered}");
+        seen[id] += 1;
+    }
+    for (id, &count) in seen.iter().enumerate() {
+        assert_eq!(count, 1, "request {id} resolved {count} times (must be exactly once)");
+    }
+}
+
+fn check_causality(records: &[RequestRecord]) {
+    for r in records {
+        assert!(
+            r.arrival <= r.start && r.start <= r.completion,
+            "request {}: arrival {} start {} completion {} out of order",
+            r.id,
+            r.arrival,
+            r.start,
+            r.completion
+        );
+    }
+}
+
+#[test]
+fn single_device_engine_conserves_requests() {
+    for trial in 0..30u64 {
+        let mut rng = Pcg32::new(0xC0_5E_41, trial);
+        let n = 1 + rng.below(60) as usize;
+        let kinds = 1 + rng.below(3) as usize;
+        let service: Vec<u64> = (0..kinds).map(|_| 50 + rng.below(1500) as u64).collect();
+        let policy = random_policy(&mut rng);
+        let overhead = rng.below(40) as u64;
+        let arrivals = random_arrivals(&mut rng, n, kinds);
+
+        let out = simulate_queue(&mut ArrivalSource::open(arrivals), &service, policy, overhead);
+        assert_eq!(out.records.len(), n, "trial {trial}: open loop serves everything");
+        check_served_exactly_once(&out.records, &[], n);
+        check_causality(&out.records);
+        // the single device never overlaps batch windows
+        let mut batches = out.batches.clone();
+        batches.sort_by_key(|b| b.start);
+        for w in batches.windows(2) {
+            assert!(
+                w[1].start >= w[0].completion,
+                "trial {trial}: batch windows overlap: {w:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fleet_engine_conserves_requests_under_faults() {
+    for trial in 0..30u64 {
+        let mut rng = Pcg32::new(0xF1_EE_7, trial);
+        let n = 1 + rng.below(60) as usize;
+        let kinds = 1 + rng.below(3) as usize;
+        let service: Vec<u64> = (0..kinds).map(|_| 50 + rng.below(1500) as u64).collect();
+        let policy = random_policy(&mut rng);
+        let overhead = rng.below(40) as u64;
+        let devices = 1 + rng.below(4) as usize;
+        let placement = match rng.below(3) {
+            0 => PlacementPolicy::RoundRobin,
+            1 => PlacementPolicy::LeastWork,
+            _ => PlacementPolicy::ShapeAffinity,
+        };
+        // fault at most devices-1 of them, so a live device always
+        // remains; a generous retry budget keeps failover legal even
+        // when several doomed devices are tried in sequence
+        let mut faults = Vec::new();
+        if devices > 1 {
+            for d in 0..rng.below(devices as u32) as usize {
+                faults.push(match rng.below(2) {
+                    0 => FaultSpec {
+                        device: d,
+                        at_cycle: rng.below(20_000) as u64,
+                        kind: FaultKind::FailStop,
+                    },
+                    _ => FaultSpec {
+                        device: d,
+                        at_cycle: rng.below(20_000) as u64,
+                        kind: FaultKind::Degrade { factor: 1.0 + rng.below(8) as f64 },
+                    },
+                });
+            }
+        }
+        let spec = FleetSpec {
+            devices,
+            placement,
+            faults,
+            slo_cycles: if rng.below(2) == 0 { Some(500 + rng.below(4000) as u64) } else { None },
+            hedge: rng.below(2) == 0,
+            retries: 16,
+        };
+        let arrivals = random_arrivals(&mut rng, n, kinds);
+
+        let out =
+            simulate_fleet(&mut ArrivalSource::open(arrivals), &service, policy, overhead, &spec)
+                .unwrap_or_else(|e| panic!("trial {trial} ({spec:?}): {e}"));
+
+        // conservation: shed + served == offered, each exactly once
+        assert_eq!(out.offered, n, "trial {trial}: every arrival is offered");
+        assert_eq!(
+            out.records.len() + out.shed.len(),
+            out.offered,
+            "trial {trial}: shed + served == offered"
+        );
+        assert_eq!(out.counters.sheds, out.shed.len(), "trial {trial}: sheds counted");
+        let shed_ids: Vec<usize> = out.shed.iter().map(|s| s.id).collect();
+        check_served_exactly_once(&out.records, &shed_ids, n);
+        check_causality(&out.records);
+
+        // no device runs two attempts in overlapping windows, and its
+        // reported busy cycles are exactly the sum of its windows
+        let mut by_device: BTreeMap<usize, Vec<(u64, u64)>> = BTreeMap::new();
+        for a in &out.attempts {
+            assert!(a.start <= a.end, "trial {trial}: inverted attempt window {a:?}");
+            by_device.entry(a.device).or_default().push((a.start, a.end));
+        }
+        for (device, mut windows) in by_device {
+            windows.sort();
+            for w in windows.windows(2) {
+                assert!(
+                    w[1].0 >= w[0].1,
+                    "trial {trial}: device {device} attempt windows overlap: {windows:?}"
+                );
+            }
+            let busy: u64 = windows.iter().map(|&(s, e)| e - s).sum();
+            assert_eq!(
+                out.devices[device].busy_cycles, busy,
+                "trial {trial}: device {device} busy cycles != sum of attempt windows"
+            );
+        }
+    }
+}
+
+/// The two engines agree on every 1-device no-fault schedule, not just
+/// hand-picked ones — the randomized form of the pinned differential.
+#[test]
+fn engines_agree_on_random_single_device_schedules() {
+    for trial in 0..20u64 {
+        let mut rng = Pcg32::new(0xD1FF, trial);
+        let n = 1 + rng.below(50) as usize;
+        let kinds = 1 + rng.below(3) as usize;
+        let service: Vec<u64> = (0..kinds).map(|_| 50 + rng.below(1500) as u64).collect();
+        let policy = random_policy(&mut rng);
+        let overhead = rng.below(40) as u64;
+        let arrivals = random_arrivals(&mut rng, n, kinds);
+
+        let q = simulate_queue(
+            &mut ArrivalSource::open(arrivals.clone()),
+            &service,
+            policy,
+            overhead,
+        );
+        let f = simulate_fleet(
+            &mut ArrivalSource::open(arrivals),
+            &service,
+            policy,
+            overhead,
+            &FleetSpec::default(),
+        )
+        .unwrap();
+        assert_eq!(q.records, f.records, "trial {trial}: timelines diverge under {policy:?}");
+    }
+}

@@ -17,7 +17,8 @@ use opengemm::compiler::GemmShape;
 use opengemm::config::{Mechanisms, PlatformConfig};
 use opengemm::coordinator::{Coordinator, JobRequest};
 use opengemm::serve::{
-    run_serve, ArrivalSpec, BatchPolicy, RequestKind, ServeOptions, ServiceModel, WorkloadSpec,
+    run_serve, ArrivalSpec, BatchPolicy, FaultKind, FaultSpec, PlacementPolicy, RequestKind,
+    ServeOptions, ServiceModel, WorkloadSpec, SERVE_REPORT_FORMAT,
 };
 
 fn base_opts() -> ServeOptions {
@@ -188,6 +189,91 @@ fn batching_policies_reshape_the_timeline() {
         deadline.batches
     );
     assert_eq!(deadline.requests, 10);
+}
+
+#[test]
+fn fleet_knobs_without_faults_do_not_perturb_the_single_device_timeline() {
+    // The v2 differential at the report level: explicit 1-device fleet
+    // options (placement choice, unused retry budget) must serialize
+    // byte-identically to the defaults — the fleet layer is invisible
+    // until it has more than one device or an injected fault.
+    let cfg = PlatformConfig::case_study();
+    let baseline = run_serve(&cfg, &base_opts()).unwrap().to_json().pretty();
+    assert!(baseline.contains(SERVE_REPORT_FORMAT), "v2 schema marker present");
+    let explicit = ServeOptions {
+        devices: 1,
+        placement: PlacementPolicy::LeastWork,
+        retries: 9,
+        ..base_opts()
+    };
+    let fleet = run_serve(&cfg, &explicit).unwrap().to_json().pretty();
+    // the placement label is reported; everything timeline-derived is
+    // identical
+    assert_eq!(baseline.replace("round-robin", "least-work"), fleet);
+}
+
+#[test]
+fn fail_stop_drives_failover_counters_into_the_report() {
+    let cfg = PlatformConfig::case_study();
+    let opts = ServeOptions {
+        workload: WorkloadSpec::BertBase { seq_choices: vec![64] },
+        requests: 8,
+        devices: 2,
+        placement: PlacementPolicy::RoundRobin,
+        faults: vec![FaultSpec { device: 0, at_cycle: 1, kind: FaultKind::FailStop }],
+        retries: 4,
+        ..base_opts()
+    };
+    let report = run_serve(&cfg, &opts).unwrap();
+    assert!(report.fleet.failovers > 0, "round-robin must hit the dead device");
+    assert!(report.fleet.retries >= report.fleet.failovers, "retries count batch members");
+    assert_eq!(report.requests, 8, "every request survives the failovers");
+    assert_eq!(report.devices[0].failed_at_cycle, Some(1));
+    assert_eq!(report.devices[1].failed_at_cycle, None);
+    assert_eq!(report.devices[1].batches, report.batches, "the survivor won every batch");
+    // the counters are in the JSON, with their non-zero values
+    let json = report.to_json();
+    let fleet = json.get("fleet").expect("fleet object");
+    assert!(fleet.get("failovers").and_then(|v| v.as_f64()).unwrap() > 0.0);
+    assert!(fleet.get("retries").and_then(|v| v.as_f64()).unwrap() > 0.0);
+    for key in ["hedges", "shed", "wasted_cycles", "goodput_rps", "placement"] {
+        assert!(fleet.get(key).is_some(), "fleet JSON missing {key}");
+    }
+    let devices = json.get("devices").and_then(|d| d.as_arr()).expect("devices array");
+    assert_eq!(devices.len(), 2);
+    assert!(devices.iter().all(|d| d.get("utilization").is_some()));
+
+    // and the faulted run still replays byte-identically in-process
+    // (the CI fleet-smoke lane re-checks this across real processes)
+    let again = run_serve(&cfg, &opts).unwrap();
+    assert_eq!(json.pretty(), again.to_json().pretty());
+}
+
+#[test]
+fn slo_admission_control_sheds_and_reports_offered_load() {
+    let cfg = PlatformConfig::case_study();
+    // heavy overload (BERT service runs ~ms; arrivals every ~20us) with
+    // a tight SLO: most arrivals must be shed, loudly
+    let opts = ServeOptions {
+        workload: WorkloadSpec::BertBase { seq_choices: vec![64] },
+        arrival: ArrivalSpec::OpenPoisson { rate_rps: 10_000.0 },
+        requests: 12,
+        slo_ms: Some(0.01),
+        ..base_opts()
+    };
+    let report = run_serve(&cfg, &opts).unwrap();
+    assert!(report.fleet.shed > 0, "overload past the SLO must shed");
+    assert_eq!(report.fleet.offered, 12);
+    assert_eq!(report.requests + report.fleet.shed, report.fleet.offered);
+    assert!(report.requests > 0, "the first arrival always meets an idle device");
+    let json = report.to_json();
+    let fleet = json.get("fleet").expect("fleet object");
+    assert!(fleet.get("shed").and_then(|v| v.as_f64()).unwrap() > 0.0);
+    assert_eq!(fleet.get("offered").and_then(|v| v.as_f64()), Some(12.0));
+    assert!(fleet.get("slo_cycles").and_then(|v| v.as_f64()).unwrap() > 0.0);
+    // shedding caps goodput below offered load
+    let goodput = fleet.get("goodput_rps").and_then(|v| v.as_f64()).unwrap();
+    assert!(goodput > 0.0);
 }
 
 #[test]
