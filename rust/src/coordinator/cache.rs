@@ -1,0 +1,374 @@
+//! Content-addressed result cache: never price the same job bytes
+//! twice.
+//!
+//! Every job in this repo is a deterministic function of
+//! `(PlatformConfig, sim options, JobRequest)` — the property the whole
+//! sharded-sweep equality proof rests on (see [`crate::coordinator::
+//! shard`]). This module turns that determinism into reuse: the cache
+//! key is a stable digest ([`crate::util::digest`]) over the canonical
+//! `util::json` encoding of exactly those inputs, so two runs that
+//! would simulate the same bytes share one cache entry — across
+//! processes, sweeps, and (through a shared directory) hosts.
+//!
+//! Two tiers:
+//! - **in-memory**: a map from key to [`JobOutcome`], always on;
+//! - **persistent** (optional): one `{key}.cache.json` file per entry
+//!   in a spool-style directory, published with the same atomic
+//!   temp-file + rename protocol as [`super::dispatch::SpoolDir`]
+//!   shards, so concurrent readers never observe a partial entry.
+//!
+//! Failure policy mirrors the spool executor: a corrupt, truncated or
+//! mismatched entry is quarantined to `{name}.poison` and treated as a
+//! **miss**, never an error — a damaged cache can cost re-simulation
+//! but can never fail a sweep or corrupt a result. Divergence checking
+//! is the opposite, opt-in mode ([`ResultCache::with_verify`]): hits
+//! are re-simulated and a mismatch is a hard error, which turns a
+//! populated cache into a standing determinism regression check.
+//!
+//! What the key deliberately EXCLUDES: worker counts, shard counts,
+//! transports, retry budgets — anything the determinism doctrine says
+//! cannot change the bytes of a result. Including them would shatter
+//! the cache across equivalent runs; excluding anything that *does*
+//! affect results would alias distinct jobs, which is why the key
+//! covers the full elaborated config and the per-job simulation
+//! options (`fast_forward` affects no results either, but it selects a
+//! different engine, so it stays in the key to keep `--no-fast-forward`
+//! differential runs from short-circuiting through cached
+//! fast-forward entries).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::config::PlatformConfig;
+use crate::coordinator::dispatch::write_atomically;
+use crate::coordinator::shard::{Shard, SweepOptions};
+use crate::coordinator::{
+    outcome_from_json, outcome_to_json, CoordinatorStats, JobOutcome, JobRequest,
+};
+use crate::util::digest::fingerprint;
+use crate::util::json::{self, Json};
+
+/// Wire-format marker of one persistent cache entry.
+const CACHE_ENTRY_FORMAT: &str = "opengemm-cache-entry-v1";
+
+/// Cache key of one job: a digest over the canonical encoding of the
+/// elaborated platform config, the result-relevant simulation options,
+/// and the complete request (operands included).
+pub fn job_key(
+    cfg: &PlatformConfig,
+    fast_forward: bool,
+    csr_latency: u64,
+    request: &JobRequest,
+) -> String {
+    let doc = Json::obj(vec![
+        ("cfg", cfg.to_json()),
+        (
+            "options",
+            Json::obj(vec![
+                ("csr_latency", Json::num(csr_latency as f64)),
+                ("fast_forward", Json::Bool(fast_forward)),
+            ]),
+        ),
+        ("request", request.to_json()),
+    ]);
+    fingerprint(doc.pretty().as_bytes())
+}
+
+/// The cache key of every job in a shard, parallel to `shard.requests`.
+pub fn shard_job_keys(shard: &Shard) -> Vec<String> {
+    shard
+        .requests
+        .iter()
+        .map(|r| job_key(&shard.cfg, shard.options.fast_forward, shard.options.csr_latency, r))
+        .collect()
+}
+
+/// Content fingerprint of a whole shard — the spool transport's
+/// resumable stem. The shard's `workers` knob is masked out before
+/// hashing: it tunes the executor host's thread pool and cannot change
+/// the result bytes, so a re-run with a different `--workers` must
+/// still claim the killed run's published results.
+pub fn shard_fingerprint(shard: &Shard) -> String {
+    let canonical = Shard {
+        options: SweepOptions { workers: 0, ..shard.options },
+        ..shard.clone()
+    };
+    fingerprint(canonical.to_json().pretty().as_bytes())
+}
+
+/// Derive the coordinator counters a run of these outcomes would have
+/// produced. Exact by construction — [`Coordinator::run_batch`] counts
+/// per-outcome through the same [`CoordinatorStats::record`] — which is
+/// what keeps a warm-cache merged document byte-identical to the cold
+/// run's.
+///
+/// [`Coordinator::run_batch`]: crate::coordinator::Coordinator::run_batch
+pub fn derive_stats<'a>(outcomes: impl IntoIterator<Item = &'a JobOutcome>) -> CoordinatorStats {
+    let mut stats = CoordinatorStats::default();
+    for outcome in outcomes {
+        stats.record(outcome);
+    }
+    stats
+}
+
+/// A content-addressed job-result cache (in-memory tier, plus an
+/// optional directory-backed persistent tier).
+pub struct ResultCache {
+    dir: Option<PathBuf>,
+    verify: bool,
+    mem: Mutex<BTreeMap<String, JobOutcome>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ResultCache {
+    /// Memory-only cache: reuse within one process, nothing persisted.
+    pub fn in_memory() -> ResultCache {
+        ResultCache {
+            dir: None,
+            verify: false,
+            mem: Mutex::new(BTreeMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Directory-backed cache: entries persist across process
+    /// invocations as `{key}.cache.json` files under `dir` (created if
+    /// absent).
+    pub fn persistent(dir: &Path) -> Result<ResultCache, String> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| format!("result cache: create {}: {e}", dir.display()))?;
+        Ok(ResultCache { dir: Some(dir.to_path_buf()), ..ResultCache::in_memory() })
+    }
+
+    /// Verify mode: hits are re-simulated and compared instead of
+    /// short-circuiting dispatch; a divergence is a hard error.
+    pub fn with_verify(mut self, verify: bool) -> ResultCache {
+        self.verify = verify;
+        self
+    }
+
+    pub fn verify(&self) -> bool {
+        self.verify
+    }
+
+    pub fn dir(&self) -> Option<&Path> {
+        self.dir.as_deref()
+    }
+
+    /// Lookups answered from a tier (counted even in verify mode).
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that found nothing (quarantined entries included).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    fn entry_path(dir: &Path, key: &str) -> PathBuf {
+        dir.join(format!("{key}.cache.json"))
+    }
+
+    /// Fetch the outcome stored under `key`, consulting memory first,
+    /// then the persistent directory (a disk hit is promoted into the
+    /// memory tier). A corrupt or mismatched persistent entry is
+    /// quarantined to `.poison` and reported as a miss.
+    pub fn lookup(&self, key: &str) -> Option<JobOutcome> {
+        if let Some(outcome) = self.mem.lock().unwrap().get(key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Some(outcome.clone());
+        }
+        if let Some(dir) = &self.dir {
+            let path = Self::entry_path(dir, key);
+            if let Ok(text) = std::fs::read_to_string(&path) {
+                match parse_entry(key, &text) {
+                    Ok(outcome) => {
+                        self.mem.lock().unwrap().insert(key.to_string(), outcome.clone());
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        return Some(outcome);
+                    }
+                    Err(e) => {
+                        // Same policy as poison spool shards: quarantine
+                        // (evidence for the operator; the rename also
+                        // stops every later lookup from re-parsing it)
+                        // and treat as a miss — the job re-simulates.
+                        eprintln!(
+                            "result cache: quarantining poison entry {}: {e}",
+                            path.display()
+                        );
+                        let poison = path.with_file_name(format!("{key}.cache.json.poison"));
+                        let _ = std::fs::rename(&path, poison);
+                    }
+                }
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    /// Publish an outcome under `key` in both tiers. A persistent-tier
+    /// write failure is a warning, not an error: losing cache
+    /// durability must never fail the sweep that produced the result.
+    pub fn insert(&self, key: &str, outcome: &JobOutcome) {
+        let first =
+            self.mem.lock().unwrap().insert(key.to_string(), outcome.clone()).is_none();
+        if !first {
+            return;
+        }
+        if let Some(dir) = &self.dir {
+            let doc = Json::obj(vec![
+                ("format", Json::str(CACHE_ENTRY_FORMAT)),
+                ("key", Json::str(key)),
+                ("outcome", outcome_to_json(outcome)),
+            ]);
+            if let Err(e) = write_atomically(&Self::entry_path(dir, key), &doc.pretty()) {
+                eprintln!("result cache: could not persist entry {key}: {e}");
+            }
+        }
+    }
+}
+
+fn parse_entry(key: &str, text: &str) -> Result<JobOutcome, String> {
+    let v = json::parse(text)?;
+    let format = json::get_str(&v, "format")?;
+    if format != CACHE_ENTRY_FORMAT {
+        return Err(format!(
+            "not a cache entry: format {format:?}, want {CACHE_ENTRY_FORMAT:?}"
+        ));
+    }
+    let stored = json::get_str(&v, "key")?;
+    if stored != key {
+        return Err(format!("entry holds key {stored:?}, file name says {key:?}"));
+    }
+    outcome_from_json(json::get(&v, "outcome")?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::GemmShape;
+    use crate::config::Mechanisms;
+    use crate::coordinator::Coordinator;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("opengemm-cache-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn request(i: usize) -> JobRequest {
+        JobRequest::timing(GemmShape::new(8 + 8 * i, 16, 8), Mechanisms::ALL, 1)
+    }
+
+    #[test]
+    fn key_separates_config_options_and_request() {
+        let cfg = PlatformConfig::case_study();
+        let base = job_key(&cfg, true, 8, &request(0));
+        assert_eq!(base, job_key(&cfg, true, 8, &request(0)), "deterministic");
+        assert_ne!(base, job_key(&cfg, true, 8, &request(1)), "request in key");
+        assert_ne!(base, job_key(&cfg, true, 16, &request(0)), "csr latency in key");
+        assert_ne!(base, job_key(&cfg, false, 8, &request(0)), "engine choice in key");
+        let mut deep = cfg.clone();
+        deep.mem.d_stream += 1;
+        assert_ne!(base, job_key(&deep, true, 8, &request(0)), "config in key");
+    }
+
+    #[test]
+    fn shard_fingerprint_ignores_worker_count_only() {
+        let cfg = PlatformConfig::case_study();
+        let opts = SweepOptions { workers: 2, ..Default::default() };
+        let plan = crate::coordinator::shard::SweepPlan::stride(
+            &cfg,
+            vec![request(0), request(1)],
+            opts,
+        );
+        let shard = plan.shards[0].clone();
+        let mut retuned = shard.clone();
+        retuned.options.workers = 7;
+        assert_eq!(
+            shard_fingerprint(&shard),
+            shard_fingerprint(&retuned),
+            "a host-tuning knob must not re-address the shard"
+        );
+        let mut other = shard.clone();
+        other.requests[0] = request(3);
+        assert_ne!(shard_fingerprint(&shard), shard_fingerprint(&other));
+    }
+
+    #[test]
+    fn memory_tier_round_trip_counts_hits_and_misses() {
+        let cache = ResultCache::in_memory();
+        assert!(cache.lookup("k1").is_none());
+        let outcome: JobOutcome = Err("boom".into());
+        cache.insert("k1", &outcome);
+        assert_eq!(cache.lookup("k1"), Some(outcome));
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+    }
+
+    #[test]
+    fn persistent_tier_survives_a_new_cache_instance() {
+        let dir = temp_dir("persist");
+        let cfg = PlatformConfig::case_study();
+        let req = request(0);
+        let outcome = Coordinator::new(cfg.clone()).with_workers(1).run_one(&req);
+        let key = job_key(&cfg, true, 8, &req);
+
+        let warm = ResultCache::persistent(&dir).unwrap();
+        warm.insert(&key, &outcome);
+        drop(warm);
+
+        let cold = ResultCache::persistent(&dir).unwrap();
+        assert_eq!(cold.lookup(&key), Some(outcome), "entry read back from disk");
+        assert_eq!((cold.hits(), cold.misses()), (1, 0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_truncated_and_mismatched_entries_are_quarantined_misses() {
+        let dir = temp_dir("poison");
+        let cache = ResultCache::persistent(&dir).unwrap();
+        let ok: JobOutcome = Err("placeholder".into());
+
+        // syntactically broken
+        std::fs::write(dir.join("bad.cache.json"), "{ not json").unwrap();
+        // truncated mid-write (no atomic publish)
+        cache.insert("donor", &ok);
+        let full = std::fs::read_to_string(dir.join("donor.cache.json")).unwrap();
+        std::fs::write(dir.join("cut.cache.json"), &full[..full.len() / 2]).unwrap();
+        // well-formed but filed under the wrong name
+        std::fs::write(
+            dir.join("moved.cache.json"),
+            full.replace("donor", "elsewhere"),
+        )
+        .unwrap();
+
+        for key in ["bad", "cut", "moved"] {
+            assert!(cache.lookup(key).is_none(), "{key} must be a miss, not an error");
+            assert!(
+                dir.join(format!("{key}.cache.json.poison")).exists(),
+                "{key} quarantined"
+            );
+            assert!(!dir.join(format!("{key}.cache.json")).exists(), "{key} renamed away");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn derived_stats_match_a_real_run() {
+        let cfg = PlatformConfig::case_study();
+        let coord = Coordinator::new(cfg).with_workers(2);
+        let reqs = vec![
+            request(0),
+            request(1),
+            // oversized K fails the tiler — failures must count too
+            JobRequest::timing(GemmShape::new(8, 300_000, 8), Mechanisms::ALL, 1),
+        ];
+        let outcomes = coord.run_batch(reqs);
+        assert_eq!(derive_stats(outcomes.iter()), coord.stats());
+    }
+}

@@ -45,10 +45,11 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::coordinator::parse_workers_env;
+use crate::coordinator::cache::{derive_stats, shard_job_keys, ResultCache};
 use crate::coordinator::shard::{
     merge, resolve_worker_override, Shard, ShardResult, SweepPlan, SweepResult,
 };
+use crate::coordinator::{outcome_to_json, parse_workers_env};
 use crate::util::json::{self, Json};
 use crate::util::stats::quantile_sorted;
 
@@ -245,6 +246,14 @@ pub struct SpoolDir {
     /// / shard / attempt numbering, and reading one of those as this
     /// run's answer would merge stale data without any error.
     run_token: String,
+    /// Resume mode ([`Self::with_resume`]): replace the per-run token
+    /// with the shard's content fingerprint, so a re-run of a killed
+    /// sweep produces the SAME stems and can claim results the dead
+    /// run's executors already published. Content addressing is what
+    /// makes this safe where token reuse would not be: a stale result
+    /// can only be read under a stem that hashes the identical shard
+    /// bytes, and determinism says that result is the answer.
+    resume: bool,
     poll: Duration,
     timeout: Duration,
 }
@@ -278,9 +287,19 @@ impl SpoolDir {
             dir: dir.to_path_buf(),
             prefix: prefix.to_string(),
             run_token,
+            resume: false,
             poll: poll.max(Duration::from_millis(1)),
             timeout,
         })
+    }
+
+    /// Content-addressed stems: offers are named by shard fingerprint
+    /// instead of the per-run token, and an already-published result
+    /// under that stem is claimed without re-dispatching. This is the
+    /// killed-sweep resume path (`sweep --transport spool --cache`).
+    pub fn with_resume(mut self, resume: bool) -> SpoolDir {
+        self.resume = resume;
+        self
     }
 }
 
@@ -291,10 +310,32 @@ impl Transport for SpoolDir {
         attempt: u32,
         cancel: &CancelFlag,
     ) -> Result<ShardResult, String> {
-        let stem =
-            format!("{}{}_s{}_a{}", self.prefix, self.run_token, shard.shard_index, attempt);
+        let token = if self.resume {
+            format!("k{}", crate::coordinator::cache::shard_fingerprint(shard))
+        } else {
+            self.run_token.clone()
+        };
+        let stem = format!("{}{}_s{}_a{}", self.prefix, token, shard.shard_index, attempt);
         let shard_path = self.dir.join(format!("{stem}.shard.json"));
         let result_path = self.dir.join(format!("{stem}.result.json"));
+        if self.resume && result_path.exists() {
+            // A prior (possibly killed) run of this exact shard already
+            // published its result — claim it instead of re-dispatching.
+            // The scheduler still validates it like any other result; a
+            // corrupt file is quarantined here so the retry (fresh
+            // attempt number, fresh stem) re-dispatches cleanly.
+            match ShardResult::read_file(&result_path) {
+                Ok(result) => return Ok(result),
+                Err(e) => {
+                    eprintln!(
+                        "spool resume: quarantining poison result {}: {e}",
+                        result_path.display()
+                    );
+                    let poison = self.dir.join(format!("{stem}.result.json.poison"));
+                    let _ = std::fs::rename(&result_path, poison);
+                }
+            }
+        }
         write_atomically(&shard_path, &shard.to_json().pretty())?;
         let deadline = Instant::now() + self.timeout;
         loop {
@@ -586,9 +627,20 @@ pub struct DispatchReport {
     pub retries: u64,
     pub speculative_dispatches: u64,
     pub duplicates_discarded: u64,
+    /// Jobs answered by the result cache (0 when no cache is in play).
+    pub cache_hits: u64,
+    /// Jobs the cache was consulted about and could not answer.
+    pub cache_misses: u64,
+    /// Jobs actually shipped to executors. Without a cache this equals
+    /// the plan's total job count; a fully warm cache drives it to 0 —
+    /// the counter the CI `cache-smoke` lane asserts on.
+    pub jobs_simulated: u64,
 }
 
-const DISPATCH_REPORT_FORMAT: &str = "opengemm-dispatch-report-v1";
+/// v2 added the cache counters (`cache_hits`/`cache_misses`/
+/// `jobs_simulated`). The report is diagnostics-only, so the bump only
+/// guards against parsing a pre-cache report file with current code.
+const DISPATCH_REPORT_FORMAT: &str = "opengemm-dispatch-report-v2";
 
 impl DispatchReport {
     pub fn to_json(&self) -> Json {
@@ -600,6 +652,9 @@ impl DispatchReport {
             ("retries", Json::num(self.retries as f64)),
             ("speculative_dispatches", Json::num(self.speculative_dispatches as f64)),
             ("duplicates_discarded", Json::num(self.duplicates_discarded as f64)),
+            ("cache_hits", Json::num(self.cache_hits as f64)),
+            ("cache_misses", Json::num(self.cache_misses as f64)),
+            ("jobs_simulated", Json::num(self.jobs_simulated as f64)),
         ])
     }
 
@@ -620,6 +675,9 @@ impl DispatchReport {
             retries: json::get_u64(v, "retries")?,
             speculative_dispatches: json::get_u64(v, "speculative_dispatches")?,
             duplicates_discarded: json::get_u64(v, "duplicates_discarded")?,
+            cache_hits: json::get_u64(v, "cache_hits")?,
+            cache_misses: json::get_u64(v, "cache_misses")?,
+            jobs_simulated: json::get_u64(v, "jobs_simulated")?,
         })
     }
 
@@ -627,13 +685,16 @@ impl DispatchReport {
     pub fn summary(&self) -> String {
         format!(
             "{} shard(s) over {} transport: {} attempt(s), {} retried, \
-             {} speculative, {} duplicate(s) discarded",
+             {} speculative, {} duplicate(s) discarded, {} job(s) simulated \
+             ({} cache hit(s))",
             self.shards,
             self.transport,
             self.attempts.len(),
             self.retries,
             self.speculative_dispatches,
-            self.duplicates_discarded
+            self.duplicates_discarded,
+            self.jobs_simulated,
+            self.cache_hits
         )
     }
 }
@@ -770,14 +831,168 @@ pub fn dispatch_plan(
     opts: &DispatchOptions,
 ) -> Result<(SweepResult, DispatchReport), String> {
     let SweepPlan { total_jobs, shards } = plan;
+    let (results, mut report) = dispatch_shards(shards, transport, opts)?;
+    report.jobs_simulated = total_jobs as u64;
+    let merged = merge(total_jobs, results)?;
+    Ok((merged, report))
+}
+
+/// [`dispatch_plan`] with an optional result cache in front of the
+/// transport. `None` is a plain [`dispatch_plan`]. With a cache:
+///
+/// - every job is looked up before dispatch; a shard whose jobs all hit
+///   never reaches the transport (no worker spawned, no spool offer);
+/// - a partial-hit shard ships a reduced shard holding only the missing
+///   jobs, and [`merge`] re-interleaves cached and fresh outcomes back
+///   into submission order (it checks exact index cover, not
+///   one-result-per-shard, so the split is invisible downstream);
+/// - fresh outcomes are published back to the cache;
+/// - in verify mode ([`ResultCache::with_verify`]) nothing is skipped:
+///   every job re-simulates and any divergence from a cached entry is a
+///   hard error — a standing determinism regression check.
+///
+/// The merged [`SweepResult`] is byte-identical to the uncached run:
+/// cached outcomes are the bytes a simulator produced earlier, and the
+/// merged stats are re-derived from outcomes exactly as `run_batch`
+/// counts them ([`CoordinatorStats::record`]).
+///
+/// [`CoordinatorStats::record`]: crate::coordinator::CoordinatorStats::record
+pub fn dispatch_plan_cached(
+    plan: SweepPlan,
+    transport: &dyn Transport,
+    opts: &DispatchOptions,
+    cache: Option<&ResultCache>,
+) -> Result<(SweepResult, DispatchReport), String> {
+    let Some(cache) = cache else {
+        return dispatch_plan(plan, transport, opts);
+    };
+    if cache.verify() {
+        return dispatch_plan_verifying(plan, transport, opts, cache);
+    }
+    let SweepPlan { total_jobs, shards } = plan;
+    let mut warm: Vec<ShardResult> = Vec::new();
+    let mut cold: Vec<Shard> = Vec::new();
+    let mut cold_keys: Vec<Vec<String>> = Vec::new();
+    let (mut hits, mut misses) = (0u64, 0u64);
+    for shard in shards {
+        let keys = shard_job_keys(&shard);
+        let mut hit_indices = Vec::new();
+        let mut hit_outcomes = Vec::new();
+        let mut miss_indices = Vec::new();
+        let mut miss_requests = Vec::new();
+        let mut miss_keys = Vec::new();
+        for ((&index, request), key) in shard.indices.iter().zip(&shard.requests).zip(&keys) {
+            match cache.lookup(key) {
+                Some(outcome) => {
+                    hit_indices.push(index);
+                    hit_outcomes.push(outcome);
+                }
+                None => {
+                    miss_indices.push(index);
+                    miss_requests.push(request.clone());
+                    miss_keys.push(key.clone());
+                }
+            }
+        }
+        hits += hit_indices.len() as u64;
+        misses += miss_indices.len() as u64;
+        if !hit_indices.is_empty() || miss_indices.is_empty() {
+            // The hits become a synthetic ShardResult (an all-hit or
+            // empty shard resolves entirely here — nothing dispatches).
+            warm.push(ShardResult {
+                shard_index: shard.shard_index,
+                stats: derive_stats(hit_outcomes.iter()),
+                indices: hit_indices,
+                outcomes: hit_outcomes,
+            });
+        }
+        if !miss_indices.is_empty() {
+            cold.push(Shard { indices: miss_indices, requests: miss_requests, ..shard });
+            cold_keys.push(miss_keys);
+        }
+    }
+    let (fresh, mut report) = dispatch_shards(cold, transport, opts)?;
+    report.cache_hits = hits;
+    report.cache_misses = misses;
+    report.jobs_simulated = misses;
+    // dispatch_shards returns results in input order, so fresh outcomes
+    // line up with the keys recorded at split time
+    for (result, keys) in fresh.iter().zip(&cold_keys) {
+        for (key, outcome) in keys.iter().zip(&result.outcomes) {
+            cache.insert(key, outcome);
+        }
+    }
+    let mut results = warm;
+    results.extend(fresh);
+    let mut merged = merge(total_jobs, results)?;
+    // surface the traffic on the in-memory stats too (these fields are
+    // excluded from the wire encoding, so byte-identity is unaffected)
+    merged.stats.cache_hits = report.cache_hits;
+    merged.stats.cache_misses = report.cache_misses;
+    merged.stats.jobs_simulated = report.jobs_simulated;
+    Ok((merged, report))
+}
+
+/// Verify-mode dispatch: simulate everything, then hard-error if any
+/// cached entry disagrees with its re-simulation (comparison is on
+/// canonical outcome bytes — exactly what the byte-identity pin
+/// guarantees). Jobs with no cached entry are published as usual, so a
+/// verify pass also warms the cache.
+fn dispatch_plan_verifying(
+    plan: SweepPlan,
+    transport: &dyn Transport,
+    opts: &DispatchOptions,
+    cache: &ResultCache,
+) -> Result<(SweepResult, DispatchReport), String> {
+    let SweepPlan { total_jobs, shards } = plan;
+    let keys: Vec<Vec<String>> = shards.iter().map(shard_job_keys).collect();
+    let (results, mut report) = dispatch_shards(shards, transport, opts)?;
+    report.jobs_simulated = total_jobs as u64;
+    for (result, keys) in results.iter().zip(&keys) {
+        for (key, fresh) in keys.iter().zip(&result.outcomes) {
+            match cache.lookup(key) {
+                Some(cached) => {
+                    report.cache_hits += 1;
+                    let want = outcome_to_json(fresh).pretty();
+                    let got = outcome_to_json(&cached).pretty();
+                    if want != got {
+                        return Err(format!(
+                            "cache verify FAILED for key {key}: cached outcome \
+                             diverges from re-simulation (determinism regression, \
+                             or a corrupted store evading the entry checks)"
+                        ));
+                    }
+                }
+                None => {
+                    report.cache_misses += 1;
+                    cache.insert(key, fresh);
+                }
+            }
+        }
+    }
+    let mut merged = merge(total_jobs, results)?;
+    merged.stats.cache_hits = report.cache_hits;
+    merged.stats.cache_misses = report.cache_misses;
+    merged.stats.jobs_simulated = report.jobs_simulated;
+    Ok((merged, report))
+}
+
+/// Scheduler core: drive a bare shard list over `transport`, returning
+/// each shard's validated result **in input order** plus the report.
+/// [`dispatch_plan`] layers the merge on top; the cached variants
+/// dispatch reduced shard lists through this and merge hits back in.
+pub fn dispatch_shards(
+    shards: Vec<Shard>,
+    transport: &dyn Transport,
+    opts: &DispatchOptions,
+) -> Result<(Vec<ShardResult>, DispatchReport), String> {
     let mut report = DispatchReport {
         transport: transport.name().to_string(),
         shards: shards.len(),
         ..Default::default()
     };
     if shards.is_empty() {
-        let merged = merge(total_jobs, Vec::new())?;
-        return Ok((merged, report));
+        return Ok((Vec::new(), report));
     }
 
     let queue = WorkQueue {
@@ -987,8 +1202,7 @@ pub fn dispatch_plan(
         .into_iter()
         .map(|s| s.result.expect("scheduler completed every shard"))
         .collect();
-    let merged = merge(total_jobs, results)?;
-    Ok((merged, report))
+    Ok((results, report))
 }
 
 #[cfg(test)]
@@ -1149,6 +1363,9 @@ mod tests {
             retries: 1,
             speculative_dispatches: 1,
             duplicates_discarded: 1,
+            cache_hits: 4,
+            cache_misses: 2,
+            jobs_simulated: 2,
         };
         let text = report.to_json().pretty();
         let back = DispatchReport::from_json(&json::parse(&text).unwrap()).unwrap();

@@ -8,6 +8,7 @@
 //! the same architecture). Results come back over a bounded channel in
 //! submission order.
 
+pub mod cache;
 pub mod dispatch;
 pub mod shard;
 
@@ -166,18 +167,49 @@ pub struct CoordinatorStats {
     pub jobs_completed: u64,
     pub jobs_failed: u64,
     pub simulated_cycles: u64,
+    /// Result-cache traffic (`coordinator::cache`). These three are
+    /// deliberately EXCLUDED from the wire encoding below: the merged
+    /// sweep document must depend only on the simulated work, so a
+    /// warm-cache re-run stays byte-identical to the cold run. The
+    /// dispatch layer reports them on the wire via `DispatchReport`,
+    /// which is diagnostics by design.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Jobs that actually reached a simulator (as opposed to being
+    /// answered from cache). Counted by the dispatch/cache layer, not
+    /// by `run_batch` — the wire exclusion above would otherwise make
+    /// the counter inconsistent across transports.
+    pub jobs_simulated: u64,
 }
 
 impl CoordinatorStats {
+    /// Count one outcome, exactly as the `run_batch` worker pool does —
+    /// the cache layer uses this to derive the stats a cached job would
+    /// have contributed, which is what keeps warm and cold runs
+    /// byte-identical.
+    pub fn record(&mut self, outcome: &JobOutcome) {
+        match outcome {
+            Ok(r) => {
+                self.jobs_completed += 1;
+                self.simulated_cycles += r.metrics.total_cycles;
+            }
+            Err(_) => self.jobs_failed += 1,
+        }
+    }
+
     /// Fold another coordinator's counters in (shard merging). Plain
     /// u64 sums, so the merge is order-independent.
     pub fn accumulate(&mut self, other: &CoordinatorStats) {
         self.jobs_completed += other.jobs_completed;
         self.jobs_failed += other.jobs_failed;
         self.simulated_cycles += other.simulated_cycles;
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
+        self.jobs_simulated += other.jobs_simulated;
     }
 
-    /// Wire encoding (sharded-sweep result files).
+    /// Wire encoding (sharded-sweep result files). Cache counters are
+    /// intentionally absent — see the field docs.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("jobs_completed", Json::num(self.jobs_completed as f64)),
@@ -191,6 +223,7 @@ impl CoordinatorStats {
             jobs_completed: json::get_u64(v, "jobs_completed")?,
             jobs_failed: json::get_u64(v, "jobs_failed")?,
             simulated_cycles: json::get_u64(v, "simulated_cycles")?,
+            ..CoordinatorStats::default()
         })
     }
 }
@@ -312,16 +345,7 @@ impl Coordinator {
                     let Ok(WorkItem { index, request }) = item else { break };
                     let outcome =
                         run_one(&mut platform, &cfg, csr_latency, fast_forward, &request);
-                    {
-                        let mut s = stats.lock().unwrap();
-                        match &outcome {
-                            Ok(r) => {
-                                s.jobs_completed += 1;
-                                s.simulated_cycles += r.metrics.total_cycles;
-                            }
-                            Err(_) => s.jobs_failed += 1,
-                        }
-                    }
+                    stats.lock().unwrap().record(&outcome);
                     let _ = done_tx.send((index, outcome));
                 }
             }));

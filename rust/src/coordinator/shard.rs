@@ -29,7 +29,10 @@
 use std::path::Path;
 
 use crate::config::PlatformConfig;
-use crate::coordinator::dispatch::{dispatch_plan, DispatchOptions, InProcess};
+use crate::coordinator::cache::ResultCache;
+use crate::coordinator::dispatch::{
+    dispatch_plan, dispatch_plan_cached, DispatchOptions, InProcess,
+};
 use crate::coordinator::{
     outcome_from_json, outcome_to_json, parse_workers_env, Coordinator, CoordinatorStats,
     JobOutcome, JobRequest,
@@ -432,7 +435,25 @@ pub fn run_sweep(
     requests: Vec<JobRequest>,
     opts: SweepOptions,
 ) -> SweepResult {
-    run_plan(SweepPlan::stride(cfg, requests, opts))
+    run_sweep_cached(cfg, requests, opts, None)
+        .expect("in-process dispatch of an exact cover cannot fail")
+}
+
+/// [`run_sweep`] with an optional result cache in front of the
+/// simulator (see [`crate::coordinator::cache`]): each job is looked up
+/// before dispatch and only the misses are simulated, with the merged
+/// result byte-identical to the uncached run. Fallible because a cache
+/// in verify mode hard-errors on a divergent entry.
+pub fn run_sweep_cached(
+    cfg: &PlatformConfig,
+    requests: Vec<JobRequest>,
+    opts: SweepOptions,
+    cache: Option<&ResultCache>,
+) -> Result<SweepResult, String> {
+    let plan = SweepPlan::stride(cfg, requests, opts);
+    let (result, _report) =
+        dispatch_plan_cached(plan, &InProcess, &DispatchOptions::serial(), cache)?;
+    Ok(result)
 }
 
 #[cfg(test)]

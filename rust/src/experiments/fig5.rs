@@ -12,7 +12,8 @@
 
 use crate::compiler::GemmShape;
 use crate::config::{Mechanisms, PlatformConfig};
-use crate::coordinator::shard::{run_sweep, SweepOptions};
+use crate::coordinator::cache::ResultCache;
+use crate::coordinator::shard::{run_sweep_cached, SweepOptions};
 use crate::coordinator::JobRequest;
 use crate::model::prefilter;
 use crate::util::stats::BoxStats;
@@ -94,6 +95,21 @@ pub fn variant_config(base_cfg: &PlatformConfig, depth: usize) -> PlatformConfig
 }
 
 pub fn fig5_ablation(base_cfg: &PlatformConfig, opts: Fig5Options) -> Fig5Result {
+    fig5_ablation_cached(base_cfg, opts, None)
+        .expect("uncached fig5 ablation cannot fail in dispatch")
+}
+
+/// [`fig5_ablation`] with an optional result cache in front of the
+/// simulator: a re-run over an unchanged ladder (or one that shares
+/// rungs with an earlier run — the cache composes with the prefilter,
+/// which decides WHAT to simulate while the cache decides what still
+/// NEEDS simulating) only prices the jobs it has never seen. Fallible
+/// because a verify-mode cache hard-errors on divergence.
+pub fn fig5_ablation_cached(
+    base_cfg: &PlatformConfig,
+    opts: Fig5Options,
+    cache: Option<&ResultCache>,
+) -> Result<Fig5Result, String> {
     let shapes = random_suite(opts.seed, opts.workloads);
     let sweep_opts = SweepOptions {
         shards: opts.shards,
@@ -131,7 +147,7 @@ pub fn fig5_ablation(base_cfg: &PlatformConfig, opts: Fig5Options) -> Fig5Result
     for (variant, gv) in grid.iter().enumerate() {
         let depth = gv.cfg.mem.d_stream;
         let (samples, predicted_only): (Vec<f64>, bool) = if confirmed[variant] {
-            let simulated = run_sweep(&gv.cfg, gv.requests.clone(), sweep_opts)
+            let simulated = run_sweep_cached(&gv.cfg, gv.requests.clone(), sweep_opts, cache)?
                 .outcomes
                 .into_iter()
                 .map(|r| r.expect("fig5 job failed").report.overall)
@@ -155,7 +171,7 @@ pub fn fig5_ablation(base_cfg: &PlatformConfig, opts: Fig5Options) -> Fig5Result
             predicted_only,
         });
     }
-    Fig5Result { variants, shapes }
+    Ok(Fig5Result { variants, shapes })
 }
 
 impl Fig5Result {

@@ -61,6 +61,15 @@
 //!
 //! # explicit worker: run one serialized shard by hand
 //! opengemm sweep --shard /tmp/v0_s0.shard.json --out /tmp/v0_s0.result.json
+//!
+//! # content-addressed result cache: the warm re-run simulates zero
+//! # jobs and emits byte-identical JSON (the CI cache-smoke lane
+//! # asserts both); --cache-verify re-simulates hits and hard-errors
+//! # if a cached outcome diverges
+//! opengemm sweep --workloads 40 --cache /tmp/gemm.cache > c.json
+//! opengemm sweep --workloads 40 --cache /tmp/gemm.cache > d.json
+//! diff c.json d.json
+//! opengemm sweep --workloads 40 --cache /tmp/gemm.cache --cache-verify > /dev/null
 //! ```
 
 use std::path::{Path, PathBuf};
@@ -72,8 +81,9 @@ use opengemm::{anyhow, bail};
 
 use opengemm::compiler::{GemmShape, Layout};
 use opengemm::config::{Mechanisms, PlatformConfig};
+use opengemm::coordinator::cache::ResultCache;
 use opengemm::coordinator::dispatch::{
-    dispatch_plan, spool_worker_loop, write_atomically, DispatchOptions, DispatchReport,
+    dispatch_plan_cached, spool_worker_loop, write_atomically, DispatchOptions, DispatchReport,
     FaultInjector, InProcess, SpoolDir, SpoolWorkerOptions, Subprocess, Transport,
 };
 use opengemm::coordinator::shard::{
@@ -81,9 +91,10 @@ use opengemm::coordinator::shard::{
 };
 use opengemm::coordinator::{Coordinator, JobRequest};
 use opengemm::experiments::fig5::{variant_config, variant_specs};
+use opengemm::experiments::fig5::fig5_ablation_cached;
 use opengemm::experiments::{
-    fig5_ablation, fig6_area_power, fig7_gemmini, table2_dnn, table3_sota, Fig5Options,
-    Fig6Options, Fig7Options, Table2Options,
+    fig6_area_power, fig7_gemmini, table2_dnn, table3_sota, Fig5Options, Fig6Options, Fig7Options,
+    Table2Options,
 };
 use opengemm::model::prefilter;
 use opengemm::power::PowerModel;
@@ -113,6 +124,11 @@ SUBCOMMANDS:
                                    (simulate only the top-K variants of
                                     the closed-form analytical ranking;
                                     pruned rows report predicted stats)
+                    --cache DIR    (content-addressed result cache; a
+                                    re-run simulates only unseen jobs)
+                    --cache-verify (with --cache: re-simulate hits and
+                                    hard-error if a cached outcome
+                                    diverges)
   dnn               Table 2: DNN benchmark (MobileNetV2/ResNet18/ViT/BERT)
                     --bert-seq N  --workers N
   area-power        Fig. 6: area & power breakdown, TOPS/W
@@ -159,6 +175,15 @@ SUBCOMMANDS:
                                        variant grid, rounded up;
                                        mutually exclusive with
                                        --confirm-top)
+                    --cache DIR    (content-addressed result cache: a
+                                    warm re-run dispatches only jobs
+                                    never simulated before, and a spool
+                                    sweep re-run after a driver crash
+                                    claims already-published results
+                                    instead of re-running their shards)
+                    --cache-verify (with --cache: re-simulate every hit
+                                    and hard-error on divergence — a
+                                    determinism regression drill)
                     worker mode: --shard FILE [--out FILE] [--workers N]
                     spool executor mode: --spool-serve DIR [--workers N]
                                          [--max-shards N] [--poll-ms MS]
@@ -187,6 +212,11 @@ SUBCOMMANDS:
                                     cycles counted as waste)
                     --retries N    (failover re-dispatch budget per
                                     batch; default 2)
+                    --cache DIR    (persist ServiceModel measurements:
+                                    a re-run with the same platform
+                                    prices known shapes from the cache)
+                    --cache-verify (with --cache: re-simulate hits and
+                                    hard-error on divergence)
                     --json         (JSON report on stdout, not the table)
                     --out FILE     (also write the JSON report to FILE)
   verify            functional equivalence: simulator vs AOT artifacts
@@ -301,8 +331,23 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--cache DIR` / `--cache-verify` into an opened result
+/// cache. `--cache-verify` without a store to verify against is a hard
+/// error — same fail-loudly policy as `--transport` and `--prefilter`.
+fn open_cache(args: &Args) -> Result<Option<ResultCache>> {
+    let verify = args.has("cache-verify");
+    match args.get("cache") {
+        Some(dir) => Ok(Some(
+            ResultCache::persistent(Path::new(dir)).map_err(|e| anyhow!(e))?.with_verify(verify),
+        )),
+        None if verify => bail!("--cache-verify needs --cache DIR (no cache to verify against)"),
+        None => Ok(None),
+    }
+}
+
 fn cmd_ablation(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
+    let cache = open_cache(args)?;
     let opts = Fig5Options {
         seed: args.u64_or("seed", 2024)?,
         workloads: args.usize_or("workloads", 500)?,
@@ -320,7 +365,7 @@ fn cmd_ablation(args: &Args) -> Result<()> {
         "running {} workloads x 10 repeats x 6 variants ...",
         opts.workloads
     );
-    let res = fig5_ablation(&cfg, opts);
+    let res = fig5_ablation_cached(&cfg, opts, cache.as_ref()).map_err(|e| anyhow!(e))?;
     println!("{}", res.render());
     maybe_write(args, "fig5", &res.render())
 }
@@ -635,15 +680,32 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     if !prefilter_on && (confirm_top.is_some() || confirm_frac.is_some()) {
         bail!("--confirm-top/--confirm-frac need --prefilter analytical");
     }
+    let caching = args.has("cache") || args.has("cache-verify");
+    if args.has("cache-verify") && !args.has("cache") {
+        bail!("--cache-verify needs --cache DIR (no cache to verify against)");
+    }
 
     // worker mode: run one shard file and exit
     if let Some(shard_path) = args.get("shard") {
+        if caching {
+            bail!("--cache/--cache-verify apply to the sweep driver, not worker mode (--shard)");
+        }
         return sweep_worker(args, shard_path);
     }
     // spool executor mode: serve a shared spool directory
     if let Some(dir) = args.get("spool-serve") {
+        if caching {
+            bail!(
+                "--cache/--cache-verify apply to the sweep driver, \
+                 not the spool executor (--spool-serve)"
+            );
+        }
         return sweep_spool_serve(args, dir);
     }
+    // One persistent store shared by every variant of the sweep: keys
+    // are content-addressed over (config, options, request), so
+    // variants never collide in it.
+    let cache = open_cache(args)?;
 
     let cfg = load_config(args)?;
     let seed = args.u64_or("seed", 2024)?;
@@ -777,7 +839,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                     })?;
                     Box::new(
                         SpoolDir::new(Path::new(dir), &prefix, spool_poll, spool_timeout)
-                            .map_err(|e| anyhow!(e))?,
+                            .map_err(|e| anyhow!(e))?
+                            // caching run: content-addressed offer
+                            // stems, so a re-run of a killed sweep
+                            // claims results already published into
+                            // the spool instead of re-dispatching
+                            // their shards
+                            .with_resume(cache.is_some()),
                     )
                 }
                 other => bail!("unreachable transport {other:?}"),
@@ -802,8 +870,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 },
                 ..Default::default()
             };
-            let (result, report) = dispatch_plan(plan, &*dispatchable, &dispatch_opts)
-                .map_err(|e| anyhow!(e))?;
+            let (result, report) =
+                dispatch_plan_cached(plan, &*dispatchable, &dispatch_opts, cache.as_ref())
+                    .map_err(|e| anyhow!(e))?;
             eprintln!("variant {variant}: {}", report.summary());
             results.push((variant, result));
             reports.push((variant, report));
@@ -963,6 +1032,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         slo_ms,
         hedge: args.has("hedge"),
         retries: args.usize_or("retries", 2)?,
+        cache_dir: args.get("cache").map(PathBuf::from),
+        cache_verify: args.has("cache-verify"),
     };
     let report = run_serve(&cfg, &opts).map_err(|e| anyhow!(e))?;
     let json = report.to_json().pretty();

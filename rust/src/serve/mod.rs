@@ -97,6 +97,14 @@ pub struct ServeOptions {
     pub hedge: bool,
     /// Failover re-dispatch budget per batch.
     pub retries: usize,
+    /// Persist the service model's `(shape, repeats)` measurements via
+    /// the content-addressed result cache (`coordinator::cache`) in
+    /// this directory, so re-pricing a workload across process
+    /// invocations simulates nothing.
+    pub cache_dir: Option<std::path::PathBuf>,
+    /// Re-simulate cache hits and hard-error on divergence (requires
+    /// `cache_dir`).
+    pub cache_verify: bool,
 }
 
 impl Default for ServeOptions {
@@ -119,6 +127,8 @@ impl Default for ServeOptions {
             slo_ms: None,
             hedge: false,
             retries: 2,
+            cache_dir: None,
+            cache_verify: false,
         }
     }
 }
@@ -146,6 +156,9 @@ fn validate(opts: &ServeOptions) -> Result<(), String> {
             return Err(format!("--slo-ms must be a finite non-negative latency, got {slo}"));
         }
     }
+    if opts.cache_verify && opts.cache_dir.is_none() {
+        return Err("--cache-verify needs --cache DIR (no cache to verify against)".into());
+    }
     Ok(())
 }
 
@@ -157,9 +170,18 @@ pub fn run_serve(cfg: &PlatformConfig, opts: &ServeOptions) -> Result<ServeRepor
         return Err("workload has no request kinds".into());
     }
 
-    // 1. measure service times (the only simulation work)
+    // 1. measure service times (the only simulation work), through the
+    // persistent result cache when one is configured
+    let cache = match &opts.cache_dir {
+        Some(dir) => Some(
+            crate::coordinator::cache::ResultCache::persistent(dir)?
+                .with_verify(opts.cache_verify),
+        ),
+        None => None,
+    };
     let mut model = ServiceModel::new(opts.repeat_cap);
-    let measurement = model.measure(cfg, opts.workers, opts.fast_forward, &kinds)?;
+    let measurement =
+        model.measure_cached(cfg, opts.workers, opts.fast_forward, &kinds, cache.as_ref())?;
     let service_by_kind: Vec<u64> = kinds
         .iter()
         .map(|k| model.stream_cycles(&k.stream))

@@ -33,7 +33,9 @@ use std::collections::{BTreeMap, BTreeSet};
 
 use crate::compiler::GemmShape;
 use crate::config::{Mechanisms, PlatformConfig};
-use crate::coordinator::{Coordinator, CoordinatorStats, JobRequest};
+use crate::coordinator::cache::{derive_stats, job_key, ResultCache};
+use crate::coordinator::{outcome_to_json, Coordinator, CoordinatorStats, JobOutcome, JobRequest};
+use crate::sim::SimOptions;
 
 use super::workload::RequestKind;
 
@@ -86,6 +88,26 @@ impl ServiceModel {
         fast_forward: bool,
         kinds: &[RequestKind],
     ) -> Result<CoordinatorStats, String> {
+        self.measure_cached(cfg, workers, fast_forward, kinds, None)
+    }
+
+    /// [`ServiceModel::measure`] with an optional persistent result
+    /// cache (`coordinator::cache`) in front of the coordinator: the
+    /// per-`(shape, repeats)` measurements of one serve process become
+    /// warm entries for the next, so re-pricing a workload after a
+    /// restart simulates nothing. The returned counters are derived
+    /// per-outcome exactly as `run_batch` counts them, so a warm run's
+    /// serve report is byte-identical to the cold run's. In verify mode
+    /// every point re-simulates and a divergent cached entry is a hard
+    /// error.
+    pub fn measure_cached(
+        &mut self,
+        cfg: &PlatformConfig,
+        workers: usize,
+        fast_forward: bool,
+        kinds: &[RequestKind],
+        cache: Option<&ResultCache>,
+    ) -> Result<CoordinatorStats, String> {
         // BTreeSet dedup: a large mixed workload repeats the same
         // (shape, repeats) point across kinds, and `Vec::contains` made
         // this scan O(n^2). Sorted iteration keeps the batch order (and
@@ -104,20 +126,92 @@ impl ServiceModel {
                 }
             }
         }
-        let mut coord = Coordinator::new(cfg.clone()).with_fast_forward(fast_forward);
-        if workers > 0 {
-            coord = coord.with_workers(workers);
-        }
         let requests: Vec<JobRequest> = wanted
             .iter()
             .map(|&(m, k, n, repeats)| {
                 JobRequest::timing(GemmShape::new(m, k, n), Mechanisms::ALL, repeats)
             })
             .collect();
-        let outcomes = coord.run_batch(requests);
+        // Coordinator::new runs with the default CSR latency; the cache
+        // key must say so, or serve entries would alias sweep entries
+        // measured under a different host coupling.
+        let csr_latency = SimOptions::default().csr_latency;
+        let keys: Vec<String> = match cache {
+            Some(_) => requests
+                .iter()
+                .map(|r| job_key(cfg, fast_forward, csr_latency, r))
+                .collect(),
+            None => Vec::new(),
+        };
+        let verify = cache.is_some_and(ResultCache::verify);
+
+        // Resolve what we can from the cache; everything else (all
+        // points, in verify mode) goes to the coordinator in one batch.
+        let mut slot_outcomes: Vec<Option<JobOutcome>> = vec![None; requests.len()];
+        let mut cold_slots: Vec<usize> = Vec::new();
+        let (mut hits, mut misses) = (0u64, 0u64);
+        match cache {
+            Some(cache) if !verify => {
+                for (slot, k) in keys.iter().enumerate() {
+                    match cache.lookup(k) {
+                        Some(outcome) => {
+                            hits += 1;
+                            slot_outcomes[slot] = Some(outcome);
+                        }
+                        None => {
+                            misses += 1;
+                            cold_slots.push(slot);
+                        }
+                    }
+                }
+            }
+            _ => cold_slots = (0..requests.len()).collect(),
+        }
+        let mut coord = Coordinator::new(cfg.clone()).with_fast_forward(fast_forward);
+        if workers > 0 {
+            coord = coord.with_workers(workers);
+        }
+        let fresh =
+            coord.run_batch(cold_slots.iter().map(|&s| requests[s].clone()).collect());
+        if let Some(cache) = cache {
+            for (&slot, outcome) in cold_slots.iter().zip(&fresh) {
+                let k = &keys[slot];
+                if verify {
+                    match cache.lookup(k) {
+                        Some(cached) => {
+                            hits += 1;
+                            if outcome_to_json(&cached).pretty()
+                                != outcome_to_json(outcome).pretty()
+                            {
+                                return Err(format!(
+                                    "cache verify FAILED for key {k}: cached outcome \
+                                     diverges from re-simulation (determinism \
+                                     regression, or a corrupted store evading the \
+                                     entry checks)"
+                                ));
+                            }
+                        }
+                        None => {
+                            misses += 1;
+                            cache.insert(k, outcome);
+                        }
+                    }
+                } else {
+                    cache.insert(k, outcome);
+                }
+            }
+        }
+        let jobs_simulated = cold_slots.len() as u64;
+        for (&slot, outcome) in cold_slots.iter().zip(fresh) {
+            slot_outcomes[slot] = Some(outcome);
+        }
+        let outcomes: Vec<JobOutcome> =
+            slot_outcomes.into_iter().map(|o| o.expect("every slot resolved")).collect();
+
         let mut measured: Vec<(ShapeKey, u64)> = Vec::with_capacity(wanted.len());
-        for (&(m, k, n, repeats), outcome) in wanted.iter().zip(outcomes) {
+        for (&(m, k, n, repeats), outcome) in wanted.iter().zip(&outcomes) {
             let result = outcome
+                .as_ref()
                 .map_err(|e| format!("measuring ({m}, {k}, {n}) x{repeats}: {e}"))?;
             measured.push(((m, k, n, repeats), result.metrics.total_cycles));
         }
@@ -125,7 +219,11 @@ impl ServiceModel {
         for (k, cycles) in measured {
             self.cache.insert(k, cycles);
         }
-        Ok(coord.stats())
+        let mut stats = derive_stats(outcomes.iter());
+        stats.cache_hits = hits;
+        stats.cache_misses = misses;
+        stats.jobs_simulated = jobs_simulated;
+        Ok(stats)
     }
 
     fn lookup(&self, shape: GemmShape, repeats: u32) -> Result<u64, String> {

@@ -211,6 +211,15 @@ pub struct Platform {
     /// fast-forward. Host-effort telemetry only; not part of the
     /// simulated-hardware metrics.
     pub steps_executed: u64,
+    /// Memoized raw streamer wake: the unclamped minimum over the six
+    /// scheduled streamer event sources of [`Platform::next_event`]
+    /// (deliveries and gated issues; the host horizon is NOT included
+    /// — it shrinks on every `advance_to`). `None` = stale, recompute;
+    /// `Some(w)` = the min is `w` until a streamer mutates (delivery
+    /// fired, fetch/write committed, tile consumed, launch, run end).
+    /// Every mutation site resets this to `None`. Events are absolute
+    /// cycles, so the cache survives clock advances unchanged.
+    sched_wake: Option<Option<u64>>,
     // job state
     job: Option<JobState>,
 }
@@ -299,6 +308,7 @@ impl Platform {
             arena: TileArena::new(),
             metrics: SimMetrics::default(),
             steps_executed: 0,
+            sched_wake: None,
             cfg,
             opts,
             job: None,
@@ -369,6 +379,7 @@ impl Platform {
         self.opts = opts;
         self.host = None;
         self.job = None;
+        self.sched_wake = None;
     }
 
     fn reset_run_state(&mut self) {
@@ -383,6 +394,7 @@ impl Platform {
         self.now = 0;
         self.metrics = SimMetrics::default();
         self.steps_executed = 0;
+        self.sched_wake = None;
         self.spm.reset_stats();
     }
 
@@ -404,9 +416,17 @@ impl Platform {
         let now = self.now;
 
         // ---- 1. deliver completed memory traffic --------------------
+        // a delivery that fires consumes a scheduled event and frees a
+        // pipeline slot — the memoized streamer wake is stale
+        if self.a_stream.next_delivery().is_some_and(|t| t <= now)
+            || self.b_stream.next_delivery().is_some_and(|t| t <= now)
+        {
+            self.sched_wake = None;
+        }
         self.a_stream.deliver_ready(now);
         self.b_stream.deliver_ready(now);
         if let Some(tile) = self.c_stream.deliver_ready(now) {
+            self.sched_wake = None;
             self.commit_output_tile(tile);
         }
 
@@ -430,6 +450,9 @@ impl Platform {
                 }
             }
             CoreEvent::Computed { finished, .. } => {
+                // a tile-MAC consumed input heads and may have queued
+                // an output tile — streamer occupancy changed
+                self.sched_wake = None;
                 self.metrics.compute_cycles += 1;
                 if finished {
                     // run completion is gated on the output drain below
@@ -487,7 +510,14 @@ impl Platform {
     /// Returning `self.now + 1` means "something can happen next cycle
     /// — simulate it"; any later value proves every cycle before it is
     /// a pure counter increment (see [`Platform::advance_to`]).
-    fn next_event(&self) -> Option<u64> {
+    ///
+    /// The six streamer sources are scanned only when a streamer has
+    /// mutated since the last call (`sched_wake` memo); on the long
+    /// config-bound stretches where the platform calls this every
+    /// simulated step with frozen streamers, the scan collapses to a
+    /// memo read plus the host horizon. Takes `&mut self` only for the
+    /// memo — observable state is untouched.
+    fn next_event(&mut self) -> Option<u64> {
         let next = self.now + 1;
 
         // Immediately-actionable states: the coming cycle must be
@@ -516,24 +546,40 @@ impl Platform {
 
         // Otherwise the state is frozen until the earliest scheduled
         // event: a delivery, a bank-gate expiry that unblocks an issue,
-        // or the host's stall horizon.
-        let mut wake: Option<u64> = None;
-        let mut consider = |e: Option<u64>| {
-            if let Some(e) = e {
+        // or the host's stall horizon. The streamer minimum is memoized
+        // RAW (unclamped): since min(max(e_i, next)) == max(min(e_i),
+        // next), clamping the cached minimum once is identical to
+        // clamping each source, and the raw value stays valid across
+        // clock advances.
+        let streamer_wake = match self.sched_wake {
+            Some(w) => w,
+            None => {
+                let mut wake: Option<u64> = None;
+                let mut consider = |e: Option<u64>| {
+                    if let Some(e) = e {
+                        wake = Some(wake.map_or(e, |w: u64| w.min(e)));
+                    }
+                };
+                let a_starved = self.core.busy() && self.a_stream.head().is_none();
+                let b_starved = self.core.busy() && self.b_stream.head().is_none();
+                consider(self.a_stream.next_delivery());
+                consider(self.b_stream.next_delivery());
+                consider(self.c_stream.next_delivery());
+                consider(self.a_stream.next_issue(a_starved));
+                consider(self.b_stream.next_issue(b_starved));
+                consider(self.c_stream.next_issue());
+                self.sched_wake = Some(wake);
+                wake
+            }
+        };
+        // The host horizon shrinks with every advance (the stall budget
+        // drains), so it is always computed fresh.
+        let mut wake = streamer_wake.map(|e| e.max(next));
+        if let Some(host) = self.host.as_ref() {
+            if let Some(e) = host.next_active_cycle(self.now, self.host_stall) {
                 let e = e.max(next);
                 wake = Some(wake.map_or(e, |w| w.min(e)));
             }
-        };
-        let a_starved = self.core.busy() && self.a_stream.head().is_none();
-        let b_starved = self.core.busy() && self.b_stream.head().is_none();
-        consider(self.a_stream.next_delivery());
-        consider(self.b_stream.next_delivery());
-        consider(self.c_stream.next_delivery());
-        consider(self.a_stream.next_issue(a_starved));
-        consider(self.b_stream.next_issue(b_starved));
-        consider(self.c_stream.next_issue());
-        if let Some(host) = self.host.as_ref() {
-            consider(host.next_active_cycle(self.now, self.host_stall));
         }
         wake
     }
@@ -593,6 +639,7 @@ impl Platform {
         // access cost and bank mask without materializing addresses.
         let mut a_banks = 0u64; // banks touched by A this cycle
         if a_issues {
+            self.sched_wake = None; // a new fetch schedules new events
             let (cost, mask, pos, data) = match (functional, self.a_stream.pattern) {
                 (false, Some(p)) if !p.self_conflict => {
                     let (pos, base) = self.a_stream.begin_fetch_timing();
@@ -618,6 +665,7 @@ impl Platform {
                 .commit_fetch(pos, data, now + cost + rd_lat - 1, now + cost);
         }
         if b_issues {
+            self.sched_wake = None;
             let (mut cost, mask, pos, data) = match (functional, self.b_stream.pattern) {
                 (false, Some(p)) if !p.self_conflict => {
                     let (pos, base) = self.b_stream.begin_fetch_timing();
@@ -647,6 +695,7 @@ impl Platform {
                 .commit_fetch(pos, data, now + cost + rd_lat - 1, now + cost);
         }
         if self.c_stream.wants_write(now) {
+            self.sched_wake = None;
             match (functional, self.c_stream.pattern) {
                 (false, Some(p)) if !p.self_conflict => {
                     let (tile, _base) = self.c_stream.begin_write_timing();
@@ -734,6 +783,7 @@ impl Platform {
         self.b_stream.configure2(regs.b_agu(&self.cfg.core, word), bounds, wb, nb);
         self.c_stream.configure2(regs.c_agu(&self.cfg.core, word), wb, nb);
         self.core.start(bounds).expect("loop bounds validated at compile time");
+        self.sched_wake = None; // reconfigured streamers, core now busy
     }
 
     fn finish_run(&mut self) {
@@ -765,6 +815,7 @@ impl Platform {
 
         // CPL: a pre-loaded start may fire instantly
         self.csr.notify_done();
+        self.sched_wake = None; // core no longer busy: starvation gates flip
     }
 }
 

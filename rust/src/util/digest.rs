@@ -1,0 +1,110 @@
+//! Stable, dependency-free content digests for cache keys.
+//!
+//! The result cache (`coordinator::cache`) addresses entries by a
+//! digest of the canonical `util::json` encoding of the job, so the
+//! hash must be identical across processes, hosts and releases.
+//! `std::hash` explicitly reserves the right to change between
+//! compiler versions (and `RandomState` is seeded per process), so we
+//! pin FNV-1a here instead: the 64-bit variant with the reference
+//! offset basis and prime, verbatim from the FNV specification.
+//!
+//! A single 64-bit digest is plenty for collision *accidents* at sweep
+//! scale (thousands of jobs), but a silent collision would return the
+//! wrong cached result, so [`fingerprint`] concatenates two
+//! independent FNV-1a streams — the reference one and one seeded with
+//! a distinct basis — into a 128-bit hex key. Changing this format
+//! invalidates every on-disk cache, which is safe (entries become
+//! misses) but wasteful; treat the constants as frozen.
+
+/// FNV-1a 64-bit offset basis (reference value).
+pub const FNV64_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime (reference value).
+pub const FNV64_PRIME: u64 = 0x0000_0100_0000_01b3;
+/// Offset basis of the second, independent stream in [`fingerprint`]:
+/// the reference basis xored with a fixed pattern so the two streams
+/// never agree byte-for-byte.
+const FNV64_OFFSET_ALT: u64 = FNV64_OFFSET ^ 0x5555_5555_5555_5555;
+
+/// Streaming FNV-1a 64-bit hasher.
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv64 {
+    state: u64,
+}
+
+impl Fnv64 {
+    pub fn new() -> Fnv64 {
+        Fnv64::with_basis(FNV64_OFFSET)
+    }
+
+    pub fn with_basis(basis: u64) -> Fnv64 {
+        Fnv64 { state: basis }
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= u64::from(b);
+            self.state = self.state.wrapping_mul(FNV64_PRIME);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Fnv64 {
+        Fnv64::new()
+    }
+}
+
+/// Reference FNV-1a 64-bit digest of `bytes`.
+pub fn fnv1a_64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv64::new();
+    h.write(bytes);
+    h.finish()
+}
+
+/// 128-bit content fingerprint rendered as 32 lowercase hex digits:
+/// two independent FNV-1a streams over the same bytes. This is the
+/// cache-key format; it doubles as a filesystem-safe file stem.
+pub fn fingerprint(bytes: &[u8]) -> String {
+    let mut lo = Fnv64::new();
+    let mut hi = Fnv64::with_basis(FNV64_OFFSET_ALT);
+    lo.write(bytes);
+    hi.write(bytes);
+    format!("{:016x}{:016x}", lo.finish(), hi.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference vectors from the FNV specification's test suite; if
+    /// these move, every persisted cache key silently changes.
+    #[test]
+    fn fnv1a_64_matches_reference_vectors() {
+        assert_eq!(fnv1a_64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a_64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a_64(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn streaming_equals_one_shot() {
+        let mut h = Fnv64::new();
+        h.write(b"foo");
+        h.write(b"bar");
+        assert_eq!(h.finish(), fnv1a_64(b"foobar"));
+    }
+
+    #[test]
+    fn fingerprint_is_stable_hex_and_input_sensitive() {
+        let fp = fingerprint(b"opengemm");
+        assert_eq!(fp.len(), 32);
+        assert!(fp.bytes().all(|b| b.is_ascii_hexdigit() && !b.is_ascii_uppercase()));
+        assert_eq!(fp, fingerprint(b"opengemm"), "deterministic");
+        assert_ne!(fp, fingerprint(b"opengemm "), "input-sensitive");
+        // The two 64-bit halves are independent streams, not copies.
+        assert_ne!(&fp[..16], &fp[16..]);
+    }
+}

@@ -6,6 +6,7 @@
 pub mod bench;
 pub mod check;
 pub mod cli;
+pub mod digest;
 pub mod error;
 pub mod json;
 pub mod rng;

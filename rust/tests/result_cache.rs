@@ -1,0 +1,236 @@
+//! Result-cache integration tests: the four guarantees ISSUE 8 pins
+//! down, checked through the public dispatch API (the CI `cache-smoke`
+//! lane re-checks the first across real process invocations).
+//!
+//! 1. **Byte identity**: a warm re-run merges to exactly the bytes the
+//!    cold run produced — and simulates zero jobs doing it. Keys
+//!    exclude the shard/worker split, so a re-sweep at a different
+//!    shard count is still all-hits.
+//! 2. **Partial hits**: pre-seeded jobs are skipped, the rest simulate,
+//!    and `merge` re-interleaves both back into submission order.
+//! 3. **Corruption is a miss, never an error**: a truncated entry file
+//!    is quarantined to `.poison`, the job re-simulates, and the
+//!    repaired entry is republished.
+//! 4. **Verify mode is a determinism tripwire**: an intact store
+//!    passes (while still re-simulating everything); a tampered entry
+//!    is a hard error naming the divergent key.
+//!
+//! Plus the spool-resume path: a killed spool sweep's published shard
+//! results are claimed by the re-run without any executor present.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use opengemm::compiler::GemmShape;
+use opengemm::config::{Mechanisms, PlatformConfig};
+use opengemm::coordinator::cache::{shard_fingerprint, shard_job_keys, ResultCache};
+use opengemm::coordinator::dispatch::{
+    dispatch_plan, dispatch_plan_cached, DispatchOptions, InProcess, SpoolDir,
+};
+use opengemm::coordinator::shard::{SweepOptions, SweepPlan};
+use opengemm::coordinator::JobRequest;
+
+/// Small varied batch: every request maps to a distinct cache key.
+fn requests(n: usize) -> Vec<JobRequest> {
+    (0..n)
+        .map(|i| {
+            let shape =
+                GemmShape::new(8 + 8 * (i % 3), 8 + 8 * ((i / 3) % 3), 8 + 8 * ((i / 9) % 3));
+            JobRequest::timing(shape, Mechanisms::ALL, 1 + (i as u32 % 2))
+        })
+        .collect()
+}
+
+fn plan(shards: usize, jobs: usize) -> SweepPlan {
+    let cfg = PlatformConfig::case_study();
+    let opts = SweepOptions { shards, workers: 1, ..Default::default() };
+    SweepPlan::stride(&cfg, requests(jobs), opts)
+}
+
+/// Fresh per-test temp directory (removed up front so a crashed earlier
+/// run cannot leak state in).
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("opengemm-rc-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn warm_rerun_is_byte_identical_and_simulates_nothing() {
+    let dir = temp_dir("warm");
+    let serial = DispatchOptions::serial();
+    let (uncached, _) = dispatch_plan(plan(3, 10), &InProcess, &serial).unwrap();
+    let bytes = uncached.to_json().pretty();
+
+    let cold_cache = ResultCache::persistent(&dir).unwrap();
+    let (cold, cold_report) =
+        dispatch_plan_cached(plan(3, 10), &InProcess, &serial, Some(&cold_cache)).unwrap();
+    assert_eq!(cold_report.cache_hits, 0);
+    assert_eq!(cold_report.cache_misses, 10);
+    assert_eq!(cold_report.jobs_simulated, 10);
+    assert_eq!(cold.to_json().pretty(), bytes, "cold cached run == uncached run");
+
+    // Fresh instance: the warm tier comes purely from the spool on disk.
+    let warm_cache = ResultCache::persistent(&dir).unwrap();
+    let (warm, warm_report) =
+        dispatch_plan_cached(plan(3, 10), &InProcess, &serial, Some(&warm_cache)).unwrap();
+    assert_eq!(warm_report.jobs_simulated, 0, "warm re-run must simulate nothing");
+    assert_eq!(warm_report.cache_hits, 10);
+    assert_eq!(warm_report.cache_misses, 0);
+    assert_eq!(warm.to_json().pretty(), bytes, "warm bytes == cold bytes");
+    // the in-memory stats surface the same traffic (wire-excluded)
+    assert_eq!(warm.stats.cache_hits, 10);
+    assert_eq!(warm.stats.jobs_simulated, 0);
+
+    // Keys exclude the shard/worker split: re-sweeping the same batch
+    // at a different shard count is still a full-hit run.
+    let resharded_cache = ResultCache::persistent(&dir).unwrap();
+    let (resharded, reshard_report) =
+        dispatch_plan_cached(plan(2, 10), &InProcess, &serial, Some(&resharded_cache)).unwrap();
+    assert_eq!(reshard_report.jobs_simulated, 0, "shard count is not part of the key");
+    assert_eq!(resharded.to_json().pretty(), bytes);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn partial_hits_merge_in_submission_order() {
+    let serial = DispatchOptions::serial();
+    let (baseline, _) = dispatch_plan(plan(2, 8), &InProcess, &serial).unwrap();
+
+    // Seed every even submission index from the baseline outcomes,
+    // using the same per-shard key lists the dispatcher derives.
+    let p = plan(2, 8);
+    let total = p.total_jobs as u64;
+    let cache = ResultCache::in_memory();
+    let mut seeded = 0u64;
+    for shard in &p.shards {
+        for (slot, key) in shard_job_keys(shard).iter().enumerate() {
+            let submission = shard.indices[slot];
+            if submission % 2 == 0 {
+                cache.insert(key, &baseline.outcomes[submission]);
+                seeded += 1;
+            }
+        }
+    }
+    assert!(seeded > 0 && seeded < total, "test needs a genuine partial hit");
+
+    let (merged, report) = dispatch_plan_cached(p, &InProcess, &serial, Some(&cache)).unwrap();
+    assert_eq!(report.cache_hits, seeded);
+    assert_eq!(report.cache_misses, total - seeded);
+    assert_eq!(report.jobs_simulated, total - seeded, "only the misses simulate");
+    assert_eq!(
+        merged.to_json().pretty(),
+        baseline.to_json().pretty(),
+        "cached and fresh outcomes re-interleave into submission order"
+    );
+}
+
+#[test]
+fn corrupt_entry_is_a_miss_not_an_error() {
+    let dir = temp_dir("poison");
+    let serial = DispatchOptions::serial();
+    let cache = ResultCache::persistent(&dir).unwrap();
+    let (first, _) = dispatch_plan_cached(plan(1, 4), &InProcess, &serial, Some(&cache)).unwrap();
+
+    // Truncate one entry mid-object — the shape a crashed writer or a
+    // torn copy leaves behind.
+    let p = plan(1, 4);
+    let key = shard_job_keys(&p.shards[0])[0].clone();
+    let entry = dir.join(format!("{key}.cache.json"));
+    assert!(entry.exists(), "cold run must have published {key}");
+    std::fs::write(&entry, "{\"format\": \"opengemm-cache-entry-v1\", \"ke").unwrap();
+
+    let warm = ResultCache::persistent(&dir).unwrap();
+    let (second, report) = dispatch_plan_cached(p, &InProcess, &serial, Some(&warm)).unwrap();
+    assert_eq!(report.cache_hits, 3, "intact entries still hit");
+    assert_eq!(report.jobs_simulated, 1, "the corrupt entry re-simulates");
+    assert_eq!(second.to_json().pretty(), first.to_json().pretty());
+    assert!(
+        dir.join(format!("{key}.cache.json.poison")).exists(),
+        "corrupt entry quarantined for post-mortem"
+    );
+    assert!(entry.exists(), "re-simulated outcome republished under the key");
+
+    // and the repaired store is fully warm again
+    let third = ResultCache::persistent(&dir).unwrap();
+    let (_, report) = dispatch_plan_cached(plan(1, 4), &InProcess, &serial, Some(&third)).unwrap();
+    assert_eq!(report.jobs_simulated, 0);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn verify_mode_catches_injected_divergence() {
+    let dir = temp_dir("verify");
+    let serial = DispatchOptions::serial();
+    let cache = ResultCache::persistent(&dir).unwrap();
+    dispatch_plan_cached(plan(2, 6), &InProcess, &serial, Some(&cache)).unwrap();
+
+    // An intact store passes verification — but nothing is skipped.
+    let clean = ResultCache::persistent(&dir).unwrap().with_verify(true);
+    let (res, report) =
+        dispatch_plan_cached(plan(2, 6), &InProcess, &serial, Some(&clean)).unwrap();
+    assert_eq!(report.cache_hits, 6);
+    assert_eq!(report.jobs_simulated, 6, "verify mode re-simulates everything");
+    assert_eq!(res.stats.jobs_simulated, 6);
+
+    // Tamper with one entry: a well-formed entry (format and key both
+    // check out) holding a divergent outcome — exactly the corruption
+    // the per-entry validation cannot catch.
+    let p = plan(2, 6);
+    let key = shard_job_keys(&p.shards[0])[0].clone();
+    let tamper = ResultCache::persistent(&dir).unwrap();
+    tamper.insert(&key, &Err("tampered result".to_string()));
+
+    let verifying = ResultCache::persistent(&dir).unwrap().with_verify(true);
+    let err = dispatch_plan_cached(p, &InProcess, &serial, Some(&verifying)).unwrap_err();
+    assert!(err.contains("cache verify FAILED"), "got: {err}");
+    assert!(err.contains(&key), "error must name the divergent key: {err}");
+
+    // Non-verify dispatch trusts the store — which is why verify mode
+    // exists as a separate, explicit tripwire.
+    let trusting = ResultCache::persistent(&dir).unwrap();
+    let (tampered, _) =
+        dispatch_plan_cached(plan(2, 6), &InProcess, &serial, Some(&trusting)).unwrap();
+    assert!(tampered.outcomes.iter().any(|o| o.is_err()), "tampered entry flowed through");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn spool_resume_claims_published_results_without_an_executor() {
+    let dir = temp_dir("resume");
+    std::fs::create_dir_all(&dir).unwrap();
+    let serial = DispatchOptions::serial();
+    let (baseline, _) = dispatch_plan(plan(2, 6), &InProcess, &serial).unwrap();
+
+    // A prior spool run published every shard's result, then died
+    // before merging. Resume stems are content-addressed:
+    // {prefix}k{shard_fingerprint}_s{index}_a{attempt}.
+    let p = plan(2, 6);
+    for shard in &p.shards {
+        let stem = format!("v0_k{}_s{}_a0", shard_fingerprint(shard), shard.shard_index);
+        let result = shard.clone().run();
+        result.write_file(&dir.join(format!("{stem}.result.json"))).unwrap();
+    }
+
+    // Without resume, the stems carry a fresh per-run token: nothing
+    // matches the published files, and with no executor watching the
+    // spool the dispatch must time out.
+    let blind = SpoolDir::new(&dir, "v0_", Duration::from_millis(5), Duration::from_millis(100))
+        .unwrap();
+    let err = dispatch_plan(plan(2, 6), &blind, &serial).unwrap_err();
+    assert!(err.contains("not produced"), "got: {err}");
+
+    // With resume, every shard claims its published result — the sweep
+    // completes with no executor at all, byte-identical to in-process.
+    let spool = SpoolDir::new(&dir, "v0_", Duration::from_millis(5), Duration::from_secs(5))
+        .unwrap()
+        .with_resume(true);
+    let (merged, report) = dispatch_plan(p, &spool, &serial).unwrap();
+    assert_eq!(merged.to_json().pretty(), baseline.to_json().pretty());
+    assert_eq!(report.shards, 2);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -12,9 +12,14 @@
 //!    exactly (BERT-Large's 16 heads — the case the old example's
 //!    12-repeat clamp silently mismeasured), and the beyond-cap
 //!    affine extrapolation tracks an exact simulation closely.
+//!
+//! ISSUE 8 adds a fourth: **persistent pricing** — a `ServiceModel`
+//! backed by a result cache re-prices a workload from the store instead
+//! of re-simulating it, without perturbing the report bytes.
 
 use opengemm::compiler::GemmShape;
 use opengemm::config::{Mechanisms, PlatformConfig};
+use opengemm::coordinator::cache::ResultCache;
 use opengemm::coordinator::{Coordinator, JobRequest};
 use opengemm::serve::{
     run_serve, ArrivalSpec, BatchPolicy, FaultKind, FaultSpec, PlacementPolicy, RequestKind,
@@ -274,6 +279,58 @@ fn slo_admission_control_sheds_and_reports_offered_load() {
     // shedding caps goodput below offered load
     let goodput = fleet.get("goodput_rps").and_then(|v| v.as_f64()).unwrap();
     assert!(goodput > 0.0);
+}
+
+#[test]
+fn service_model_pricing_persists_across_invocations() {
+    let cfg = PlatformConfig::case_study();
+    let dir = std::env::temp_dir().join(format!("opengemm-serve-price-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let kinds = WorkloadSpec::BertBase { seq_choices: vec![64] }.kinds();
+
+    let cold_store = ResultCache::persistent(&dir).unwrap();
+    let mut cold = ServiceModel::new(16);
+    let cold_stats = cold.measure_cached(&cfg, 2, true, &kinds, Some(&cold_store)).unwrap();
+    assert!(cold_stats.jobs_simulated > 0, "first invocation must simulate");
+    assert_eq!(cold_stats.cache_hits, 0);
+    assert_eq!(cold_stats.cache_misses, cold_stats.jobs_simulated);
+
+    // Fresh model, fresh cache instance: the second "process" prices
+    // the same workload purely from the store on disk.
+    let warm_store = ResultCache::persistent(&dir).unwrap();
+    let mut warm = ServiceModel::new(16);
+    let warm_stats = warm.measure_cached(&cfg, 2, true, &kinds, Some(&warm_store)).unwrap();
+    assert_eq!(warm_stats.jobs_simulated, 0, "re-invocation must price from the store");
+    assert_eq!(warm_stats.cache_hits, cold_stats.jobs_simulated);
+    for kind in &kinds {
+        assert_eq!(
+            warm.stream_cycles(&kind.stream).unwrap(),
+            cold.stream_cycles(&kind.stream).unwrap(),
+            "cached pricing == simulated pricing for {}",
+            kind.label
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn serve_report_is_byte_identical_with_a_warm_cache() {
+    let cfg = PlatformConfig::case_study();
+    let dir = std::env::temp_dir().join(format!("opengemm-serve-cache-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let baseline = run_serve(&cfg, &base_opts()).unwrap().to_json().pretty();
+
+    let cached_opts = ServeOptions { cache_dir: Some(dir.clone()), ..base_opts() };
+    let cold = run_serve(&cfg, &cached_opts).unwrap().to_json().pretty();
+    assert_eq!(cold, baseline, "an empty cache must not perturb the report");
+    let warm = run_serve(&cfg, &cached_opts).unwrap().to_json().pretty();
+    assert_eq!(warm, baseline, "a warm cache must not perturb the report");
+
+    // verify mode over the intact store re-simulates and passes
+    let verify_opts = ServeOptions { cache_verify: true, ..cached_opts };
+    let verified = run_serve(&cfg, &verify_opts).unwrap().to_json().pretty();
+    assert_eq!(verified, baseline);
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
