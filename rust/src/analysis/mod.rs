@@ -1,0 +1,1111 @@
+//! Static program verifier: legality analysis for compiled tile
+//! schedules, CSR configuration programs, and DSE grid points — without
+//! running the event engine.
+//!
+//! The platform's invariants (SPM bounds, word alignment, operand
+//! aliasing, complete CSR write sets, CPL chaining, double-buffer
+//! hazards) are otherwise enforced only dynamically, by the simulator
+//! panicking or silently mis-simulating mid-run. This module checks any
+//! [`CompiledJob`] against them in microseconds and produces structured,
+//! severity-ranked diagnostics instead:
+//!
+//! - [`verify_config`] — grid-point legality (the DSE/prefilter entry
+//!   point: statically prune illegal variants with a named diagnostic);
+//! - [`verify_request`] — config + schedulability + the full job check
+//!   for one `(PlatformConfig, JobRequest)` point;
+//! - [`verify_job`] — the four analysis passes over an already-compiled
+//!   job: SPM legality, CSR program legality, hazard analysis, and
+//!   program/schedule consistency.
+//!
+//! Every finding carries a stable code from [`CATALOG`] (e.g.
+//! `A001-spm-oob`), a severity, the offending call/CSR where known, and
+//! a one-line fix hint. `coordinator::shard::run_sweep_cached` runs the
+//! verifier as a default-on admission gate (`--no-lint` bypasses it),
+//! and the `opengemm lint` subcommand reports over every in-repo
+//! experiment grid ([`report`] holds the wire format).
+//!
+//! The SPM pass reuses the exact AGU stride tables the streamers
+//! execute ([`AguConfig`] rebuilt from the placement's CSR image via
+//! [`ConfigRegs`](crate::csr::ConfigRegs)), and the CSR pass decodes the
+//! generated RV32I program with the same encodings `host::encode`
+//! emits — the compiler and verifier are mutual regression oracles
+//! (pinned by `tests/static_verifier.rs`).
+
+pub mod report;
+
+pub use report::{LintReport, TargetReport, LINT_REPORT_FORMAT};
+
+use std::collections::BTreeMap;
+
+use crate::compiler::{compile_gemm, CompiledCall, CompiledJob};
+use crate::config::PlatformConfig;
+use crate::coordinator::JobRequest;
+use crate::csr::{
+    csr_name, unpack_bounds, CONFIG_CSR_ADDRS, CSR_BASE, CSR_BOUNDS, CSR_COUNT, CSR_CTRL,
+    CSR_STATUS, STATUS_BUSY, STATUS_PENDING,
+};
+use crate::gemm_core::MAX_LOOP_BOUND;
+use crate::streamer::{AguConfig, LoopBounds};
+use crate::util::json::{self, Json};
+
+// ---------------------------------------------------------------------
+// Diagnostic codes (stable: tests and downstream tooling pin them)
+// ---------------------------------------------------------------------
+
+/// SPM access outside `[0, capacity)` over the call's loop volume.
+pub const SPM_OOB: &str = "A001-spm-oob";
+/// AGU base or stride not a multiple of the SPM word size.
+pub const SPM_MISALIGNED: &str = "A002-spm-misaligned";
+/// A and B operand regions alias each other.
+pub const SPM_OVERLAP: &str = "A003-spm-overlap";
+/// Launch without a complete (or with a redundant) config write set.
+pub const CSR_INCOMPLETE_CONFIG: &str = "A004-csr-incomplete-config";
+/// Loop bound outside the encodable range, or repeat count zero, or
+/// BOUNDS register inconsistent with the schedule.
+pub const LOOP_BOUND_RANGE: &str = "A005-loop-bound-range";
+/// CSR access outside the accelerator window, or a write to STATUS.
+pub const CSR_BAD_ADDRESS: &str = "A006-csr-bad-address";
+/// Launch/poll/drain chaining malformed for the job's CPL mode.
+pub const CPL_CHAIN: &str = "A007-cpl-chain";
+/// Double-buffer RAW/WAR: output window overlaps an input region.
+pub const DOUBLE_BUFFER_HAZARD: &str = "A008-double-buffer-hazard";
+/// The request does not schedule onto this platform instance at all.
+pub const UNSCHEDULABLE: &str = "A009-unschedulable";
+/// The platform config itself fails elaboration-time validation.
+pub const CONFIG_INVALID: &str = "A010-config-invalid";
+/// A call has fewer tiles than the prefetch pipeline is deep.
+pub const UNDERFILLED_PIPELINE: &str = "A011-underfilled-pipeline";
+/// The decoded program writes CSR values the schedule disagrees with.
+pub const PROGRAM_DIVERGENCE: &str = "A012-program-schedule-divergence";
+
+/// The full diagnostic-code catalog: `(code, one-line description)`.
+/// ROADMAP.md's "Static verification" section mirrors this table.
+pub const CATALOG: [(&str, &str); 12] = [
+    (SPM_OOB, "SPM access outside [0, capacity) over the call's loop volume"),
+    (SPM_MISALIGNED, "AGU base or stride not a multiple of the SPM word size"),
+    (SPM_OVERLAP, "A and B operand regions alias each other"),
+    (CSR_INCOMPLETE_CONFIG, "launch without a complete config write set"),
+    (LOOP_BOUND_RANGE, "loop bound or repeat count outside the encodable range"),
+    (CSR_BAD_ADDRESS, "CSR access outside the accelerator window"),
+    (CPL_CHAIN, "launch/poll/drain chaining malformed for the CPL mode"),
+    (DOUBLE_BUFFER_HAZARD, "output streamer window overlaps a live input region"),
+    (UNSCHEDULABLE, "request does not schedule onto this platform instance"),
+    (CONFIG_INVALID, "platform config fails elaboration-time validation"),
+    (UNDERFILLED_PIPELINE, "call has fewer tiles than the prefetch pipeline is deep"),
+    (PROGRAM_DIVERGENCE, "decoded program disagrees with the compiled schedule"),
+];
+
+/// Resolve a code string back to its static catalog entry.
+pub fn code_from_name(name: &str) -> Option<&'static str> {
+    CATALOG.iter().map(|&(code, _)| code).find(|&code| code == name)
+}
+
+// ---------------------------------------------------------------------
+// Diagnostics
+// ---------------------------------------------------------------------
+
+/// Finding severity. `Error` findings make a job inadmissible; `Warn`
+/// findings are conservative (the analysis could not prove legality);
+/// `Info` findings are performance/structure notes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Info,
+    Warn,
+    Error,
+}
+
+impl Severity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warn => "warn",
+            Severity::Error => "error",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Severity> {
+        match name {
+            "info" => Some(Severity::Info),
+            "warn" => Some(Severity::Warn),
+            "error" => Some(Severity::Error),
+            _ => None,
+        }
+    }
+}
+
+/// One verifier finding: a stable code, a severity, the offending
+/// call/CSR where the finding is that specific, and a one-line hint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    pub code: &'static str,
+    pub severity: Severity,
+    /// Offending call index within the compiled schedule, if per-call.
+    pub call: Option<usize>,
+    /// Offending CSR address, if per-CSR.
+    pub csr: Option<u32>,
+    pub message: String,
+    pub hint: String,
+}
+
+impl Diagnostic {
+    fn new(
+        code: &'static str,
+        severity: Severity,
+        message: impl Into<String>,
+        hint: impl Into<String>,
+    ) -> Diagnostic {
+        Diagnostic {
+            code,
+            severity,
+            call: None,
+            csr: None,
+            message: message.into(),
+            hint: hint.into(),
+        }
+    }
+
+    fn at_call(mut self, call: usize) -> Diagnostic {
+        self.call = Some(call);
+        self
+    }
+
+    fn at_csr(mut self, csr: u32) -> Diagnostic {
+        self.csr = Some(csr);
+        self
+    }
+
+    /// One-line rendering: `[code] severity: message (hint)`.
+    pub fn render(&self) -> String {
+        let wh = match self.call {
+            Some(c) => format!(" call {c}:"),
+            None => String::new(),
+        };
+        format!(
+            "[{}] {}:{wh} {} (hint: {})",
+            self.code,
+            self.severity.name(),
+            self.message,
+            self.hint
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("code", Json::str(self.code)),
+            ("severity", Json::str(self.severity.name())),
+            (
+                "call",
+                match self.call {
+                    Some(c) => Json::num(c as f64),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "csr",
+                match self.csr {
+                    Some(c) => Json::num(c as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("message", Json::str(&self.message)),
+            ("hint", Json::str(&self.hint)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Diagnostic, String> {
+        let code_name = json::get_str(v, "code")?;
+        let code = code_from_name(code_name)
+            .ok_or_else(|| format!("unknown diagnostic code {code_name:?}"))?;
+        let severity_name = json::get_str(v, "severity")?;
+        let severity = Severity::from_name(severity_name)
+            .ok_or_else(|| format!("unknown severity {severity_name:?}"))?;
+        let opt_num = |key: &str| -> Result<Option<u64>, String> {
+            match v.get(key) {
+                None | Some(Json::Null) => Ok(None),
+                Some(x) => x
+                    .as_u64()
+                    .map(Some)
+                    .ok_or_else(|| format!("diagnostic field {key:?} is not an integer")),
+            }
+        };
+        Ok(Diagnostic {
+            code,
+            severity,
+            call: opt_num("call")?.map(|c| c as usize),
+            csr: opt_num("csr")?.map(|c| c as u32),
+            message: json::get_str(v, "message")?.to_string(),
+            hint: json::get_str(v, "hint")?.to_string(),
+        })
+    }
+}
+
+/// Sort findings for reporting: errors first, then by call (job-level
+/// findings lead), code, and message — a total, deterministic order.
+pub fn sort_diagnostics(diags: &mut [Diagnostic]) {
+    diags.sort_by(|a, b| {
+        let call = |d: &Diagnostic| d.call.map_or(-1i64, |c| c as i64);
+        b.severity
+            .cmp(&a.severity)
+            .then(call(a).cmp(&call(b)))
+            .then(a.code.cmp(b.code))
+            .then(a.message.cmp(&b.message))
+    });
+}
+
+/// Whether any finding is an error (the admission-gate predicate).
+pub fn has_errors(diags: &[Diagnostic]) -> bool {
+    diags.iter().any(|d| d.severity == Severity::Error)
+}
+
+/// The most severe error finding, if any (diags need not be sorted).
+pub fn first_error(diags: &[Diagnostic]) -> Option<&Diagnostic> {
+    diags.iter().find(|d| d.severity == Severity::Error)
+}
+
+// ---------------------------------------------------------------------
+// Entry points
+// ---------------------------------------------------------------------
+
+/// Pass 4 — config legality for DSE grids: is this platform instance
+/// elaborable at all? The prefilter calls this per grid variant and
+/// reports `statically_rejected` instead of simulating the point.
+pub fn verify_config(cfg: &PlatformConfig) -> Vec<Diagnostic> {
+    match cfg.validate() {
+        Ok(()) => Vec::new(),
+        Err(e) => vec![Diagnostic::new(
+            CONFIG_INVALID,
+            Severity::Error,
+            format!("platform config fails elaboration: {}", e.0),
+            "fix the named structural parameter before sweeping this grid point",
+        )],
+    }
+}
+
+/// Verify one `(config, request)` grid point: config legality, then
+/// schedulability, then the full compiled-job check.
+pub fn verify_request(cfg: &PlatformConfig, request: &JobRequest) -> Vec<Diagnostic> {
+    let mut diags = verify_config(cfg);
+    if has_errors(&diags) {
+        return diags;
+    }
+    let s = request.shape;
+    match compile_gemm(
+        cfg,
+        s,
+        request.layout,
+        request.repeats,
+        request.mechanisms.config_preloading,
+    ) {
+        Err(e) => diags.push(Diagnostic::new(
+            UNSCHEDULABLE,
+            Severity::Error,
+            format!("shape {}x{}x{} does not schedule: {}", s.m, s.k, s.n, e.0),
+            "shrink the shape or grow the SPM so a capacity split exists",
+        )),
+        Ok(job) => diags.extend(verify_job(cfg, &job)),
+    }
+    sort_diagnostics(&mut diags);
+    diags
+}
+
+/// Verify a compiled job: SPM legality (pass 1), CSR program legality
+/// (pass 2), and hazard analysis (pass 3). Returns findings sorted
+/// errors-first; an empty vector means the job is provably legal.
+pub fn verify_job(cfg: &PlatformConfig, job: &CompiledJob) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    if job.repeats == 0 {
+        diags.push(Diagnostic::new(
+            LOOP_BOUND_RANGE,
+            Severity::Error,
+            "repeat count 0 compiles to a non-terminating host repeat loop".to_string(),
+            "request at least one repeat",
+        ));
+    }
+    let mut regions = Vec::with_capacity(job.calls.len());
+    for (ci, call) in job.calls.iter().enumerate() {
+        check_bounds(ci, call, &mut diags);
+        regions.push(check_spm(cfg, ci, call, &mut diags));
+    }
+    check_hazards(cfg, job, &regions, &mut diags);
+    check_program(job, &mut diags);
+    sort_diagnostics(&mut diags);
+    diags
+}
+
+// ---------------------------------------------------------------------
+// Pass 1 — SPM legality (bounds, alignment, aliasing)
+// ---------------------------------------------------------------------
+
+/// Address-enumeration budget per call (word visits). Every real
+/// placement sits far under it; the cap only exists so a pathological
+/// hand-built schedule degrades to the conservative interval check
+/// (reported at `Warn`) instead of an unbounded walk.
+const OVERLAP_VISIT_BUDGET: u64 = 1 << 22;
+
+/// One operand's touched SPM region: its byte interval, plus the exact
+/// word set when enumeration was legal and within budget.
+struct OperandRegion {
+    name: &'static str,
+    /// Lowest touched byte (may be negative for a broken schedule).
+    lo: i64,
+    /// One past the highest touched byte.
+    hi: i64,
+    /// Exact word-index bitset over the SPM, when available.
+    words: Option<Vec<u64>>,
+}
+
+struct CallRegions {
+    a: OperandRegion,
+    b: OperandRegion,
+    c: OperandRegion,
+}
+
+fn check_bounds(ci: usize, call: &CompiledCall, diags: &mut Vec<Diagnostic>) {
+    let b = call.placement.bounds;
+    let mut in_range = true;
+    for (name, v) in [("Mt", b.mt), ("Nt", b.nt), ("Kt", b.kt)] {
+        if v < 1 || v > MAX_LOOP_BOUND {
+            diags.push(
+                Diagnostic::new(
+                    LOOP_BOUND_RANGE,
+                    Severity::Error,
+                    format!("loop bound {name} = {v} outside the encodable range 1..={MAX_LOOP_BOUND}"),
+                    "split the call further; BOUNDS packs 10-bit fields",
+                )
+                .at_call(ci)
+                .at_csr(CSR_BOUNDS),
+            );
+            in_range = false;
+        }
+    }
+    if !in_range {
+        return;
+    }
+    if let Some(&(_, packed)) = call.placement.csr_writes.iter().find(|&&(a, _)| a == CSR_BOUNDS) {
+        let decoded = unpack_bounds(packed);
+        if decoded != b {
+            diags.push(
+                Diagnostic::new(
+                    LOOP_BOUND_RANGE,
+                    Severity::Error,
+                    format!(
+                        "BOUNDS register encodes (Mt,Nt,Kt) = ({},{},{}), the schedule iterates ({},{},{})",
+                        decoded.mt, decoded.nt, decoded.kt, b.mt, b.nt, b.kt
+                    ),
+                    "re-pack BOUNDS from the placement's loop bounds",
+                )
+                .at_call(ci)
+                .at_csr(CSR_BOUNDS),
+            );
+        }
+    }
+}
+
+fn check_spm(
+    cfg: &PlatformConfig,
+    ci: usize,
+    call: &CompiledCall,
+    diags: &mut Vec<Diagnostic>,
+) -> CallRegions {
+    let word = cfg.mem.word_bytes();
+    let regs = call.placement.config_regs();
+    let bounds = call.placement.bounds;
+    let mut budget = OVERLAP_VISIT_BUDGET;
+    let a = operand_region(cfg, ci, "A", &regs.a_agu(&cfg.core, word), bounds, &mut budget, diags);
+    let b = operand_region(cfg, ci, "B", &regs.b_agu(&cfg.core, word), bounds, &mut budget, diags);
+    let c = operand_region(cfg, ci, "C", &regs.c_agu(&cfg.core, word), bounds, &mut budget, diags);
+
+    // A/B aliasing: the input streamers walk both regions concurrently
+    // every tile; any shared word reads the wrong operand.
+    match overlap_evidence(&a, &b) {
+        Some(OverlapEvidence::Exact(word_idx)) => diags.push(
+            Diagnostic::new(
+                SPM_OVERLAP,
+                Severity::Error,
+                format!(
+                    "A and B operand regions alias: both touch SPM word {word_idx} (byte {:#x})",
+                    word_idx * word as u64
+                ),
+                "give A and B disjoint base addresses (see compiler::layout::plan)",
+            )
+            .at_call(ci),
+        ),
+        Some(OverlapEvidence::Interval(byte)) => diags.push(
+            Diagnostic::new(
+                SPM_OVERLAP,
+                Severity::Warn,
+                format!(
+                    "A and B byte intervals overlap near byte {byte:#x} \
+                     (exact word walk skipped; cannot prove disjointness)"
+                ),
+                "give A and B disjoint byte intervals, or shrink the loop volume",
+            )
+            .at_call(ci),
+        ),
+        None => {}
+    }
+    CallRegions { a, b, c }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn operand_region(
+    cfg: &PlatformConfig,
+    ci: usize,
+    name: &'static str,
+    agu: &AguConfig,
+    bounds: LoopBounds,
+    budget: &mut u64,
+    diags: &mut Vec<Diagnostic>,
+) -> OperandRegion {
+    let word = cfg.mem.word_bytes() as i64;
+    let cap = cfg.mem.capacity_bytes() as i64;
+
+    // Word alignment: the same conditions under which the streamer's
+    // precomputed bank pattern is exact (AguConfig::bank_pattern).
+    let fields = [
+        ("base", agu.base as i64),
+        ("stride_m", agu.stride_m),
+        ("stride_n", agu.stride_n),
+        ("stride_k", agu.stride_k),
+        ("spatial0_stride", agu.spatial0_stride),
+        ("spatial1_stride", agu.spatial1_stride),
+    ];
+    let misaligned: Vec<&str> =
+        fields.iter().filter(|&&(_, v)| v % word != 0).map(|&(f, _)| f).collect();
+    if !misaligned.is_empty() {
+        diags.push(
+            Diagnostic::new(
+                SPM_MISALIGNED,
+                Severity::Error,
+                format!(
+                    "{name} streamer address pattern is not word-aligned: {} not a multiple of \
+                     the {word}-byte SPM word",
+                    misaligned.join(", ")
+                ),
+                "make every base and stride a word multiple so each port access is one bank word",
+            )
+            .at_call(ci),
+        );
+    }
+
+    let lo = agu.min_byte_addr(bounds.mt, bounds.nt, bounds.kt);
+    let hi = agu.max_byte_addr(bounds.mt, bounds.nt, bounds.kt) as i64 + word;
+    let mut legal = misaligned.is_empty();
+    if lo < 0 {
+        diags.push(
+            Diagnostic::new(
+                SPM_OOB,
+                Severity::Error,
+                format!("{name} region reaches byte {lo} below SPM address zero"),
+                "raise the base address or drop the negative stride",
+            )
+            .at_call(ci),
+        );
+        legal = false;
+    } else if hi > cap {
+        diags.push(
+            Diagnostic::new(
+                SPM_OOB,
+                Severity::Error,
+                format!("{name} region ends at byte {hi:#x}, SPM capacity is {cap:#x}"),
+                "lower the base address or split the call over a smaller loop volume",
+            )
+            .at_call(ci),
+        );
+        legal = false;
+    }
+
+    let words = if legal {
+        enumerate_words(agu, bounds, word as u64, (cap / word) as u64, budget)
+    } else {
+        None
+    };
+    OperandRegion { name, lo, hi, words }
+}
+
+/// Exact word-set enumeration of one operand over the call's effective
+/// loop volume (a zero-stride dimension contributes one step — the
+/// streamer re-reads the same words there). `None` when the walk would
+/// exceed the remaining visit budget.
+fn enumerate_words(
+    agu: &AguConfig,
+    bounds: LoopBounds,
+    word_bytes: u64,
+    cap_words: u64,
+    budget: &mut u64,
+) -> Option<Vec<u64>> {
+    let eff = |bound: u64, stride: i64| if stride == 0 { 1 } else { bound };
+    let (em, en, ek) = (
+        eff(bounds.mt, agu.stride_m),
+        eff(bounds.nt, agu.stride_n),
+        eff(bounds.kt, agu.stride_k),
+    );
+    let visits = em
+        .checked_mul(en)
+        .and_then(|v| v.checked_mul(ek))
+        .and_then(|v| v.checked_mul(agu.ports() as u64))?;
+    if visits > *budget {
+        return None;
+    }
+    *budget -= visits;
+    let mut bits = vec![0u64; cap_words.div_ceil(64) as usize];
+    let mut addrs = Vec::with_capacity(agu.ports());
+    for m1 in 0..em {
+        for n1 in 0..en {
+            for k1 in 0..ek {
+                agu.tile_word_addrs(m1, n1, k1, word_bytes, &mut addrs);
+                for &w in &addrs {
+                    if w < cap_words {
+                        bits[(w / 64) as usize] |= 1u64 << (w % 64);
+                    }
+                }
+            }
+        }
+    }
+    Some(bits)
+}
+
+enum OverlapEvidence {
+    /// Both word sets were exact: the first shared word index.
+    Exact(u64),
+    /// Interval-level overlap only (a walk was skipped): a byte inside
+    /// the shared interval.
+    Interval(i64),
+}
+
+fn overlap_evidence(x: &OperandRegion, y: &OperandRegion) -> Option<OverlapEvidence> {
+    if let (Some(a), Some(b)) = (&x.words, &y.words) {
+        for (i, (wa, wb)) in a.iter().zip(b.iter()).enumerate() {
+            let both = wa & wb;
+            if both != 0 {
+                return Some(OverlapEvidence::Exact(i as u64 * 64 + both.trailing_zeros() as u64));
+            }
+        }
+        return None;
+    }
+    if x.lo < y.hi && y.lo < x.hi {
+        return Some(OverlapEvidence::Interval(x.lo.max(y.lo)));
+    }
+    None
+}
+
+fn intervals_overlap(x: &OperandRegion, y: &OperandRegion) -> bool {
+    x.lo < y.hi && y.lo < x.hi
+}
+
+// ---------------------------------------------------------------------
+// Pass 3 — hazard analysis (double-buffer RAW/WAR windows)
+// ---------------------------------------------------------------------
+
+fn check_hazards(
+    cfg: &PlatformConfig,
+    job: &CompiledJob,
+    regions: &[CallRegions],
+    diags: &mut Vec<Diagnostic>,
+) {
+    // Within a call, the d_stream-deep input prefetch reads A/B tiles
+    // while the output buffer drains C words of earlier tiles — the
+    // windows the Fig. 5 prefetch/output-buffering mechanism overlaps.
+    // If C shares any word with a live input region, that overlap is a
+    // RAW/WAR hazard, not a buffering win.
+    for (ci, r) in regions.iter().enumerate() {
+        for input in [&r.a, &r.b] {
+            match overlap_evidence(&r.c, input) {
+                Some(OverlapEvidence::Exact(word_idx)) => diags.push(
+                    Diagnostic::new(
+                        DOUBLE_BUFFER_HAZARD,
+                        Severity::Error,
+                        format!(
+                            "output streamer window (C) overwrites live input region {} at \
+                             SPM word {word_idx} while the prefetcher still reads it",
+                            input.name
+                        ),
+                        "place c_base above the input regions; the prefetch and writeback \
+                         windows overlap in time by design",
+                    )
+                    .at_call(ci),
+                ),
+                Some(OverlapEvidence::Interval(byte)) => diags.push(
+                    Diagnostic::new(
+                        DOUBLE_BUFFER_HAZARD,
+                        Severity::Warn,
+                        format!(
+                            "C and {} byte intervals overlap near byte {byte:#x} \
+                             (exact word walk skipped; cannot prove the windows disjoint)",
+                            input.name
+                        ),
+                        "separate the C interval from the inputs, or shrink the loop volume",
+                    )
+                    .at_call(ci),
+                ),
+                None => {}
+            }
+        }
+    }
+
+    // Across calls (and across the repeat wrap), the next call's input
+    // load reuses bytes the previous call's C window wrote. That refill
+    // serializes on the DMA between launches, so it is a note, not a
+    // hazard — but it marks where back-to-back CPL launches cannot
+    // overlap data movement.
+    let n = regions.len();
+    if n > 0 {
+        let wrap = job.repeats > 1 || (job.cpl && n > 1);
+        let transitions = if wrap { n } else { n.saturating_sub(1) };
+        let mut refills = 0usize;
+        for i in 0..transitions {
+            let next = &regions[(i + 1) % n];
+            let c = &regions[i].c;
+            if intervals_overlap(c, &next.a) || intervals_overlap(c, &next.b) {
+                refills += 1;
+            }
+        }
+        if refills > 0 {
+            diags.push(Diagnostic::new(
+                UNDERFILLED_PIPELINE,
+                Severity::Info,
+                format!(
+                    "{refills} of {transitions} call transitions reload input bytes the previous \
+                     call's output window wrote (the inter-call refill serializes there)"
+                ),
+                "expected for capacity-split jobs; irrelevant to single-call schedules",
+            ));
+        }
+    }
+
+    // Underfilled prefetch pipeline: a call with fewer tiles than the
+    // buffer is deep never reaches steady state (small-shape cliff).
+    let depth = cfg.mem.d_stream as u64;
+    let shallow: Vec<usize> = job
+        .calls
+        .iter()
+        .enumerate()
+        .filter(|(_, call)| call.placement.bounds.total_tiles() < depth)
+        .map(|(i, _)| i)
+        .collect();
+    if let Some(&first) = shallow.first() {
+        diags.push(
+            Diagnostic::new(
+                UNDERFILLED_PIPELINE,
+                Severity::Info,
+                format!(
+                    "{} call(s) iterate fewer than d_stream = {depth} tiles; the prefetch \
+                     pipeline never fills",
+                    shallow.len()
+                ),
+                "expected for small shapes; utilization is bounded by pipeline fill",
+            )
+            .at_call(first),
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pass 2 — CSR program legality (decode the generated RV32I program)
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Event {
+    /// Write of a config CSR, with the value when statically known.
+    Config { csr: u32, value: Option<u32> },
+    /// CTRL write with bit 0 set: an accelerator launch.
+    Launch,
+    /// STATUS read immediately masked with `andi`: a poll loop head.
+    Poll { mask: u32 },
+    Ebreak,
+}
+
+fn csr_mapped(csr: u32) -> bool {
+    (CSR_BASE..CSR_BASE + CSR_COUNT as u32).contains(&csr)
+}
+
+fn bad_csr(csr: u32) -> Diagnostic {
+    Diagnostic::new(
+        CSR_BAD_ADDRESS,
+        Severity::Error,
+        format!("program accesses CSR {csr:#x} outside the accelerator window"),
+        format!(
+            "accelerator CSRs live at {CSR_BASE:#x}..{:#x}",
+            CSR_BASE + CSR_COUNT as u32
+        ),
+    )
+    .at_csr(csr)
+}
+
+fn record_csr_write(
+    csr: u32,
+    value: Option<u32>,
+    events: &mut Vec<Event>,
+    diags: &mut Vec<Diagnostic>,
+) {
+    if !csr_mapped(csr) {
+        diags.push(bad_csr(csr));
+        return;
+    }
+    if csr == CSR_STATUS {
+        diags.push(
+            Diagnostic::new(
+                CSR_BAD_ADDRESS,
+                Severity::Error,
+                "program writes the read-only STATUS register".to_string(),
+                "poll STATUS with csrrs; only CTRL accepts commands",
+            )
+            .at_csr(CSR_STATUS),
+        );
+        return;
+    }
+    if csr == CSR_CTRL {
+        match value {
+            Some(v) if v & 1 == 1 => events.push(Event::Launch),
+            Some(_) => {} // no-op control write
+            None => diags.push(
+                Diagnostic::new(
+                    CPL_CHAIN,
+                    Severity::Warn,
+                    "CTRL written with a value the verifier cannot resolve; \
+                     launch chaining is unverifiable"
+                        .to_string(),
+                    "launch with csrrwi CTRL, 1 (an immediate the verifier can follow)",
+                )
+                .at_csr(CSR_CTRL),
+            ),
+        }
+        return;
+    }
+    events.push(Event::Config { csr, value });
+}
+
+/// Linear abstract interpretation of the host program: track
+/// statically-known register values (x0 is hardwired), record every
+/// CSR-visible event in order, stop at `ebreak`. Branches are not
+/// followed — the generator emits one repeat body in straight-line
+/// order, which is exactly the per-repeat event sequence.
+fn decode_events(program: &[u32], diags: &mut Vec<Diagnostic>) -> Vec<Event> {
+    let mut regs: [Option<u32>; 32] = [None; 32];
+    regs[0] = Some(0);
+    let mut events = Vec::new();
+    let mut pending_poll: Option<usize> = None;
+    for &w in program {
+        let poll_reg = pending_poll.take();
+        let opcode = w & 0x7f;
+        let rd = ((w >> 7) & 0x1f) as usize;
+        let rs1 = ((w >> 15) & 0x1f) as usize;
+        let funct3 = (w >> 12) & 0x7;
+        match opcode {
+            // OP-IMM: addi carries li/loop arithmetic, andi the poll mask
+            0x13 => {
+                let imm = (w as i32) >> 20;
+                let new = match funct3 {
+                    0x0 => regs[rs1].map(|v| v.wrapping_add(imm as u32)),
+                    0x7 => {
+                        if poll_reg == Some(rs1) && rd == rs1 {
+                            events.push(Event::Poll { mask: imm as u32 });
+                        }
+                        regs[rs1].map(|v| v & imm as u32)
+                    }
+                    _ => None,
+                };
+                if rd != 0 {
+                    regs[rd] = new;
+                }
+            }
+            // lui: the high half of a li expansion
+            0x37 => {
+                if rd != 0 {
+                    regs[rd] = Some(w & 0xffff_f000);
+                }
+            }
+            // SYSTEM: csr ops and ebreak
+            0x73 => {
+                if w == 0x0010_0073 {
+                    events.push(Event::Ebreak);
+                    break;
+                }
+                let csr = (w >> 20) & 0xfff;
+                match funct3 {
+                    // csrrw: write the rs1 value
+                    0x1 => record_csr_write(csr, regs[rs1], &mut events, diags),
+                    // csrrwi: write the 5-bit immediate
+                    0x5 => record_csr_write(csr, Some(rs1 as u32), &mut events, diags),
+                    // csrrs/csrrc: pure read when rs1 = x0, else a
+                    // read-modify-write with unverifiable bits
+                    0x2 | 0x3 => {
+                        if !csr_mapped(csr) {
+                            diags.push(bad_csr(csr));
+                        } else if rs1 != 0 {
+                            record_csr_write(csr, None, &mut events, diags);
+                        } else if csr == CSR_STATUS {
+                            pending_poll = Some(rd);
+                        }
+                    }
+                    _ => {}
+                }
+                if rd != 0 {
+                    regs[rd] = None;
+                }
+            }
+            // branches write no register
+            0x63 => {}
+            // every other writing instruction clobbers rd with an
+            // unknown value (conservative)
+            _ => {
+                if rd != 0 {
+                    regs[rd] = None;
+                }
+            }
+        }
+    }
+    events
+}
+
+fn check_program(job: &CompiledJob, diags: &mut Vec<Diagnostic>) {
+    let events = decode_events(&job.program, diags);
+    let launches: Vec<usize> = events
+        .iter()
+        .enumerate()
+        .filter(|(_, e)| matches!(e, Event::Launch))
+        .map(|(i, _)| i)
+        .collect();
+    if launches.len() != job.calls.len() {
+        diags.push(Diagnostic::new(
+            CPL_CHAIN,
+            Severity::Error,
+            format!(
+                "host program launches {} accelerator run(s) per repeat, the schedule has {} \
+                 call(s)",
+                launches.len(),
+                job.calls.len()
+            ),
+            "regenerate the program with compiler::gen_config_program over the full call list",
+        ));
+        return; // window partitioning below would misattribute findings
+    }
+
+    let expected_mask = if job.cpl { STATUS_PENDING } else { STATUS_BUSY };
+    let mut start = 0usize;
+    for (ci, &lpos) in launches.iter().enumerate() {
+        let window = &events[start..lpos];
+        check_launch_window(job, ci, window, expected_mask, diags);
+        start = lpos + 1;
+    }
+
+    // The tail must drain (poll until neither busy nor pending) and
+    // halt — otherwise the host returns while the accelerator runs.
+    let tail = &events[start..];
+    let drained = tail
+        .iter()
+        .any(|e| matches!(e, Event::Poll { mask } if *mask == STATUS_BUSY | STATUS_PENDING));
+    if !drained {
+        diags.push(Diagnostic::new(
+            CPL_CHAIN,
+            Severity::Error,
+            "program ends without draining the accelerator (no final poll on busy|pending)"
+                .to_string(),
+            "poll STATUS for busy|pending == 0 after the last launch",
+        ));
+    }
+    if !tail.iter().any(|e| matches!(e, Event::Ebreak)) {
+        diags.push(Diagnostic::new(
+            CPL_CHAIN,
+            Severity::Error,
+            "program does not terminate with ebreak".to_string(),
+            "end the host program with ebreak so the simulator observes completion",
+        ));
+    }
+}
+
+fn check_launch_window(
+    job: &CompiledJob,
+    ci: usize,
+    window: &[Event],
+    expected_mask: u32,
+    diags: &mut Vec<Diagnostic>,
+) {
+    // Chaining: every launch waits for the previous run (busy without
+    // CPL; the pre-load slot — pending — with CPL).
+    let polls: Vec<u32> = window
+        .iter()
+        .filter_map(|e| match e {
+            Event::Poll { mask } => Some(*mask),
+            _ => None,
+        })
+        .collect();
+    if polls.is_empty() {
+        diags.push(
+            Diagnostic::new(
+                CPL_CHAIN,
+                Severity::Error,
+                "launch is not preceded by a status poll".to_string(),
+                format!(
+                    "poll STATUS on mask {expected_mask:#x} before launching ({} mode)",
+                    if job.cpl { "CPL" } else { "blocking" }
+                ),
+            )
+            .at_call(ci),
+        );
+    } else if !polls.contains(&expected_mask) {
+        diags.push(
+            Diagnostic::new(
+                CPL_CHAIN,
+                Severity::Error,
+                format!(
+                    "status poll waits on mask {:#x}; {} chaining requires {expected_mask:#x}",
+                    polls[0],
+                    if job.cpl { "CPL" } else { "blocking" }
+                ),
+                "with CPL poll start-pending (bit 1); without it poll busy (bit 0)",
+            )
+            .at_call(ci),
+        );
+    }
+
+    // Completeness: a launch consumes the full staging bank; every
+    // config CSR must have been written since the previous launch.
+    let mut written: BTreeMap<u32, Vec<Option<u32>>> = BTreeMap::new();
+    for e in window {
+        if let Event::Config { csr, value } = e {
+            written.entry(*csr).or_default().push(*value);
+        }
+    }
+    let missing: Vec<&str> = CONFIG_CSR_ADDRS
+        .iter()
+        .filter(|a| !written.contains_key(a))
+        .map(|&a| csr_name(a))
+        .collect();
+    if let Some(&first) = missing.first() {
+        diags.push(
+            Diagnostic::new(
+                CSR_INCOMPLETE_CONFIG,
+                Severity::Error,
+                format!(
+                    "launch without a complete config write set: {} register(s) missing ({})",
+                    missing.len(),
+                    missing.join(", ")
+                ),
+                format!("write {first} (and every other config CSR) before the launch"),
+            )
+            .at_call(ci),
+        );
+    }
+    for (&csr, writes) in &written {
+        if writes.len() > 1 {
+            diags.push(
+                Diagnostic::new(
+                    CSR_INCOMPLETE_CONFIG,
+                    Severity::Warn,
+                    format!(
+                        "{} written {} times before one launch; only the last value lands",
+                        csr_name(csr),
+                        writes.len()
+                    ),
+                    "drop the redundant writes to save configuration cycles",
+                )
+                .at_call(ci)
+                .at_csr(csr),
+            );
+        }
+    }
+
+    // Consistency: where the decoded value is statically known, it must
+    // equal what the schedule's placement planned.
+    for &(csr, want) in &job.calls[ci].placement.csr_writes {
+        if let Some(&Some(got)) = written.get(&csr).and_then(|w| w.last()) {
+            if got != want {
+                diags.push(
+                    Diagnostic::new(
+                        PROGRAM_DIVERGENCE,
+                        Severity::Error,
+                        format!(
+                            "program writes {} = {got:#x}, the compiled schedule says {want:#x}",
+                            csr_name(csr)
+                        ),
+                        "regenerate the program from the placement's CSR image",
+                    )
+                    .at_call(ci)
+                    .at_csr(csr),
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{GemmShape, Layout};
+    use crate::config::Mechanisms;
+
+    fn cfg() -> PlatformConfig {
+        PlatformConfig::case_study()
+    }
+
+    #[test]
+    fn compiled_jobs_verify_clean() {
+        let cfg = cfg();
+        for layout in [Layout::RowMajor, Layout::TiledContiguous, Layout::TiledInterleaved] {
+            for cpl in [false, true] {
+                let job = compile_gemm(&cfg, GemmShape::new(64, 64, 64), layout, 10, cpl).unwrap();
+                let diags = verify_job(&cfg, &job);
+                assert!(!has_errors(&diags), "{layout:?} cpl={cpl}: {diags:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn catalog_codes_resolve_and_are_unique() {
+        let mut seen = std::collections::BTreeSet::new();
+        for (code, _) in CATALOG {
+            assert_eq!(code_from_name(code), Some(code));
+            assert!(seen.insert(code), "duplicate code {code}");
+        }
+        assert_eq!(code_from_name("A999-nope"), None);
+    }
+
+    #[test]
+    fn severity_orders_error_first() {
+        let mut diags = vec![
+            Diagnostic::new(UNDERFILLED_PIPELINE, Severity::Info, "i", "h"),
+            Diagnostic::new(SPM_OOB, Severity::Error, "e", "h"),
+            Diagnostic::new(SPM_OVERLAP, Severity::Warn, "w", "h"),
+        ];
+        sort_diagnostics(&mut diags);
+        let sevs: Vec<Severity> = diags.iter().map(|d| d.severity).collect();
+        assert_eq!(sevs, vec![Severity::Error, Severity::Warn, Severity::Info]);
+        assert_eq!(first_error(&diags).unwrap().code, SPM_OOB);
+    }
+
+    #[test]
+    fn diagnostic_json_roundtrip() {
+        let d = Diagnostic::new(SPM_OOB, Severity::Error, "msg", "hint").at_call(3).at_csr(0x3c1);
+        let back = Diagnostic::from_json(&d.to_json()).unwrap();
+        assert_eq!(back, d);
+        let jobless = Diagnostic::new(CONFIG_INVALID, Severity::Error, "m", "h");
+        assert_eq!(Diagnostic::from_json(&jobless.to_json()).unwrap(), jobless);
+    }
+
+    #[test]
+    fn verify_config_flags_invalid_instance() {
+        let mut bad = cfg();
+        bad.mem.n_bank = 3; // not a power of two
+        let diags = verify_config(&bad);
+        assert_eq!(first_error(&diags).map(|d| d.code), Some(CONFIG_INVALID));
+        assert!(verify_config(&cfg()).is_empty());
+    }
+
+    #[test]
+    fn verify_request_flags_unschedulable_shape() {
+        let req = JobRequest::timing(GemmShape::new(8, 300_000, 8), Mechanisms::ALL, 1);
+        let diags = verify_request(&cfg(), &req);
+        assert_eq!(first_error(&diags).map(|d| d.code), Some(UNSCHEDULABLE));
+    }
+
+    #[test]
+    fn zero_repeats_is_an_error() {
+        let cfg = cfg();
+        let job =
+            compile_gemm(&cfg, GemmShape::new(32, 32, 32), Layout::TiledInterleaved, 0, true)
+                .unwrap();
+        let diags = verify_job(&cfg, &job);
+        assert_eq!(first_error(&diags).map(|d| d.code), Some(LOOP_BOUND_RANGE));
+    }
+}

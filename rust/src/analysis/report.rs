@@ -1,0 +1,206 @@
+//! Deterministic lint report: the `opengemm lint` wire format.
+//!
+//! ## `opengemm-lint-report-v1` schema
+//!
+//! ```json
+//! {
+//!   "format": "opengemm-lint-report-v1",
+//!   "targets": <u64>,            // number of lint targets
+//!   "jobs": <u64>,               // compiled jobs verified in total
+//!   "errors": <u64>,             // finding counts across all targets
+//!   "warnings": <u64>,
+//!   "infos": <u64>,
+//!   "reports": [
+//!     {
+//!       "name": "fig5:Arch4 +SMA d=16",   // "<group>:<label>" target id
+//!       "jobs": <u64>,
+//!       "errors": <u64>, "warnings": <u64>, "infos": <u64>,
+//!       "diagnostics": [
+//!         {
+//!           "code": "A001-spm-oob",      // stable code from analysis::CATALOG
+//!           "severity": "error",          // "error" | "warn" | "info"
+//!           "call": <u64> | null,         // offending call index, if per-call
+//!           "csr": <u64> | null,          // offending CSR address, if per-CSR
+//!           "message": "...",             // one-line finding
+//!           "hint": "..."                 // one-line fix hint
+//!         }, ...
+//!       ]
+//!     }, ...
+//!   ]
+//! }
+//! ```
+//!
+//! Determinism contract: target order is lint order (itself fixed by the
+//! experiment definitions), diagnostics within a target are sorted by
+//! [`sort_diagnostics`](super::sort_diagnostics), and every field is a
+//! pure function of `(config, targets)` — two runs over the same tree
+//! diff byte-identically, so the report can live in CI artifacts.
+
+use crate::analysis::{has_errors, Diagnostic, Severity};
+use crate::util::json::{self, Json};
+use crate::util::table::Table;
+
+/// Wire format tag for lint reports.
+pub const LINT_REPORT_FORMAT: &str = "opengemm-lint-report-v1";
+
+/// Verification result for one lint target (one experiment grid point
+/// or serve workload): every diagnostic across its compiled jobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TargetReport {
+    /// Target id, `"<group>:<label>"` (e.g. `"fig7:d=64"`).
+    pub name: String,
+    /// Compiled jobs verified under this target.
+    pub jobs: usize,
+    /// Findings, sorted errors-first (see `analysis::sort_diagnostics`).
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl TargetReport {
+    pub fn count(&self, severity: Severity) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == severity).count()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("jobs", Json::num(self.jobs as f64)),
+            ("errors", Json::num(self.count(Severity::Error) as f64)),
+            ("warnings", Json::num(self.count(Severity::Warn) as f64)),
+            ("infos", Json::num(self.count(Severity::Info) as f64)),
+            ("diagnostics", Json::Arr(self.diagnostics.iter().map(|d| d.to_json()).collect())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<TargetReport, String> {
+        let diagnostics = json::get_arr(v, "diagnostics")?
+            .iter()
+            .map(Diagnostic::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(TargetReport {
+            name: json::get_str(v, "name")?.to_string(),
+            jobs: json::get_u64(v, "jobs")? as usize,
+            diagnostics,
+        })
+    }
+}
+
+/// The full `opengemm lint` run: one [`TargetReport`] per target, in
+/// lint order.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct LintReport {
+    pub targets: Vec<TargetReport>,
+}
+
+impl LintReport {
+    pub fn jobs(&self) -> usize {
+        self.targets.iter().map(|t| t.jobs).sum()
+    }
+
+    pub fn count(&self, severity: Severity) -> usize {
+        self.targets.iter().map(|t| t.count(severity)).sum()
+    }
+
+    /// Whether any target carries an error finding (the exit-status
+    /// predicate for `opengemm lint`).
+    pub fn has_errors(&self) -> bool {
+        self.targets.iter().any(|t| has_errors(&t.diagnostics))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::str(LINT_REPORT_FORMAT)),
+            ("targets", Json::num(self.targets.len() as f64)),
+            ("jobs", Json::num(self.jobs() as f64)),
+            ("errors", Json::num(self.count(Severity::Error) as f64)),
+            ("warnings", Json::num(self.count(Severity::Warn) as f64)),
+            ("infos", Json::num(self.count(Severity::Info) as f64)),
+            ("reports", Json::Arr(self.targets.iter().map(|t| t.to_json()).collect())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<LintReport, String> {
+        let format = json::get_str(v, "format")?;
+        if format != LINT_REPORT_FORMAT {
+            return Err(format!("unsupported lint report format {format:?}"));
+        }
+        let targets = json::get_arr(v, "reports")?
+            .iter()
+            .map(TargetReport::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(LintReport { targets })
+    }
+
+    /// Human rendering: a per-target count table, then one line per
+    /// error/warn finding (info findings appear only as counts).
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&["target", "jobs", "errors", "warns", "infos"]);
+        for tr in &self.targets {
+            t.row(vec![
+                tr.name.clone(),
+                tr.jobs.to_string(),
+                tr.count(Severity::Error).to_string(),
+                tr.count(Severity::Warn).to_string(),
+                tr.count(Severity::Info).to_string(),
+            ]);
+        }
+        let mut out = t.markdown();
+        for tr in &self.targets {
+            for d in &tr.diagnostics {
+                if d.severity != Severity::Info {
+                    out.push_str(&format!("\n{}: {}", tr.name, d.render()));
+                }
+            }
+        }
+        out.push_str(&format!(
+            "\n\n{} error(s), {} warning(s), {} info note(s) across {} job(s) in {} target(s)\n",
+            self.count(Severity::Error),
+            self.count(Severity::Warn),
+            self.count(Severity::Info),
+            self.jobs(),
+            self.targets.len()
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{self, sort_diagnostics};
+    use crate::compiler::{compile_gemm, GemmShape, Layout};
+    use crate::config::PlatformConfig;
+
+    fn report() -> LintReport {
+        let cfg = PlatformConfig::case_study();
+        let job =
+            compile_gemm(&cfg, GemmShape::new(16, 16, 16), Layout::TiledInterleaved, 2, true)
+                .unwrap();
+        let mut diagnostics = analysis::verify_job(&cfg, &job);
+        sort_diagnostics(&mut diagnostics);
+        LintReport {
+            targets: vec![TargetReport { name: "unit:16^3".to_string(), jobs: 1, diagnostics }],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless() {
+        let r = report();
+        let v = r.to_json();
+        assert_eq!(json::get_str(&v, "format").unwrap(), LINT_REPORT_FORMAT);
+        assert_eq!(LintReport::from_json(&v).unwrap(), r);
+    }
+
+    #[test]
+    fn render_names_every_target() {
+        let r = report();
+        let text = r.render();
+        assert!(text.contains("unit:16^3"), "got: {text}");
+        assert!(text.contains("error(s)"), "got: {text}");
+    }
+
+    #[test]
+    fn bad_format_is_rejected() {
+        let v = Json::obj(vec![("format", Json::str("bogus"))]);
+        assert!(LintReport::from_json(&v).is_err());
+    }
+}

@@ -118,6 +118,9 @@ pub fn derive_stats<'a>(outcomes: impl IntoIterator<Item = &'a JobOutcome>) -> C
 pub struct ResultCache {
     dir: Option<PathBuf>,
     verify: bool,
+    /// Persistent-tier entry budget (0 = unlimited): after each publish
+    /// the oldest entries are evicted down to this count.
+    gc_max_entries: usize,
     mem: Mutex<BTreeMap<String, JobOutcome>>,
     hits: AtomicU64,
     misses: AtomicU64,
@@ -129,6 +132,7 @@ impl ResultCache {
         ResultCache {
             dir: None,
             verify: false,
+            gc_max_entries: 0,
             mem: Mutex::new(BTreeMap::new()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
@@ -153,6 +157,35 @@ impl ResultCache {
 
     pub fn verify(&self) -> bool {
         self.verify
+    }
+
+    /// Bound the persistent tier to `max` entries (0 = unlimited, the
+    /// default). On every publish, the oldest `{key}.cache.json` files
+    /// — by (mtime, name), so ties break deterministically — are
+    /// evicted until the store fits. The just-published entry is never
+    /// the eviction victim, so a sweep always ends with its own results
+    /// resident. `.poison` quarantine files are deliberately NOT
+    /// collected: they are operator evidence ([`Self::poison_files`]
+    /// counts them so they cannot rot unnoticed).
+    pub fn with_gc_max_entries(mut self, max: usize) -> ResultCache {
+        self.gc_max_entries = max;
+        self
+    }
+
+    pub fn gc_max_entries(&self) -> usize {
+        self.gc_max_entries
+    }
+
+    /// Number of `.poison` quarantine files accumulated in the
+    /// persistent directory (0 for a memory-only cache). Surfaced in
+    /// `DispatchReport` so damaged entries demand an operator look.
+    pub fn poison_files(&self) -> u64 {
+        let Some(dir) = &self.dir else { return 0 };
+        let Ok(entries) = std::fs::read_dir(dir) else { return 0 };
+        entries
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".poison"))
+            .count() as u64
     }
 
     pub fn dir(&self) -> Option<&Path> {
@@ -227,7 +260,37 @@ impl ResultCache {
             ]);
             if let Err(e) = write_atomically(&Self::entry_path(dir, key), &doc.pretty()) {
                 eprintln!("result cache: could not persist entry {key}: {e}");
+            } else if self.gc_max_entries > 0 {
+                self.gc(dir, key);
             }
+        }
+    }
+
+    /// Evict the oldest persistent entries down to `gc_max_entries`,
+    /// never touching the entry just published under `keep_key`. Best
+    /// effort throughout: GC failures cost disk, not sweeps.
+    fn gc(&self, dir: &Path, keep_key: &str) {
+        let Ok(read) = std::fs::read_dir(dir) else { return };
+        let keep_name = format!("{keep_key}.cache.json");
+        let mut entries: Vec<(std::time::SystemTime, String)> = read
+            .flatten()
+            .filter_map(|e| {
+                let name = e.file_name().to_string_lossy().into_owned();
+                if !name.ends_with(".cache.json") || name == keep_name {
+                    return None;
+                }
+                let mtime = e.metadata().and_then(|m| m.modified()).ok()?;
+                Some((mtime, name))
+            })
+            .collect();
+        // the published entry occupies one slot of the budget
+        let budget = self.gc_max_entries.saturating_sub(1);
+        if entries.len() <= budget {
+            return;
+        }
+        entries.sort();
+        for (_, name) in &entries[..entries.len() - budget] {
+            let _ = std::fs::remove_file(dir.join(name));
         }
     }
 }
@@ -355,6 +418,46 @@ mod tests {
             );
             assert!(!dir.join(format!("{key}.cache.json")).exists(), "{key} renamed away");
         }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_bounds_the_persistent_tier_keeping_newest() {
+        let dir = temp_dir("gc");
+        let cache = ResultCache::persistent(&dir).unwrap().with_gc_max_entries(3);
+        let outcome: JobOutcome = Err("placeholder".into());
+        for i in 0..6 {
+            cache.insert(&format!("k{i}"), &outcome);
+            // distinct mtimes so age ordering is unambiguous even on a
+            // coarse filesystem clock
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        let mut names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.ends_with(".cache.json"))
+            .collect();
+        names.sort();
+        assert_eq!(names, vec!["k3.cache.json", "k4.cache.json", "k5.cache.json"]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn poison_files_are_counted_not_collected() {
+        let dir = temp_dir("gc-poison");
+        let cache = ResultCache::persistent(&dir).unwrap().with_gc_max_entries(1);
+        assert_eq!(cache.poison_files(), 0);
+        assert_eq!(ResultCache::in_memory().poison_files(), 0);
+        std::fs::write(dir.join("bad.cache.json"), "{ not json").unwrap();
+        assert!(cache.lookup("bad").is_none());
+        assert_eq!(cache.poison_files(), 1);
+        // GC never removes quarantine evidence, however tight the budget
+        let out: JobOutcome = Err("x".into());
+        cache.insert("fresh", &out);
+        assert_eq!(cache.poison_files(), 1);
+        assert!(dir.join("bad.cache.json.poison").exists());
+        assert!(dir.join("fresh.cache.json").exists());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -635,12 +635,18 @@ pub struct DispatchReport {
     /// the plan's total job count; a fully warm cache drives it to 0 —
     /// the counter the CI `cache-smoke` lane asserts on.
     pub jobs_simulated: u64,
+    /// `.poison` quarantine files accumulated in the persistent cache
+    /// directory (0 when no persistent cache is in play). Nonzero means
+    /// corrupt entries were quarantined at some point and await an
+    /// operator look — they are never garbage-collected.
+    pub cache_poison_files: u64,
 }
 
 /// v2 added the cache counters (`cache_hits`/`cache_misses`/
-/// `jobs_simulated`). The report is diagnostics-only, so the bump only
-/// guards against parsing a pre-cache report file with current code.
-const DISPATCH_REPORT_FORMAT: &str = "opengemm-dispatch-report-v2";
+/// `jobs_simulated`); v3 added `cache_poison_files`. The report is
+/// diagnostics-only, so the bump only guards against parsing an older
+/// report file with current code.
+const DISPATCH_REPORT_FORMAT: &str = "opengemm-dispatch-report-v3";
 
 impl DispatchReport {
     pub fn to_json(&self) -> Json {
@@ -655,6 +661,7 @@ impl DispatchReport {
             ("cache_hits", Json::num(self.cache_hits as f64)),
             ("cache_misses", Json::num(self.cache_misses as f64)),
             ("jobs_simulated", Json::num(self.jobs_simulated as f64)),
+            ("cache_poison_files", Json::num(self.cache_poison_files as f64)),
         ])
     }
 
@@ -678,12 +685,13 @@ impl DispatchReport {
             cache_hits: json::get_u64(v, "cache_hits")?,
             cache_misses: json::get_u64(v, "cache_misses")?,
             jobs_simulated: json::get_u64(v, "jobs_simulated")?,
+            cache_poison_files: json::get_u64(v, "cache_poison_files")?,
         })
     }
 
     /// One-line summary for driver stderr.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "{} shard(s) over {} transport: {} attempt(s), {} retried, \
              {} speculative, {} duplicate(s) discarded, {} job(s) simulated \
              ({} cache hit(s))",
@@ -695,7 +703,14 @@ impl DispatchReport {
             self.duplicates_discarded,
             self.jobs_simulated,
             self.cache_hits
-        )
+        );
+        if self.cache_poison_files > 0 {
+            s.push_str(&format!(
+                "; {} poison file(s) in the cache dir await inspection",
+                self.cache_poison_files
+            ));
+        }
+        s
     }
 }
 
@@ -922,6 +937,7 @@ pub fn dispatch_plan_cached(
             cache.insert(key, outcome);
         }
     }
+    report.cache_poison_files = cache.poison_files();
     let mut results = warm;
     results.extend(fresh);
     let mut merged = merge(total_jobs, results)?;
@@ -970,6 +986,7 @@ fn dispatch_plan_verifying(
             }
         }
     }
+    report.cache_poison_files = cache.poison_files();
     let mut merged = merge(total_jobs, results)?;
     merged.stats.cache_hits = report.cache_hits;
     merged.stats.cache_misses = report.cache_misses;
@@ -1366,6 +1383,7 @@ mod tests {
             cache_hits: 4,
             cache_misses: 2,
             jobs_simulated: 2,
+            cache_poison_files: 1,
         };
         let text = report.to_json().pretty();
         let back = DispatchReport::from_json(&json::parse(&text).unwrap()).unwrap();

@@ -56,6 +56,12 @@ pub struct SweepOptions {
     pub fast_forward: bool,
     /// Host-stall cycles per accelerator CSR access.
     pub csr_latency: u64,
+    /// Static admission gate (default on): verify every compilable job
+    /// with [`crate::analysis::verify_job`] before dispatch and reject
+    /// the sweep loudly on an error-severity diagnostic. Like `shards`,
+    /// this is a planning knob — it is not part of the shard wire
+    /// format, so toggling it cannot perturb shard files or cache keys.
+    pub lint: bool,
 }
 
 impl Default for SweepOptions {
@@ -65,6 +71,7 @@ impl Default for SweepOptions {
             workers: 0,
             fast_forward: SimOptions::default().fast_forward,
             csr_latency: SimOptions::default().csr_latency,
+            lint: true,
         }
     }
 }
@@ -80,9 +87,11 @@ impl SweepOptions {
 
     fn from_json(v: &Json) -> Result<SweepOptions, String> {
         Ok(SweepOptions {
-            // `shards` is a planning knob, not a per-shard property; a
-            // deserialized shard is always run as-is.
+            // `shards` and `lint` are planning knobs, not per-shard
+            // properties; a deserialized shard is always run as-is (its
+            // jobs were already admitted by the planning process).
             shards: 1,
+            lint: true,
             workers: json::get_usize(v, "workers")?,
             fast_forward: json::get_bool(v, "fast_forward")?,
             csr_latency: json::get_u64(v, "csr_latency")?,
@@ -435,25 +444,66 @@ pub fn run_sweep(
     requests: Vec<JobRequest>,
     opts: SweepOptions,
 ) -> SweepResult {
-    run_sweep_cached(cfg, requests, opts, None)
-        .expect("in-process dispatch of an exact cover cannot fail")
+    // In-process dispatch of an exact cover cannot fail; the only
+    // remaining failure is the static admission gate, which IS fatal
+    // here (use run_sweep_cached for a recoverable error).
+    run_sweep_cached(cfg, requests, opts, None).expect("sweep failed static admission")
 }
 
 /// [`run_sweep`] with an optional result cache in front of the
 /// simulator (see [`crate::coordinator::cache`]): each job is looked up
 /// before dispatch and only the misses are simulated, with the merged
 /// result byte-identical to the uncached run. Fallible because a cache
-/// in verify mode hard-errors on a divergent entry.
+/// in verify mode hard-errors on a divergent entry, and because the
+/// default-on admission gate ([`SweepOptions::lint`]) rejects a job
+/// carrying an error-severity static diagnostic before any dispatch.
 pub fn run_sweep_cached(
     cfg: &PlatformConfig,
     requests: Vec<JobRequest>,
     opts: SweepOptions,
     cache: Option<&ResultCache>,
 ) -> Result<SweepResult, String> {
+    if opts.lint {
+        admit_requests(cfg, &requests)?;
+    }
     let plan = SweepPlan::stride(cfg, requests, opts);
     let (result, _report) =
         dispatch_plan_cached(plan, &InProcess, &DispatchOptions::serial(), cache)?;
     Ok(result)
+}
+
+/// The static admission firewall: verify every *compilable* job before
+/// dispatch. A job with an error-severity diagnostic fails the whole
+/// sweep loudly, pre-dispatch, naming the diagnostic — never a worker
+/// crash hours in. Jobs that do not compile pass through untouched:
+/// they become per-job `Err` outcomes downstream, which DSE sweeps
+/// legitimately record and rank.
+fn admit_requests(cfg: &PlatformConfig, requests: &[JobRequest]) -> Result<(), String> {
+    for (i, request) in requests.iter().enumerate() {
+        let job = match crate::compiler::compile_gemm(
+            cfg,
+            request.shape,
+            request.layout,
+            request.repeats,
+            request.mechanisms.config_preloading,
+        ) {
+            Ok(job) => job,
+            Err(_) => continue, // recorded as a per-job Err outcome
+        };
+        let diags = crate::analysis::verify_job(cfg, &job);
+        if let Some(d) = crate::analysis::first_error(&diags) {
+            let s = request.shape;
+            return Err(format!(
+                "lint: job {i} (shape {}x{}x{}) rejected at admission: {} \
+                 (run with --no-lint to bypass the static verifier)",
+                s.m,
+                s.k,
+                s.n,
+                d.render()
+            ));
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -570,6 +620,28 @@ mod tests {
         // override: misconfiguration never passes silently
         assert!(resolve_worker_override(Some(6), Some("zero"), 2).is_err());
         assert!(resolve_worker_override(None, Some("0"), 2).is_err());
+    }
+
+    #[test]
+    fn admission_gate_rejects_statically_illegal_jobs() {
+        let cfg = PlatformConfig::case_study();
+        // repeats = 0 compiles fine but the host repeat loop never
+        // terminates — the A005 diagnostic the gate must surface
+        // pre-dispatch instead of hanging a worker.
+        let bad = vec![
+            JobRequest::timing(GemmShape::new(16, 16, 16), Mechanisms::ALL, 1),
+            JobRequest::timing(GemmShape::new(16, 16, 16), Mechanisms::ALL, 0),
+        ];
+        let err = run_sweep_cached(&cfg, bad, SweepOptions::default(), None).unwrap_err();
+        assert!(err.contains("A005-loop-bound-range"), "got: {err}");
+        assert!(err.contains("job 1"), "error names the offending job: {err}");
+        assert!(err.contains("--no-lint"), "error names the bypass: {err}");
+
+        // An uncompilable job is NOT a gate rejection: it flows through
+        // as a per-job Err outcome (DSE sweeps record those).
+        let huge = vec![JobRequest::timing(GemmShape::new(8, 300_000, 8), Mechanisms::ALL, 1)];
+        let res = run_sweep_cached(&cfg, huge, SweepOptions::default(), None).unwrap();
+        assert!(res.outcomes[0].is_err());
     }
 
     #[test]

@@ -83,6 +83,54 @@ pub fn spatial_counts(core: &GemmCoreParams, word_bytes: usize) -> ((usize, usiz
 pub const STATUS_BUSY: u32 = 1 << 0;
 pub const STATUS_PENDING: u32 = 1 << 1;
 
+/// The sixteen run-time configuration CSRs, in programming order — the
+/// complete write set one launch consumes (CTRL and STATUS are command/
+/// status, not configuration). The static verifier checks every launch
+/// window against this list.
+pub const CONFIG_CSR_ADDRS: [u32; 16] = [
+    CSR_BOUNDS,
+    CSR_A_BASE,
+    CSR_A_STRIDE_M,
+    CSR_A_STRIDE_K,
+    CSR_A_SPATIAL0,
+    CSR_A_SPATIAL1,
+    CSR_B_BASE,
+    CSR_B_STRIDE_N,
+    CSR_B_STRIDE_K,
+    CSR_B_SPATIAL0,
+    CSR_B_SPATIAL1,
+    CSR_C_BASE,
+    CSR_C_STRIDE_M,
+    CSR_C_STRIDE_N,
+    CSR_C_SPATIAL0,
+    CSR_C_SPATIAL1,
+];
+
+/// Human-readable register name for diagnostics.
+pub fn csr_name(addr: u32) -> &'static str {
+    match addr {
+        CSR_BOUNDS => "BOUNDS",
+        CSR_A_BASE => "A_BASE",
+        CSR_A_STRIDE_M => "A_STRIDE_M",
+        CSR_A_STRIDE_K => "A_STRIDE_K",
+        CSR_A_SPATIAL0 => "A_SPATIAL0",
+        CSR_A_SPATIAL1 => "A_SPATIAL1",
+        CSR_B_BASE => "B_BASE",
+        CSR_B_STRIDE_N => "B_STRIDE_N",
+        CSR_B_STRIDE_K => "B_STRIDE_K",
+        CSR_B_SPATIAL0 => "B_SPATIAL0",
+        CSR_B_SPATIAL1 => "B_SPATIAL1",
+        CSR_C_BASE => "C_BASE",
+        CSR_C_STRIDE_M => "C_STRIDE_M",
+        CSR_C_STRIDE_N => "C_STRIDE_N",
+        CSR_C_SPATIAL0 => "C_SPATIAL0",
+        CSR_C_SPATIAL1 => "C_SPATIAL1",
+        CSR_CTRL => "CTRL",
+        CSR_STATUS => "STATUS",
+        _ => "unmapped",
+    }
+}
+
 /// Pack (Mt, Nt, Kt) into the BOUNDS register (10 bits each).
 pub fn pack_bounds(b: LoopBounds) -> u32 {
     debug_assert!(b.mt <= 1024 && b.nt <= 1024 && b.kt <= 1024);

@@ -10,6 +10,7 @@
 //! See DESIGN.md for the system inventory and experiment index, and
 //! EXPERIMENTS.md for reproduced paper results.
 
+pub mod analysis;
 pub mod baseline;
 pub mod compiler;
 pub mod config;

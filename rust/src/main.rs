@@ -12,6 +12,7 @@
 //! opengemm sota                                                    # Table 3
 //! opengemm compare-gemmini [--repeats R]                           # Fig. 7
 //! opengemm sweep     [--processes P]        # sharded Fig. 5-style sweep
+//! opengemm lint      [--target SUBSTR]     # static verifier over all experiment grids
 //! opengemm serve     [--workload W]        # sustained-traffic serving harness
 //! opengemm verify    [--artifacts DIR]     # simulator vs PJRT golden model
 //! opengemm info      [--config FILE.toml]  # show an instance's parameters
@@ -79,6 +80,7 @@ use std::time::Duration;
 use opengemm::util::error::Result;
 use opengemm::{anyhow, bail};
 
+use opengemm::analysis::{self, LintReport, Severity, TargetReport};
 use opengemm::compiler::{GemmShape, Layout};
 use opengemm::config::{Mechanisms, PlatformConfig};
 use opengemm::coordinator::cache::ResultCache;
@@ -106,7 +108,9 @@ use opengemm::serve::{
 use opengemm::util::cli::Args;
 use opengemm::util::json::Json;
 use opengemm::util::rng::Pcg32;
-use opengemm::workloads::random_suite;
+use opengemm::workloads::{
+    bert_base, mobilenet_v2, mobilenet_v2_host_dw, random_suite, resnet18, vit_b16,
+};
 
 const USAGE: &str = "\
 opengemm — cycle-accurate OpenGeMM platform (ASPDAC'25 reproduction)
@@ -184,9 +188,33 @@ SUBCOMMANDS:
                     --cache-verify (with --cache: re-simulate every hit
                                     and hard-error on divergence — a
                                     determinism regression drill)
+                    --cache-gc-max-entries N  (with --cache: after each
+                                    publish, evict the oldest entries
+                                    until at most N remain; .poison
+                                    quarantine files are never
+                                    collected, only counted in the
+                                    dispatch report)
+                    --no-lint      (skip the static-verifier admission
+                                    gate; by default every compilable
+                                    job is checked pre-dispatch and an
+                                    illegal one fails the sweep loudly)
                     worker mode: --shard FILE [--out FILE] [--workers N]
                     spool executor mode: --spool-serve DIR [--workers N]
                                          [--max-shards N] [--poll-ms MS]
+  lint              static verifier: check every experiment workload's
+                    compiled schedules, CSR programs, and SPM placements
+                    against the platform invariants, without simulating
+                    (codes A001..A012; see ROADMAP.md for the catalog)
+                    --target SUBSTR  (only targets whose name contains
+                                      SUBSTR: fig5, table2, fig7, serve,
+                                      or a specific rung/model)
+                    --workloads N  --seed S  --repeats N  (fig5 grid)
+                    --bert-seq N  --max-repeats N         (table2 grid)
+                    --seqs 64,128,...  --repeat-cap R     (serve grids)
+                    --json         (opengemm-lint-report-v1 on stdout)
+                    --out FILE     (also write the JSON report to FILE)
+                    exit status: non-zero iff any error-severity
+                    diagnostic was reported
   serve             sustained-traffic serving harness; latency percentiles
                     --workload bert|bert-large|resnet18|mixed
                     --requests N   --seed S
@@ -331,16 +359,25 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Parse `--cache DIR` / `--cache-verify` into an opened result
-/// cache. `--cache-verify` without a store to verify against is a hard
-/// error — same fail-loudly policy as `--transport` and `--prefilter`.
+/// Parse `--cache DIR` / `--cache-verify` / `--cache-gc-max-entries`
+/// into an opened result cache. A cache modifier without a store to
+/// apply it to is a hard error — same fail-loudly policy as
+/// `--transport` and `--prefilter`.
 fn open_cache(args: &Args) -> Result<Option<ResultCache>> {
     let verify = args.has("cache-verify");
+    let gc_flag = args.get("cache-gc-max-entries").is_some();
+    let gc_max = if gc_flag { args.usize_or("cache-gc-max-entries", 0)? } else { 0 };
     match args.get("cache") {
         Some(dir) => Ok(Some(
-            ResultCache::persistent(Path::new(dir)).map_err(|e| anyhow!(e))?.with_verify(verify),
+            ResultCache::persistent(Path::new(dir))
+                .map_err(|e| anyhow!(e))?
+                .with_verify(verify)
+                .with_gc_max_entries(gc_max),
         )),
         None if verify => bail!("--cache-verify needs --cache DIR (no cache to verify against)"),
+        None if gc_flag => {
+            bail!("--cache-gc-max-entries needs --cache DIR (no store to collect)")
+        }
         None => Ok(None),
     }
 }
@@ -523,6 +560,15 @@ fn sweep_doc_prefiltered(
     let order = prefilter::frontier(ranked, ranked.len());
     let fraction = simulated_jobs as f64 / grid_jobs.max(1) as f64;
     let ranking: Vec<Json> = order.iter().map(|&i| Json::str(ladder[i].0)).collect();
+    // Grid points the static verifier rejected never enter the
+    // ranking; they are named here so a pruned variant is visibly
+    // *illegal*, not merely unconfirmed.
+    let rejected: Vec<Json> = ranked
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| r.statically_rejected.is_some())
+        .map(|(i, _)| Json::str(ladder[i].0))
+        .collect();
     Json::obj(vec![
         ("sweep", Json::str("fig5")),
         ("seed", Json::num(seed as f64)),
@@ -536,6 +582,7 @@ fn sweep_doc_prefiltered(
                 ("simulated_jobs", Json::num(simulated_jobs as f64)),
                 ("fraction_simulated", Json::num(fraction)),
                 ("ranking", Json::arr(ranking)),
+                ("statically_rejected", Json::arr(rejected)),
                 (
                     "top1_simulated",
                     match best {
@@ -728,6 +775,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         shards: args.usize_or("shards", default_shards)?,
         workers: args.usize_or("workers", 0)?,
         fast_forward: args.enabled_unless_no("fast-forward"),
+        lint: args.enabled_unless_no("lint"),
         ..Default::default()
     };
 
@@ -1113,6 +1161,134 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Every in-repo experiment workload as a named lint target: `(target
+/// name, platform config, job requests)`. These are the exact grids
+/// the experiment drivers dispatch — same variant configs, shapes,
+/// layouts, and repeat policies — so a clean `opengemm lint` means no
+/// in-repo run can trip the admission gate.
+fn lint_targets(
+    cfg: &PlatformConfig,
+    args: &Args,
+) -> Result<Vec<(String, PlatformConfig, Vec<JobRequest>)>> {
+    let seed = args.u64_or("seed", 2024)?;
+    let workloads = args.usize_or("workloads", 40)?;
+    let repeats = args.usize_or("repeats", 10)? as u32;
+    let mut targets: Vec<(String, PlatformConfig, Vec<JobRequest>)> = Vec::new();
+
+    // Fig. 5: every mechanism rung of the ablation ladder over the
+    // seeded random suite (the sweep/ablation grid).
+    let shapes = random_suite(seed, workloads);
+    for &(label, mech, depth) in variant_specs().iter() {
+        let requests = shapes.iter().map(|&s| JobRequest::timing(s, mech, repeats)).collect();
+        targets.push((format!("fig5:{label}"), variant_config(cfg, depth), requests));
+    }
+
+    // Table 2: the DNN model streams, folded to unique shapes with the
+    // driver's repeat clamp.
+    let bert_seq = args.usize_or("bert-seq", 512)?;
+    let max_repeats = args.usize_or("max-repeats", 10)? as u32;
+    let models = [
+        mobilenet_v2(),
+        mobilenet_v2_host_dw(),
+        resnet18(),
+        vit_b16(),
+        bert_base(bert_seq),
+    ];
+    for model in models {
+        let requests = model
+            .unique_shapes()
+            .iter()
+            .map(|&(shape, count)| {
+                JobRequest::timing(shape, Mechanisms::ALL, (count as u32).clamp(1, max_repeats))
+            })
+            .collect();
+        targets.push((format!("table2:{}", model.name), cfg.clone(), requests));
+    }
+
+    // Fig. 7: the square Gemmini-comparison sizes.
+    let fig7_requests = opengemm::experiments::fig7::SIZES
+        .iter()
+        .map(|&d| JobRequest::timing(GemmShape::new(d, d, d), Mechanisms::ALL, repeats))
+        .collect();
+    targets.push(("fig7:sizes".to_string(), cfg.clone(), fig7_requests));
+
+    // Serve: every workload's request-kind streams, at the repeat
+    // points the service model actually measures (exact count up to
+    // the default cap, else {1, cap} for extrapolation).
+    let seqs = parse_seqs(args)?;
+    let repeat_cap = args.usize_or("repeat-cap", 16)? as u64;
+    for name in ["bert", "bert-large", "resnet18", "mixed"] {
+        let spec = WorkloadSpec::from_name(name, &seqs).expect("built-in workload name");
+        let mut points = std::collections::BTreeSet::new();
+        for kind in spec.kinds() {
+            for (shape, count) in kind.stream {
+                if count <= repeat_cap {
+                    points.insert((shape.m, shape.k, shape.n, count.max(1) as u32));
+                } else {
+                    points.insert((shape.m, shape.k, shape.n, 1));
+                    points.insert((shape.m, shape.k, shape.n, repeat_cap.max(1) as u32));
+                }
+            }
+        }
+        let requests = points
+            .into_iter()
+            .map(|(m, k, n, r)| JobRequest::timing(GemmShape::new(m, k, n), Mechanisms::ALL, r))
+            .collect();
+        targets.push((format!("serve:{name}"), cfg.clone(), requests));
+    }
+    Ok(targets)
+}
+
+/// `opengemm lint`: run the static verifier over every experiment
+/// workload grid (or `--target SUBSTR` to filter), print the human
+/// table or the deterministic `opengemm-lint-report-v1` JSON, and exit
+/// non-zero iff any target carries error-severity diagnostics.
+fn cmd_lint(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let filter = args.get("target");
+    let mut target_reports = Vec::new();
+    for (name, tcfg, requests) in lint_targets(&cfg, args)? {
+        if let Some(f) = filter {
+            if !name.contains(f) {
+                continue;
+            }
+        }
+        let mut diagnostics = Vec::new();
+        for (i, request) in requests.iter().enumerate() {
+            let mut diags = analysis::verify_request(&tcfg, request);
+            let s = request.shape;
+            for d in &mut diags {
+                d.message = format!("job {i} ({}x{}x{}): {}", s.m, s.k, s.n, d.message);
+            }
+            diagnostics.extend(diags);
+        }
+        analysis::sort_diagnostics(&mut diagnostics);
+        target_reports.push(TargetReport { name, jobs: requests.len(), diagnostics });
+    }
+    if target_reports.is_empty() {
+        bail!("--target {:?} matches no lint target", filter.unwrap_or(""));
+    }
+    let report = LintReport { targets: target_reports };
+    let json = report.to_json().pretty();
+    if args.has("json") {
+        println!("{json}");
+    } else {
+        println!("{}", report.render());
+    }
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, &json)?;
+        eprintln!("wrote {out}");
+    }
+    if report.has_errors() {
+        bail!(
+            "lint: {} error-severity diagnostic(s) across {} job(s)",
+            report.count(Severity::Error),
+            report.jobs()
+        );
+    }
+    Ok(())
+}
+
 fn maybe_write(args: &Args, name: &str, content: &str) -> Result<()> {
     if let Some(dir) = args.get("out-dir") {
         std::fs::create_dir_all(dir)?;
@@ -1140,6 +1316,7 @@ fn main() {
         "sota" => cmd_sota(&args),
         "compare-gemmini" => cmd_compare_gemmini(&args),
         "sweep" => cmd_sweep(&args),
+        "lint" => cmd_lint(&args),
         "serve" => cmd_serve(&args),
         "verify" => cmd_verify(&args),
         "info" => cmd_info(&args),

@@ -17,6 +17,7 @@
 //! unfiltered sweep — pinned by `tests/model_accuracy.rs`.
 
 use super::{predict_with, Prediction};
+use crate::analysis;
 use crate::config::PlatformConfig;
 use crate::coordinator::shard::SweepResult;
 use crate::coordinator::JobRequest;
@@ -41,6 +42,9 @@ pub struct VariantPrediction {
     /// paper's Fig. 5 reports the same statistic of the simulated runs).
     pub median_overall: f64,
     pub mean_cycles: f64,
+    /// Diagnostic code from [`analysis::verify_config`] when the grid
+    /// point is statically illegal (never priced, never simulated).
+    pub statically_rejected: Option<String>,
 }
 
 impl VariantPrediction {
@@ -54,38 +58,64 @@ impl VariantPrediction {
             ("median_overall_utilization", Json::num(self.median_overall)),
             ("mean_cycles", Json::num(self.mean_cycles)),
             ("overall_utilization", Json::arr(overall)),
+            (
+                "statically_rejected",
+                match &self.statically_rejected {
+                    Some(code) => Json::str(code),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 }
 
-/// Price every job of every variant analytically, in grid order.
+/// Price every job of every variant analytically, in grid order. A
+/// variant whose platform config fails [`analysis::verify_config`] is
+/// pruned statically: it carries unschedulable sentinel predictions and
+/// the rejecting diagnostic code instead of analytical prices, so it
+/// can never rank into the frontier.
 pub fn rank(variants: &[GridVariant], csr_latency: u64) -> Vec<VariantPrediction> {
     variants
         .iter()
         .map(|v| {
+            let rejection = analysis::first_error(&analysis::verify_config(&v.cfg))
+                .map(|d| d.code.to_string());
             let predictions: Vec<Prediction> = v
                 .requests
                 .iter()
                 .map(|r| {
+                    if rejection.is_some() {
+                        return Prediction::unschedulable();
+                    }
                     predict_with(&v.cfg, r, csr_latency)
                         .unwrap_or_else(|_| Prediction::unschedulable())
                 })
                 .collect();
+            let statically_rejected = rejection;
             let mut ou: Vec<f64> = predictions.iter().map(|p| p.overall_utilization).collect();
             ou.sort_by(f64::total_cmp);
             let median_overall = percentile(&ou, 0.5);
             let n = predictions.len().max(1) as f64;
             let mean_cycles = predictions.iter().map(|p| p.cycles as f64).sum::<f64>() / n;
-            VariantPrediction { label: v.label.clone(), predictions, median_overall, mean_cycles }
+            VariantPrediction {
+                label: v.label.clone(),
+                predictions,
+                median_overall,
+                mean_cycles,
+                statically_rejected,
+            }
         })
         .collect()
 }
 
 /// Indices of the `confirm_top` best-predicted variants, best first.
 /// Ties break toward the earlier grid position, so the frontier is
-/// deterministic for identical predictions.
+/// deterministic for identical predictions. Statically rejected
+/// variants never enter the frontier (the returned set may then be
+/// smaller than `confirm_top`, or empty if the whole grid is illegal).
 pub fn frontier(ranked: &[VariantPrediction], confirm_top: usize) -> Vec<usize> {
-    let mut order: Vec<usize> = (0..ranked.len()).collect();
+    let mut order: Vec<usize> =
+        (0..ranked.len()).filter(|&i| ranked[i].statically_rejected.is_none()).collect();
     order.sort_by(|&a, &b| {
         ranked[b].median_overall.total_cmp(&ranked[a].median_overall).then(a.cmp(&b))
     });
@@ -207,6 +237,23 @@ mod tests {
         let ranked = rank(&variants, 8);
         assert_eq!(ranked[0].median_overall, ranked[1].median_overall);
         assert_eq!(frontier(&ranked, 1), vec![0]);
+    }
+
+    #[test]
+    fn statically_illegal_variants_are_pruned_not_priced() {
+        let mut variants = grid(&["good", "bad"]);
+        variants[1].cfg.mem.n_bank = 3; // not a power of two
+        let ranked = rank(&variants, 8);
+        assert_eq!(ranked[0].statically_rejected, None);
+        assert_eq!(ranked[1].statically_rejected.as_deref(), Some("A010-config-invalid"));
+        // sentinel predictions only — never priced, never in the frontier
+        assert_eq!(ranked[1].median_overall, 0.0);
+        assert_eq!(frontier(&ranked, 2), vec![0]);
+        let v = ranked[1].stats_json();
+        assert_eq!(
+            crate::util::json::get_str(&v, "statically_rejected").unwrap(),
+            "A010-config-invalid"
+        );
     }
 
     #[test]

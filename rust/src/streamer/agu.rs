@@ -181,6 +181,20 @@ impl AguConfig {
             + last(self.spatial1_count as u64) * self.spatial1_stride.max(0);
         (self.base as i64 + off) as u64
     }
+
+    /// Lowest byte address touched over the loop volume — the
+    /// negative-stride counterpart of [`Self::max_byte_addr`]. A
+    /// negative result means the walk escapes the SPM below address
+    /// zero (the static verifier's `A001-spm-oob` condition).
+    pub fn min_byte_addr(&self, bound_m: u64, bound_n: u64, bound_k: u64) -> i64 {
+        let last = |b: u64| b.saturating_sub(1) as i64;
+        self.base as i64
+            + last(bound_m) * self.stride_m.min(0)
+            + last(bound_n) * self.stride_n.min(0)
+            + last(bound_k) * self.stride_k.min(0)
+            + last(self.spatial0_count as u64) * self.spatial0_stride.min(0)
+            + last(self.spatial1_count as u64) * self.spatial1_stride.min(0)
+    }
 }
 
 #[cfg(test)]
@@ -263,6 +277,17 @@ mod tests {
         let max = agu.max_byte_addr(4, 10, 8);
         // last element: (3*8+7)*64 + 7*8 = 31*64+56 = 2040
         assert_eq!(max, 2040);
+    }
+
+    #[test]
+    fn min_addr_tracks_negative_strides() {
+        let agu = row_major_a(64);
+        // all strides non-negative: the minimum is the base
+        assert_eq!(agu.min_byte_addr(4, 10, 8), 0);
+        // a negative k stride walks below the base
+        let down = AguConfig { base: 64, stride_k: -16, ..AguConfig::linear(64, 8, 8) };
+        assert_eq!(down.min_byte_addr(1, 1, 8), 64 - 7 * 16);
+        assert_eq!(down.min_byte_addr(1, 1, 16), 64 - 15 * 16); // below zero
     }
 
     #[test]

@@ -17,6 +17,10 @@
 //!
 //! Plus the spool-resume path: a killed spool sweep's published shard
 //! results are claimed by the re-run without any executor present.
+//! And the retention policy: `--cache-gc-max-entries` bounds the
+//! persistent tier (oldest evicted on publish, byte identity intact),
+//! while `.poison` quarantine files are never collected — they are
+//! counted into `DispatchReport::cache_poison_files` instead.
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -194,6 +198,61 @@ fn verify_mode_catches_injected_divergence() {
     let (tampered, _) =
         dispatch_plan_cached(plan(2, 6), &InProcess, &serial, Some(&trusting)).unwrap();
     assert!(tampered.outcomes.iter().any(|o| o.is_err()), "tampered entry flowed through");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn gc_bounds_the_store_through_the_dispatch_api() {
+    let dir = temp_dir("gc");
+    let serial = DispatchOptions::serial();
+    let entries = |dir: &PathBuf| {
+        std::fs::read_dir(dir)
+            .unwrap()
+            .filter(|e| {
+                e.as_ref().unwrap().file_name().to_string_lossy().ends_with(".cache.json")
+            })
+            .count()
+    };
+
+    let cache = ResultCache::persistent(&dir).unwrap().with_gc_max_entries(4);
+    let (first, report) =
+        dispatch_plan_cached(plan(2, 10), &InProcess, &serial, Some(&cache)).unwrap();
+    assert_eq!(report.jobs_simulated, 10);
+    assert!(entries(&dir) <= 4, "GC must bound the store, found {}", entries(&dir));
+
+    // A bounded store is a partial cache, never a correctness hazard:
+    // the re-run simulates whatever was evicted and still merges
+    // byte-identically.
+    let warm = ResultCache::persistent(&dir).unwrap().with_gc_max_entries(4);
+    let (second, report) =
+        dispatch_plan_cached(plan(2, 10), &InProcess, &serial, Some(&warm)).unwrap();
+    assert_eq!(report.cache_hits + report.cache_misses, 10);
+    assert_eq!(second.to_json().pretty(), first.to_json().pretty());
+    assert!(entries(&dir) <= 4);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn poison_files_surface_in_the_dispatch_report() {
+    let dir = temp_dir("poison-report");
+    let serial = DispatchOptions::serial();
+    let cache = ResultCache::persistent(&dir).unwrap();
+    let (_, report) = dispatch_plan_cached(plan(1, 4), &InProcess, &serial, Some(&cache)).unwrap();
+    assert_eq!(report.cache_poison_files, 0, "a clean store reports no quarantine");
+
+    let p = plan(1, 4);
+    let key = shard_job_keys(&p.shards[0])[0].clone();
+    std::fs::write(dir.join(format!("{key}.cache.json")), "not json").unwrap();
+
+    // Even under an aggressive GC bound the quarantine file must
+    // survive collection and be counted for the operator.
+    let warm = ResultCache::persistent(&dir).unwrap().with_gc_max_entries(2);
+    let (_, report) = dispatch_plan_cached(p, &InProcess, &serial, Some(&warm)).unwrap();
+    assert_eq!(report.cache_poison_files, 1);
+    assert!(report.summary().contains("poison"), "{}", report.summary());
+    assert!(dir.join(format!("{key}.cache.json.poison")).exists());
 
     let _ = std::fs::remove_dir_all(&dir);
 }

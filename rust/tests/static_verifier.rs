@@ -1,0 +1,273 @@
+//! Static-verifier contract tests.
+//!
+//! Two halves, mirroring the mutual-oracle design of `analysis`:
+//!
+//! 1. **Property**: every schedule `compile_gemm` produces — over a
+//!    randomized shape suite x layout regimes x platform variants —
+//!    verifies with zero error-severity diagnostics. The compiler and
+//!    the verifier are independent encodings of the same platform
+//!    invariants, so a clean pass here regression-checks both at once
+//!    (the style of `tests/model_accuracy.rs`).
+//! 2. **Goldens**: hand-broken jobs (mutated placements with honestly
+//!    regenerated host programs) must yield exactly the pinned
+//!    diagnostic codes, severities, and JSON encodings. These pin the
+//!    `A00x` catalog as a stable interface for downstream tooling.
+
+use opengemm::analysis::{self, Severity};
+use opengemm::compiler::{
+    compile_gemm, gen_config_program, CompiledCall, CompiledJob, CsrImage, GemmShape, Layout,
+    Placement,
+};
+use opengemm::config::{Mechanisms, PlatformConfig};
+use opengemm::coordinator::JobRequest;
+use opengemm::csr::{
+    CSR_A_BASE, CSR_BASE, CSR_B_BASE, CSR_COUNT, CSR_C_BASE, CSR_C_SPATIAL1,
+};
+use opengemm::experiments::fig5::variant_config;
+use opengemm::host::encode as enc;
+use opengemm::host::reg;
+use opengemm::util::json::{get_str, get_u64, Json};
+use opengemm::workloads::random_suite;
+
+fn cfg() -> PlatformConfig {
+    PlatformConfig::case_study()
+}
+
+// ---------------------------------------------------------------------
+// Property: compiled schedules verify clean
+// ---------------------------------------------------------------------
+
+/// The layout regimes the experiment drivers actually dispatch (same
+/// pairs `JobRequest::timing` derives from each mechanism ladder rung).
+const REGIMES: [(Mechanisms, Layout); 6] = [
+    (Mechanisms::BASELINE, Layout::RowMajor),
+    (Mechanisms::BASELINE, Layout::TiledContiguous),
+    (Mechanisms::CPL, Layout::TiledContiguous),
+    (Mechanisms::CPL_BUF, Layout::TiledContiguous),
+    (Mechanisms::CPL_BUF, Layout::TiledInterleaved),
+    (Mechanisms::ALL, Layout::TiledInterleaved),
+];
+
+#[test]
+fn every_compiled_schedule_verifies_clean() {
+    let base = cfg();
+    // The Fig. 5 ladder's buffer depths; the verifier must not invent
+    // violations on any platform variant the sweeps run.
+    let configs: Vec<PlatformConfig> =
+        [2usize, 3, 4].iter().map(|&d| variant_config(&base, d)).collect();
+    // Seeded random suite plus deliberately irregular/edge shapes.
+    let mut shapes = random_suite(99, 24);
+    shapes.extend([
+        GemmShape::new(1, 1, 1),
+        GemmShape::new(13, 22, 17),
+        GemmShape::new(8, 512, 8),
+        GemmShape::new(65, 3, 130),
+        GemmShape::new(256, 256, 256),
+    ]);
+    let mut checked = 0usize;
+    for cfg in &configs {
+        for (si, &shape) in shapes.iter().enumerate() {
+            for &(mech, layout) in &REGIMES {
+                let repeats = 1 + (si % 3) as u32;
+                let Ok(job) = compile_gemm(cfg, shape, layout, repeats, mech.config_preloading)
+                else {
+                    continue; // unschedulable: legitimately rejected elsewhere
+                };
+                let diags = analysis::verify_job(cfg, &job);
+                assert!(
+                    !analysis::has_errors(&diags),
+                    "false positive: shape {}x{}x{} {layout:?} cpl={} d_stream={} -> {:?}",
+                    shape.m,
+                    shape.k,
+                    shape.n,
+                    mech.config_preloading,
+                    cfg.mem.d_stream,
+                    analysis::first_error(&diags)
+                );
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked > 100, "property covered only {checked} compiled jobs");
+}
+
+#[test]
+fn verify_request_matches_verify_job_on_legal_points() {
+    let cfg = cfg();
+    let req = JobRequest::timing(GemmShape::new(64, 64, 64), Mechanisms::ALL, 10);
+    let diags = analysis::verify_request(&cfg, &req);
+    assert!(!analysis::has_errors(&diags), "{diags:?}");
+}
+
+// ---------------------------------------------------------------------
+// Golden illegal jobs
+// ---------------------------------------------------------------------
+
+/// Rebuild a job with call 0's placement mutated and the host program
+/// honestly regenerated from the mutated CSR images — the broken jobs
+/// stay self-consistent, so each golden isolates ONE invariant
+/// violation instead of cascading program/schedule divergence noise.
+fn with_mutated_call(job: &CompiledJob, f: impl FnOnce(&mut Placement)) -> CompiledJob {
+    let mut calls: Vec<CompiledCall> = job.calls.iter().cloned().collect();
+    f(&mut calls[0].placement);
+    let images: Vec<CsrImage> = calls.iter().map(|c| c.placement.csr_writes.clone()).collect();
+    let program = gen_config_program(&images, job.repeats, job.cpl);
+    CompiledJob {
+        shape: job.shape,
+        layout: job.layout,
+        repeats: job.repeats,
+        cpl: job.cpl,
+        calls: calls.into(),
+        program,
+    }
+}
+
+fn set_csr(p: &mut Placement, addr: u32, value: u32) {
+    for w in &mut p.csr_writes {
+        if w.0 == addr {
+            w.1 = value;
+        }
+    }
+}
+
+fn legal_job() -> CompiledJob {
+    compile_gemm(&cfg(), GemmShape::new(64, 64, 64), Layout::TiledInterleaved, 2, true).unwrap()
+}
+
+fn error_codes(diags: &[analysis::Diagnostic]) -> Vec<&'static str> {
+    diags.iter().filter(|d| d.severity == Severity::Error).map(|d| d.code).collect()
+}
+
+#[test]
+fn golden_spm_oob_base() {
+    let cfg = cfg();
+    let cap = cfg.mem.capacity_bytes() as u32; // word-aligned: isolates A001 from A002
+    let job = with_mutated_call(&legal_job(), |p| set_csr(p, CSR_A_BASE, cap));
+    let diags = analysis::verify_job(&cfg, &job);
+    assert_eq!(error_codes(&diags), vec!["A001-spm-oob"]);
+    let d = analysis::first_error(&diags).unwrap();
+    assert_eq!(d.severity, Severity::Error);
+    assert_eq!(d.call, Some(0));
+    assert!(d.message.contains("A region"), "{}", d.message);
+    // Pin the JSON encoding downstream tooling parses.
+    let v = d.to_json();
+    assert_eq!(get_str(&v, "code").unwrap(), "A001-spm-oob");
+    assert_eq!(get_str(&v, "severity").unwrap(), "error");
+    assert_eq!(get_u64(&v, "call").unwrap(), 0);
+    assert!(!get_str(&v, "hint").unwrap().is_empty());
+    assert_eq!(analysis::Diagnostic::from_json(&v).unwrap(), *d);
+}
+
+#[test]
+fn golden_spm_misaligned_base() {
+    let cfg = cfg();
+    let job = with_mutated_call(&legal_job(), |p| set_csr(p, CSR_A_BASE, 4));
+    let diags = analysis::verify_job(&cfg, &job);
+    let d = analysis::first_error(&diags).unwrap();
+    assert_eq!(d.code, "A002-spm-misaligned");
+    assert_eq!(d.call, Some(0));
+    assert!(d.message.contains("base"), "{}", d.message);
+}
+
+#[test]
+fn golden_ab_overlap_is_exact_word_evidence() {
+    let cfg = cfg();
+    // B on top of A: the exact word walk must name a shared word.
+    let job = with_mutated_call(&legal_job(), |p| set_csr(p, CSR_B_BASE, 0));
+    let diags = analysis::verify_job(&cfg, &job);
+    assert_eq!(error_codes(&diags), vec!["A003-spm-overlap"]);
+    let d = analysis::first_error(&diags).unwrap();
+    assert!(d.message.contains("SPM word"), "{}", d.message);
+    assert_eq!(get_str(&d.to_json(), "severity").unwrap(), "error");
+}
+
+#[test]
+fn golden_missing_config_write() {
+    let cfg = cfg();
+    let job = with_mutated_call(&legal_job(), |p| {
+        p.csr_writes.retain(|&(a, _)| a != CSR_C_SPATIAL1);
+    });
+    let diags = analysis::verify_job(&cfg, &job);
+    assert_eq!(error_codes(&diags), vec!["A004-csr-incomplete-config"]);
+    let d = analysis::first_error(&diags).unwrap();
+    assert!(d.message.contains("C_SPATIAL1"), "{}", d.message);
+    assert_eq!(d.call, Some(0));
+}
+
+#[test]
+fn golden_out_of_range_loop_bound() {
+    let cfg = cfg();
+    // The schedule iterates more tiles than BOUNDS can encode. The
+    // over-long walk also blows other limits; the pinned part is that
+    // the A005 diagnostic itself is reported exactly.
+    let job = with_mutated_call(&legal_job(), |p| p.bounds.mt = 2000);
+    let diags = analysis::verify_job(&cfg, &job);
+    let d = diags
+        .iter()
+        .find(|d| d.code == "A005-loop-bound-range")
+        .expect("out-of-range bound must be diagnosed");
+    assert_eq!(d.severity, Severity::Error);
+    assert_eq!(d.call, Some(0));
+    assert!(d.message.contains("Mt = 2000"), "{}", d.message);
+    let v = d.to_json();
+    assert_eq!(get_str(&v, "code").unwrap(), "A005-loop-bound-range");
+    assert_eq!(get_str(&v, "severity").unwrap(), "error");
+}
+
+#[test]
+fn golden_unmapped_csr_access() {
+    let cfg = cfg();
+    let mut job = legal_job();
+    let outside = CSR_BASE + CSR_COUNT as u32;
+    job.program.insert(0, enc::csrrwi(reg::ZERO, outside, 1));
+    let diags = analysis::verify_job(&cfg, &job);
+    assert_eq!(error_codes(&diags), vec!["A006-csr-bad-address"]);
+    let d = analysis::first_error(&diags).unwrap();
+    assert_eq!(d.csr, Some(outside));
+}
+
+#[test]
+fn golden_wrong_poll_mask_breaks_cpl_chain() {
+    let cfg = cfg();
+    let mut job = legal_job();
+    assert!(job.cpl);
+    // Regenerate the program in blocking mode while the job still
+    // claims CPL: the polls wait on busy instead of the pre-load slot.
+    let images: Vec<CsrImage> =
+        job.calls.iter().map(|c| c.placement.csr_writes.clone()).collect();
+    job.program = gen_config_program(&images, job.repeats, false);
+    let diags = analysis::verify_job(&cfg, &job);
+    assert_eq!(error_codes(&diags), vec!["A007-cpl-chain"]);
+    let d = analysis::first_error(&diags).unwrap();
+    assert!(d.message.contains("CPL chaining requires"), "{}", d.message);
+}
+
+#[test]
+fn golden_double_buffer_hazard() {
+    let cfg = cfg();
+    // C written over the live input prefetch windows (base 0 covers
+    // both interleaved input lanes, so A and B are each diagnosed).
+    let job = with_mutated_call(&legal_job(), |p| set_csr(p, CSR_C_BASE, 0));
+    let diags = analysis::verify_job(&cfg, &job);
+    let errors = error_codes(&diags);
+    assert!(!errors.is_empty() && errors.iter().all(|c| *c == "A008-double-buffer-hazard"),
+        "{diags:?}");
+    let d = analysis::first_error(&diags).unwrap();
+    assert!(d.message.contains("input region A"), "{}", d.message);
+}
+
+#[test]
+fn golden_unschedulable_and_invalid_config() {
+    let cfg = cfg();
+    let req = JobRequest::timing(GemmShape::new(8, 300_000, 8), Mechanisms::ALL, 1);
+    let diags = analysis::verify_request(&cfg, &req);
+    assert_eq!(error_codes(&diags), vec!["A009-unschedulable"]);
+
+    let mut bad = PlatformConfig::case_study();
+    bad.mem.n_bank = 3;
+    let diags = analysis::verify_config(&bad);
+    assert_eq!(error_codes(&diags), vec!["A010-config-invalid"]);
+    let v = analysis::first_error(&diags).unwrap().to_json();
+    assert_eq!(get_str(&v, "code").unwrap(), "A010-config-invalid");
+    assert!(matches!(v.get("call"), None | Some(Json::Null)));
+}
