@@ -40,13 +40,14 @@ fn bench_end_to_end(b: &mut Bencher) {
     }
 }
 
-/// The event-scheduler memo's target workload: a configuration-bound
-/// job whose fast-forward loop calls `next_event` on every executed
-/// step with frozen streamers. Before the `sched_wake` memo each of
-/// those calls re-scanned all six streamer event sources; with it they
-/// collapse to a memo read plus the host horizon, so this workload's
-/// simulated-cycles-per-second is the memo's tracked metric.
-fn bench_next_event_memo(b: &mut Bencher) {
+/// The event heap's target workload: a configuration-bound job whose
+/// fast-forward loop asks the scheduler for the next wakeup on every
+/// executed step with frozen streamers. Sources push their wakeups at
+/// mutation points, so each query is a heap peek (popping stale
+/// entries lazily) rather than a rescan of all event sources; this
+/// workload's simulated-cycles-per-second is the heap's tracked
+/// metric.
+fn bench_event_heap(b: &mut Bencher) {
     let cfg = PlatformConfig::case_study();
     let job = compile_gemm(&cfg, GemmShape::new(8, 8, 8), Layout::RowMajor, 50, false).unwrap();
     let opts = SimOptions {
@@ -57,7 +58,7 @@ fn bench_next_event_memo(b: &mut Bencher) {
     let mut platform = Platform::new(cfg, opts);
     let mut cycles = 0u64;
     let mut steps = 0u64;
-    let r = b.bench("sched/next_event memo, config-bound ff", || {
+    let r = b.bench("sched/event heap, config-bound ff", || {
         let res = platform.run_job(&job, None, None).unwrap();
         cycles = res.metrics.total_cycles;
         steps = platform.steps_executed;
@@ -490,7 +491,7 @@ fn main() {
     let mut b = if smoke { Bencher::quick() } else { Bencher::default() };
     println!("== simulator hot-path microbenchmarks ==");
     bench_end_to_end(&mut b);
-    bench_next_event_memo(&mut b);
+    bench_event_heap(&mut b);
     bench_components(&mut b);
     println!("== functional data plane: vectorized kernel + bulk SPM I/O ==");
     let dotprod_doc = bench_dotprod_throughput(&mut b);

@@ -41,8 +41,8 @@ use crate::compiler::{compile_gemm, CompiledCall, CompiledJob};
 use crate::config::PlatformConfig;
 use crate::coordinator::JobRequest;
 use crate::csr::{
-    csr_name, unpack_bounds, CONFIG_CSR_ADDRS, CSR_BASE, CSR_BOUNDS, CSR_COUNT, CSR_CTRL,
-    CSR_STATUS, STATUS_BUSY, STATUS_PENDING,
+    core_csr_base, csr_name, unpack_bounds, CONFIG_CSR_ADDRS, CSR_BASE, CSR_BOUNDS, CSR_COUNT,
+    CSR_CTRL, CSR_STATUS, STATUS_BUSY, STATUS_PENDING,
 };
 use crate::gemm_core::MAX_LOOP_BOUND;
 use crate::streamer::{AguConfig, LoopBounds};
@@ -77,10 +77,13 @@ pub const CONFIG_INVALID: &str = "A010-config-invalid";
 pub const UNDERFILLED_PIPELINE: &str = "A011-underfilled-pipeline";
 /// The decoded program writes CSR values the schedule disagrees with.
 pub const PROGRAM_DIVERGENCE: &str = "A012-program-schedule-divergence";
+/// On a multi-core platform, a call's operand regions escape its
+/// core's SPM partition into another core's live data.
+pub const CROSS_CORE_OVERLAP: &str = "A013-cross-core-spm-overlap";
 
 /// The full diagnostic-code catalog: `(code, one-line description)`.
 /// ROADMAP.md's "Static verification" section mirrors this table.
-pub const CATALOG: [(&str, &str); 12] = [
+pub const CATALOG: [(&str, &str); 13] = [
     (SPM_OOB, "SPM access outside [0, capacity) over the call's loop volume"),
     (SPM_MISALIGNED, "AGU base or stride not a multiple of the SPM word size"),
     (SPM_OVERLAP, "A and B operand regions alias each other"),
@@ -93,6 +96,7 @@ pub const CATALOG: [(&str, &str); 12] = [
     (CONFIG_INVALID, "platform config fails elaboration-time validation"),
     (UNDERFILLED_PIPELINE, "call has fewer tiles than the prefetch pipeline is deep"),
     (PROGRAM_DIVERGENCE, "decoded program disagrees with the compiled schedule"),
+    (CROSS_CORE_OVERLAP, "call's operand regions escape its core's SPM partition"),
 ];
 
 /// Resolve a code string back to its static catalog entry.
@@ -327,6 +331,7 @@ pub fn verify_job(cfg: &PlatformConfig, job: &CompiledJob) -> Vec<Diagnostic> {
         regions.push(check_spm(cfg, ci, call, &mut diags));
     }
     check_hazards(cfg, job, &regions, &mut diags);
+    check_partitions(cfg, job, &regions, &mut diags);
     check_program(job, &mut diags);
     sort_diagnostics(&mut diags);
     diags
@@ -701,32 +706,93 @@ fn check_hazards(
 }
 
 // ---------------------------------------------------------------------
+// Pass 3b — multi-core partition confinement (A013)
+// ---------------------------------------------------------------------
+
+/// On a multi-core platform every call runs on core `ci % cores`
+/// inside that core's SPM partition, concurrently with calls on every
+/// other core. A region that escapes its partition can alias another
+/// core's *live* operands — unlike the intra-call overlaps of pass 3,
+/// there is no launch ordering to serialize the accesses, so any
+/// escape is an error.
+fn check_partitions(
+    cfg: &PlatformConfig,
+    job: &CompiledJob,
+    regions: &[CallRegions],
+    diags: &mut Vec<Diagnostic>,
+) {
+    let cores = job.cores.max(1);
+    if cores <= 1 {
+        return;
+    }
+    let partition = cfg.spm_partition_bytes() as i64;
+    for (ci, r) in regions.iter().enumerate() {
+        let core = ci % cores;
+        let (lo, hi) = (core as i64 * partition, (core as i64 + 1) * partition);
+        for region in [&r.a, &r.b, &r.c] {
+            // regions already flagged oob (lo<0 / hi>cap) still get
+            // attributed here when they cross a partition boundary —
+            // both findings are real
+            if region.lo < lo || region.hi > hi {
+                diags.push(
+                    Diagnostic::new(
+                        CROSS_CORE_OVERLAP,
+                        Severity::Error,
+                        format!(
+                            "{} region [{:#x}, {:#x}) escapes core {core}'s SPM partition \
+                             [{lo:#x}, {hi:#x}); cores run concurrently, so this aliases \
+                             another core's live data",
+                            region.name, region.lo, region.hi
+                        ),
+                        "offset the placement by core * spm_partition_bytes() \
+                         (see compiler::compile_gemm's round-robin dispatch)",
+                    )
+                    .at_call(ci),
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
 // Pass 2 — CSR program legality (decode the generated RV32I program)
 // ---------------------------------------------------------------------
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Event {
-    /// Write of a config CSR, with the value when statically known.
+    /// Write of a config CSR (absolute address, i.e. including the
+    /// core-window offset), with the value when statically known.
     Config { csr: u32, value: Option<u32> },
-    /// CTRL write with bit 0 set: an accelerator launch.
-    Launch,
+    /// CTRL write with bit 0 set: an accelerator launch. `csr` is the
+    /// absolute CTRL address, which names the launched core's window.
+    Launch { csr: u32 },
     /// STATUS read immediately masked with `andi`: a poll loop head.
-    Poll { mask: u32 },
+    /// `csr` is the absolute STATUS address (names the polled core).
+    Poll { csr: u32, mask: u32 },
     Ebreak,
 }
 
-fn csr_mapped(csr: u32) -> bool {
-    (CSR_BASE..CSR_BASE + CSR_COUNT as u32).contains(&csr)
+/// Whether `csr` falls inside any of the platform's `cores` CSR
+/// windows (window `k` spans `core_csr_base(k) .. + CSR_COUNT`; the
+/// windows are contiguous).
+fn csr_mapped(csr: u32, cores: usize) -> bool {
+    (CSR_BASE..CSR_BASE + (cores * CSR_COUNT) as u32).contains(&csr)
 }
 
-fn bad_csr(csr: u32) -> Diagnostic {
+/// The register's offset inside its core window (callers guarantee
+/// `csr_mapped`). `CSR_STATUS - CSR_BASE` names any core's STATUS.
+fn window_rel(csr: u32) -> u32 {
+    (csr - CSR_BASE) % CSR_COUNT as u32
+}
+
+fn bad_csr(csr: u32, cores: usize) -> Diagnostic {
     Diagnostic::new(
         CSR_BAD_ADDRESS,
         Severity::Error,
-        format!("program accesses CSR {csr:#x} outside the accelerator window"),
+        format!("program accesses CSR {csr:#x} outside the accelerator window(s)"),
         format!(
-            "accelerator CSRs live at {CSR_BASE:#x}..{:#x}",
-            CSR_BASE + CSR_COUNT as u32
+            "accelerator CSRs live at {CSR_BASE:#x}..{:#x} ({cores} core window(s))",
+            CSR_BASE + (cores * CSR_COUNT) as u32
         ),
     )
     .at_csr(csr)
@@ -735,14 +801,15 @@ fn bad_csr(csr: u32) -> Diagnostic {
 fn record_csr_write(
     csr: u32,
     value: Option<u32>,
+    cores: usize,
     events: &mut Vec<Event>,
     diags: &mut Vec<Diagnostic>,
 ) {
-    if !csr_mapped(csr) {
-        diags.push(bad_csr(csr));
+    if !csr_mapped(csr, cores) {
+        diags.push(bad_csr(csr, cores));
         return;
     }
-    if csr == CSR_STATUS {
+    if window_rel(csr) == CSR_STATUS - CSR_BASE {
         diags.push(
             Diagnostic::new(
                 CSR_BAD_ADDRESS,
@@ -750,13 +817,13 @@ fn record_csr_write(
                 "program writes the read-only STATUS register".to_string(),
                 "poll STATUS with csrrs; only CTRL accepts commands",
             )
-            .at_csr(CSR_STATUS),
+            .at_csr(csr),
         );
         return;
     }
-    if csr == CSR_CTRL {
+    if window_rel(csr) == CSR_CTRL - CSR_BASE {
         match value {
-            Some(v) if v & 1 == 1 => events.push(Event::Launch),
+            Some(v) if v & 1 == 1 => events.push(Event::Launch { csr }),
             Some(_) => {} // no-op control write
             None => diags.push(
                 Diagnostic::new(
@@ -767,7 +834,7 @@ fn record_csr_write(
                         .to_string(),
                     "launch with csrrwi CTRL, 1 (an immediate the verifier can follow)",
                 )
-                .at_csr(CSR_CTRL),
+                .at_csr(csr),
             ),
         }
         return;
@@ -780,11 +847,12 @@ fn record_csr_write(
 /// CSR-visible event in order, stop at `ebreak`. Branches are not
 /// followed — the generator emits one repeat body in straight-line
 /// order, which is exactly the per-repeat event sequence.
-fn decode_events(program: &[u32], diags: &mut Vec<Diagnostic>) -> Vec<Event> {
+fn decode_events(program: &[u32], cores: usize, diags: &mut Vec<Diagnostic>) -> Vec<Event> {
     let mut regs: [Option<u32>; 32] = [None; 32];
     regs[0] = Some(0);
     let mut events = Vec::new();
-    let mut pending_poll: Option<usize> = None;
+    // a STATUS read waiting for its andi: (destination reg, STATUS addr)
+    let mut pending_poll: Option<(usize, u32)> = None;
     for &w in program {
         let poll_reg = pending_poll.take();
         let opcode = w & 0x7f;
@@ -798,8 +866,10 @@ fn decode_events(program: &[u32], diags: &mut Vec<Diagnostic>) -> Vec<Event> {
                 let new = match funct3 {
                     0x0 => regs[rs1].map(|v| v.wrapping_add(imm as u32)),
                     0x7 => {
-                        if poll_reg == Some(rs1) && rd == rs1 {
-                            events.push(Event::Poll { mask: imm as u32 });
+                        if let Some((preg, csr)) = poll_reg {
+                            if preg == rs1 && rd == rs1 {
+                                events.push(Event::Poll { csr, mask: imm as u32 });
+                            }
                         }
                         regs[rs1].map(|v| v & imm as u32)
                     }
@@ -824,18 +894,18 @@ fn decode_events(program: &[u32], diags: &mut Vec<Diagnostic>) -> Vec<Event> {
                 let csr = (w >> 20) & 0xfff;
                 match funct3 {
                     // csrrw: write the rs1 value
-                    0x1 => record_csr_write(csr, regs[rs1], &mut events, diags),
+                    0x1 => record_csr_write(csr, regs[rs1], cores, &mut events, diags),
                     // csrrwi: write the 5-bit immediate
-                    0x5 => record_csr_write(csr, Some(rs1 as u32), &mut events, diags),
+                    0x5 => record_csr_write(csr, Some(rs1 as u32), cores, &mut events, diags),
                     // csrrs/csrrc: pure read when rs1 = x0, else a
                     // read-modify-write with unverifiable bits
                     0x2 | 0x3 => {
-                        if !csr_mapped(csr) {
-                            diags.push(bad_csr(csr));
+                        if !csr_mapped(csr, cores) {
+                            diags.push(bad_csr(csr, cores));
                         } else if rs1 != 0 {
-                            record_csr_write(csr, None, &mut events, diags);
-                        } else if csr == CSR_STATUS {
-                            pending_poll = Some(rd);
+                            record_csr_write(csr, None, cores, &mut events, diags);
+                        } else if window_rel(csr) == CSR_STATUS - CSR_BASE {
+                            pending_poll = Some((rd, csr));
                         }
                     }
                     _ => {}
@@ -859,12 +929,15 @@ fn decode_events(program: &[u32], diags: &mut Vec<Diagnostic>) -> Vec<Event> {
 }
 
 fn check_program(job: &CompiledJob, diags: &mut Vec<Diagnostic>) {
-    let events = decode_events(&job.program, diags);
-    let launches: Vec<usize> = events
+    let cores = job.cores.max(1);
+    let events = decode_events(&job.program, cores, diags);
+    let launches: Vec<(usize, u32)> = events
         .iter()
         .enumerate()
-        .filter(|(_, e)| matches!(e, Event::Launch))
-        .map(|(i, _)| i)
+        .filter_map(|(i, e)| match e {
+            Event::Launch { csr } => Some((i, *csr)),
+            _ => None,
+        })
         .collect();
     if launches.len() != job.calls.len() {
         diags.push(Diagnostic::new(
@@ -883,26 +956,56 @@ fn check_program(job: &CompiledJob, diags: &mut Vec<Diagnostic>) {
 
     let expected_mask = if job.cpl { STATUS_PENDING } else { STATUS_BUSY };
     let mut start = 0usize;
-    for (ci, &lpos) in launches.iter().enumerate() {
+    for (ci, &(lpos, launch_csr)) in launches.iter().enumerate() {
+        // round-robin dispatch: launch ci must pulse CTRL in core
+        // (ci % cores)'s window
+        let win = core_csr_base(ci % cores) - CSR_BASE;
+        if launch_csr != CSR_CTRL + win {
+            diags.push(
+                Diagnostic::new(
+                    PROGRAM_DIVERGENCE,
+                    Severity::Error,
+                    format!(
+                        "launch {ci} pulses CTRL at {launch_csr:#x}; the round-robin schedule \
+                         dispatches call {ci} to core {} (CTRL {:#x})",
+                        ci % cores,
+                        CSR_CTRL + win
+                    ),
+                    "regenerate the program so call i launches core i % cores",
+                )
+                .at_call(ci)
+                .at_csr(launch_csr),
+            );
+        }
         let window = &events[start..lpos];
-        check_launch_window(job, ci, window, expected_mask, diags);
+        check_launch_window(job, ci, window, expected_mask, win, diags);
         start = lpos + 1;
     }
 
-    // The tail must drain (poll until neither busy nor pending) and
-    // halt — otherwise the host returns while the accelerator runs.
+    // The tail must drain EVERY core (poll its STATUS until neither
+    // busy nor pending) and halt — otherwise the host returns while an
+    // accelerator core still runs.
     let tail = &events[start..];
-    let drained = tail
-        .iter()
-        .any(|e| matches!(e, Event::Poll { mask } if *mask == STATUS_BUSY | STATUS_PENDING));
-    if !drained {
-        diags.push(Diagnostic::new(
-            CPL_CHAIN,
-            Severity::Error,
-            "program ends without draining the accelerator (no final poll on busy|pending)"
-                .to_string(),
-            "poll STATUS for busy|pending == 0 after the last launch",
-        ));
+    for core in 0..cores {
+        let status = CSR_STATUS + (core_csr_base(core) - CSR_BASE);
+        let drained = tail.iter().any(|e| {
+            matches!(e, Event::Poll { csr, mask }
+                     if *csr == status && *mask == STATUS_BUSY | STATUS_PENDING)
+        });
+        if !drained {
+            diags.push(
+                Diagnostic::new(
+                    CPL_CHAIN,
+                    Severity::Error,
+                    format!(
+                        "program ends without draining core {core} \
+                         (no final poll on its busy|pending)"
+                    ),
+                    "poll every core's STATUS for busy|pending == 0 after the last launch",
+                )
+                .at_csr(status),
+            );
+        }
     }
     if !tail.iter().any(|e| matches!(e, Event::Ebreak)) {
         diags.push(Diagnostic::new(
@@ -919,14 +1022,18 @@ fn check_launch_window(
     ci: usize,
     window: &[Event],
     expected_mask: u32,
+    win: u32,
     diags: &mut Vec<Diagnostic>,
 ) {
-    // Chaining: every launch waits for the previous run (busy without
-    // CPL; the pre-load slot — pending — with CPL).
+    // Chaining: every launch waits for the previous run ON ITS CORE
+    // (busy without CPL; the pre-load slot — pending — with CPL).
+    // Polls of other cores' STATUS inside this window belong to their
+    // own calls and are ignored here.
+    let status = CSR_STATUS + win;
     let polls: Vec<u32> = window
         .iter()
         .filter_map(|e| match e {
-            Event::Poll { mask } => Some(*mask),
+            Event::Poll { csr, mask } if *csr == status => Some(*mask),
             _ => None,
         })
         .collect();
@@ -960,11 +1067,16 @@ fn check_launch_window(
     }
 
     // Completeness: a launch consumes the full staging bank; every
-    // config CSR must have been written since the previous launch.
+    // config CSR of THIS call's core window must have been written
+    // since the previous launch. Keys are normalized back to canonical
+    // (window-0) addresses so the placement comparison below — whose
+    // CSR image is canonical by construction — stays address-stable.
     let mut written: BTreeMap<u32, Vec<Option<u32>>> = BTreeMap::new();
     for e in window {
         if let Event::Config { csr, value } = e {
-            written.entry(*csr).or_default().push(*value);
+            if (CSR_BASE + win..CSR_BASE + win + CSR_COUNT as u32).contains(csr) {
+                written.entry(*csr - win).or_default().push(*value);
+            }
         }
     }
     let missing: Vec<&str> = CONFIG_CSR_ADDRS
@@ -1097,6 +1209,49 @@ mod tests {
         let req = JobRequest::timing(GemmShape::new(8, 300_000, 8), Mechanisms::ALL, 1);
         let diags = verify_request(&cfg(), &req);
         assert_eq!(first_error(&diags).map(|d| d.code), Some(UNSCHEDULABLE));
+    }
+
+    #[test]
+    fn multicore_jobs_verify_clean() {
+        let mut cfg2 = cfg();
+        cfg2.cores = 2;
+        for cpl in [false, true] {
+            let job = compile_gemm(&cfg2, GemmShape::new(256, 256, 256), Layout::RowMajor, 2, cpl)
+                .unwrap();
+            assert!(job.calls.len() >= 2, "needs a real round-robin split");
+            let diags = verify_job(&cfg2, &job);
+            assert!(!has_errors(&diags), "cpl={cpl}: {diags:?}");
+        }
+    }
+
+    #[test]
+    fn single_core_program_on_multicore_platform_diverges() {
+        // Compile on one core (every placement at partition 0, every
+        // CSR access in window 0), then claim the job targets 2 cores:
+        // the verifier must flag the launch targeting, the missing
+        // per-core drain, and the partition escape of core 1's calls.
+        let cfg1 = cfg();
+        let mut cfg2 = cfg();
+        cfg2.cores = 2;
+        let job1 =
+            compile_gemm(&cfg1, GemmShape::new(256, 256, 256), Layout::RowMajor, 1, true).unwrap();
+        assert!(job1.calls.len() >= 2);
+        let forged = CompiledJob { cores: 2, ..job1 };
+        let diags = verify_job(&cfg2, &forged);
+        let codes: Vec<&str> = diags.iter().map(|d| d.code).collect();
+        assert!(codes.contains(&PROGRAM_DIVERGENCE), "launch targets wrong window: {codes:?}");
+        assert!(codes.contains(&CPL_CHAIN), "core 1 never drained: {codes:?}");
+        assert!(codes.contains(&CROSS_CORE_OVERLAP), "partition escape: {codes:?}");
+    }
+
+    #[test]
+    fn cross_core_escape_names_the_call_and_partition() {
+        let mut cfg2 = cfg();
+        cfg2.cores = 2;
+        let job = compile_gemm(&cfg2, GemmShape::new(256, 256, 256), Layout::RowMajor, 1, true)
+            .unwrap();
+        // regions honoring the round-robin partitions verify clean
+        assert!(!verify_job(&cfg2, &job).iter().any(|d| d.code == CROSS_CORE_OVERLAP));
     }
 
     #[test]

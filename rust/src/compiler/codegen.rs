@@ -13,16 +13,26 @@
 //!   PENDING bit), then configures the *next* call while the current one
 //!   computes (Fig. 4(b)(1)).
 
-use crate::csr::{CSR_CTRL, CSR_STATUS, STATUS_BUSY, STATUS_PENDING};
+use crate::csr::{core_csr_base, CSR_BASE, CSR_CTRL, CSR_STATUS, STATUS_BUSY, STATUS_PENDING};
 use crate::host::encode::{self as enc, reg, Asm};
 
 /// One accelerator call = an ordered CSR programming image.
 pub type CsrImage = Vec<(u32, u32)>;
 
 /// Generate the host program for `repeats` repetitions of a sequence of
-/// accelerator calls.
+/// accelerator calls (single core).
 pub fn gen_config_program(calls: &[CsrImage], repeats: u32, cpl: bool) -> Vec<u32> {
-    assert!(!calls.is_empty() && repeats >= 1);
+    gen_multicore_program(calls, repeats, cpl, 1)
+}
+
+/// Generate the host program for a platform with `cores` GeMM cores:
+/// call `ci` is dispatched round-robin to core `ci % cores` by offsetting
+/// its poll/config/start accesses into that core's CSR window, and the
+/// final drain waits for *every* core to go idle. With `cores == 1` the
+/// emitted machine code is byte-identical to the single-core generator
+/// (window offsets are zero; labels never reach the binary).
+pub fn gen_multicore_program(calls: &[CsrImage], repeats: u32, cpl: bool, cores: usize) -> Vec<u32> {
+    assert!(!calls.is_empty() && repeats >= 1 && cores >= 1);
     let mut asm = Asm::new();
 
     // s0 = remaining repeats
@@ -30,10 +40,12 @@ pub fn gen_config_program(calls: &[CsrImage], repeats: u32, cpl: bool) -> Vec<u3
     asm.label("repeat");
 
     for (ci, csrs) in calls.iter().enumerate() {
+        // this call's core window offset
+        let win = core_csr_base(ci % cores) - CSR_BASE;
         let wait = format!("wait_{ci}");
         asm.label(&wait);
         // csrrs t1, STATUS, x0 ; andi ; bne -> wait
-        asm.emit(enc::csrrs(reg::T1, CSR_STATUS, reg::ZERO));
+        asm.emit(enc::csrrs(reg::T1, CSR_STATUS + win, reg::ZERO));
         if cpl {
             // wait only for a free pre-load slot
             asm.emit(enc::andi(reg::T1, reg::T1, STATUS_PENDING as i32));
@@ -46,10 +58,10 @@ pub fn gen_config_program(calls: &[CsrImage], repeats: u32, cpl: bool) -> Vec<u3
         // program the 16 run-time CSRs
         for &(addr, value) in csrs {
             asm.li(reg::T0, value as i32);
-            asm.emit(enc::csrrw(reg::ZERO, addr, reg::T0));
+            asm.emit(enc::csrrw(reg::ZERO, addr + win, reg::T0));
         }
         // start pulse (immediate form: one instruction)
-        asm.emit(enc::csrrwi(reg::ZERO, CSR_CTRL, 1));
+        asm.emit(enc::csrrwi(reg::ZERO, CSR_CTRL + win, 1));
     }
 
     asm.emit(enc::addi(reg::S0, reg::S0, -1));
@@ -60,11 +72,15 @@ pub fn gen_config_program(calls: &[CsrImage], repeats: u32, cpl: bool) -> Vec<u3
     asm.jal_to(reg::ZERO, "repeat");
     asm.label("done");
 
-    // final drain: wait for the accelerator to go idle
-    asm.label("drain");
-    asm.emit(enc::csrrs(reg::T1, CSR_STATUS, reg::ZERO));
-    asm.emit(enc::andi(reg::T1, reg::T1, (STATUS_BUSY | STATUS_PENDING) as i32));
-    asm.bne_to(reg::T1, reg::ZERO, "drain");
+    // final drain: wait for every core to go idle
+    for core in 0..cores {
+        let win = core_csr_base(core) - CSR_BASE;
+        let drain = format!("drain_{core}");
+        asm.label(&drain);
+        asm.emit(enc::csrrs(reg::T1, CSR_STATUS + win, reg::ZERO));
+        asm.emit(enc::andi(reg::T1, reg::T1, (STATUS_BUSY | STATUS_PENDING) as i32));
+        asm.bne_to(reg::T1, reg::ZERO, &drain);
+    }
     asm.emit(enc::ebreak());
 
     asm.assemble()
@@ -153,6 +169,38 @@ mod tests {
         let calls = vec![image(), image(), image()];
         let program = gen_config_program(&calls, 4, true);
         run_program(program, true, 12);
+    }
+
+    #[test]
+    fn single_core_wrapper_is_byte_identical() {
+        let calls = vec![image(), image(), image()];
+        for cpl in [false, true] {
+            assert_eq!(
+                gen_config_program(&calls, 4, cpl),
+                gen_multicore_program(&calls, 4, cpl, 1),
+                "cpl={cpl}"
+            );
+        }
+    }
+
+    #[test]
+    fn multicore_program_targets_core_windows() {
+        use crate::csr::{core_csr_base, CSR_BASE, CSR_COUNT};
+        let calls = vec![image(), image()];
+        let program = gen_multicore_program(&calls, 1, true, 2);
+        // every csr instruction's address must fall inside window 0 or 1
+        let mut windows_seen = [false; 2];
+        for &insn in &program {
+            if insn & 0x7f == 0x73 && (insn >> 12) & 0x7 != 0 {
+                let addr = insn >> 20;
+                let rel = addr - CSR_BASE;
+                let w = (rel as usize) / CSR_COUNT;
+                assert!(w < 2, "csr {addr:#x} outside both windows");
+                assert!(addr >= core_csr_base(w), "window math");
+                windows_seen[w] = true;
+            }
+        }
+        assert!(windows_seen[0] && windows_seen[1], "both cores programmed");
     }
 
     #[test]

@@ -98,6 +98,26 @@ impl Placement {
     pub fn footprint(&self) -> u64 {
         self.c_base + 4 * (self.padded.m * self.padded.n) as u64
     }
+
+    /// Relocate the placement `bytes` higher in the SPM (a core's
+    /// partition base on multi-core platforms). Base addresses move;
+    /// strides and bounds are translation-invariant. Only the *values*
+    /// of the three base-register writes change — the CSR addresses
+    /// stay in the canonical window; codegen adds the per-core window
+    /// offset when emitting the program.
+    pub fn offset_by(&mut self, bytes: u64) {
+        if bytes == 0 {
+            return;
+        }
+        self.a_base += bytes;
+        self.b_base += bytes;
+        self.c_base += bytes;
+        for (addr, value) in &mut self.csr_writes {
+            if *addr == CSR_A_BASE || *addr == CSR_B_BASE || *addr == CSR_C_BASE {
+                *value += bytes as u32;
+            }
+        }
+    }
 }
 
 /// Resolve a padded GeMM call to addresses and CSR values.
@@ -512,6 +532,33 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn offset_by_relocates_bases_only() {
+        let cfg = cfg();
+        let base = plan(&cfg, &GemmShape::new(64, 64, 64), Layout::TiledInterleaved);
+        let mut moved = base.clone();
+        moved.offset_by(0x8000);
+        assert_eq!(moved.a_base, base.a_base + 0x8000);
+        assert_eq!(moved.b_base, base.b_base + 0x8000);
+        assert_eq!(moved.c_base, base.c_base + 0x8000);
+        assert_eq!(moved.footprint(), base.footprint() + 0x8000);
+        for (&(a0, v0), &(a1, v1)) in base.csr_writes.iter().zip(&moved.csr_writes) {
+            assert_eq!(a0, a1, "CSR addresses stay in the canonical window");
+            if a0 == CSR_A_BASE || a0 == CSR_B_BASE || a0 == CSR_C_BASE {
+                assert_eq!(v1, v0 + 0x8000);
+            } else {
+                assert_eq!(v1, v0, "non-base register {a0:#x} changed");
+            }
+        }
+        // the AGU view shifts uniformly
+        let r0 = base.config_regs();
+        let r1 = moved.config_regs();
+        let a0 = r0.a_agu(&cfg.core, 8);
+        let a1 = r1.a_agu(&cfg.core, 8);
+        assert_eq!(a1.base, a0.base + 0x8000);
+        assert_eq!(a1.stride_m, a0.stride_m);
     }
 
     #[test]

@@ -11,7 +11,7 @@ pub mod im2col;
 pub mod layout;
 pub mod tiling;
 
-pub use codegen::{config_instruction_estimate, gen_config_program, CsrImage};
+pub use codegen::{config_instruction_estimate, gen_config_program, gen_multicore_program, CsrImage};
 pub use im2col::{im2col as im2col_transform, weights_to_b, ConvShape};
 pub use layout::{pack_a, pack_b, plan, unpack_c, Layout, Placement};
 pub use tiling::{call_footprint, split_for_capacity, GemmBlock, GemmShape, SplitError};
@@ -34,6 +34,9 @@ pub struct CompiledJob {
     pub layout: Layout,
     pub repeats: u32,
     pub cpl: bool,
+    /// GeMM cores the program dispatches over (call `i` runs on core
+    /// `i % cores`; 1 on single-core platforms).
+    pub cores: usize,
     /// Shared so the simulator can reference the call list per run
     /// without deep-copying every placement (`Arc` clone instead).
     pub calls: Arc<[CompiledCall]>,
@@ -72,16 +75,22 @@ pub fn compile_gemm(
     cpl: bool,
 ) -> Result<CompiledJob, SplitError> {
     let blocks = split_for_capacity(cfg, shape, layout)?;
+    // Round-robin dispatch: call i runs on core i % cores, inside that
+    // core's SPM partition (placements relocate; the CSR *addresses*
+    // stay canonical — codegen adds the per-core window offset).
+    let partition = cfg.spm_partition_bytes() as u64;
     let calls: Arc<[CompiledCall]> = blocks
         .into_iter()
-        .map(|block| CompiledCall {
-            placement: plan(cfg, &block.shape, layout),
-            block,
+        .enumerate()
+        .map(|(i, block)| {
+            let mut placement = plan(cfg, &block.shape, layout);
+            placement.offset_by((i % cfg.cores) as u64 * partition);
+            CompiledCall { placement, block }
         })
         .collect();
     let images: Vec<CsrImage> = calls.iter().map(|c| c.placement.csr_writes.clone()).collect();
-    let program = gen_config_program(&images, repeats, cpl);
-    Ok(CompiledJob { shape, layout, repeats, cpl, calls, program })
+    let program = gen_multicore_program(&images, repeats, cpl, cfg.cores);
+    Ok(CompiledJob { shape, layout, repeats, cpl, cores: cfg.cores, calls, program })
 }
 
 #[cfg(test)]
@@ -110,6 +119,32 @@ mod tests {
         // per-repeat ideal cycles equal the unsplit ideal (split changes
         // locality, not work)
         assert_eq!(job.ideal_cycles(&cfg), 32 * 32 * 32);
+    }
+
+    #[test]
+    fn multicore_job_partitions_calls() {
+        let mut cfg = PlatformConfig::case_study();
+        cfg.cores = 2;
+        let job = compile_gemm(&cfg, GemmShape::new(256, 256, 256), Layout::RowMajor, 1, true)
+            .unwrap();
+        assert!(job.calls.len() >= 2);
+        assert_eq!(job.cores, 2);
+        let partition = cfg.spm_partition_bytes() as u64;
+        for (i, call) in job.calls.iter().enumerate() {
+            let lo = (i % 2) as u64 * partition;
+            assert!(
+                call.placement.a_base >= lo && call.placement.footprint() <= lo + partition,
+                "call {i} escapes its partition: [{}, {})",
+                call.placement.a_base,
+                call.placement.footprint()
+            );
+        }
+        // same job on one core: identical blocks, placements at base 0
+        let mut cfg1 = cfg.clone();
+        cfg1.cores = 1;
+        let job1 = compile_gemm(&cfg1, GemmShape::new(256, 256, 256), Layout::RowMajor, 1, true)
+            .unwrap();
+        assert!(job1.calls.len() >= job.calls.len());
     }
 
     #[test]

@@ -126,7 +126,9 @@ pub fn split_for_capacity(
     layout: Layout,
 ) -> Result<Vec<GemmBlock>, SplitError> {
     let core = &cfg.core;
-    let capacity = cfg.mem.capacity_bytes() as u64;
+    // Each call must fit one core's SPM partition (the full capacity on
+    // single-core platforms).
+    let capacity = cfg.spm_partition_bytes() as u64;
     let padded = shape.padded(core);
 
     // Candidate block dims: shrink N by halving (tile-aligned), then M.

@@ -121,6 +121,39 @@ impl Mechanisms {
     }
 }
 
+/// DMA engine parameters: operands are staged from a modeled
+/// background memory into the SPM in `chunk_words`-word bursts (the
+/// MosaicSim-style chunk-unit pricing), each burst paying `latency`
+/// cycles of background-memory access on top of the SPM bank-conflict
+/// cost of the write itself.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DmaParams {
+    /// Words moved per burst (>= 1).
+    pub chunk_words: usize,
+    /// Background-memory latency per burst, in cycles.
+    pub latency: u64,
+}
+
+impl DmaParams {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("chunk_words", Json::num(self.chunk_words as f64)),
+            ("latency", Json::num(self.latency as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<DmaParams, String> {
+        Ok(DmaParams {
+            chunk_words: json::get_usize(v, "chunk_words")?,
+            latency: json::get_u64(v, "latency")?,
+        })
+    }
+}
+
+/// Upper bound on multi-core instantiation (CSR window routing and the
+/// SPM partitioner are validated up to this).
+pub const MAX_CORES: usize = 8;
+
 /// One elaborated OpenGeMM platform instance.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct PlatformConfig {
@@ -128,6 +161,11 @@ pub struct PlatformConfig {
     pub mem: MemParams,
     /// Core clock frequency in MHz (evaluation point: 200 MHz).
     pub freq_mhz: u64,
+    /// Number of GeMM cores sharing the banked SPM (each with its own
+    /// streamers and CSR window; the host dispatches calls round-robin).
+    pub cores: usize,
+    /// Optional DMA engine staging operands from background memory.
+    pub dma: Option<DmaParams>,
 }
 
 /// Configuration validation error.
@@ -216,7 +254,18 @@ impl PlatformConfig {
             core: GemmCoreParams::CASE_STUDY,
             mem: MemParams::CASE_STUDY,
             freq_mhz: 200,
+            cores: 1,
+            dma: None,
         }
+    }
+
+    /// Bytes of SPM owned by each core: the capacity split `cores` ways
+    /// and aligned down to a whole bank row (`word_bytes * n_bank`) so
+    /// every partition starts on the same bank-0 boundary. With one
+    /// core this is exactly the full capacity.
+    pub fn spm_partition_bytes(&self) -> usize {
+        let row = self.mem.word_bytes() * self.mem.n_bank;
+        (self.mem.capacity_bytes() / self.cores) / row * row
     }
 
     /// Peak throughput in GOPS (1 MAC = 2 ops), paper Sec. 4.4:
@@ -280,12 +329,22 @@ impl PlatformConfig {
                 c.ku
             ));
         }
-        // Working set of one double-buffered tile set must fit the SPM.
+        if self.cores == 0 || self.cores > MAX_CORES {
+            return err(format!("cores must be in 1..={MAX_CORES}: {}", self.cores));
+        }
+        if let Some(dma) = &self.dma {
+            if dma.chunk_words == 0 {
+                return err("dma chunk_words must be >= 1".into());
+            }
+        }
+        // Working set of one double-buffered tile set must fit each
+        // core's SPM partition (the full capacity with one core).
         let min_capacity = (c.a_tile_bytes() + c.b_tile_bytes() + c.c_tile_bytes()) * 2;
-        if m.capacity_bytes() < min_capacity {
+        if self.spm_partition_bytes() < min_capacity {
             return err(format!(
-                "SPM capacity {}B below minimum working set {}B",
-                m.capacity_bytes(),
+                "SPM partition {}B ({} cores) below minimum working set {}B",
+                self.spm_partition_bytes(),
+                self.cores,
                 min_capacity
             ));
         }
@@ -295,8 +354,13 @@ impl PlatformConfig {
     /// Wire encoding (sharded-sweep shard files): the worker process
     /// reconstructs the exact elaborated instance the driver planned
     /// with, so sharded and unsharded runs simulate identical hardware.
+    ///
+    /// `cores`/`dma` are omitted at their defaults (1 / absent) so the
+    /// encoding — and everything fingerprinted from it (result-cache
+    /// job keys, experiment JSON) — is byte-identical to the
+    /// single-core, DMA-less encoding that predates those knobs.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             (
                 "core",
                 Json::obj(vec![
@@ -322,7 +386,14 @@ impl PlatformConfig {
                 ]),
             ),
             ("freq_mhz", Json::num(self.freq_mhz as f64)),
-        ])
+        ];
+        if self.cores != 1 {
+            pairs.push(("cores", Json::num(self.cores as f64)));
+        }
+        if let Some(dma) = &self.dma {
+            pairs.push(("dma", dma.to_json()));
+        }
+        Json::obj(pairs)
     }
 
     pub fn from_json(v: &Json) -> Result<PlatformConfig, String> {
@@ -348,6 +419,14 @@ impl PlatformConfig {
                 write_latency: json::get_u64(mem, "write_latency")?,
             },
             freq_mhz: json::get_u64(v, "freq_mhz")?,
+            cores: match v.get("cores") {
+                Some(c) => c.as_usize().ok_or("field \"cores\" is not an unsigned integer")?,
+                None => 1,
+            },
+            dma: match v.get("dma") {
+                Some(d) => Some(DmaParams::from_json(d)?),
+                None => None,
+            },
         };
         cfg.validate().map_err(|e| e.to_string())?;
         Ok(cfg)
@@ -381,6 +460,17 @@ impl PlatformConfig {
         set!(cfg.mem.d_mem, "mem", "d_mem");
         if let Some(v) = lookup("platform", "freq_mhz") {
             cfg.freq_mhz = v as u64;
+        }
+        if let Some(v) = lookup("platform", "cores") {
+            cfg.cores = v as usize;
+        }
+        if let Some(chunk) = lookup("dma", "chunk_words") {
+            cfg.dma = Some(DmaParams {
+                chunk_words: chunk as usize,
+                latency: lookup("dma", "latency").unwrap_or(0) as u64,
+            });
+        } else if lookup("dma", "latency").is_some() {
+            return Err(ConfigError("[dma] latency given without chunk_words".into()));
         }
         cfg.validate()?;
         Ok(cfg)
@@ -483,6 +573,58 @@ freq_mhz = 500
         assert_eq!(cfg.core.mu, 16);
         assert_eq!(cfg.freq_mhz, 500);
         assert!((cfg.peak_gops() - 2.0 * 2048.0 * 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn default_json_omits_cores_and_dma() {
+        let cfg = PlatformConfig::case_study();
+        let text = cfg.to_json().pretty();
+        assert!(!text.contains("cores"), "cores=1 must be omitted");
+        assert!(!text.contains("dma"), "dma=None must be omitted");
+        let back = PlatformConfig::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn multicore_dma_json_round_trips() {
+        let mut cfg = PlatformConfig::case_study();
+        cfg.cores = 4;
+        cfg.dma = Some(DmaParams { chunk_words: 16, latency: 20 });
+        let text = cfg.to_json().pretty();
+        let back = PlatformConfig::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn spm_partition_splits_on_bank_rows() {
+        let mut cfg = PlatformConfig::case_study();
+        assert_eq!(cfg.spm_partition_bytes(), cfg.mem.capacity_bytes());
+        cfg.cores = 4;
+        let row = cfg.mem.word_bytes() * cfg.mem.n_bank;
+        assert_eq!(cfg.spm_partition_bytes() % row, 0);
+        assert!(cfg.spm_partition_bytes() * 4 <= cfg.mem.capacity_bytes());
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_cores_and_dma() {
+        let mut cfg = PlatformConfig::case_study();
+        cfg.cores = 0;
+        assert!(cfg.validate().is_err());
+        cfg.cores = MAX_CORES + 1;
+        assert!(cfg.validate().is_err());
+        let mut cfg = PlatformConfig::case_study();
+        cfg.dma = Some(DmaParams { chunk_words: 0, latency: 1 });
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn from_toml_cores_and_dma() {
+        let text = "[platform]\ncores = 2\n\n[dma]\nchunk_words = 8\nlatency = 12\n";
+        let cfg = PlatformConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.cores, 2);
+        assert_eq!(cfg.dma, Some(DmaParams { chunk_words: 8, latency: 12 }));
+        assert!(PlatformConfig::from_toml("[dma]\nlatency = 3\n").is_err());
     }
 
     #[test]

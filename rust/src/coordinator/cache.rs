@@ -17,6 +17,11 @@
 //!   temp-file + rename protocol as [`super::dispatch::SpoolDir`]
 //!   shards, so concurrent readers never observe a partial entry.
 //!
+//! Alongside simulated job outcomes the cache stores the DSE
+//! prefilter's **analytical predictions** (`{key}.pred.json`, keyed by
+//! [`prediction_key`] — a disjoint key space), so re-ranking an
+//! unchanged grid under `--cache DIR` re-prices nothing.
+//!
 //! Failure policy mirrors the spool executor: a corrupt, truncated or
 //! mismatched entry is quarantined to `{name}.poison` and treated as a
 //! **miss**, never an error — a damaged cache can cost re-simulation
@@ -47,11 +52,15 @@ use crate::coordinator::shard::{Shard, SweepOptions};
 use crate::coordinator::{
     outcome_from_json, outcome_to_json, CoordinatorStats, JobOutcome, JobRequest,
 };
+use crate::model::Prediction;
 use crate::util::digest::fingerprint;
 use crate::util::json::{self, Json};
 
 /// Wire-format marker of one persistent cache entry.
 const CACHE_ENTRY_FORMAT: &str = "opengemm-cache-entry-v1";
+
+/// Wire-format marker of one persistent analytical-prediction entry.
+const PRED_ENTRY_FORMAT: &str = "opengemm-pred-entry-v1";
 
 /// Cache key of one job: a digest over the canonical encoding of the
 /// elaborated platform config, the result-relevant simulation options,
@@ -70,6 +79,25 @@ pub fn job_key(
                 ("csr_latency", Json::num(csr_latency as f64)),
                 ("fast_forward", Json::Bool(fast_forward)),
             ]),
+        ),
+        ("request", request.to_json()),
+    ]);
+    fingerprint(doc.pretty().as_bytes())
+}
+
+/// Cache key of one *analytical prediction* (the DSE prefilter's
+/// per-job closed-form price). A distinct `kind` marker keeps the key
+/// space disjoint from [`job_key`]: a prediction and a simulation of
+/// the same job share inputs but not outputs, so they must never alias
+/// one cache entry. `fast_forward` is deliberately absent — the
+/// analytical model has no engine choice.
+pub fn prediction_key(cfg: &PlatformConfig, csr_latency: u64, request: &JobRequest) -> String {
+    let doc = Json::obj(vec![
+        ("kind", Json::str("analytical-prediction")),
+        ("cfg", cfg.to_json()),
+        (
+            "options",
+            Json::obj(vec![("csr_latency", Json::num(csr_latency as f64))]),
         ),
         ("request", request.to_json()),
     ]);
@@ -122,8 +150,11 @@ pub struct ResultCache {
     /// the oldest entries are evicted down to this count.
     gc_max_entries: usize,
     mem: Mutex<BTreeMap<String, JobOutcome>>,
+    pred_mem: Mutex<BTreeMap<String, Prediction>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    pred_hits: AtomicU64,
+    pred_misses: AtomicU64,
 }
 
 impl ResultCache {
@@ -134,8 +165,11 @@ impl ResultCache {
             verify: false,
             gc_max_entries: 0,
             mem: Mutex::new(BTreeMap::new()),
+            pred_mem: Mutex::new(BTreeMap::new()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            pred_hits: AtomicU64::new(0),
+            pred_misses: AtomicU64::new(0),
         }
     }
 
@@ -202,8 +236,22 @@ impl ResultCache {
         self.misses.load(Ordering::Relaxed)
     }
 
+    /// Prediction-tier lookups answered from a tier.
+    pub fn prediction_hits(&self) -> u64 {
+        self.pred_hits.load(Ordering::Relaxed)
+    }
+
+    /// Prediction-tier lookups that found nothing.
+    pub fn prediction_misses(&self) -> u64 {
+        self.pred_misses.load(Ordering::Relaxed)
+    }
+
     fn entry_path(dir: &Path, key: &str) -> PathBuf {
         dir.join(format!("{key}.cache.json"))
+    }
+
+    fn pred_entry_path(dir: &Path, key: &str) -> PathBuf {
+        dir.join(format!("{key}.pred.json"))
     }
 
     /// Fetch the outcome stored under `key`, consulting memory first,
@@ -266,6 +314,69 @@ impl ResultCache {
         }
     }
 
+    /// Fetch the analytical prediction stored under `key` (a
+    /// [`prediction_key`]), memory tier first, then `{key}.pred.json`
+    /// in the persistent directory. Same failure policy as job
+    /// outcomes: a corrupt or mismatched entry is quarantined to
+    /// `.poison` and reported as a miss, so a damaged store costs one
+    /// closed-form re-price (microseconds), never an error.
+    pub fn lookup_prediction(&self, key: &str) -> Option<Prediction> {
+        if let Some(p) = self.pred_mem.lock().unwrap().get(key) {
+            self.pred_hits.fetch_add(1, Ordering::Relaxed);
+            return Some(p.clone());
+        }
+        if let Some(dir) = &self.dir {
+            let path = Self::pred_entry_path(dir, key);
+            if let Ok(text) = std::fs::read_to_string(&path) {
+                match parse_pred_entry(key, &text) {
+                    Ok(p) => {
+                        self.pred_mem.lock().unwrap().insert(key.to_string(), p.clone());
+                        self.pred_hits.fetch_add(1, Ordering::Relaxed);
+                        return Some(p);
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "result cache: quarantining poison prediction {}: {e}",
+                            path.display()
+                        );
+                        let poison = path.with_file_name(format!("{key}.pred.json.poison"));
+                        let _ = std::fs::rename(&path, poison);
+                    }
+                }
+            }
+        }
+        self.pred_misses.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    /// Publish an analytical prediction under `key` in both tiers.
+    /// Prediction entries are a few hundred bytes and deliberately
+    /// exempt from [`Self::with_gc_max_entries`] eviction (which
+    /// bounds the simulation-result tier): evicting one saves nothing
+    /// and re-pricing a grid is exactly the work the tier exists to
+    /// skip.
+    pub fn insert_prediction(&self, key: &str, prediction: &Prediction) {
+        let first = self
+            .pred_mem
+            .lock()
+            .unwrap()
+            .insert(key.to_string(), prediction.clone())
+            .is_none();
+        if !first {
+            return;
+        }
+        if let Some(dir) = &self.dir {
+            let doc = Json::obj(vec![
+                ("format", Json::str(PRED_ENTRY_FORMAT)),
+                ("key", Json::str(key)),
+                ("prediction", prediction.to_json()),
+            ]);
+            if let Err(e) = write_atomically(&Self::pred_entry_path(dir, key), &doc.pretty()) {
+                eprintln!("result cache: could not persist prediction {key}: {e}");
+            }
+        }
+    }
+
     /// Evict the oldest persistent entries down to `gc_max_entries`,
     /// never touching the entry just published under `keep_key`. Best
     /// effort throughout: GC failures cost disk, not sweeps.
@@ -308,6 +419,21 @@ fn parse_entry(key: &str, text: &str) -> Result<JobOutcome, String> {
         return Err(format!("entry holds key {stored:?}, file name says {key:?}"));
     }
     outcome_from_json(json::get(&v, "outcome")?)
+}
+
+fn parse_pred_entry(key: &str, text: &str) -> Result<Prediction, String> {
+    let v = json::parse(text)?;
+    let format = json::get_str(&v, "format")?;
+    if format != PRED_ENTRY_FORMAT {
+        return Err(format!(
+            "not a prediction entry: format {format:?}, want {PRED_ENTRY_FORMAT:?}"
+        ));
+    }
+    let stored = json::get_str(&v, "key")?;
+    if stored != key {
+        return Err(format!("entry holds key {stored:?}, file name says {key:?}"));
+    }
+    Prediction::from_json(json::get(&v, "prediction")?)
 }
 
 #[cfg(test)]
@@ -458,6 +584,70 @@ mod tests {
         assert_eq!(cache.poison_files(), 1);
         assert!(dir.join("bad.cache.json.poison").exists());
         assert!(dir.join("fresh.cache.json").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn prediction_keys_are_disjoint_from_job_keys() {
+        let cfg = PlatformConfig::case_study();
+        let req = request(0);
+        let pk = prediction_key(&cfg, 8, &req);
+        assert_eq!(pk, prediction_key(&cfg, 8, &req), "deterministic");
+        assert_ne!(pk, job_key(&cfg, true, 8, &req), "kinds never alias");
+        assert_ne!(pk, job_key(&cfg, false, 8, &req));
+        assert_ne!(pk, prediction_key(&cfg, 16, &req), "csr latency in key");
+        assert_ne!(pk, prediction_key(&cfg, 8, &request(1)), "request in key");
+        let mut multi = cfg.clone();
+        multi.cores = 2;
+        assert_ne!(pk, prediction_key(&multi, 8, &req), "config (cores) in key");
+    }
+
+    #[test]
+    fn prediction_tier_round_trips_and_quarantines_poison() {
+        let dir = temp_dir("pred");
+        let cfg = PlatformConfig::case_study();
+        let req = request(0);
+        let p = crate::model::predict_with(&cfg, &req, 8).unwrap();
+        let key = prediction_key(&cfg, 8, &req);
+
+        let warm = ResultCache::persistent(&dir).unwrap();
+        assert!(warm.lookup_prediction(&key).is_none());
+        warm.insert_prediction(&key, &p);
+        assert_eq!(warm.lookup_prediction(&key), Some(p.clone()));
+        assert_eq!((warm.prediction_hits(), warm.prediction_misses()), (1, 1));
+        // outcome counters untouched by the prediction tier
+        assert_eq!((warm.hits(), warm.misses()), (0, 0));
+        drop(warm);
+
+        let cold = ResultCache::persistent(&dir).unwrap();
+        assert_eq!(cold.lookup_prediction(&key), Some(p), "read back from disk");
+
+        std::fs::write(dir.join("bad.pred.json"), "{ not json").unwrap();
+        assert!(cold.lookup_prediction("bad").is_none(), "poison is a miss");
+        assert!(dir.join("bad.pred.json.poison").exists());
+        assert_eq!(cold.poison_files(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_never_evicts_prediction_entries() {
+        let dir = temp_dir("gc-pred");
+        let cache = ResultCache::persistent(&dir).unwrap().with_gc_max_entries(1);
+        let p = Prediction::unschedulable();
+        cache.insert_prediction("p0", &p);
+        cache.insert_prediction("p1", &p);
+        let out: JobOutcome = Err("x".into());
+        cache.insert("o0", &out);
+        cache.insert("o1", &out);
+        assert!(dir.join("p0.pred.json").exists());
+        assert!(dir.join("p1.pred.json").exists());
+        // the outcome tier respected its budget
+        let outcomes = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".cache.json"))
+            .count();
+        assert_eq!(outcomes, 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

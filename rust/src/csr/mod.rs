@@ -68,6 +68,14 @@ pub const CSR_C_SPATIAL1: u32 = CSR_BASE + 0xf;
 pub const CSR_CTRL: u32 = CSR_BASE + 0x10;
 pub const CSR_STATUS: u32 = CSR_BASE + 0x11;
 
+/// Base CSR address of core `core_idx`'s window: the windows of a
+/// multi-core platform are stacked contiguously above `CSR_BASE`, one
+/// `CSR_COUNT`-register block per core (core 0's window is the
+/// single-core map above, so one-core platforms are unchanged).
+pub fn core_csr_base(core_idx: usize) -> u32 {
+    CSR_BASE + (core_idx * CSR_COUNT) as u32
+}
+
 /// Design-time spatial counts for each streamer's AGU, derived from the
 /// core geometry and the memory word size.
 pub fn spatial_counts(core: &GemmCoreParams, word_bytes: usize) -> ((usize, usize), (usize, usize), (usize, usize)) {
@@ -237,6 +245,9 @@ pub struct CsrManager {
     /// Configuration pre-loading enabled (design-time mechanism toggle
     /// for the ablation; always true in the shipping platform).
     pub cpl: bool,
+    /// Base address of this manager's CSR window (per-core on
+    /// multi-core platforms; [`CSR_BASE`] on core 0 / single core).
+    pub base: u32,
     staging: ConfigRegs,
     /// Latched (config, ) waiting for the current run to finish.
     pending: Option<ConfigRegs>,
@@ -250,8 +261,15 @@ pub struct CsrManager {
 
 impl CsrManager {
     pub fn new(cpl: bool) -> CsrManager {
+        CsrManager::with_base(cpl, CSR_BASE)
+    }
+
+    /// A manager whose window starts at `base` (per-core windows on
+    /// multi-core platforms; see [`core_csr_base`]).
+    pub fn with_base(cpl: bool, base: u32) -> CsrManager {
         CsrManager {
             cpl,
+            base,
             staging: ConfigRegs::default(),
             pending: None,
             start_fired: None,
@@ -262,30 +280,32 @@ impl CsrManager {
 
     /// Host-side CSR write (one cycle per accepted write).
     pub fn write(&mut self, addr: u32, value: u32) -> Result<(), CsrError> {
-        if !(CSR_BASE..CSR_BASE + CSR_COUNT as u32).contains(&addr) {
+        if !(self.base..self.base + CSR_COUNT as u32).contains(&addr) {
             return Err(CsrError::BadAddress(addr));
         }
         self.access_cycles += 1;
-        if addr == CSR_CTRL {
+        let off = addr - self.base;
+        if off == CSR_CTRL - CSR_BASE {
             if value & 1 == 0 {
                 return Ok(()); // no-op control write
             }
             return self.request_start();
         }
-        if addr == CSR_STATUS {
+        if off == CSR_STATUS - CSR_BASE {
             return Ok(()); // read-only: writes ignored
         }
-        self.staging.regs[ConfigRegs::idx(addr)] = value;
+        self.staging.regs[off as usize] = value;
         Ok(())
     }
 
     /// Host-side CSR read.
     pub fn read(&mut self, addr: u32) -> Result<u32, CsrError> {
-        if !(CSR_BASE..CSR_BASE + CSR_COUNT as u32).contains(&addr) {
+        if !(self.base..self.base + CSR_COUNT as u32).contains(&addr) {
             return Err(CsrError::BadAddress(addr));
         }
         self.access_cycles += 1;
-        if addr == CSR_STATUS {
+        let off = addr - self.base;
+        if off == CSR_STATUS - CSR_BASE {
             let mut v = 0;
             if self.busy {
                 v |= STATUS_BUSY;
@@ -295,7 +315,7 @@ impl CsrManager {
             }
             return Ok(v);
         }
-        Ok(self.staging.regs[ConfigRegs::idx(addr)])
+        Ok(self.staging.regs[off as usize])
     }
 
     fn request_start(&mut self) -> Result<(), CsrError> {
@@ -428,6 +448,23 @@ mod tests {
         let mut csr = CsrManager::new(false);
         assert!(matches!(csr.write(0x100, 0), Err(CsrError::BadAddress(_))));
         assert!(matches!(csr.read(0x7ff), Err(CsrError::BadAddress(_))));
+    }
+
+    #[test]
+    fn windowed_manager_routes_by_base() {
+        let base = core_csr_base(2);
+        assert_eq!(base, CSR_BASE + 2 * CSR_COUNT as u32);
+        let mut csr = CsrManager::with_base(true, base);
+        // core-0 addresses are outside core 2's window
+        assert!(matches!(csr.write(CSR_A_BASE, 1), Err(CsrError::BadAddress(_))));
+        csr.write(base + (CSR_A_BASE - CSR_BASE), 77).unwrap();
+        csr.write(base + (CSR_CTRL - CSR_BASE), 1).unwrap();
+        let cfg = csr.take_start().expect("start fired in window");
+        assert_eq!(cfg.regs[1], 77);
+        assert_eq!(
+            csr.read(base + (CSR_STATUS - CSR_BASE)).unwrap() & STATUS_BUSY,
+            STATUS_BUSY
+        );
     }
 
     #[test]

@@ -133,7 +133,7 @@ pub fn fig5_ablation_cached(
     let (ranked, confirmed) = match opts.prefilter_confirm_top {
         None => (None, vec![true; grid.len()]),
         Some(k) => {
-            let ranked = prefilter::rank(&grid, sweep_opts.csr_latency);
+            let ranked = prefilter::rank_cached(&grid, sweep_opts.csr_latency, cache);
             let k = prefilter::confirm_count(grid.len(), Some(k), None);
             let keep = prefilter::frontier(&ranked, k);
             let mut mask = vec![false; grid.len()];

@@ -82,7 +82,7 @@ use opengemm::{anyhow, bail};
 
 use opengemm::analysis::{self, LintReport, Severity, TargetReport};
 use opengemm::compiler::{GemmShape, Layout};
-use opengemm::config::{Mechanisms, PlatformConfig};
+use opengemm::config::{DmaParams, Mechanisms, PlatformConfig, MAX_CORES};
 use opengemm::coordinator::cache::ResultCache;
 use opengemm::coordinator::dispatch::{
     dispatch_plan_cached, spool_worker_loop, write_atomically, DispatchOptions, DispatchReport,
@@ -204,7 +204,7 @@ SUBCOMMANDS:
   lint              static verifier: check every experiment workload's
                     compiled schedules, CSR programs, and SPM placements
                     against the platform invariants, without simulating
-                    (codes A001..A012; see ROADMAP.md for the catalog)
+                    (codes A001..A013; see ROADMAP.md for the catalog)
                     --target SUBSTR  (only targets whose name contains
                                       SUBSTR: fig5, table2, fig7, serve,
                                       or a specific rung/model)
@@ -256,6 +256,15 @@ GLOBAL FLAGS:
   --no-fast-forward run the simulator in per-cycle lockstep instead of
                     the event-driven cycle-skipping engine (slow; the
                     two are verified cycle-exact against each other)
+  --cores N         GeMM cores sharing the banked SPM (1..=8, default 1;
+                    calls dispatch round-robin, each core owns an equal
+                    SPM partition). Driver-side: a sweep worker or
+                    spool executor rejects it (shards embed a platform)
+  --dma-chunk W     stage operands through the modeled background-memory
+                    DMA engine in W-word bursts (off by default; the
+                    DMA contends for SPM banks like any streamer)
+  --dma-latency L   per-burst background-memory latency in cycles
+                    (default 8; requires --dma-chunk)
 
 ENVIRONMENT:
   OPENGEMM_WORKERS  override the coordinator's auto-sized worker pool
@@ -292,13 +301,49 @@ fn layout_for(name: &str) -> Result<Layout> {
 }
 
 fn load_config(args: &Args) -> Result<PlatformConfig> {
-    match args.get("config") {
-        None => Ok(PlatformConfig::case_study()),
+    let mut cfg = match args.get("config") {
+        None => PlatformConfig::case_study(),
         Some(path) => {
             let text = std::fs::read_to_string(path)?;
-            PlatformConfig::from_toml(&text).map_err(|e| anyhow!("{e}"))
+            PlatformConfig::from_toml(&text).map_err(|e| anyhow!("{e}"))?
         }
+    };
+    apply_platform_knobs(args, &mut cfg)?;
+    Ok(cfg)
+}
+
+/// Apply the `--cores N` / `--dma-chunk W` / `--dma-latency L`
+/// platform overrides. Every subcommand loads its config through
+/// [`load_config`], so a malformed knob is a hard error on every path
+/// — same fail-loudly policy as `--transport` and `--prefilter` — and
+/// an override that breaks the instance (e.g. partitions smaller than
+/// the minimum working set) fails re-validation before any work runs.
+fn apply_platform_knobs(args: &Args, cfg: &mut PlatformConfig) -> Result<()> {
+    let mut touched = false;
+    if args.get("cores").is_some() {
+        let cores = args.usize_or("cores", 1)?;
+        if !(1..=MAX_CORES).contains(&cores) {
+            bail!("--cores must be 1..={MAX_CORES}, got {cores}");
+        }
+        cfg.cores = cores;
+        touched = true;
     }
+    if args.get("dma-latency").is_some() && args.get("dma-chunk").is_none() {
+        bail!("--dma-latency needs --dma-chunk WORDS (no DMA engine to configure)");
+    }
+    if args.get("dma-chunk").is_some() {
+        let chunk_words = args.usize_or("dma-chunk", 0)?;
+        if chunk_words == 0 {
+            bail!("--dma-chunk must be a positive word count, got 0");
+        }
+        let latency = args.u64_or("dma-latency", 8)?;
+        cfg.dma = Some(DmaParams { chunk_words, latency });
+        touched = true;
+    }
+    if touched {
+        cfg.validate().map_err(|e| anyhow!("platform overrides: {e}"))?;
+    }
+    Ok(())
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
@@ -731,11 +776,23 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     if args.has("cache-verify") && !args.has("cache") {
         bail!("--cache-verify needs --cache DIR (no cache to verify against)");
     }
+    // Platform-override knobs are driver-side: worker and spool
+    // executors take their platform from the shard file, so a --cores
+    // or DMA flag there would be silently ignored — fail loudly
+    // instead, before either early return below.
+    let platform_knobs =
+        ["cores", "dma-chunk", "dma-latency"].iter().any(|k| args.get(k).is_some());
 
     // worker mode: run one shard file and exit
     if let Some(shard_path) = args.get("shard") {
         if caching {
             bail!("--cache/--cache-verify apply to the sweep driver, not worker mode (--shard)");
+        }
+        if platform_knobs {
+            bail!(
+                "--cores/--dma-chunk/--dma-latency apply to the sweep driver, \
+                 not worker mode (--shard embeds its platform)"
+            );
         }
         return sweep_worker(args, shard_path);
     }
@@ -745,6 +802,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             bail!(
                 "--cache/--cache-verify apply to the sweep driver, \
                  not the spool executor (--spool-serve)"
+            );
+        }
+        if platform_knobs {
+            bail!(
+                "--cores/--dma-chunk/--dma-latency apply to the sweep driver, \
+                 not the spool executor (--spool-serve shards embed their platform)"
             );
         }
         return sweep_spool_serve(args, dir);
@@ -835,7 +898,17 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     // for simulation. Pruned variants still appear in the merged
     // document with their predicted stats.
     let (ranked, confirmed) = if prefilter_on {
-        let ranked = prefilter::rank(&grid, sweep_opts.csr_latency);
+        // Predictions are content-addressed in the same cache as
+        // simulated outcomes (disjoint key space), so re-ranking an
+        // unchanged grid under --cache re-prices nothing.
+        let ranked = prefilter::rank_cached(&grid, sweep_opts.csr_latency, cache.as_ref());
+        if let Some(cache) = &cache {
+            eprintln!(
+                "prefilter: prediction cache {} hit(s), {} miss(es)",
+                cache.prediction_hits(),
+                cache.prediction_misses()
+            );
+        }
         let k = prefilter::confirm_count(grid.len(), confirm_top, confirm_frac);
         let keep = prefilter::frontier(&ranked, k);
         let mut mask = vec![false; grid.len()];

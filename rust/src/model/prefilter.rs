@@ -19,6 +19,7 @@
 use super::{predict_with, Prediction};
 use crate::analysis;
 use crate::config::PlatformConfig;
+use crate::coordinator::cache::{prediction_key, ResultCache};
 use crate::coordinator::shard::SweepResult;
 use crate::coordinator::JobRequest;
 use crate::util::json::Json;
@@ -75,6 +76,22 @@ impl VariantPrediction {
 /// the rejecting diagnostic code instead of analytical prices, so it
 /// can never rank into the frontier.
 pub fn rank(variants: &[GridVariant], csr_latency: u64) -> Vec<VariantPrediction> {
+    rank_cached(variants, csr_latency, None)
+}
+
+/// [`rank`] with the content-addressed result cache in front of the
+/// pricing: each per-job prediction is keyed by
+/// [`prediction_key`]`(cfg, csr_latency, request)` and looked up before
+/// `predict_with` runs, so re-ranking an unchanged grid under
+/// `--cache DIR` re-prices nothing — the same incrementality the
+/// simulation tier already has. Statically rejected variants bypass the
+/// cache entirely: their sentinel rows were never priced, so there is
+/// nothing worth remembering.
+pub fn rank_cached(
+    variants: &[GridVariant],
+    csr_latency: u64,
+    cache: Option<&ResultCache>,
+) -> Vec<VariantPrediction> {
     variants
         .iter()
         .map(|v| {
@@ -87,8 +104,18 @@ pub fn rank(variants: &[GridVariant], csr_latency: u64) -> Vec<VariantPrediction
                     if rejection.is_some() {
                         return Prediction::unschedulable();
                     }
-                    predict_with(&v.cfg, r, csr_latency)
-                        .unwrap_or_else(|_| Prediction::unschedulable())
+                    let key = cache.map(|c| prediction_key(&v.cfg, csr_latency, r));
+                    if let (Some(c), Some(key)) = (cache, &key) {
+                        if let Some(p) = c.lookup_prediction(key) {
+                            return p;
+                        }
+                    }
+                    let p = predict_with(&v.cfg, r, csr_latency)
+                        .unwrap_or_else(|_| Prediction::unschedulable());
+                    if let (Some(c), Some(key)) = (cache, &key) {
+                        c.insert_prediction(key, &p);
+                    }
+                    p
                 })
                 .collect();
             let statically_rejected = rejection;
@@ -254,6 +281,34 @@ mod tests {
             crate::util::json::get_str(&v, "statically_rejected").unwrap(),
             "A010-config-invalid"
         );
+    }
+
+    #[test]
+    fn rank_cached_is_incremental_and_identical() {
+        let variants = grid(&["a", "b"]);
+        let cold = rank(&variants, 8);
+        let cache = ResultCache::in_memory();
+        let warm1 = rank_cached(&variants, 8, Some(&cache));
+        // 2 variants x 1 request, all unseen
+        assert_eq!((cache.prediction_hits(), cache.prediction_misses()), (0, 2));
+        let warm2 = rank_cached(&variants, 8, Some(&cache));
+        assert_eq!((cache.prediction_hits(), cache.prediction_misses()), (2, 2));
+        for warm in [&warm1, &warm2] {
+            for (u, c) in cold.iter().zip(warm.iter()) {
+                assert_eq!(u.predictions, c.predictions, "cache must not change the ranking");
+                assert_eq!(u.median_overall, c.median_overall);
+            }
+        }
+    }
+
+    #[test]
+    fn rank_cached_skips_the_cache_for_rejected_variants() {
+        let mut variants = grid(&["bad"]);
+        variants[0].cfg.mem.n_bank = 3;
+        let cache = ResultCache::in_memory();
+        let ranked = rank_cached(&variants, 8, Some(&cache));
+        assert!(ranked[0].statically_rejected.is_some());
+        assert_eq!((cache.prediction_hits(), cache.prediction_misses()), (0, 0));
     }
 
     #[test]

@@ -12,7 +12,13 @@ use crate::spm::SpmStats;
 use crate::util::json::{self, Json};
 
 /// Cycle-level counters accumulated by one simulation.
-#[derive(Debug, Default, Clone, PartialEq, Eq)]
+///
+/// Equality intentionally excludes the `ff_*` observability counters
+/// (see the manual `PartialEq` below): they describe how the engine
+/// *got* to the result, not the result, and necessarily differ between
+/// the fast-forward and lockstep engines whose bit-identity the
+/// differential tests assert.
+#[derive(Debug, Default, Clone)]
 pub struct SimMetrics {
     /// Total platform cycles from program start to full drain.
     pub total_cycles: u64,
@@ -41,7 +47,32 @@ pub struct SimMetrics {
     pub host_csr_stall: u64,
     /// SPM traffic stats snapshot.
     pub spm: SpmStats,
+    /// Fast-forward jumps taken (engine observability; wire-excluded
+    /// and equality-excluded, like the coordinator's cache counters).
+    pub ff_jumps: u64,
+    /// Cycles skipped by fast-forward jumps (wire/equality-excluded).
+    pub ff_skipped_cycles: u64,
 }
+
+impl PartialEq for SimMetrics {
+    fn eq(&self, other: &Self) -> bool {
+        // every field except ff_jumps / ff_skipped_cycles
+        self.total_cycles == other.total_cycles
+            && self.compute_cycles == other.compute_cycles
+            && self.stall_input_a == other.stall_input_a
+            && self.stall_input_b == other.stall_input_b
+            && self.stall_output == other.stall_output
+            && self.idle_cycles == other.idle_cycles
+            && self.starts == other.starts
+            && self.runs_completed == other.runs_completed
+            && self.kernel_cycles == other.kernel_cycles
+            && self.host_instret == other.host_instret
+            && self.host_csr_stall == other.host_csr_stall
+            && self.spm == other.spm
+    }
+}
+
+impl Eq for SimMetrics {}
 
 impl SimMetrics {
     pub fn stall_cycles(&self) -> u64 {
@@ -89,7 +120,9 @@ impl SimMetrics {
 
     /// Wire encoding (sharded-sweep result files): every counter is
     /// carried, so a deserialized result is indistinguishable from one
-    /// simulated in-process.
+    /// simulated in-process. The `ff_*` engine-observability counters
+    /// are excluded: they are a property of the simulating process, not
+    /// of the simulated platform.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("total_cycles", Json::num(self.total_cycles as f64)),
@@ -121,6 +154,8 @@ impl SimMetrics {
             host_instret: json::get_u64(v, "host_instret")?,
             host_csr_stall: json::get_u64(v, "host_csr_stall")?,
             spm: SpmStats::from_json(json::get(v, "spm")?)?,
+            ff_jumps: 0,
+            ff_skipped_cycles: 0,
         })
     }
 }
@@ -213,6 +248,20 @@ mod tests {
         }
         assert_eq!(bulk, lock);
         assert_eq!(bulk.stall_cycles(), 5);
+    }
+
+    #[test]
+    fn ff_counters_excluded_from_eq_and_wire() {
+        let mut a = SimMetrics { total_cycles: 10, ..Default::default() };
+        let b = a.clone();
+        a.ff_jumps = 7;
+        a.ff_skipped_cycles = 123;
+        assert_eq!(a, b, "ff counters must not affect equality");
+        let text = a.to_json().pretty();
+        assert!(!text.contains("ff_jumps") && !text.contains("ff_skipped_cycles"));
+        let back = SimMetrics::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, a);
+        assert_eq!(back.ff_jumps, 0, "wire round-trip drops engine counters");
     }
 
     #[test]

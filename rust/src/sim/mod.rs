@@ -1,8 +1,9 @@
 //! The cycle-accurate OpenGeMM platform simulator.
 //!
-//! One [`Platform`] instance wires together the RV32I host, the
-//! CSRManager, the GeMM core, the three data streamers and the
-//! multi-banked SPM, and advances them in lock-step, one clock cycle per
+//! One [`Platform`] instance wires together the RV32I host, one or more
+//! GeMM *core clusters* (GeMM core + CSRManager + three data streamers,
+//! [`PlatformConfig::cores`] of them) and the shared multi-banked SPM,
+//! and advances them in lock-step, one clock cycle per
 //! [`Platform::cycle`]. This is the evaluation vehicle standing in for
 //! the paper's Verilator RTL simulation (Sec. 4.1): every utilization
 //! number in the reproduced figures/tables comes out of this loop.
@@ -14,59 +15,71 @@
 //! together; the epoch occupies the interconnect for `max bank load`
 //! cycles (single-ported banks). Streamers hold at most one outstanding
 //! tile access each — exactly one request pipeline per streamer, as in
-//! the RTL.
+//! the RTL. On multi-core platforms every cluster's streamers contend
+//! on the same read/write crossbars: same-cycle accesses touching a
+//! bank already claimed by an earlier cluster (or by the other input
+//! streamer, as before) pay one arbitration cycle.
 //!
 //! ## DMA / data loading
 //!
-//! Operand data appears in the SPM "for free" at run start and results
-//! are collected at run completion: the paper excludes DRAM<->SPM
-//! movement from all cycle counts (Sec. 4.3 footnote), and so do we.
+//! By default operand data appears in the SPM "for free" at run start
+//! and results are collected at run completion: the paper excludes
+//! DRAM<->SPM movement from all cycle counts (Sec. 4.3 footnote). With
+//! [`crate::config::DmaParams`] configured, a modeled DMA engine
+//! instead stages each call's operand region from background memory
+//! into the SPM in `chunk_words`-word bursts before the core may start:
+//! each burst pays the background `latency` plus the SPM write cost of
+//! its words, contending for write banks like any streamer. The DMA is
+//! an ordinary event source — between bursts the engine fast-forwards
+//! over the dead time.
 //!
-//! ## Event model: cycle-skipping fast-forward
+//! ## Event model: heap-scheduled fast-forward
 //!
-//! Long stretches of simulated time are *provably inert*: the core is
+//! Long stretches of simulated time are *provably inert*: the cores are
 //! stalled or idle, every streamer is waiting on an SPM access whose
-//! completion cycle is already scheduled, and the host is sleeping off
-//! a CSR-handshake stall with a known expiry. Stepping such stretches
-//! one [`Platform::cycle`] at a time only increments counters.
+//! completion cycle is already scheduled, the DMA is sleeping off a
+//! background-memory burst, and the host is sleeping off a CSR
+//! handshake with a known expiry. Stepping such stretches one
+//! [`Platform::cycle`] at a time only increments counters.
 //!
 //! With [`SimOptions::fast_forward`] (default on), [`Platform`] runs an
-//! event-driven engine instead: `next_event` computes the earliest
-//! future cycle at which the frozen platform state can change — the
-//! minimum over
-//!
-//! - the oldest in-flight fetch completion of each input streamer
-//!   ([`InputStreamer::next_delivery`]),
-//! - the outstanding writeback completion
-//!   ([`OutputStreamer::next_delivery`]),
-//! - each streamer's bank-gate expiry, when a new access is otherwise
-//!   issuable ([`InputStreamer::next_issue`] /
-//!   [`OutputStreamer::next_issue`]),
-//! - the host's stall horizon ([`crate::host::Cpu::next_active_cycle`]),
-//!
-//! and `advance_to` jumps the clock there in one step, batch-accounting
-//! the skipped cycles into the same [`SimMetrics`] / core-stall
-//! counters the lockstep loop would have incremented. Whenever
-//! anything *can* happen next cycle (a tile-MAC would issue, a latched
-//! start is waiting, a run is completing, the host is runnable), the
-//! engine degrades to plain single-cycle stepping, so the two modes are
-//! **bit-identical** in every counter — a property enforced by the
-//! `fast_forward_is_cycle_exact` differential test in
-//! `tests/platform_properties.rs`.
+//! event-driven engine instead, built on the [`sched`] substrate: every
+//! event source (per-cluster streamer deliveries and bank-gate expiries,
+//! the DMA burst horizon, the host stall horizon) *registers* once with
+//! the [`EventHeap`] and *pushes* its next wakeup at the point it
+//! becomes known — a delivery is pushed when the fetch commits, the
+//! host horizon when the stall is charged. `next_event` then asks the
+//! heap for the earliest live wakeup instead of re-scanning sources
+//! (the previous engine's memoized scan, whose manual invalidation
+//! sites this design deletes), and `advance_to` jumps the clock there
+//! in one step, batch-accounting the skipped cycles into the same
+//! [`SimMetrics`] / core-stall counters the lockstep loop would have
+//! incremented. Whenever anything *can* happen next cycle (a tile-MAC
+//! would issue, a latched start is waiting, a run is completing, the
+//! host is runnable), the engine degrades to plain single-cycle
+//! stepping, so the two modes are **bit-identical** in every counter —
+//! a property enforced by the `fast_forward_is_cycle_exact`
+//! differential test in `tests/platform_properties.rs` across core
+//! counts and DMA configurations.
 
 pub mod metrics;
+pub mod sched;
 
 pub use metrics::{SimMetrics, UtilizationReport};
+pub use sched::{EventHeap, SourceId};
 
 use std::sync::Arc;
 
 use crate::compiler::{layout, CompiledCall, CompiledJob};
 use crate::config::{Mechanisms, PlatformConfig};
-use crate::csr::{CsrError, CsrManager};
+use crate::csr::{
+    core_csr_base, ConfigRegs, CsrError, CsrManager, CSR_A_BASE, CSR_BASE, CSR_B_BASE, CSR_C_BASE,
+    CSR_COUNT,
+};
 use crate::gemm_core::{CoreEvent, CorePending, GemmCore};
 use crate::host::{Cpu, CsrBus, StepResult};
 use crate::spm::Spm;
-use crate::streamer::{InputStreamer, OutputStreamer, TileArena};
+use crate::streamer::{InputStreamer, OutputStreamer, OutTile, TileArena};
 use crate::util::json::{self, Json};
 
 /// Simulation options.
@@ -166,62 +179,87 @@ impl std::fmt::Display for SimError {
 
 impl std::error::Error for SimError {}
 
-/// Counting CSR bus: forwards to the CsrManager and counts accelerator
-/// accesses so the platform can charge handshake latency.
+/// Counting CSR bus: routes each access to the owning cluster's
+/// CSRManager by address window and counts accelerator accesses so the
+/// platform can charge handshake latency.
 struct CountingBus<'a> {
-    csr: &'a mut CsrManager,
+    clusters: &'a mut [CoreCluster],
     accesses: u64,
+}
+
+impl CountingBus<'_> {
+    fn route(&mut self, addr: u32) -> Result<&mut CsrManager, CsrError> {
+        if addr < CSR_BASE {
+            return Err(CsrError::BadAddress(addr));
+        }
+        let k = ((addr - CSR_BASE) as usize) / CSR_COUNT;
+        match self.clusters.get_mut(k) {
+            Some(cl) => Ok(&mut cl.csr),
+            None => Err(CsrError::BadAddress(addr)),
+        }
+    }
 }
 
 impl CsrBus for CountingBus<'_> {
     fn csr_read(&mut self, addr: u32) -> Result<u32, CsrError> {
         self.accesses += 1;
-        self.csr.read(addr)
+        self.route(addr)?.read(addr)
     }
     fn csr_write(&mut self, addr: u32, value: u32) -> Result<(), CsrError> {
         self.accesses += 1;
-        self.csr.write(addr, value)
+        self.route(addr)?.write(addr, value)
     }
 }
 
-/// The platform.
-pub struct Platform {
-    pub cfg: PlatformConfig,
-    pub opts: SimOptions,
-    spm: Spm,
+/// Event-heap registrations of one cluster (see [`sched`]).
+struct ClusterSources {
+    a_deliver: SourceId,
+    b_deliver: SourceId,
+    c_deliver: SourceId,
+    a_issue: SourceId,
+    b_issue: SourceId,
+    c_issue: SourceId,
+    dma: SourceId,
+}
+
+/// An in-flight DMA staging transfer: the call's operand region,
+/// snapshotted from background memory, being burst into the SPM.
+struct DmaTransfer {
+    /// The launch configuration, held back until staging completes.
+    regs: ConfigRegs,
+    /// Modeled background-memory image of the operand region.
+    background: Vec<u64>,
+    /// First SPM word of the region.
+    start_word: u64,
+    /// Words staged so far.
+    cursor: usize,
+    /// Cycle at which the next burst (or completion) may proceed.
+    ready_at: u64,
+}
+
+/// One GeMM core with its private CSR window, streamers, and run state.
+/// Single-core platforms have exactly one; all clusters share the SPM
+/// and the host.
+struct CoreCluster {
+    idx: usize,
     core: GemmCore,
     csr: CsrManager,
     a_stream: InputStreamer,
     b_stream: InputStreamer,
     c_stream: OutputStreamer,
-    host: Option<Cpu>,
-    host_stall: u64,
-    now: u64,
     addr_a: Vec<u64>,
     addr_b: Vec<u64>,
     addr_c: Vec<u64>,
-    /// Operand-staging scratch: recycled tile buffers for the
-    /// functional data plane (see [`TileArena`]). Survives
-    /// [`Platform::reset_for_job`] so back-to-back jobs allocate
-    /// nothing.
-    arena: TileArena,
-    pub metrics: SimMetrics,
-    /// `cycle()` invocations actually executed this run — equals
-    /// `metrics.total_cycles` in lockstep mode, (much) smaller with
-    /// fast-forward. Host-effort telemetry only; not part of the
-    /// simulated-hardware metrics.
-    pub steps_executed: u64,
-    /// Memoized raw streamer wake: the unclamped minimum over the six
-    /// scheduled streamer event sources of [`Platform::next_event`]
-    /// (deliveries and gated issues; the host horizon is NOT included
-    /// — it shrinks on every `advance_to`). `None` = stale, recompute;
-    /// `Some(w)` = the min is `w` until a streamer mutates (delivery
-    /// fired, fetch/write committed, tile consumed, launch, run end).
-    /// Every mutation site resets this to `None`. Events are absolute
-    /// cycles, so the cache survives clock advances unchanged.
-    sched_wake: Option<Option<u64>>,
-    // job state
-    job: Option<JobState>,
+    addr_dma: Vec<u64>,
+    /// Which call the *next* start on this cluster corresponds to
+    /// (round-robin: idx, idx + cores, ...).
+    next_call: usize,
+    /// Which call is currently running.
+    running_call: Option<usize>,
+    run_active: bool,
+    run_start_cycle: u64,
+    dma: Option<DmaTransfer>,
+    src: ClusterSources,
 }
 
 struct JobState {
@@ -230,17 +268,11 @@ struct JobState {
     /// placement and CSR image (benches re-run the same job thousands
     /// of times).
     calls: Arc<[CompiledCall]>,
-    /// Which call the *next* start corresponds to.
-    next_call: usize,
-    /// Which call is currently running.
-    running_call: Option<usize>,
     functional_inputs: Option<FunctionalInputs>,
     /// Assembled output (row-major m x n of the parent shape).
     c_out: Option<Vec<i32>>,
     parent_n: usize,
     parent_m: usize,
-    run_active: bool,
-    run_start_cycle: u64,
 }
 
 /// Per-call operand sub-blocks for functional mode, pre-sliced once per
@@ -286,29 +318,124 @@ impl FunctionalInputs {
     }
 }
 
-impl Platform {
-    pub fn new(cfg: PlatformConfig, opts: SimOptions) -> Platform {
-        cfg.validate().expect("invalid platform config");
-        let mech = opts.mechanisms;
-        let depth = if mech.prefetch { cfg.mem.d_stream.max(2) } else { 1 };
-        let out_depth = if mech.prefetch { cfg.mem.d_stream.max(2) } else { 1 };
-        Platform {
-            spm: Spm::new(cfg.mem),
+/// Build the core clusters for a config, registering each cluster's
+/// event sources with the scheduler.
+fn build_clusters(
+    cfg: &PlatformConfig,
+    opts: &SimOptions,
+    sched: &mut EventHeap,
+) -> Vec<CoreCluster> {
+    let mech = opts.mechanisms;
+    let depth = if mech.prefetch { cfg.mem.d_stream.max(2) } else { 1 };
+    (0..cfg.cores)
+        .map(|k| CoreCluster {
+            idx: k,
             core: GemmCore::new(cfg.core, opts.functional),
-            csr: CsrManager::new(mech.config_preloading),
+            csr: CsrManager::with_base(mech.config_preloading, core_csr_base(k)),
             a_stream: InputStreamer::new(depth, mech.prefetch),
             b_stream: InputStreamer::new(depth, mech.prefetch),
-            c_stream: OutputStreamer::new(out_depth),
-            host: None,
-            host_stall: 0,
-            now: 0,
+            c_stream: OutputStreamer::new(depth),
             addr_a: Vec::with_capacity(64),
             addr_b: Vec::with_capacity(64),
             addr_c: Vec::with_capacity(64),
+            addr_dma: Vec::with_capacity(64),
+            next_call: k,
+            running_call: None,
+            run_active: false,
+            run_start_cycle: 0,
+            dma: None,
+            src: ClusterSources {
+                a_deliver: sched.register("a_deliver"),
+                b_deliver: sched.register("b_deliver"),
+                c_deliver: sched.register("c_deliver"),
+                a_issue: sched.register("a_issue"),
+                b_issue: sched.register("b_issue"),
+                c_issue: sched.register("c_issue"),
+                dma: sched.register("dma"),
+            },
+        })
+        .collect()
+}
+
+/// Refresh every streamer event source of one cluster. Called at each
+/// point a streamer's schedule can change (delivery fired, fetch/write
+/// committed, tile consumed, launch, run end); [`EventHeap::set`] is a
+/// no-op for unchanged values, so over-calling is cheap and safe —
+/// there is no memo to invalidate and no staleness to manage.
+fn push_sources(sched: &mut EventHeap, cl: &CoreCluster) {
+    let a_starved = cl.core.busy() && cl.a_stream.head().is_none();
+    let b_starved = cl.core.busy() && cl.b_stream.head().is_none();
+    sched.set(cl.src.a_deliver, cl.a_stream.next_delivery());
+    sched.set(cl.src.b_deliver, cl.b_stream.next_delivery());
+    sched.set(cl.src.c_deliver, cl.c_stream.next_delivery());
+    sched.set(cl.src.a_issue, cl.a_stream.next_issue(a_starved));
+    sched.set(cl.src.b_issue, cl.b_stream.next_issue(b_starved));
+    sched.set(cl.src.c_issue, cl.c_stream.next_issue());
+}
+
+/// Program a cluster's streamers and start its core (on a DMA platform
+/// this is deferred until staging completes).
+fn start_core(cfg: &PlatformConfig, sched: &mut EventHeap, cl: &mut CoreCluster, regs: &ConfigRegs) {
+    let word = cfg.mem.word_bytes();
+    let bounds = regs.bounds();
+    let wb = word as u64;
+    let nb = cfg.mem.n_bank;
+    cl.a_stream.configure2(regs.a_agu(&cfg.core, word), bounds, wb, nb);
+    cl.b_stream.configure2(regs.b_agu(&cfg.core, word), bounds, wb, nb);
+    cl.c_stream.configure2(regs.c_agu(&cfg.core, word), wb, nb);
+    cl.core.start(bounds).expect("loop bounds validated at compile time");
+    push_sources(sched, cl);
+}
+
+/// The platform.
+pub struct Platform {
+    pub cfg: PlatformConfig,
+    pub opts: SimOptions,
+    spm: Spm,
+    clusters: Vec<CoreCluster>,
+    host: Option<Cpu>,
+    host_stall: u64,
+    now: u64,
+    /// Operand-staging scratch: recycled tile buffers for the
+    /// functional data plane (see [`TileArena`]). Survives
+    /// [`Platform::reset_for_job`] so back-to-back jobs allocate
+    /// nothing.
+    arena: TileArena,
+    pub metrics: SimMetrics,
+    /// `cycle()` invocations actually executed this run — equals
+    /// `metrics.total_cycles` in lockstep mode, (much) smaller with
+    /// fast-forward. Host-effort telemetry only; not part of the
+    /// simulated-hardware metrics.
+    pub steps_executed: u64,
+    /// The wakeup heap (see [`sched`]). Sources push absolute cycles;
+    /// `next_event` clamps the minimum to `now + 1`.
+    sched: EventHeap,
+    /// Host stall-horizon source: armed at the absolute expiry of the
+    /// current CSR-handshake stall when it is charged, disarmed on
+    /// halt. The armed time never changes while the stall drains, so
+    /// no per-advance refresh is needed.
+    src_host: SourceId,
+    // job state
+    job: Option<JobState>,
+}
+
+impl Platform {
+    pub fn new(cfg: PlatformConfig, opts: SimOptions) -> Platform {
+        cfg.validate().expect("invalid platform config");
+        let mut sched = EventHeap::new();
+        let clusters = build_clusters(&cfg, &opts, &mut sched);
+        let src_host = sched.register("host");
+        Platform {
+            spm: Spm::new(cfg.mem),
+            clusters,
+            host: None,
+            host_stall: 0,
+            now: 0,
             arena: TileArena::new(),
             metrics: SimMetrics::default(),
             steps_executed: 0,
-            sched_wake: None,
+            sched,
+            src_host,
             cfg,
             opts,
             job: None,
@@ -323,6 +450,11 @@ impl Platform {
         a: Option<&[i8]>,
         b: Option<&[i8]>,
     ) -> Result<JobResult, SimError> {
+        assert_eq!(
+            job.cores, self.cfg.cores,
+            "job compiled for {} cores, platform has {}",
+            job.cores, self.cfg.cores
+        );
         let (m, k, n) = (job.shape.m, job.shape.k, job.shape.n);
         let functional = self.opts.functional;
         if functional {
@@ -337,14 +469,10 @@ impl Platform {
         self.reset_run_state();
         self.job = Some(JobState {
             calls: Arc::clone(&job.calls),
-            next_call: 0,
-            running_call: None,
             functional_inputs,
             c_out: functional.then(|| vec![0i32; m * n]),
             parent_m: m,
             parent_n: n,
-            run_active: false,
-            run_start_cycle: 0,
         });
         self.host = Some(Cpu::new(job.program.clone(), 1 << 16));
 
@@ -370,42 +498,35 @@ impl Platform {
 
     /// Re-arm this platform for a new job with new options — the
     /// Coordinator's per-worker reuse path. Equivalent to constructing
-    /// a fresh `Platform::new(cfg, opts)` except that the SPM storage,
-    /// the address scratch vectors, and the tile arena keep their
-    /// allocations; `run_job` rebuilds every piece of per-run state
-    /// (core, CSRs, streamers, metrics) regardless, and the layout
-    /// packers fully overwrite every SPM region a functional run reads.
+    /// a fresh `Platform::new(cfg, opts)` except that the SPM storage
+    /// and the tile arena keep their allocations; `run_job` rebuilds
+    /// every piece of per-run state (clusters, scheduler, metrics)
+    /// regardless, and the layout packers fully overwrite every SPM
+    /// region a functional run reads.
     pub fn reset_for_job(&mut self, opts: SimOptions) {
         self.opts = opts;
         self.host = None;
         self.job = None;
-        self.sched_wake = None;
     }
 
     fn reset_run_state(&mut self) {
-        let mech = self.opts.mechanisms;
-        let depth = if mech.prefetch { self.cfg.mem.d_stream.max(2) } else { 1 };
-        self.core = GemmCore::new(self.cfg.core, self.opts.functional);
-        self.csr = CsrManager::new(mech.config_preloading);
-        self.a_stream = InputStreamer::new(depth, mech.prefetch);
-        self.b_stream = InputStreamer::new(depth, mech.prefetch);
-        self.c_stream = OutputStreamer::new(depth);
+        self.sched = EventHeap::new();
+        self.clusters = build_clusters(&self.cfg, &self.opts, &mut self.sched);
+        self.src_host = self.sched.register("host");
         self.host_stall = 0;
         self.now = 0;
         self.metrics = SimMetrics::default();
         self.steps_executed = 0;
-        self.sched_wake = None;
         self.spm.reset_stats();
     }
 
     fn finished(&self) -> bool {
         let host_done = self.host.as_ref().map(|h| h.halted()).unwrap_or(true);
-        let job_quiet = self
-            .job
-            .as_ref()
-            .map(|j| !j.run_active)
-            .unwrap_or(true);
-        host_done && !self.csr.is_busy() && job_quiet
+        host_done
+            && self
+                .clusters
+                .iter()
+                .all(|cl| !cl.csr.is_busy() && !cl.run_active && cl.dma.is_none())
     }
 
     /// Advance the platform one clock cycle.
@@ -414,69 +535,90 @@ impl Platform {
         self.metrics.total_cycles += 1;
         self.steps_executed += 1;
         let now = self.now;
+        let n_clusters = self.clusters.len();
 
         // ---- 1. deliver completed memory traffic --------------------
-        // a delivery that fires consumes a scheduled event and frees a
-        // pipeline slot — the memoized streamer wake is stale
-        if self.a_stream.next_delivery().is_some_and(|t| t <= now)
-            || self.b_stream.next_delivery().is_some_and(|t| t <= now)
-        {
-            self.sched_wake = None;
-        }
-        self.a_stream.deliver_ready(now);
-        self.b_stream.deliver_ready(now);
-        if let Some(tile) = self.c_stream.deliver_ready(now) {
-            self.sched_wake = None;
-            self.commit_output_tile(tile);
+        for k in 0..n_clusters {
+            let cl = &mut self.clusters[k];
+            let fired = cl.a_stream.next_delivery().is_some_and(|t| t <= now)
+                || cl.b_stream.next_delivery().is_some_and(|t| t <= now);
+            cl.a_stream.deliver_ready(now);
+            cl.b_stream.deliver_ready(now);
+            let c_tile = cl.c_stream.deliver_ready(now);
+            let c_fired = c_tile.is_some();
+            if let Some(tile) = c_tile {
+                self.commit_output_tile(k, tile);
+            }
+            if fired || c_fired {
+                // a delivery freed a pipeline slot / queued a head:
+                // this cluster's schedule changed
+                push_sources(&mut self.sched, &self.clusters[k]);
+            }
         }
 
         // ---- 2. issue new memory requests (per-streamer pipelines) --
-        self.issue_memory(now);
+        // Same-cycle bank claims accumulate across clusters; write-side
+        // tracking is only needed when someone else (another cluster or
+        // the DMA) can contend for write banks.
+        let track_writes = n_clusters > 1 || self.cfg.dma.is_some();
+        let mut read_banks = 0u64;
+        let mut write_banks = 0u64;
+        for k in 0..n_clusters {
+            self.issue_memory(k, now, &mut read_banks, &mut write_banks, track_writes);
+        }
 
-        // ---- 3. core cycle -------------------------------------------
-        match self.core.step(
-            &mut self.a_stream,
-            &mut self.b_stream,
-            &mut self.c_stream,
-            &mut self.arena,
-        ) {
-            CoreEvent::Idle => self.metrics.idle_cycles += 1,
-            CoreEvent::Stalled(reason) => {
-                use crate::gemm_core::StallReason::*;
-                match reason {
-                    InputA => self.metrics.stall_input_a += 1,
-                    InputB => self.metrics.stall_input_b += 1,
-                    Output => self.metrics.stall_output += 1,
-                }
-            }
-            CoreEvent::Computed { finished, .. } => {
-                // a tile-MAC consumed input heads and may have queued
-                // an output tile — streamer occupancy changed
-                self.sched_wake = None;
-                self.metrics.compute_cycles += 1;
-                if finished {
-                    // run completion is gated on the output drain below
-                    if let Some(job) = self.job.as_mut() {
-                        debug_assert!(job.run_active);
+        // ---- 3. core cycles -----------------------------------------
+        for k in 0..n_clusters {
+            let Platform { clusters, arena, metrics, sched, .. } = self;
+            let cl = &mut clusters[k];
+            match cl.core.step(&mut cl.a_stream, &mut cl.b_stream, &mut cl.c_stream, arena) {
+                CoreEvent::Idle => metrics.idle_cycles += 1,
+                CoreEvent::Stalled(reason) => {
+                    use crate::gemm_core::StallReason::*;
+                    match reason {
+                        InputA => metrics.stall_input_a += 1,
+                        InputB => metrics.stall_input_b += 1,
+                        Output => metrics.stall_output += 1,
                     }
+                }
+                CoreEvent::Computed { finished, .. } => {
+                    // a tile-MAC consumed input heads and may have
+                    // queued an output tile — streamer occupancy changed
+                    metrics.compute_cycles += 1;
+                    if finished {
+                        // run completion is gated on the output drain
+                        debug_assert!(cl.run_active);
+                    }
+                    push_sources(sched, cl);
                 }
             }
         }
 
         // ---- 4. run completion --------------------------------------
-        let run_done = self
-            .job
-            .as_ref()
-            .map(|j| j.run_active && !self.core.busy() && self.c_stream.is_drained())
-            .unwrap_or(false);
-        if run_done {
-            self.finish_run();
+        for k in 0..n_clusters {
+            let cl = &self.clusters[k];
+            if cl.run_active && !cl.core.busy() && cl.c_stream.is_drained() && cl.dma.is_none() {
+                self.finish_run(k);
+            }
         }
 
-        // ---- 5. accelerator start -----------------------------------
-        if !self.core.busy() {
-            if let Some(regs) = self.csr.take_start() {
-                self.launch(regs);
+        // ---- 5. accelerator starts ----------------------------------
+        for k in 0..n_clusters {
+            let cl = &self.clusters[k];
+            if !cl.core.busy() && cl.dma.is_none() {
+                if let Some(regs) = self.clusters[k].csr.take_start() {
+                    self.launch(k, regs);
+                }
+            }
+        }
+
+        // ---- 5b. DMA staging bursts ---------------------------------
+        // After launches (a fresh transfer bursts its first chunk this
+        // very cycle) and sharing the cycle's write-bank claims: DMA
+        // bursts contend with streamer writebacks issued above.
+        if self.cfg.dma.is_some() {
+            for k in 0..n_clusters {
+                self.dma_step(k, now, &mut write_banks);
             }
         }
 
@@ -486,14 +628,18 @@ impl Platform {
             self.metrics.host_csr_stall += 1;
         } else if let Some(host) = self.host.as_mut() {
             if !host.halted() {
-                let mut bus = CountingBus { csr: &mut self.csr, accesses: 0 };
+                let mut bus = CountingBus { clusters: &mut self.clusters, accesses: 0 };
                 match host.step(&mut bus) {
                     StepResult::Ran { cycles } => {
                         let extra = bus.accesses * self.opts.csr_latency;
                         self.host_stall = (cycles - 1) + extra;
                         self.metrics.host_instret += 1;
+                        // arm the stall horizon at its absolute expiry
+                        // (constant while the stall drains)
+                        let wake = (self.host_stall > 0).then(|| now + self.host_stall + 1);
+                        self.sched.set(self.src_host, wake);
                     }
-                    StepResult::Halted => {}
+                    StepResult::Halted => self.sched.set(self.src_host, None),
                     StepResult::Fault(f) => return Err(SimError::HostFault(f)),
                 }
             }
@@ -511,32 +657,28 @@ impl Platform {
     /// — simulate it"; any later value proves every cycle before it is
     /// a pure counter increment (see [`Platform::advance_to`]).
     ///
-    /// The six streamer sources are scanned only when a streamer has
-    /// mutated since the last call (`sched_wake` memo); on the long
-    /// config-bound stretches where the platform calls this every
-    /// simulated step with frozen streamers, the scan collapses to a
-    /// memo read plus the host horizon. Takes `&mut self` only for the
-    /// memo — observable state is untouched.
+    /// Scheduled wakeups (deliveries, bank-gate expiries, DMA bursts,
+    /// the host stall horizon) come from the [`EventHeap`]: each source
+    /// pushed its time when it became known, so this is a heap peek,
+    /// not a scan. Armed times are raw absolute cycles and may be in
+    /// the past (a bank gate that expired while the streamer had
+    /// nothing to issue); the clamp to `now + 1` resolves them, since
+    /// `min(max(e_i, next)) == max(min(e_i), next)`.
     fn next_event(&mut self) -> Option<u64> {
         let next = self.now + 1;
 
         // Immediately-actionable states: the coming cycle must be
         // simulated for real.
-        if self.core.pending(&self.a_stream, &self.b_stream, &self.c_stream)
-            == CorePending::Compute
-        {
-            return Some(next);
-        }
-        if self.csr.has_fired_start() && !self.core.busy() {
-            return Some(next); // a latched start launches next cycle
-        }
-        let run_completing = self
-            .job
-            .as_ref()
-            .map(|j| j.run_active && !self.core.busy() && self.c_stream.is_drained())
-            .unwrap_or(false);
-        if run_completing {
-            return Some(next);
+        for cl in &self.clusters {
+            if cl.core.pending(&cl.a_stream, &cl.b_stream, &cl.c_stream) == CorePending::Compute {
+                return Some(next);
+            }
+            if cl.csr.has_fired_start() && !cl.core.busy() && cl.dma.is_none() {
+                return Some(next); // a latched start launches next cycle
+            }
+            if cl.run_active && !cl.core.busy() && cl.c_stream.is_drained() && cl.dma.is_none() {
+                return Some(next); // run completing
+            }
         }
         if let Some(host) = self.host.as_ref() {
             if !host.halted() && self.host_stall == 0 {
@@ -544,65 +686,30 @@ impl Platform {
             }
         }
 
-        // Otherwise the state is frozen until the earliest scheduled
-        // event: a delivery, a bank-gate expiry that unblocks an issue,
-        // or the host's stall horizon. The streamer minimum is memoized
-        // RAW (unclamped): since min(max(e_i, next)) == max(min(e_i),
-        // next), clamping the cached minimum once is identical to
-        // clamping each source, and the raw value stays valid across
-        // clock advances.
-        let streamer_wake = match self.sched_wake {
-            Some(w) => w,
-            None => {
-                let mut wake: Option<u64> = None;
-                let mut consider = |e: Option<u64>| {
-                    if let Some(e) = e {
-                        wake = Some(wake.map_or(e, |w: u64| w.min(e)));
-                    }
-                };
-                let a_starved = self.core.busy() && self.a_stream.head().is_none();
-                let b_starved = self.core.busy() && self.b_stream.head().is_none();
-                consider(self.a_stream.next_delivery());
-                consider(self.b_stream.next_delivery());
-                consider(self.c_stream.next_delivery());
-                consider(self.a_stream.next_issue(a_starved));
-                consider(self.b_stream.next_issue(b_starved));
-                consider(self.c_stream.next_issue());
-                self.sched_wake = Some(wake);
-                wake
-            }
-        };
-        // The host horizon shrinks with every advance (the stall budget
-        // drains), so it is always computed fresh.
-        let mut wake = streamer_wake.map(|e| e.max(next));
-        if let Some(host) = self.host.as_ref() {
-            if let Some(e) = host.next_active_cycle(self.now, self.host_stall) {
-                let e = e.max(next);
-                wake = Some(wake.map_or(e, |w| w.min(e)));
-            }
-        }
-        wake
+        self.sched.next_wake().map(|t| t.max(next))
     }
 
     /// Fast-forward the clock to just before event time `t`,
     /// batch-accounting the skipped cycles exactly as `t - now - 1`
     /// no-op invocations of [`Platform::cycle`] would have: total /
-    /// idle / stall counters (platform *and* core statistics) and the
-    /// host's CSR-stall budget. Must only be called with the `t`
-    /// returned by [`Platform::next_event`].
+    /// idle / stall counters (platform *and* core statistics, per
+    /// cluster) and the host's CSR-stall budget. Must only be called
+    /// with the `t` returned by [`Platform::next_event`].
     fn advance_to(&mut self, t: u64) {
         debug_assert!(t > self.now);
         let skip = t - (self.now + 1);
         if skip == 0 {
             return;
         }
-        match self.core.pending(&self.a_stream, &self.b_stream, &self.c_stream) {
-            CorePending::Idle => self.metrics.add_idle(skip),
-            CorePending::Stalled(reason) => {
-                self.metrics.add_stalls(reason, skip);
-                self.core.account_stalls(reason, skip);
+        for cl in &mut self.clusters {
+            match cl.core.pending(&cl.a_stream, &cl.b_stream, &cl.c_stream) {
+                CorePending::Idle => self.metrics.add_idle(skip),
+                CorePending::Stalled(reason) => {
+                    self.metrics.add_stalls(reason, skip);
+                    cl.core.account_stalls(reason, skip);
+                }
+                CorePending::Compute => unreachable!("fast-forward across a compute cycle"),
             }
-            CorePending::Compute => unreachable!("fast-forward across a compute cycle"),
         }
         if let Some(host) = self.host.as_ref() {
             if !host.halted() {
@@ -613,110 +720,187 @@ impl Platform {
         }
         self.now += skip;
         self.metrics.total_cycles += skip;
+        self.metrics.ff_jumps += 1;
+        self.metrics.ff_skipped_cycles += skip;
     }
 
-    /// Per-streamer memory issue. Each input streamer pipelines up to
-    /// its buffer depth of outstanding tile fetches; its banks are busy
-    /// for `max own-bank load` cycles per fetch, and a fetch issued the
-    /// same cycle as the other input streamer pays one arbitration
-    /// cycle per shared bank group (the read crossbar serializes them).
-    /// The output writer runs on the independent write-port network
-    /// (banks are 1R1W).
-    fn issue_memory(&mut self, now: u64) {
-        let word = self.cfg.mem.word_bytes() as u64;
-        let word_shift = self.spm.word_shift();
-        let n_bank = self.cfg.mem.n_bank as u32;
-        let rd_lat = self.cfg.mem.read_latency;
-        let wr_lat = self.cfg.mem.write_latency;
-        let a_starved = self.core.busy() && self.a_stream.head().is_none();
-        let b_starved = self.core.busy() && self.b_stream.head().is_none();
-        let functional = self.opts.functional;
+    /// Per-streamer memory issue for one cluster. Each input streamer
+    /// pipelines up to its buffer depth of outstanding tile fetches;
+    /// its banks are busy for `max own-bank load` cycles per fetch, and
+    /// a fetch issued the same cycle as an earlier read claim (the
+    /// other input streamer, or any streamer of an earlier cluster)
+    /// pays one arbitration cycle per shared bank group (the read
+    /// crossbar serializes them). The output writer runs on the
+    /// independent write-port network (banks are 1R1W); writebacks
+    /// contend only with other write claims (other clusters, the DMA).
+    fn issue_memory(
+        &mut self,
+        k: usize,
+        now: u64,
+        read_banks: &mut u64,
+        write_banks: &mut u64,
+        track_writes: bool,
+    ) {
+        let Platform { cfg, opts, spm, clusters, arena, sched, .. } = self;
+        let cl = &mut clusters[k];
+        let word = cfg.mem.word_bytes() as u64;
+        let word_shift = spm.word_shift();
+        let n_bank = cfg.mem.n_bank as u32;
+        let rd_lat = cfg.mem.read_latency;
+        let wr_lat = cfg.mem.write_latency;
+        let a_starved = cl.core.busy() && cl.a_stream.head().is_none();
+        let b_starved = cl.core.busy() && cl.b_stream.head().is_none();
+        let functional = opts.functional;
 
-        let a_issues = self.a_stream.wants_fetch(now, a_starved);
-        let b_issues = self.b_stream.wants_fetch(now, b_starved);
+        let a_issues = cl.a_stream.wants_fetch(now, a_starved);
+        let b_issues = cl.b_stream.wants_fetch(now, b_starved);
+        let c_issues = cl.c_stream.wants_write(now);
 
         // Timing-only fast path: the precomputed bank pattern gives the
         // access cost and bank mask without materializing addresses.
-        let mut a_banks = 0u64; // banks touched by A this cycle
         if a_issues {
-            self.sched_wake = None; // a new fetch schedules new events
-            let (cost, mask, pos, data) = match (functional, self.a_stream.pattern) {
+            let (mut cost, mask, pos, data) = match (functional, cl.a_stream.pattern) {
                 (false, Some(p)) if !p.self_conflict => {
-                    let (pos, base) = self.a_stream.begin_fetch_timing();
+                    let (pos, base) = cl.a_stream.begin_fetch_timing();
                     let base_bank = ((base as u64) >> word_shift) & (n_bank - 1) as u64;
                     let mask = p.mask_at(base_bank as u32);
-                    self.spm.note_fast_access(self.a_stream.agu.ports() as u64, 1);
+                    spm.note_fast_access(cl.a_stream.agu.ports() as u64, 1);
                     (1, mask, pos, None)
                 }
                 _ => {
-                    let pos = self.a_stream.begin_fetch(word, &mut self.addr_a);
-                    let cost = self.spm.read_cost(&self.addr_a);
+                    let pos = cl.a_stream.begin_fetch(word, &mut cl.addr_a);
+                    let cost = spm.read_cost(&cl.addr_a);
                     let mut mask = 0u64;
-                    for &w in &self.addr_a {
-                        mask |= 1u64 << self.spm.bank_of(w);
+                    for &w in &cl.addr_a {
+                        mask |= 1u64 << spm.bank_of(w);
                     }
-                    let data = functional
-                        .then(|| Self::read_tile(&self.spm, &mut self.arena, word, &self.addr_a));
+                    let data =
+                        functional.then(|| read_tile(spm, arena, word, &cl.addr_a));
                     (cost, mask, pos, data)
                 }
             };
-            a_banks = mask;
-            self.a_stream
-                .commit_fetch(pos, data, now + cost + rd_lat - 1, now + cost);
+            if *read_banks & mask != 0 {
+                // same-cycle arbitration against an earlier read claim
+                cost += 1;
+                spm.stats.conflict_cycles += 1;
+            }
+            *read_banks |= mask;
+            cl.a_stream.commit_fetch(pos, data, now + cost + rd_lat - 1, now + cost);
         }
         if b_issues {
-            self.sched_wake = None;
-            let (mut cost, mask, pos, data) = match (functional, self.b_stream.pattern) {
+            let (mut cost, mask, pos, data) = match (functional, cl.b_stream.pattern) {
                 (false, Some(p)) if !p.self_conflict => {
-                    let (pos, base) = self.b_stream.begin_fetch_timing();
+                    let (pos, base) = cl.b_stream.begin_fetch_timing();
                     let base_bank = ((base as u64) >> word_shift) & (n_bank - 1) as u64;
                     let mask = p.mask_at(base_bank as u32);
-                    self.spm.note_fast_access(self.b_stream.agu.ports() as u64, 1);
+                    spm.note_fast_access(cl.b_stream.agu.ports() as u64, 1);
                     (1u64, mask, pos, None)
                 }
                 _ => {
-                    let pos = self.b_stream.begin_fetch(word, &mut self.addr_b);
-                    let cost = self.spm.read_cost(&self.addr_b);
+                    let pos = cl.b_stream.begin_fetch(word, &mut cl.addr_b);
+                    let cost = spm.read_cost(&cl.addr_b);
                     let mut mask = 0u64;
-                    for &w in &self.addr_b {
-                        mask |= 1u64 << self.spm.bank_of(w);
+                    for &w in &cl.addr_b {
+                        mask |= 1u64 << spm.bank_of(w);
                     }
-                    let data = functional
-                        .then(|| Self::read_tile(&self.spm, &mut self.arena, word, &self.addr_b));
+                    let data =
+                        functional.then(|| read_tile(spm, arena, word, &cl.addr_b));
                     (cost, mask, pos, data)
                 }
             };
-            if a_issues && a_banks & mask != 0 {
-                // same-cycle arbitration against A on shared banks
+            if *read_banks & mask != 0 {
                 cost += 1;
-                self.spm.stats.conflict_cycles += 1;
+                spm.stats.conflict_cycles += 1;
             }
-            self.b_stream
-                .commit_fetch(pos, data, now + cost + rd_lat - 1, now + cost);
+            *read_banks |= mask;
+            cl.b_stream.commit_fetch(pos, data, now + cost + rd_lat - 1, now + cost);
         }
-        if self.c_stream.wants_write(now) {
-            self.sched_wake = None;
-            match (functional, self.c_stream.pattern) {
+        if c_issues {
+            match (functional, cl.c_stream.pattern) {
                 (false, Some(p)) if !p.self_conflict => {
-                    let (tile, _base) = self.c_stream.begin_write_timing();
-                    self.spm.note_fast_access(self.c_stream.agu.ports() as u64, 1);
-                    self.c_stream.commit_write(tile, now + wr_lat, now + 1);
+                    let (tile, base) = cl.c_stream.begin_write_timing();
+                    spm.note_fast_access(cl.c_stream.agu.ports() as u64, 1);
+                    let mut cost = 1u64;
+                    if track_writes {
+                        let base_bank = ((base as u64) >> word_shift) & (n_bank - 1) as u64;
+                        let mask = p.mask_at(base_bank as u32);
+                        if *write_banks & mask != 0 {
+                            cost += 1;
+                            spm.stats.conflict_cycles += 1;
+                        }
+                        *write_banks |= mask;
+                    }
+                    cl.c_stream.commit_write(tile, now + cost + wr_lat - 1, now + cost);
                 }
                 _ => {
-                    let tile = self.c_stream.begin_write(word, &mut self.addr_c);
-                    let cost = self.spm.write_cost(&self.addr_c);
-                    self.c_stream.commit_write(tile, now + cost + wr_lat - 1, now + cost);
+                    let tile = cl.c_stream.begin_write(word, &mut cl.addr_c);
+                    let mut cost = spm.write_cost(&cl.addr_c);
+                    if track_writes {
+                        let mut mask = 0u64;
+                        for &w in &cl.addr_c {
+                            mask |= 1u64 << spm.bank_of(w);
+                        }
+                        if *write_banks & mask != 0 {
+                            cost += 1;
+                            spm.stats.conflict_cycles += 1;
+                        }
+                        *write_banks |= mask;
+                    }
+                    cl.c_stream.commit_write(tile, now + cost + wr_lat - 1, now + cost);
                 }
             }
+        }
+        if a_issues || b_issues || c_issues {
+            // new fetches/writes scheduled new deliveries and bank gates
+            push_sources(sched, cl);
+        }
+    }
+
+    /// One DMA engine step for a cluster: burst the next chunk of the
+    /// staged operand region into the SPM, or — once the region is
+    /// fully staged and the last burst has drained — start the core
+    /// with the held-back launch configuration.
+    fn dma_step(&mut self, k: usize, now: u64, write_banks: &mut u64) {
+        let Platform { cfg, spm, clusters, sched, .. } = self;
+        let cl = &mut clusters[k];
+        let Some(t) = cl.dma.as_mut() else { return };
+        if now < t.ready_at {
+            return;
+        }
+        if t.cursor < t.background.len() {
+            let dma = cfg.dma.expect("transfer without DMA config");
+            let chunk = dma.chunk_words.min(t.background.len() - t.cursor);
+            let base = t.start_word + t.cursor as u64;
+            cl.addr_dma.clear();
+            cl.addr_dma.extend((0..chunk as u64).map(|i| base + i));
+            let mut cost = spm.write_cost(&cl.addr_dma);
+            let mut mask = 0u64;
+            for &w in &cl.addr_dma {
+                mask |= 1u64 << spm.bank_of(w);
+            }
+            if *write_banks & mask != 0 {
+                // contends with this cycle's streamer writebacks
+                cost += 1;
+                spm.stats.conflict_cycles += 1;
+            }
+            *write_banks |= mask;
+            spm.write_words(base, &t.background[t.cursor..t.cursor + chunk]);
+            t.cursor += chunk;
+            t.ready_at = now + dma.latency + cost;
+            sched.set(cl.src.dma, Some(t.ready_at));
+        } else {
+            let done = cl.dma.take().expect("checked above");
+            sched.set(cl.src.dma, None);
+            start_core(cfg, sched, cl, &done.regs);
         }
     }
 
     /// Functional commit of a completed C' tile through the C AGU; the
     /// tile buffer returns to the arena afterwards.
-    fn commit_output_tile(&mut self, tile: crate::streamer::OutTile) {
+    fn commit_output_tile(&mut self, k: usize, tile: OutTile) {
         let Some(data) = tile.data else { return };
         let word = self.cfg.mem.word_bytes() as u64;
-        let agu = self.c_stream.agu;
+        let agu = self.clusters[k].c_stream.agu;
         let per_word = (word / 4) as usize;
         for port in 0..agu.ports() as u64 {
             let byte = agu.byte_addr(tile.m1, tile.n1, 0, port);
@@ -729,80 +913,70 @@ impl Platform {
         self.arena.release_i32(data);
     }
 
-    /// Bulk functional tile fetch: one gathered word read per port into
-    /// an arena-recycled buffer (the seed allocated a fresh `Box` and
-    /// resolved the word mapping per byte).
-    fn read_tile(
-        spm: &Spm,
-        arena: &mut TileArena,
-        word: u64,
-        word_addrs: &[u64],
-    ) -> Box<[i8]> {
-        let mut out = arena.acquire_i8(word_addrs.len() * word as usize);
-        spm.read_ports_i8(word_addrs, word as usize, &mut out);
-        out
-    }
+    /// A start fired on cluster `k`: account the launch, place operands,
+    /// and either start the core directly or hand the call to the DMA.
+    fn launch(&mut self, k: usize, regs: ConfigRegs) {
+        let Platform { cfg, spm, clusters, metrics, sched, job, now, .. } = self;
+        let cl = &mut clusters[k];
+        let job = job.as_mut().expect("start without a job");
+        let call_idx = cl.next_call;
+        debug_assert!(call_idx < job.calls.len(), "start on a coreless call slot");
+        // round-robin cursor: this cluster's calls are idx, idx+cores,
+        // ...; wrap to idx for the next repeat
+        cl.next_call = if cl.next_call + cfg.cores >= job.calls.len() {
+            cl.idx
+        } else {
+            cl.next_call + cfg.cores
+        };
+        cl.running_call = Some(call_idx);
+        cl.run_active = true;
+        cl.run_start_cycle = metrics.total_cycles;
+        metrics.starts += 1;
 
-    fn launch(&mut self, regs: crate::csr::ConfigRegs) {
-        let word = self.cfg.mem.word_bytes();
-        let bounds = regs.bounds();
-        let job = self.job.as_mut().expect("start without a job");
-        let call_idx = job.next_call;
-        job.next_call = (job.next_call + 1) % job.calls.len();
-        job.running_call = Some(call_idx);
-        job.run_active = true;
-        job.run_start_cycle = self.metrics.total_cycles;
-        self.metrics.starts += 1;
-
-        // "DMA": place this call's operands (functional mode only; zero
-        // simulated cycles per the paper's accounting).
+        // Place this call's operands (functional mode only; zero
+        // simulated cycles — on DMA platforms the *timing* of the load
+        // is modeled by the staging bursts below, which rewrite the
+        // same words).
         if let Some(inputs) = job.functional_inputs.as_ref() {
             let call = &job.calls[call_idx];
             let (asub, bsub) = inputs.call(call_idx);
-            layout::pack_a(
-                &mut self.spm,
-                &self.cfg,
-                &call.placement,
-                asub,
-                call.block.shape.m,
-                call.block.shape.k,
-            );
-            layout::pack_b(
-                &mut self.spm,
-                &self.cfg,
-                &call.placement,
-                bsub,
-                call.block.shape.k,
-                call.block.shape.n,
-            );
+            layout::pack_a(spm, cfg, &call.placement, asub, call.block.shape.m, call.block.shape.k);
+            layout::pack_b(spm, cfg, &call.placement, bsub, call.block.shape.k, call.block.shape.n);
         }
 
-        let wb = word as u64;
-        let nb = self.cfg.mem.n_bank;
-        self.a_stream.configure2(regs.a_agu(&self.cfg.core, word), bounds, wb, nb);
-        self.b_stream.configure2(regs.b_agu(&self.cfg.core, word), bounds, wb, nb);
-        self.c_stream.configure2(regs.c_agu(&self.cfg.core, word), wb, nb);
-        self.core.start(bounds).expect("loop bounds validated at compile time");
-        self.sched_wake = None; // reconfigured streamers, core now busy
+        if cfg.dma.is_some() {
+            // Snapshot the call's operand region (everything below the
+            // C base) as the background-memory image and stage it in
+            // bursts; the core starts when staging completes.
+            let word = cfg.mem.word_bytes() as u64;
+            let a_base = regs.regs[(CSR_A_BASE - CSR_BASE) as usize] as u64;
+            let b_base = regs.regs[(CSR_B_BASE - CSR_BASE) as usize] as u64;
+            let c_base = regs.regs[(CSR_C_BASE - CSR_BASE) as usize] as u64;
+            let start_word = a_base.min(b_base) / word;
+            let end_word = c_base.div_ceil(word);
+            let mut background = vec![0u64; (end_word - start_word) as usize];
+            spm.read_words(start_word, &mut background);
+            cl.dma = Some(DmaTransfer { regs, background, start_word, cursor: 0, ready_at: *now });
+            // first burst issues this very cycle (phase 5b)
+            sched.set(cl.src.dma, Some(*now));
+        } else {
+            start_core(cfg, sched, cl, &regs);
+        }
     }
 
-    fn finish_run(&mut self) {
-        let job = self.job.as_mut().expect("run completion without a job");
-        let call_idx = job.running_call.take().expect("no running call");
-        job.run_active = false;
-        self.metrics.kernel_cycles += self.metrics.total_cycles - job.run_start_cycle;
-        self.metrics.runs_completed += 1;
+    fn finish_run(&mut self, k: usize) {
+        let Platform { cfg, spm, clusters, metrics, sched, job, .. } = self;
+        let cl = &mut clusters[k];
+        let job = job.as_mut().expect("run completion without a job");
+        let call_idx = cl.running_call.take().expect("no running call");
+        cl.run_active = false;
+        metrics.kernel_cycles += metrics.total_cycles - cl.run_start_cycle;
+        metrics.runs_completed += 1;
 
         // collect functional results into the parent C
         if let Some(c_out) = job.c_out.as_mut() {
             let call = &job.calls[call_idx];
-            let c = layout::unpack_c(
-                &self.spm,
-                &self.cfg,
-                &call.placement,
-                call.block.shape.m,
-                call.block.shape.n,
-            );
+            let c = layout::unpack_c(spm, cfg, &call.placement, call.block.shape.m, call.block.shape.n);
             let n = job.parent_n;
             for i in 0..call.block.shape.m {
                 for j in 0..call.block.shape.n {
@@ -814,15 +988,26 @@ impl Platform {
         }
 
         // CPL: a pre-loaded start may fire instantly
-        self.csr.notify_done();
-        self.sched_wake = None; // core no longer busy: starvation gates flip
+        cl.csr.notify_done();
+        // core no longer busy: starvation gates flip
+        push_sources(sched, cl);
     }
+}
+
+/// Bulk functional tile fetch: one gathered word read per port into
+/// an arena-recycled buffer (the seed allocated a fresh `Box` and
+/// resolved the word mapping per byte).
+fn read_tile(spm: &Spm, arena: &mut TileArena, word: u64, word_addrs: &[u64]) -> Box<[i8]> {
+    let mut out = arena.acquire_i8(word_addrs.len() * word as usize);
+    spm.read_ports_i8(word_addrs, word as usize, &mut out);
+    out
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::compiler::{compile_gemm, GemmShape, Layout};
+    use crate::config::DmaParams;
     use crate::util::rng::Pcg32;
 
     fn run(
@@ -843,7 +1028,18 @@ mod tests {
         functional: bool,
         fast_forward: bool,
     ) -> (JobResult, CompiledJob) {
-        let cfg = PlatformConfig::case_study();
+        run_cfg_mode(PlatformConfig::case_study(), shape, layout, mech, repeats, functional, fast_forward)
+    }
+
+    fn run_cfg_mode(
+        cfg: PlatformConfig,
+        shape: GemmShape,
+        layout: Layout,
+        mech: Mechanisms,
+        repeats: u32,
+        functional: bool,
+        fast_forward: bool,
+    ) -> (JobResult, CompiledJob) {
         let job = compile_gemm(&cfg, shape, layout, repeats, mech.config_preloading).unwrap();
         let opts = SimOptions { mechanisms: mech, functional, fast_forward, ..Default::default() };
         let mut platform = Platform::new(cfg, opts);
@@ -876,15 +1072,20 @@ mod tests {
         c
     }
 
-    #[test]
-    fn functional_gemm_matches_naive() {
-        let shape = GemmShape::new(13, 22, 17);
-        let (res, _) = run(shape, Layout::TiledInterleaved, Mechanisms::ALL, 1, true);
+    fn seeded_operands(shape: GemmShape) -> (Vec<i8>, Vec<i8>) {
         let mut rng = Pcg32::seeded(42);
         let mut a = vec![0i8; shape.m * shape.k];
         let mut b = vec![0i8; shape.k * shape.n];
         rng.fill_i8(&mut a);
         rng.fill_i8(&mut b);
+        (a, b)
+    }
+
+    #[test]
+    fn functional_gemm_matches_naive() {
+        let shape = GemmShape::new(13, 22, 17);
+        let (res, _) = run(shape, Layout::TiledInterleaved, Mechanisms::ALL, 1, true);
+        let (a, b) = seeded_operands(shape);
         assert_eq!(res.c.unwrap(), naive_gemm(&a, &b, 13, 22, 17));
     }
 
@@ -892,11 +1093,7 @@ mod tests {
     fn functional_gemm_row_major_layout() {
         let shape = GemmShape::new(32, 40, 24);
         let (res, _) = run(shape, Layout::RowMajor, Mechanisms::BASELINE, 1, true);
-        let mut rng = Pcg32::seeded(42);
-        let mut a = vec![0i8; shape.m * shape.k];
-        let mut b = vec![0i8; shape.k * shape.n];
-        rng.fill_i8(&mut a);
-        rng.fill_i8(&mut b);
+        let (a, b) = seeded_operands(shape);
         assert_eq!(res.c.unwrap(), naive_gemm(&a, &b, 32, 40, 24));
     }
 
@@ -906,12 +1103,99 @@ mod tests {
         let shape = GemmShape::new(256, 64, 256);
         let (res, job) = run(shape, Layout::TiledInterleaved, Mechanisms::ALL, 1, true);
         assert!(job.calls.len() >= 1);
-        let mut rng = Pcg32::seeded(42);
-        let mut a = vec![0i8; shape.m * shape.k];
-        let mut b = vec![0i8; shape.k * shape.n];
-        rng.fill_i8(&mut a);
-        rng.fill_i8(&mut b);
+        let (a, b) = seeded_operands(shape);
         assert_eq!(res.c.unwrap(), naive_gemm(&a, &b, 256, 64, 256));
+    }
+
+    #[test]
+    fn multicore_functional_matches_naive() {
+        let mut cfg = PlatformConfig::case_study();
+        cfg.cores = 2;
+        let shape = GemmShape::new(256, 64, 256);
+        let (res, job) =
+            run_cfg_mode(cfg, shape, Layout::TiledInterleaved, Mechanisms::ALL, 1, true, true);
+        assert!(job.calls.len() >= 2, "shape must split across cores");
+        let (a, b) = seeded_operands(shape);
+        assert_eq!(res.c.unwrap(), naive_gemm(&a, &b, 256, 64, 256));
+    }
+
+    #[test]
+    fn dma_staging_preserves_results_and_adds_cycles() {
+        let shape = GemmShape::new(64, 64, 64);
+        let mut cfg = PlatformConfig::case_study();
+        cfg.dma = Some(DmaParams { chunk_words: 8, latency: 4 });
+        let (dma, _) =
+            run_cfg_mode(cfg, shape, Layout::TiledInterleaved, Mechanisms::ALL, 1, true, true);
+        let (plain, _) = run(shape, Layout::TiledInterleaved, Mechanisms::ALL, 1, true);
+        let (a, b) = seeded_operands(shape);
+        let expect = naive_gemm(&a, &b, 64, 64, 64);
+        assert_eq!(plain.c.as_ref().unwrap(), &expect);
+        assert_eq!(dma.c.as_ref().unwrap(), &expect, "staging must be functionally transparent");
+        assert!(
+            dma.metrics.total_cycles > plain.metrics.total_cycles,
+            "staging must cost cycles: {} vs {}",
+            dma.metrics.total_cycles,
+            plain.metrics.total_cycles
+        );
+        assert_eq!(dma.metrics.compute_cycles, plain.metrics.compute_cycles);
+    }
+
+    #[test]
+    fn multicore_beats_single_core_on_split_jobs() {
+        let shape = GemmShape::new(256, 128, 256);
+        let (single, job1) =
+            run(shape, Layout::TiledInterleaved, Mechanisms::ALL, 2, false);
+        let mut cfg = PlatformConfig::case_study();
+        cfg.cores = 2;
+        let (multi, job2) =
+            run_cfg_mode(cfg, shape, Layout::TiledInterleaved, Mechanisms::ALL, 2, false, true);
+        assert!(job1.calls.len() >= 2 && job2.calls.len() >= 2);
+        assert!(
+            multi.metrics.total_cycles < single.metrics.total_cycles,
+            "2 cores must beat 1 on a multi-call job: {} vs {}",
+            multi.metrics.total_cycles,
+            single.metrics.total_cycles
+        );
+        // same work either way
+        assert_eq!(multi.metrics.compute_cycles, single.metrics.compute_cycles);
+    }
+
+    #[test]
+    fn engines_bit_identical_across_cores_and_dma() {
+        // the exhaustive randomized grid lives in
+        // tests/platform_properties.rs; this smokes the heap engine vs
+        // lockstep over the new platform dimensions
+        for cores in [1usize, 2, 4] {
+            for dma in [None, Some(DmaParams { chunk_words: 16, latency: 2 })] {
+                let mut cfg = PlatformConfig::case_study();
+                cfg.cores = cores;
+                cfg.dma = dma;
+                let shape = GemmShape::new(96, 64, 96);
+                let (ff, _) = run_cfg_mode(
+                    cfg.clone(),
+                    shape,
+                    Layout::TiledInterleaved,
+                    Mechanisms::ALL,
+                    2,
+                    false,
+                    true,
+                );
+                let (ls, _) = run_cfg_mode(
+                    cfg,
+                    shape,
+                    Layout::TiledInterleaved,
+                    Mechanisms::ALL,
+                    2,
+                    false,
+                    false,
+                );
+                assert_eq!(
+                    ff.metrics, ls.metrics,
+                    "engines diverge at cores={cores} dma={dma:?}"
+                );
+                assert_eq!(ff.report, ls.report, "reports diverge at cores={cores}");
+            }
+        }
     }
 
     #[test]
@@ -1004,6 +1288,12 @@ mod tests {
         assert!(
             steps * 2 < total,
             "expected >50% of cycles skipped, got {steps} steps for {total} cycles"
+        );
+        assert!(platform.metrics.ff_jumps > 0, "jumps must be counted");
+        assert_eq!(
+            platform.metrics.ff_skipped_cycles,
+            total - steps,
+            "skipped + stepped must cover the run"
         );
     }
 

@@ -1,0 +1,226 @@
+//! Event-scheduler substrate: a lazy-deletion binary heap of
+//! `(cycle, SourceId)` wakeups.
+//!
+//! The fast-forward engine needs "the earliest cycle at which anything
+//! can happen". The previous engine re-derived that by scanning a
+//! hard-coded list of sources inside `Platform::next_event` and cached
+//! the scan behind a `sched_wake` memo that every mutation site had to
+//! remember to invalidate — the most error-prone pattern in the
+//! simulator. This module inverts the flow: each event source
+//! *registers* once, *pushes* its next wakeup at the point it becomes
+//! known, and the engine asks the heap for the minimum.
+//!
+//! Lazy deletion: re-arming a source does not search the heap for the
+//! stale entry; it just records the new armed time and pushes a fresh
+//! entry. [`EventHeap::next_wake`] pops entries whose `(cycle, source)`
+//! no longer matches the source's armed time until it finds a live one.
+//! The invariant making that sound: whenever `armed[s] == Some(t)`,
+//! an entry `(t, s)` is present in the heap (every arming push keeps
+//! it; duplicates are harmless — the extras are stale by definition).
+//!
+//! Armed times are *raw*: a source may legitimately stay armed at a
+//! cycle that is already in the past (e.g. a streamer whose bank gate
+//! expired but whose fetch has not been issued yet). The engine clamps
+//! the returned minimum to `now + 1`, exactly as the old memoized scan
+//! did, so past wakeups resolve on the next simulated cycle.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Index of a registered event source (dense, allocation-order).
+pub type SourceId = usize;
+
+/// Min-heap of pending wakeups with lazy deletion.
+#[derive(Debug, Default)]
+pub struct EventHeap {
+    heap: BinaryHeap<Reverse<(u64, SourceId)>>,
+    /// Authoritative next-wake time per source; heap entries that
+    /// disagree are stale and skipped on pop.
+    armed: Vec<Option<u64>>,
+    names: Vec<&'static str>,
+}
+
+impl EventHeap {
+    pub fn new() -> EventHeap {
+        EventHeap::default()
+    }
+
+    /// Register an event source; the returned id is its address for
+    /// [`EventHeap::set`]. Names are for diagnostics only.
+    pub fn register(&mut self, name: &'static str) -> SourceId {
+        self.names.push(name);
+        self.armed.push(None);
+        self.names.len() - 1
+    }
+
+    pub fn source_name(&self, src: SourceId) -> &'static str {
+        self.names[src]
+    }
+
+    pub fn n_sources(&self) -> usize {
+        self.names.len()
+    }
+
+    /// Currently armed wake time of a source (raw, possibly past).
+    pub fn armed(&self, src: SourceId) -> Option<u64> {
+        self.armed[src]
+    }
+
+    /// Arm (`Some(cycle)`) or disarm (`None`) a source. A no-op when
+    /// the armed time is unchanged, so sources may push unconditionally
+    /// from their refresh points without flooding the heap.
+    pub fn set(&mut self, src: SourceId, wake: Option<u64>) {
+        if self.armed[src] == wake {
+            return;
+        }
+        self.armed[src] = wake;
+        if let Some(t) = wake {
+            self.heap.push(Reverse((t, src)));
+        }
+    }
+
+    /// Earliest live wakeup across all sources, or `None` when every
+    /// source is disarmed. Pops stale entries (lazy deletion); live
+    /// entries are left in place, so the call is idempotent.
+    pub fn next_wake(&mut self) -> Option<u64> {
+        while let Some(&Reverse((t, s))) = self.heap.peek() {
+            if self.armed[s] == Some(t) {
+                return Some(t);
+            }
+            self.heap.pop();
+        }
+        None
+    }
+
+    /// Disarm every source and drop all pending entries (run reset).
+    pub fn clear(&mut self) {
+        self.heap.clear();
+        self.armed.iter_mut().for_each(|a| *a = None);
+    }
+
+    /// Pending heap entries, stale included (telemetry / tests).
+    pub fn pending_entries(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::property;
+    use crate::util::rng::Pcg32;
+    use crate::{prop_assert, prop_assert_eq};
+
+    /// Naive reference: the armed vector itself, min scanned fresh.
+    fn naive_min(armed: &[Option<u64>]) -> Option<u64> {
+        armed.iter().filter_map(|&a| a).min()
+    }
+
+    fn random_ops(rng: &mut Pcg32, h: &mut EventHeap, armed: &mut Vec<Option<u64>>, n: usize) {
+        for _ in 0..n {
+            let src = rng.below(armed.len() as u32) as usize;
+            let wake = if rng.below(4) == 0 {
+                None
+            } else {
+                Some(rng.below(1000) as u64)
+            };
+            h.set(src, wake);
+            armed[src] = wake;
+        }
+    }
+
+    #[test]
+    fn heap_min_matches_naive_reference() {
+        property("sched-heap-vs-naive", 64, |rng| {
+            let mut h = EventHeap::new();
+            let n_src = 1 + rng.below(8) as usize;
+            for _ in 0..n_src {
+                h.register("src");
+            }
+            let mut armed: Vec<Option<u64>> = vec![None; n_src];
+            for step in 0..200 {
+                random_ops(rng, &mut h, &mut armed, 1 + rng.below(3) as usize);
+                prop_assert_eq!(
+                    h.next_wake(),
+                    naive_min(&armed),
+                    "divergence at step {step}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pops_are_monotone_and_stale_never_surface() {
+        property("sched-monotone-pops", 64, |rng| {
+            let mut h = EventHeap::new();
+            let n_src = 1 + rng.below(6) as usize;
+            for _ in 0..n_src {
+                h.register("src");
+            }
+            let mut armed: Vec<Option<u64>> = vec![None; n_src];
+            // Arm, churn (creating stale entries), then drain: the
+            // drained sequence must be nondecreasing and every value
+            // must be a currently-armed time, never a stale one.
+            random_ops(rng, &mut h, &mut armed, 40);
+            let mut last = 0u64;
+            while let Some(t) = h.next_wake() {
+                prop_assert!(t >= last, "pop went backwards: {t} after {last}");
+                prop_assert!(
+                    armed.iter().any(|&a| a == Some(t)),
+                    "stale wakeup surfaced: {t} not armed in {armed:?}"
+                );
+                last = t;
+                // Retire every source due at t, as the engine does by
+                // advancing time and refreshing the fired sources.
+                for (s, a) in armed.iter_mut().enumerate() {
+                    if *a == Some(t) {
+                        *a = None;
+                        h.set(s, None);
+                    }
+                }
+            }
+            prop_assert_eq!(naive_min(&armed), None, "drain left sources armed");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rearm_same_time_is_noop() {
+        let mut h = EventHeap::new();
+        let s = h.register("a");
+        h.set(s, Some(5));
+        let entries = h.pending_entries();
+        h.set(s, Some(5));
+        assert_eq!(h.pending_entries(), entries, "unchanged arm must not push");
+        assert_eq!(h.next_wake(), Some(5));
+    }
+
+    #[test]
+    fn clear_disarms_everything() {
+        let mut h = EventHeap::new();
+        let a = h.register("a");
+        let b = h.register("b");
+        h.set(a, Some(3));
+        h.set(b, Some(7));
+        h.clear();
+        assert_eq!(h.next_wake(), None);
+        assert_eq!(h.armed(a), None);
+        assert_eq!(h.armed(b), None);
+        h.set(b, Some(2));
+        assert_eq!(h.next_wake(), Some(2), "heap usable after clear");
+    }
+
+    #[test]
+    fn past_times_stay_live_until_disarmed() {
+        // A source armed in the past keeps surfacing (the engine clamps
+        // to now+1); it must not be treated as stale.
+        let mut h = EventHeap::new();
+        let s = h.register("gate");
+        h.set(s, Some(1));
+        assert_eq!(h.next_wake(), Some(1));
+        assert_eq!(h.next_wake(), Some(1), "idempotent peek");
+        h.set(s, None);
+        assert_eq!(h.next_wake(), None);
+    }
+}

@@ -209,13 +209,25 @@ fn cpl_gain_peaks_where_config_matches_compute() {
 
 #[test]
 fn fast_forward_is_cycle_exact() {
-    // The event-driven cycle-skipping engine must produce *bit-identical*
+    // The heap-scheduled cycle-skipping engine must produce *bit-identical*
     // SimMetrics (total/compute/stall/idle cycles, host counters, SPM
     // traffic) to the per-cycle lockstep loop, across a randomized
-    // shape x layout x mechanisms x functional/timing grid. This is the
-    // differential proof the fast-forward default rests on.
-    let cfg = PlatformConfig::case_study();
+    // shape x layout x mechanisms x functional/timing grid — and across
+    // every platform topology the scheduler serves: 1, 2, and 4 GeMM
+    // cores, with and without the background-memory DMA engine. This is
+    // the differential proof the fast-forward default rests on.
     property("fast-forward == lockstep", 24, |rng| {
+        let mut cfg = PlatformConfig::case_study();
+        cfg.cores = *rng.choose(&[1usize, 2, 4]);
+        cfg.dma = if rng.below(2) == 1 {
+            Some(opengemm::config::DmaParams {
+                chunk_words: *rng.choose(&[8usize, 16, 64]),
+                latency: rng.below(6) as u64,
+            })
+        } else {
+            None
+        };
+        cfg.validate().map_err(|e| e.to_string())?;
         let shape = rand_shape(rng, 96);
         let layout = *rng.choose(&[
             Layout::RowMajor,
@@ -260,8 +272,11 @@ fn fast_forward_is_cycle_exact() {
         prop_assert_eq!(
             ff.metrics,
             ls.metrics,
-            "metrics diverge for {shape:?} {layout:?} {} functional={functional} x{repeats}",
-            mech.label()
+            "metrics diverge for {shape:?} {layout:?} {} functional={functional} x{repeats} \
+             cores={} dma={:?}",
+            mech.label(),
+            cfg.cores,
+            cfg.dma
         );
         prop_assert_eq!(ff.c, ls.c, "functional results diverge for {shape:?} {layout:?}");
         Ok(())
